@@ -1,0 +1,180 @@
+//! End-to-end driver: the full system, all layers composing.
+//!
+//! 1. **Real compute** — for each of the three NLP benchmarks, run a
+//!    representative sample through the actual AOT/PJRT executables
+//!    (train sentiment, serve recommendations, transcribe speech) and
+//!    verify output quality (accuracy / top-k sanity / WER).
+//! 2. **Full-cluster simulation** — replay each benchmark at paper scale
+//!    on the simulated 36-CSD AIC server (flash, FTL, shared FS,
+//!    tunnel, scheduler, power) and regenerate the paper's headline
+//!    numbers: Fig 5 best points, Table I speedups/energy, data split.
+//!
+//! Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_cluster
+//! ```
+
+use solana_isp::metrics::{Metrics, Table};
+use solana_isp::nlp::corpus::{MovieCatalog, SpeechCorpus, TweetCorpus};
+use solana_isp::power::PowerModel;
+use solana_isp::runtime::Engine;
+use solana_isp::sched::{run, SchedConfig};
+use solana_isp::util::human_bytes;
+use solana_isp::workloads::{App, AppModel, RecommenderApp, SentimentApp, SpeechApp};
+
+struct PaperPoint {
+    app: App,
+    batch: u64,
+    ratio: f64,
+    paper_base: f64,
+    paper_isp: f64,
+    paper_speedup: f64,
+    paper_saving_pct: f64,
+    paper_csd_share_pct: f64,
+}
+
+const POINTS: [PaperPoint; 3] = [
+    PaperPoint {
+        app: App::SpeechToText,
+        batch: 6,
+        ratio: 20.0,
+        paper_base: 96.0,
+        paper_isp: 296.0,
+        paper_speedup: 3.1,
+        paper_saving_pct: 67.0,
+        paper_csd_share_pct: 68.0,
+    },
+    PaperPoint {
+        app: App::Recommender,
+        batch: 256,
+        ratio: 22.0,
+        paper_base: 579.0,
+        paper_isp: 1506.0,
+        paper_speedup: 2.6,
+        paper_saving_pct: 61.0,
+        paper_csd_share_pct: 64.0,
+    },
+    PaperPoint {
+        app: App::Sentiment,
+        batch: 40_000,
+        ratio: 26.0,
+        paper_base: 9_496.0,
+        paper_isp: 20_994.0,
+        paper_speedup: 2.2,
+        paper_saving_pct: 54.0,
+        paper_csd_share_pct: 56.0,
+    },
+];
+
+fn phase1_real_compute(eng: &mut Engine) -> anyhow::Result<()> {
+    println!("── phase 1: real compute through PJRT ───────────────────────");
+
+    // Sentiment: train + accuracy.
+    let mut tweets = TweetCorpus::new(11);
+    let train = tweets.take(4_096);
+    let test = tweets.take(1_024);
+    let (sent, losses) = SentimentApp::train(eng, &train, 3, 5)?;
+    let acc = sent.accuracy(eng, &test)?;
+    println!(
+        "sentiment   : loss {:.3}→{:.3}, accuracy {:.1}% on {} held-out tweets",
+        losses.first().unwrap(),
+        losses.last().unwrap(),
+        acc * 100.0,
+        test.len()
+    );
+    anyhow::ensure!(acc > 0.85, "sentiment accuracy {acc}");
+
+    // Recommender: build + top-10 sanity on a 58k catalogue.
+    let catalog = MovieCatalog::generate(7, 58_000);
+    let rec = RecommenderApp::build(eng, catalog)?;
+    let qs: Vec<u32> = rec.catalog.shuffled_query_ids(3)[..16].to_vec();
+    let recs = rec.recommend(eng, &qs)?;
+    let filled = recs.iter().filter(|r| !r.is_empty()).count();
+    println!(
+        "recommender : {}/{} queries returned top-10 lists over 58,000 titles",
+        filled,
+        qs.len()
+    );
+    anyhow::ensure!(filled == qs.len());
+
+    // Speech: transcribe + WER.
+    let corpus = SpeechCorpus::generate(2024, 24);
+    let speech = SpeechApp::new(eng, corpus)?;
+    let ids: Vec<u32> = (0..24).collect();
+    let (wer, _) = speech.transcribe_set(eng, &ids, 7)?;
+    println!("speech      : mean WER {:.3} over 24 clips", wer);
+    anyhow::ensure!(wer < 0.12, "speech WER {wer}");
+
+    println!("total PJRT executions: {}\n", eng.executions());
+    Ok(())
+}
+
+fn phase2_cluster() -> anyhow::Result<()> {
+    println!("── phase 2: full-cluster simulation (36 CSDs, paper scale) ──");
+    let power = PowerModel::default();
+    let mut table = Table::new(
+        "paper vs reproduced (best configuration per app)",
+        &[
+            "app",
+            "base (ours/paper)",
+            "w/ ISP (ours/paper)",
+            "speedup (ours/paper)",
+            "energy saving (ours/paper)",
+            "csd share (ours/paper)",
+        ],
+    );
+    for p in &POINTS {
+        let items = AppModel::paper_items(p.app);
+        let model = AppModel::for_app(p.app, items);
+        let mut m = Metrics::new();
+        let cfg = SchedConfig {
+            csd_batch: p.batch,
+            batch_ratio: p.ratio,
+            ..SchedConfig::default()
+        };
+        // Baseline shares the batch configuration — only the ISP engines
+        // are disabled (the paper's "same server, ISP disabled").
+        let base = run(&model, &SchedConfig { isp_drives: 0, ..cfg.clone() }, &power, &mut m)?;
+        let isp = run(&model, &cfg, &power, &mut m)?;
+        let (ours_base, ours_isp) = if p.app == App::SpeechToText {
+            (base.words_per_sec, isp.words_per_sec)
+        } else {
+            (base.items_per_sec, isp.items_per_sec)
+        };
+        let speedup = ours_isp / ours_base;
+        let saving = (1.0 - isp.energy_per_item_j / base.energy_per_item_j) * 100.0;
+        table.row(vec![
+            p.app.name().to_string(),
+            format!("{ours_base:.0} / {:.0}", p.paper_base),
+            format!("{ours_isp:.0} / {:.0}", p.paper_isp),
+            format!("{speedup:.1}x / {:.1}x", p.paper_speedup),
+            format!("{saving:.0}% / {:.0}%", p.paper_saving_pct),
+            format!(
+                "{:.0}% / {:.0}%",
+                isp.csd_data_fraction() * 100.0,
+                p.paper_csd_share_pct
+            ),
+        ]);
+        if p.app == App::SpeechToText {
+            println!(
+                "speech data: {} stayed in storage, {} crossed PCIe (paper: 2.58 GB stayed of 3.8 GB)",
+                human_bytes(isp.isp_bytes),
+                human_bytes(isp.pcie_bytes)
+            );
+        }
+    }
+    print!("\n{}", table.render());
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    match Engine::load_default() {
+        Some(mut eng) => phase1_real_compute(&mut eng)?,
+        None => println!("(artifacts not built — skipping real-compute phase; run `make artifacts`)\n"),
+    }
+    phase2_cluster()?;
+    println!("\ne2e driver completed in {:.1}s wall", t0.elapsed().as_secs_f64());
+    Ok(())
+}

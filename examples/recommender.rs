@@ -1,0 +1,66 @@
+//! Movie recommender demo: build the 58k-title MovieLens-like catalogue,
+//! upload the TF-IDF matrix to the device once, and answer top-10
+//! queries through the Pallas-kernel-backed `recommender_topk`
+//! executable — then report the simulated cluster throughput (Fig 5(b)).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example recommender
+//! ```
+
+use solana_isp::metrics::Metrics;
+use solana_isp::nlp::corpus::MovieCatalog;
+use solana_isp::power::PowerModel;
+use solana_isp::runtime::Engine;
+use solana_isp::sched::{run, SchedConfig};
+use solana_isp::workloads::{AppModel, RecommenderApp};
+
+fn main() -> anyhow::Result<()> {
+    let Some(mut eng) = Engine::load_default() else {
+        anyhow::bail!("run `make artifacts` first");
+    };
+
+    println!("building the 58,000-title catalogue + TF-IDF features…");
+    let catalog = MovieCatalog::generate(7, 58_000);
+    let t0 = std::time::Instant::now();
+    let app = RecommenderApp::build(&mut eng, catalog)?;
+    println!("built + uploaded in {:.2}s wall", t0.elapsed().as_secs_f64());
+
+    // Answer a few real queries.
+    let queries: Vec<u32> = app.catalog.shuffled_query_ids(99)[..8].to_vec();
+    let t1 = std::time::Instant::now();
+    let recs = app.recommend(&mut eng, &queries)?;
+    let per_q = t1.elapsed().as_secs_f64() / queries.len() as f64;
+    println!("served {} queries ({:.1} ms/query wall)\n", queries.len(), per_q * 1e3);
+    for (q, rlist) in queries.iter().zip(&recs).take(3) {
+        let movie = &app.catalog.movies[*q as usize];
+        println!("query: \"{}\" [{}]", movie.title, movie.genres.join(", "));
+        for r in rlist.iter().take(3) {
+            let m = &app.catalog.movies[r.movie_id as usize];
+            println!(
+                "   {:.3}  \"{}\" [{}]",
+                r.score,
+                m.title,
+                m.genres.join(", ")
+            );
+        }
+    }
+
+    // Cluster simulation: Fig 5(b) headline.
+    println!("\nsimulating 58,000 queries on the 36-CSD server…");
+    let model = AppModel::recommender(58_000);
+    let power = PowerModel::default();
+    let mut m = Metrics::new();
+    let cfg = SchedConfig { csd_batch: 256, batch_ratio: 22.0, ..SchedConfig::default() };
+    let base = run(&model, &SchedConfig { isp_drives: 0, ..cfg.clone() }, &power, &mut m)?;
+    let isp = run(&model, &cfg, &power, &mut m)?;
+    println!(
+        "host-only : {:.0} queries/s   (paper:  579 q/s)",
+        base.items_per_sec
+    );
+    println!(
+        "36 CSDs   : {:.0} queries/s   (paper: 1506 q/s) — speedup {:.2}x (paper 2.6x)",
+        isp.items_per_sec,
+        isp.items_per_sec / base.items_per_sec
+    );
+    Ok(())
+}

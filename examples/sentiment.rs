@@ -1,0 +1,70 @@
+//! Sentiment analysis end to end: train the logistic-regression model
+//! with the AOT SGD-step executable, measure accuracy on held-out
+//! tweets, then simulate the paper's 8M-tweet cluster run (Fig 5(c)).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example sentiment
+//! ```
+
+use solana_isp::metrics::Metrics;
+use solana_isp::nlp::corpus::TweetCorpus;
+use solana_isp::power::PowerModel;
+use solana_isp::runtime::Engine;
+use solana_isp::sched::{run, SchedConfig};
+use solana_isp::workloads::{AppModel, SentimentApp};
+
+fn main() -> anyhow::Result<()> {
+    let Some(mut eng) = Engine::load_default() else {
+        anyhow::bail!("run `make artifacts` first");
+    };
+
+    // --- real training through the AOT train-step ---------------------
+    let mut corpus = TweetCorpus::new(1);
+    let train = corpus.take(8_192);
+    let test = corpus.take(2_048);
+    println!("training on {} tweets (AOT SGD step, batch 256)…", train.len());
+    let t0 = std::time::Instant::now();
+    let (app, losses) = SentimentApp::train(&mut eng, &train, 3, 9)?;
+    println!(
+        "trained in {:.2}s wall — loss {:.3} → {:.3}",
+        t0.elapsed().as_secs_f64(),
+        losses.first().unwrap(),
+        losses.last().unwrap()
+    );
+    let acc = app.accuracy(&mut eng, &test)?;
+    println!("held-out accuracy: {:.1}% ({} tweets)", acc * 100.0, test.len());
+    anyhow::ensure!(acc > 0.85, "model under-trained: {acc}");
+
+    // A few live predictions.
+    for text in [
+        "what a fantastic wonderful day i love this",
+        "terrible awful waste of time i regret everything",
+    ] {
+        let p = app.predict(&mut eng, &[text])?[0];
+        println!("  P(positive)={p:.2}  \"{text}\"");
+    }
+
+    // --- cluster simulation: Fig 5(c) headline ------------------------
+    println!("\nsimulating 8,000,000 tweets on the 36-CSD server…");
+    let model = AppModel::sentiment(8_000_000);
+    let power = PowerModel::default();
+    let mut m = Metrics::new();
+    let cfg = SchedConfig { csd_batch: 40_000, batch_ratio: 26.0, ..SchedConfig::default() };
+    let base = run(&model, &SchedConfig { isp_drives: 0, ..cfg.clone() }, &power, &mut m)?;
+    let isp = run(&model, &cfg, &power, &mut m)?;
+    println!(
+        "host-only : {:.0} queries/s   (paper:  9496 q/s)",
+        base.items_per_sec
+    );
+    println!(
+        "36 CSDs   : {:.0} queries/s   (paper: 20994 q/s) — speedup {:.2}x (paper 2.2x)",
+        isp.items_per_sec,
+        isp.items_per_sec / base.items_per_sec
+    );
+    println!(
+        "energy/query: {:.1} mJ → {:.1} mJ (paper: 51 → 23 mJ)",
+        base.energy_per_item_j * 1e3,
+        isp.energy_per_item_j * 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,129 @@
+"""AOT bridge: lower each L2 graph to HLO *text* + write the manifest.
+
+Run once at build time (``make artifacts``); the rust runtime then loads
+``artifacts/*.hlo.txt`` through ``HloModuleProto::from_text_file`` and
+executes them on the PJRT CPU client.  Python never runs at request time.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  (See /opt/xla-example/README.md.)
+
+Usage:  python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def f32(*shape):
+    return spec(tuple(shape), jnp.float32)
+
+
+def artifact_defs():
+    """(name, variant, fn, example_args) for every executable we ship."""
+    F = model.SENT_FEATURES
+    N, D = model.REC_ITEMS, model.REC_DIM
+    T, MF = model.SPEECH_FRAMES, model.SPEECH_FEATURES
+    H, V = model.SPEECH_HIDDEN, model.SPEECH_VOCAB
+
+    defs = []
+    for bsz in (32, 256):
+        defs.append((
+            "sentiment_infer", f"b{bsz}", model.sentiment_infer,
+            [f32(bsz, F), f32(F, 1), f32(1)],
+        ))
+    bt = model.SENT_TRAIN_BATCH
+    defs.append((
+        "sentiment_train_step", f"b{bt}", model.sentiment_train_step,
+        [f32(bt, F), f32(bt), f32(F, 1), f32(1), f32()],
+    ))
+    for q in (1, 32):
+        defs.append((
+            "recommender_topk", f"q{q}", model.recommender_topk,
+            [f32(N, D), f32(N), f32(q, D)],
+        ))
+    defs.append((
+        "acoustic_forward", f"t{T}", model.acoustic_forward,
+        [f32(T, MF), f32(MF, H), f32(H), f32(H, H), f32(H), f32(H, V), f32(V)],
+    ))
+    return defs
+
+
+def dims_dict():
+    return {
+        "sent_features": model.SENT_FEATURES,
+        "sent_train_batch": model.SENT_TRAIN_BATCH,
+        "rec_items": model.REC_ITEMS,
+        "rec_dim": model.REC_DIM,
+        "rec_topk": model.REC_TOPK,
+        "speech_frames": model.SPEECH_FRAMES,
+        "speech_features": model.SPEECH_FEATURES,
+        "speech_hidden": model.SPEECH_HIDDEN,
+        "speech_vocab": model.SPEECH_VOCAB,
+    }
+
+
+def lower_all(out_dir: str, verbose: bool = True):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "dims": dims_dict(), "artifacts": []}
+    for name, variant, fn, args in artifact_defs():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}__{variant}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = [
+            {"shape": list(s.shape), "dtype": str(s.dtype)}
+            for s in jax.eval_shape(fn, *args)
+        ]
+        manifest["artifacts"].append({
+            "name": name,
+            "variant": variant,
+            "file": fname,
+            "inputs": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args
+            ],
+            "outputs": out_shapes,
+        })
+        if verbose:
+            print(f"lowered {name}__{variant}: {len(text)} chars, "
+                  f"{len(args)} inputs, {len(out_shapes)} outputs")
+    man_path = os.path.join(out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    if verbose:
+        print(f"wrote {man_path} ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for *.hlo.txt + manifest.json")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    lower_all(args.out, verbose=not args.quiet)
+
+
+if __name__ == "__main__":
+    main()

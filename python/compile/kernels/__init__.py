@@ -1,0 +1,13 @@
+"""L1: Pallas kernels for the NLP compute hot-spots.
+
+The kernels here are the in-storage analogue of the paper's NEON-tiled
+inner loops, re-thought for a TPU-shaped memory hierarchy: BlockSpec
+expresses the HBM->VMEM streaming schedule, and an f32 VMEM scratch
+accumulator plays the role of the A53's register tile.  All kernels are
+lowered with ``interpret=True`` so the resulting HLO runs on any PJRT
+backend (the rust runtime uses the CPU client); see DESIGN.md
+§Hardware-Adaptation.
+"""
+
+from .matmul import matmul, similarity  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,149 @@
+"""Tiled GEMM / similarity-scores Pallas kernels.
+
+Hardware adaptation (DESIGN.md §8): the paper's ISP inner loop streams a
+large table (embedding matrix / feature matrix) from flash-backed DRAM
+through the A53's caches and NEON registers.  The TPU-shaped equivalent
+streams HBM tiles through VMEM into the MXU:
+
+* the *grid* walks (rows/BLOCK_N, cols/BLOCK_O, k/BLOCK_K) tiles;
+* ``BlockSpec`` index maps express which (BLOCK, BLOCK) tile of each
+  operand is resident in VMEM for a given grid step — this is the
+  flash->DRAM->compute schedule the paper implements with the CBDD;
+* an f32 VMEM scratch accumulator carries partial sums across the K
+  loop (the innermost grid dimension), exactly like the NEON register
+  tile carries the row accumulator.
+
+Kernels are executed with ``interpret=True``: the CPU PJRT plugin cannot
+run Mosaic custom-calls, and correctness (vs ``ref.py``) plus *structural*
+efficiency (VMEM footprint, MXU-shaped tiles — reported by
+``vmem_footprint``) are what we validate on this testbed.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# Default tile shapes: MXU-friendly (128x128 systolic array) while small
+# enough that  x_tile + w_tile + acc  stay well under ~16 MiB VMEM.
+BLOCK_M = 128
+BLOCK_O = 128
+BLOCK_K = 512
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    """One (i, j, k) grid step: acc += x_tile @ w_tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad_to(x, multiple, axis):
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_o", "block_k"))
+def matmul(x, w, block_m=BLOCK_M, block_o=BLOCK_O, block_k=BLOCK_K):
+    """Tiled ``x @ w`` with f32 accumulation.
+
+    Shapes: x[M, K] @ w[K, O] -> [M, O] (f32).  Inputs may be f32 or
+    bf16; accumulation is always f32 (MXU-style).  Arbitrary shapes are
+    padded up to the tile grid and cropped back.
+    """
+    m, k = x.shape
+    k2, o = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm, bo, bk = min(block_m, m), min(block_o, o), min(block_k, k)
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bo, 1)
+    mp, kp = xp.shape
+    _, op = wp.shape
+    n_k = kp // bk
+    grid = (mp // bm, op // bo, n_k)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bo), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bo), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, op), jnp.float32),
+        scratch_shapes=[pltpu_vmem((bm, bo), jnp.float32)],
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :o]
+
+
+def pltpu_vmem(shape, dtype):
+    """VMEM scratch allocation.
+
+    Under ``interpret=True`` any scratch shape works; on a real TPU this
+    maps to ``pltpu.VMEM``.  Isolated here so the TPU path is a one-line
+    change.
+    """
+    try:  # pragma: no cover - only on TPU-enabled jaxlibs
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM(shape, dtype)
+    except Exception:  # pragma: no cover
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def similarity(m, q, block_n=BLOCK_M, block_k=BLOCK_K):
+    """Similarity scores ``M[N, D] @ q[D] -> [N]``.
+
+    The recommender hot path: one row of scores per catalogue item.
+    Implemented on the tiled GEMM with a width-1 output tile kept in
+    VMEM; the matrix streams through once (arithmetic intensity ~1 FLOP/
+    byte, bandwidth-bound on any hardware, which is exactly why the paper
+    runs it next to the flash).
+    """
+    scores = matmul(m, q[:, None], block_m=block_n, block_o=1, block_k=block_k)
+    return scores[:, 0]
+
+
+def vmem_footprint(block_m=BLOCK_M, block_o=BLOCK_O, block_k=BLOCK_K,
+                   in_dtype_bytes=4):
+    """Static VMEM bytes resident per grid step (x tile + w tile + acc).
+
+    Used by DESIGN.md §Perf and the L1 structural benchmarks: the target
+    is footprint <= ~4 MiB so double-buffering fits in 16 MiB VMEM.
+    """
+    x_tile = block_m * block_k * in_dtype_bytes
+    w_tile = block_k * block_o * in_dtype_bytes
+    acc = block_m * block_o * 4
+    return x_tile + w_tile + acc
+
+
+def mxu_utilization_estimate(m, k, o, block_m=BLOCK_M, block_o=BLOCK_O):
+    """Fraction of MXU lanes a (block_m x block_o) tile keeps busy,
+    discounted by edge padding waste. Analytic estimate for DESIGN.md
+    (interpret mode gives no hardware counters)."""
+    mxu = 128
+    lane_fill = min(block_m, mxu) / mxu * min(block_o, mxu) / mxu
+    def waste(size, block):
+        import math
+        padded = math.ceil(size / block) * block
+        return size / padded
+    return lane_fill * waste(m, block_m) * waste(o, block_o)

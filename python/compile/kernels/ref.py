@@ -1,0 +1,28 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest sweeps shapes/dtypes with
+hypothesis and asserts the Pallas outputs match these to float tolerance.
+Keep them boring and obviously correct.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, w, b=None):
+    """Reference for kernels.matmul: x @ w (+ b)."""
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y
+
+
+def similarity(m, q):
+    """Reference for kernels.similarity: row-wise dot scores M @ q."""
+    return jnp.dot(m.astype(jnp.float32), q.astype(jnp.float32))
+
+
+def cosine_scores(m, q, eps=1e-8):
+    """Full cosine similarity (normalizes both sides)."""
+    mn = m / (jnp.linalg.norm(m, axis=1, keepdims=True) + eps)
+    qn = q / (jnp.linalg.norm(q) + eps)
+    return jnp.dot(mn, qn)

@@ -1,0 +1,72 @@
+"""AOT pipeline integrity: every artifact lowers, the manifest matches the
+emitted files, and the HLO text parses as an entry computation."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.lower_all(out, verbose=False)
+    return out, manifest
+
+
+def test_manifest_lists_all_files(built):
+    out, manifest = built
+    files = {a["file"] for a in manifest["artifacts"]}
+    on_disk = {f for f in os.listdir(out) if f.endswith(".hlo.txt")}
+    assert files == on_disk
+    assert len(files) == len(manifest["artifacts"]), "no duplicate files"
+
+
+def test_manifest_json_roundtrip(built):
+    out, manifest = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        loaded = json.load(f)
+    assert loaded == manifest
+    assert loaded["format"] == 1
+    assert loaded["dims"]["rec_topk"] == model.REC_TOPK
+
+
+def test_hlo_text_has_entry_computation(built):
+    out, manifest = built
+    for a in manifest["artifacts"]:
+        text = open(os.path.join(out, a["file"])).read()
+        assert "ENTRY" in text, a["file"]
+        assert "HloModule" in text, a["file"]
+
+
+def test_input_arity_matches_signatures(built):
+    _, manifest = built
+    by_name = {}
+    for a in manifest["artifacts"]:
+        by_name.setdefault(a["name"], a)
+    assert len(by_name["sentiment_infer"]["inputs"]) == 3
+    assert len(by_name["sentiment_train_step"]["inputs"]) == 5
+    assert len(by_name["recommender_topk"]["inputs"]) == 3
+    assert len(by_name["acoustic_forward"]["inputs"]) == 7
+
+
+def test_recommender_variants_cover_batch_sizes(built):
+    _, manifest = built
+    variants = {a["variant"] for a in manifest["artifacts"]
+                if a["name"] == "recommender_topk"}
+    assert variants == {"q1", "q32"}
+
+
+def test_shapes_recorded_match_model_dims(built):
+    _, manifest = built
+    for a in manifest["artifacts"]:
+        if a["name"] == "sentiment_infer":
+            assert a["inputs"][0]["shape"][1] == model.SENT_FEATURES
+        if a["name"] == "recommender_topk":
+            assert a["inputs"][0]["shape"] == [model.REC_ITEMS, model.REC_DIM]
+            assert a["outputs"][0]["shape"][1] == model.REC_TOPK
+        if a["name"] == "acoustic_forward":
+            assert a["outputs"][0]["shape"] == [
+                model.SPEECH_FRAMES, model.SPEECH_VOCAB]

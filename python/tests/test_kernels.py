@@ -1,0 +1,121 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.  This is
+the CORE correctness signal for the compute layer — everything the rust
+runtime executes flows through these kernels.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, ref, similarity
+from compile.kernels.matmul import (
+    mxu_utilization_estimate,
+    vmem_footprint,
+)
+
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+
+def rand(rng, *shape, dtype=np.float32):
+    return rng.standard_normal(shape).astype(dtype)
+
+
+dims = st.integers(min_value=1, max_value=300)
+
+
+@given(m=dims, k=dims, o=st.integers(1, 64))
+def test_matmul_matches_ref_shapes(m, k, o):
+    rng = np.random.default_rng(m * 1000 + k * 10 + o)
+    x, w = rand(rng, m, k), rand(rng, k, o)
+    out = matmul(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(out, ref.matmul(x, w), rtol=1e-4, atol=1e-4)
+    assert out.shape == (m, o)
+    assert out.dtype == jnp.float32
+
+
+@given(
+    m=st.integers(1, 128),
+    k=st.integers(1, 128),
+    dtype=st.sampled_from([np.float32, jnp.bfloat16]),
+)
+def test_matmul_dtypes_accumulate_f32(m, k, dtype):
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal((m, k)).astype(dtype)
+    w = rng.standard_normal((k, 8)).astype(dtype)
+    out = matmul(jnp.asarray(x), jnp.asarray(w))
+    assert out.dtype == jnp.float32
+    expect = ref.matmul(jnp.asarray(x), jnp.asarray(w))
+    tol = 1e-4 if dtype == np.float32 else 5e-2
+    np.testing.assert_allclose(out, expect, rtol=tol, atol=tol)
+
+
+@given(
+    bm=st.sampled_from([8, 32, 128]),
+    bk=st.sampled_from([16, 128, 512]),
+)
+def test_matmul_block_shape_invariance(bm, bk):
+    """Tiling must never change the numbers (beyond fp reassociation)."""
+    rng = np.random.default_rng(3)
+    x, w = rand(rng, 100, 200), rand(rng, 200, 30)
+    base = ref.matmul(x, w)
+    out = matmul(jnp.asarray(x), jnp.asarray(w), block_m=bm, block_o=16, block_k=bk)
+    np.testing.assert_allclose(out, base, rtol=1e-4, atol=1e-4)
+
+
+@given(n=st.integers(1, 500), d=st.integers(1, 128))
+def test_similarity_matches_ref(n, d):
+    rng = np.random.default_rng(n * 7 + d)
+    m, q = rand(rng, n, d), rand(rng, d)
+    out = similarity(jnp.asarray(m), jnp.asarray(q))
+    np.testing.assert_allclose(out, ref.similarity(m, q), rtol=1e-4, atol=1e-4)
+    assert out.shape == (n,)
+
+
+def test_matmul_exact_on_integers():
+    """f32 matmul on small integers is exact — catches tile-boundary
+    double-count/omission bugs precisely."""
+    rng = np.random.default_rng(0)
+    x = rng.integers(-3, 4, size=(257, 513)).astype(np.float32)
+    w = rng.integers(-3, 4, size=(513, 129)).astype(np.float32)
+    out = np.asarray(matmul(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(out, x @ w)
+
+
+def test_zero_and_identity():
+    x = np.zeros((64, 64), np.float32)
+    assert float(np.abs(np.asarray(matmul(jnp.asarray(x), jnp.asarray(x)))).max()) == 0.0
+    eye = np.eye(64, dtype=np.float32)
+    rng = np.random.default_rng(1)
+    w = rand(rng, 64, 64)
+    np.testing.assert_allclose(matmul(jnp.asarray(eye), jnp.asarray(w)), w, rtol=1e-6)
+
+
+def test_cosine_scores_self_similarity():
+    rng = np.random.default_rng(2)
+    m = rand(rng, 50, 16)
+    s = ref.cosine_scores(jnp.asarray(m), jnp.asarray(m[17]))
+    assert int(np.argmax(np.asarray(s))) == 17
+    assert np.asarray(s)[17] == pytest.approx(1.0, abs=1e-5)
+
+
+# ---- structural (L1 perf) checks: VMEM footprint + MXU estimates -------
+
+def test_default_blocks_fit_vmem_budget():
+    # double-buffered default tiles must fit 16 MiB VMEM
+    assert 2 * vmem_footprint() <= 16 * 1024 * 1024
+
+
+def test_mxu_estimate_full_tiles():
+    assert mxu_utilization_estimate(1280, 4096, 1280) == pytest.approx(1.0)
+    # tiny matrices waste lanes
+    assert mxu_utilization_estimate(8, 64, 8) < 0.02
+
+
+def test_footprint_scales_with_blocks():
+    small = vmem_footprint(block_m=32, block_o=32, block_k=128)
+    big = vmem_footprint(block_m=256, block_o=256, block_k=512)
+    assert small < big

@@ -1,0 +1,134 @@
+"""L2 correctness: benchmark model graphs (shapes, semantics, training)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def test_sentiment_infer_shapes_and_range():
+    rng = np.random.default_rng(0)
+    x = rng.random((32, model.SENT_FEATURES)).astype(np.float32)
+    w = (0.01 * rng.standard_normal((model.SENT_FEATURES, 1))).astype(np.float32)
+    b = np.zeros(1, np.float32)
+    (p,) = model.sentiment_infer(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    assert p.shape == (32,)
+    assert float(p.min()) >= 0.0 and float(p.max()) <= 1.0
+
+
+def test_sentiment_train_step_reduces_loss_on_separable_data():
+    rng = np.random.default_rng(1)
+    bsz, f = model.SENT_TRAIN_BATCH, model.SENT_FEATURES
+    # separable: positive rows load bucket 0, negative rows bucket 1
+    y = (rng.random(bsz) < 0.5).astype(np.float32)
+    x = np.zeros((bsz, f), np.float32)
+    x[y == 1.0, 0] = 1.0
+    x[y == 0.0, 1] = 1.0
+    w = jnp.zeros((f, 1), jnp.float32)
+    b = jnp.zeros(1, jnp.float32)
+    losses = []
+    for _ in range(30):
+        w, b, loss = model.sentiment_train_step(
+            jnp.asarray(x), jnp.asarray(y), w, b, jnp.float32(5.0))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, losses[::10]
+    (p,) = model.sentiment_infer(jnp.asarray(x), w, b)
+    acc = float(np.mean((np.asarray(p) > 0.5) == (y == 1.0)))
+    assert acc > 0.95
+
+
+def test_sentiment_gradient_matches_autodiff():
+    """The hand-derived closed-form gradient must equal jax.grad."""
+    rng = np.random.default_rng(2)
+    bsz, f = 8, 32
+
+    def loss_fn(w, b, x, y):
+        logits = x @ w[:, 0] + b[0]
+        p = jax.nn.sigmoid(logits)
+        eps = 1e-7
+        return -jnp.mean(y * jnp.log(p + eps) + (1 - y) * jnp.log(1 - p + eps))
+
+    x = rng.standard_normal((bsz, f)).astype(np.float32)
+    y = (rng.random(bsz) < 0.5).astype(np.float32)
+    w = rng.standard_normal((f, 1)).astype(np.float32) * 0.1
+    b = np.zeros(1, np.float32)
+    gw, gb = jax.grad(loss_fn, argnums=(0, 1))(
+        jnp.asarray(w), jnp.asarray(b), jnp.asarray(x), jnp.asarray(y))
+    lr = 0.7
+    w2, b2, _ = model.sentiment_train_step(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(w), jnp.asarray(b),
+        jnp.float32(lr))
+    np.testing.assert_allclose(np.asarray(w2), w - lr * np.asarray(gw),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b2), b - lr * np.asarray(gb),
+                               rtol=1e-4, atol=1e-5)
+
+
+def _unit_rows(x, eps=1e-8):
+    return x / (np.linalg.norm(x, axis=-1, keepdims=True) + eps)
+
+
+def test_recommender_topk_finds_self():
+    rng = np.random.default_rng(3)
+    n, d = 500, model.REC_DIM  # small catalogue for the test
+    m = _unit_rows(rng.standard_normal((n, d)).astype(np.float32))
+    pop = np.ones(n, np.float32)
+    q = m[[42, 7]]
+    vals, idx = model.recommender_topk(
+        jnp.asarray(m), jnp.asarray(pop), jnp.asarray(q))
+    assert vals.shape == (2, model.REC_TOPK)
+    assert idx.shape == (2, model.REC_TOPK)
+    assert int(idx[0, 0]) == 42
+    assert int(idx[1, 0]) == 7
+    # scores sorted descending
+    v = np.asarray(vals)
+    assert (np.diff(v, axis=1) <= 1e-6).all()
+
+
+def test_recommender_popularity_blend_reorders():
+    rng = np.random.default_rng(4)
+    n, d = 50, model.REC_DIM
+    m = _unit_rows(np.abs(rng.standard_normal((n, d))).astype(np.float32))
+    q = m[[0]]
+    # no popularity: some ranking
+    pop0 = np.zeros(n, np.float32)
+    _, idx0 = model.recommender_topk(jnp.asarray(m), jnp.asarray(pop0), jnp.asarray(q))
+    # boost one mid-ranked item to max popularity
+    boosted = int(np.asarray(idx0)[0, 5])
+    pop1 = np.zeros(n, np.float32)
+    pop1[boosted] = 1.0
+    _, idx1 = model.recommender_topk(jnp.asarray(m), jnp.asarray(pop1), jnp.asarray(q))
+    r0 = list(np.asarray(idx0)[0]).index(boosted)
+    r1 = list(np.asarray(idx1)[0]).index(boosted)
+    assert r1 < r0, f"popularity boost should improve rank ({r0} -> {r1})"
+
+
+def test_acoustic_forward_is_log_distribution():
+    rng = np.random.default_rng(5)
+    shapes = model.acoustic_param_shapes()
+    params = [
+        (0.1 * rng.standard_normal(shapes[k])).astype(np.float32)
+        for k in ("w1", "b1", "w2", "b2", "w3", "b3")
+    ]
+    frames = rng.standard_normal(
+        (model.SPEECH_FRAMES, model.SPEECH_FEATURES)).astype(np.float32)
+    (lp,) = model.acoustic_forward(jnp.asarray(frames),
+                                   *[jnp.asarray(p) for p in params])
+    assert lp.shape == (model.SPEECH_FRAMES, model.SPEECH_VOCAB)
+    # each row sums to 1 in prob space
+    np.testing.assert_allclose(np.exp(np.asarray(lp)).sum(axis=1),
+                               np.ones(model.SPEECH_FRAMES), rtol=1e-4)
+
+
+def test_acoustic_is_deterministic():
+    rng = np.random.default_rng(6)
+    shapes = model.acoustic_param_shapes()
+    params = [jnp.asarray((0.1 * rng.standard_normal(shapes[k])).astype(np.float32))
+              for k in ("w1", "b1", "w2", "b2", "w3", "b3")]
+    frames = jnp.asarray(rng.standard_normal(
+        (model.SPEECH_FRAMES, model.SPEECH_FEATURES)).astype(np.float32))
+    (a,) = model.acoustic_forward(frames, *params)
+    (b,) = model.acoustic_forward(frames, *params)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,25 @@
+//! `cargo bench --bench fig6_onenode` — regenerates Fig 6: single-node sentiment batch-size sweep
+//!
+//! Scale with `SOLANA_BENCH_FAST=1` (5%) or default 25% of the paper's
+//! dataset sizes; the *shape* (who wins, by what factor, where the
+//! crossovers fall) is scale-invariant. See EXPERIMENTS.md.
+
+use solana_isp::bench_support::Bencher;
+use solana_isp::exp::{self, Scale};
+#[allow(unused_imports)]
+use solana_isp::workloads::App;
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::from_env();
+    let table = exp::fig6(scale)?;
+    exp::emit(&table, "fig6")?;
+    // Wall-time of regenerating the artifact (simulator throughput):
+    let mut b = Bencher::new(0, if std::env::var("SOLANA_BENCH_FAST").is_ok() { 1 } else { 2 });
+    b.bench("fig6_onenode", || {
+        let t = exp::fig6(scale).expect("rerun");
+        t.rows.len() as u64
+    });
+    print!("{}", b.report());
+    b.write_json("fig6_onenode")?;
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! `cargo bench --bench locality_future_work` — the paper's §V future
+//! work: data-aware (category-routed) scheduling vs the oblivious
+//! baseline, on the recommender workload.
+
+use solana_isp::bench_support::Bencher;
+use solana_isp::metrics::{Metrics, Table};
+use solana_isp::power::PowerModel;
+use solana_isp::sched::locality::{run_with_policy, LocalityConfig, Policy};
+use solana_isp::sched::SchedConfig;
+use solana_isp::workloads::AppModel;
+
+fn main() -> anyhow::Result<()> {
+    let items = if std::env::var("SOLANA_BENCH_FAST").is_ok() { 10_000 } else { 58_000 };
+    let base = AppModel::recommender(items);
+    let power = PowerModel::default();
+    let cfg = LocalityConfig::default();
+    let mut table = Table::new(
+        "future work — data-aware vs oblivious routing (recommender)",
+        &["policy", "csds", "queries/s", "gain"],
+    );
+    let mut bencher = Bencher::new(0, 1);
+    for drives in [9usize, 18, 36] {
+        let sched = SchedConfig {
+            drives,
+            isp_drives: drives,
+            csd_batch: 256,
+            batch_ratio: 22.0,
+            ..SchedConfig::default()
+        };
+        let mut m = Metrics::new();
+        let obl = run_with_policy(&base, &sched, Policy::Oblivious, &cfg, &power, &mut m)?;
+        let aware = run_with_policy(&base, &sched, Policy::DataAware, &cfg, &power, &mut m)?;
+        table.row(vec![
+            "oblivious".into(),
+            drives.to_string(),
+            format!("{:.0}", obl.items_per_sec),
+            "1.00x".into(),
+        ]);
+        table.row(vec![
+            "data-aware".into(),
+            drives.to_string(),
+            format!("{:.0}", aware.items_per_sec),
+            format!("{:.2}x", aware.items_per_sec / obl.items_per_sec),
+        ]);
+    }
+    print!("{}", table.render());
+    std::fs::create_dir_all("target/bench-results")?;
+    std::fs::write("target/bench-results/locality.txt", table.render())?;
+    bencher.bench("locality_pair_36", || {
+        let sched = SchedConfig {
+            drives: 36,
+            isp_drives: 36,
+            csd_batch: 256,
+            batch_ratio: 22.0,
+            ..SchedConfig::default()
+        };
+        let mut m = Metrics::new();
+        run_with_policy(&base, &sched, Policy::DataAware, &cfg, &power, &mut m).unwrap();
+        items
+    });
+    print!("{}", bencher.report());
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! `cargo bench --bench perf_micro` — L3 hot-path microbenchmarks for
+//! the performance pass (EXPERIMENTS.md §Perf): DES event throughput,
+//! analytic resource ops, FTL write/GC path, FCU read path, full
+//! scheduler runs per second, and (artifacts permitting) PJRT execution
+//! latency.
+
+use solana_isp::bench_support::Bencher;
+use solana_isp::csd::{CsdConfig, Fcu, IoRequester};
+use solana_isp::metrics::Metrics;
+use solana_isp::power::PowerModel;
+use solana_isp::runtime::{Engine, Tensor};
+use solana_isp::sched::{run, SchedConfig};
+use solana_isp::sim::{EventQueue, Pipe, Servers};
+use solana_isp::workloads::AppModel;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::from_env();
+
+    // DES core: schedule+pop churn.
+    b.bench("sim.event_queue 100k schedule+pop", || {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        let mut acc = 0u64;
+        for round in 0..10u32 {
+            for i in 0..10_000u32 {
+                q.schedule((i % 97) as f64 * 1e-4, i ^ round);
+            }
+            while let Some((_, e)) = q.pop() {
+                acc = acc.wrapping_add(e as u64);
+            }
+        }
+        std::hint::black_box(acc);
+        100_000
+    });
+
+    // Analytic resources.
+    b.bench("sim.servers 100k acquire", || {
+        let mut s = Servers::new(16);
+        let mut now = 0.0;
+        for i in 0..100_000u64 {
+            now = s.acquire(now * 0.999, 1e-5 * ((i % 13) as f64 + 1.0)).min(1e6);
+        }
+        std::hint::black_box(now);
+        100_000
+    });
+    b.bench("sim.pipe 100k transfers", || {
+        let mut p = Pipe::new(3.2e9, 1e-6);
+        let mut t = 0.0;
+        for i in 0..100_000u64 {
+            t = p.transfer(t * 0.999, 4096 + (i % 7) * 512).end.min(1e6);
+        }
+        std::hint::black_box(t);
+        100_000
+    });
+
+    // FTL + flash write path (tiny geometry forces GC).
+    b.bench("ftl.write_page 20k (with GC)", || {
+        let cfg = CsdConfig::tiny();
+        let mut fcu = Fcu::new(&cfg);
+        let mut now = 0.0;
+        for i in 0..20_000u64 {
+            now = fcu.write(now, (i % 200) * 4096, 4096, IoRequester::Host);
+        }
+        std::hint::black_box(now);
+        20_000
+    });
+
+    // FCU read path on the full-size drive.
+    b.bench("fcu.read 2k x 64KiB", || {
+        let cfg = CsdConfig::default();
+        let mut fcu = Fcu::new(&cfg);
+        let now = fcu.write(0.0, 0, 2_000 * 65_536, IoRequester::Host);
+        let mut t = now;
+        for i in 0..2_000u64 {
+            t = t.max(fcu.read(now, i * 65_536, 65_536, IoRequester::Isp));
+        }
+        std::hint::black_box(t);
+        2_000
+    });
+
+    // Whole-scheduler run (the Fig-5 inner loop).
+    b.bench("sched.run sentiment 500k items 36 drives", || {
+        let model = AppModel::sentiment(500_000);
+        let cfg = SchedConfig {
+            csd_batch: 20_000,
+            batch_ratio: 26.0,
+            ..SchedConfig::default()
+        };
+        let mut m = Metrics::new();
+        let r = run(&model, &cfg, &PowerModel::default(), &mut m).unwrap();
+        std::hint::black_box(r.items_per_sec);
+        500_000
+    });
+    b.bench("sched.run speech 13k items 36 drives", || {
+        let model = AppModel::speech(13_100);
+        let cfg = SchedConfig { csd_batch: 6, batch_ratio: 20.0, ..SchedConfig::default() };
+        let mut m = Metrics::new();
+        let r = run(&model, &cfg, &PowerModel::default(), &mut m).unwrap();
+        std::hint::black_box(r.items_per_sec);
+        13_100
+    });
+
+    // PJRT hot path (skipped when artifacts are absent).
+    if let Some(mut eng) = Engine::load_default() {
+        let f = eng.manifest.dim("sent_features")? as usize;
+        let x = Tensor::zeros(vec![32, f]);
+        let w = Tensor::zeros(vec![f, 1]);
+        let bias = Tensor::zeros(vec![1]);
+        // warm the executable cache
+        eng.run("sentiment_infer", "b32", &[x.clone(), w.clone(), bias.clone()])?;
+        b.bench("runtime.sentiment_infer b32", || {
+            eng.run("sentiment_infer", "b32", &[x.clone(), w.clone(), bias.clone()])
+                .unwrap();
+            32
+        });
+    }
+
+    print!("{}", b.report());
+    b.write_json("perf_micro")?;
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! `cargo bench --bench power_breakdown` — §IV-C wall-power states:
+//! idle 167 W, +36 CSDs 405 W (6.6 W/drive), running 482 W storage-only
+//! vs 492 W with all ISP engines (0.28 W per engine).
+
+use solana_isp::exp;
+use solana_isp::power::PowerModel;
+
+fn main() -> anyhow::Result<()> {
+    exp::emit(&exp::power_breakdown(), "power")?;
+
+    // Energy-per-query checks straight from the model (Table I column).
+    let p = PowerModel::default();
+    println!("\nderived energy/query at the paper's measured rates:");
+    for (app, base_rate, isp_rate, paper_host_mj, paper_isp_mj) in [
+        ("speech (per word)", 96.0, 296.0, 5021.0, 1662.0),
+        ("recommender", 579.0, 1506.0, 832.0, 327.0),
+        ("sentiment", 9496.0, 20994.0, 51.0, 23.0),
+    ] {
+        let host = p.instantaneous_w(36, 1.0, 0) / base_rate * 1e3;
+        let isp = p.instantaneous_w(36, 1.0, 36) / isp_rate * 1e3;
+        println!(
+            "  {app:<18} host {host:7.0} mJ (paper {paper_host_mj:5.0})   \
+             w/CSD {isp:6.0} mJ (paper {paper_isp_mj:4.0})"
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,169 @@
+//! Mini benchmark harness (the offline build has no `criterion`).
+//!
+//! Provides warmup + timed iterations with mean/p50/p99 reporting and a
+//! machine-readable JSON dump. `cargo bench` targets in `benches/` use
+//! `harness = false` and drive this module; each bench binary regenerates
+//! one figure or table from the paper (see DESIGN.md §6).
+
+use std::time::Instant;
+
+use crate::codec::json::Json;
+use crate::util::stats::Summary;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub secs_per_iter: Summary,
+    /// Optional user-defined throughput metric (items/sec based on mean).
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", self.name.as_str().into())
+            .set("iters", self.iters.into())
+            .set("mean_s", self.secs_per_iter.mean.into())
+            .set("p50_s", self.secs_per_iter.p50.into())
+            .set("p99_s", self.secs_per_iter.p99.into())
+            .set("std_s", self.secs_per_iter.std.into());
+        if let Some(t) = self.throughput {
+            j.set("throughput", t.into());
+        }
+        j
+    }
+}
+
+/// Benchmark runner: fixed warmup iterations then timed iterations.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher::new(3, 10)
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup_iters: usize, iters: usize) -> Bencher {
+        Bencher { warmup_iters, iters, results: Vec::new() }
+    }
+
+    /// Honour `SOLANA_BENCH_FAST=1` to shrink iteration counts (CI).
+    pub fn from_env() -> Bencher {
+        if std::env::var("SOLANA_BENCH_FAST").ok().as_deref() == Some("1") {
+            Bencher::new(1, 3)
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Time `f`, which returns a per-iteration "items processed" count
+    /// used for throughput (pass 0 to skip).
+    pub fn bench<F>(&mut self, name: &str, mut f: F) -> &BenchResult
+    where
+        F: FnMut() -> u64,
+    {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let mut items_total: u64 = 0;
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            let items = std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            items_total += items;
+        }
+        let summary = Summary::of(&samples).expect("at least one iteration");
+        let throughput = if items_total > 0 {
+            Some(items_total as f64 / self.iters as f64 / summary.mean)
+        } else {
+            None
+        };
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            secs_per_iter: summary,
+            throughput,
+        });
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render all results as an aligned text report.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<52} {:>12} {:>12} {:>12} {:>14}\n",
+            "benchmark", "mean", "p50", "p99", "throughput"
+        ));
+        for r in &self.results {
+            out.push_str(&format!(
+                "{:<52} {:>12} {:>12} {:>12} {:>14}\n",
+                r.name,
+                crate::util::human_secs(r.secs_per_iter.mean),
+                crate::util::human_secs(r.secs_per_iter.p50),
+                crate::util::human_secs(r.secs_per_iter.p99),
+                r.throughput
+                    .map(|t| format!("{t:.1}/s"))
+                    .unwrap_or_else(|| "-".to_string()),
+            ));
+        }
+        out
+    }
+
+    /// JSON array of all results.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.results.iter().map(|r| r.to_json()).collect())
+    }
+
+    /// Write the JSON report under `target/bench-results/<file>.json`.
+    pub fn write_json(&self, file: &str) -> std::io::Result<()> {
+        let dir = std::path::Path::new("target/bench-results");
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{file}.json")), self.to_json().to_pretty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_samples_and_throughput() {
+        let mut b = Bencher::new(1, 5);
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+            10_000
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.secs_per_iter.mean > 0.0);
+        assert!(r.throughput.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn report_and_json_include_all_cases() {
+        let mut b = Bencher::new(0, 2);
+        b.bench("a", || 1);
+        b.bench("b", || 0);
+        let rep = b.report();
+        assert!(rep.contains("a") && rep.contains("b"));
+        let j = b.to_json();
+        assert_eq!(j.as_arr().unwrap().len(), 2);
+        // case "b" had zero items → no throughput key
+        assert!(j.as_arr().unwrap()[1].get("throughput").is_none());
+    }
+}

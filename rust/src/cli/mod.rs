@@ -1,0 +1,215 @@
+//! Hand-rolled CLI argument parser (the offline build has no `clap`).
+//!
+//! Model: `solana <subcommand> [--flag] [--key value] [positional...]`.
+//! Subcommands register the options they accept; unknown options are hard
+//! errors with a usage dump, matching what users expect from clap-style
+//! binaries.
+
+use std::collections::BTreeMap;
+
+/// Declared option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Parsed arguments for one subcommand invocation.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn str(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn u64(&self, name: &str) -> anyhow::Result<Option<u64>> {
+        match self.values.get(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| {
+                anyhow::anyhow!("option --{name} expects an integer, got '{v}'")
+            })?)),
+        }
+    }
+
+    pub fn f64(&self, name: &str) -> anyhow::Result<Option<f64>> {
+        match self.values.get(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| {
+                anyhow::anyhow!("option --{name} expects a number, got '{v}'")
+            })?)),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    /// Comma-separated list option → Vec<u64>.
+    pub fn u64_list(&self, name: &str) -> anyhow::Result<Option<Vec<u64>>> {
+        match self.values.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse::<u64>().map_err(|_| {
+                        anyhow::anyhow!("option --{name}: bad integer '{p}'")
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()
+                .map(Some),
+        }
+    }
+}
+
+/// A subcommand definition.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Command {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, takes_value: true, default, help });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, takes_value: false, default: None, help });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("usage: solana {} [options]\n  {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let arg = if o.takes_value { format!("--{} <v>", o.name) } else { format!("--{}", o.name) };
+            let def = o.default.map(|d| format!(" (default: {d})")).unwrap_or_default();
+            s.push_str(&format!("  {arg:<24} {}{def}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse raw arguments (after the subcommand token).
+    pub fn parse(&self, raw: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                // Accept --key=value as well as --key value.
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("option --{name} needs a value"))?
+                        }
+                    };
+                    args.values.insert(name.to_string(), v);
+                } else {
+                    if inline.is_some() {
+                        anyhow::bail!("flag --{name} does not take a value");
+                    }
+                    args.flags.insert(name.to_string(), true);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("bench", "run a benchmark")
+            .opt("csds", Some("36"), "number of CSDs")
+            .opt("batch", None, "batch size")
+            .opt("sizes", None, "comma list")
+            .flag("verbose", "chatty output")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&sv(&[])).unwrap();
+        assert_eq!(a.u64("csds").unwrap(), Some(36));
+        assert_eq!(a.str("batch"), None);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn parse_values_flags_positional() {
+        let a = cmd()
+            .parse(&sv(&["--csds", "8", "--verbose", "pos1", "--batch=40000"]))
+            .unwrap();
+        assert_eq!(a.u64("csds").unwrap(), Some(8));
+        assert_eq!(a.u64("batch").unwrap(), Some(40000));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1".to_string()]);
+    }
+
+    #[test]
+    fn u64_list_parses() {
+        let a = cmd().parse(&sv(&["--sizes", "2,4, 6,8"])).unwrap();
+        assert_eq!(a.u64_list("sizes").unwrap(), Some(vec![2, 4, 6, 8]));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd().parse(&sv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cmd().parse(&sv(&["--batch"])).is_err());
+        assert!(cmd().parse(&sv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn bad_integer_errors() {
+        let a = cmd().parse(&sv(&["--csds", "many"])).unwrap();
+        assert!(a.u64("csds").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = cmd().usage();
+        assert!(u.contains("--csds"));
+        assert!(u.contains("default: 36"));
+    }
+}

@@ -1,0 +1,239 @@
+//! MPI-like rank messaging ("This scheduler is MPI-based", §IV-A).
+//!
+//! A tiny typed point-to-point layer over `std::sync::mpsc` used by the
+//! *live* execution mode ([`crate::sched::live`]): rank 0 is the
+//! scheduler/host, ranks 1..n are ISP workers. Payloads are raw bytes —
+//! the codec helpers below serialize the f32 weight tensors the workers
+//! need, mirroring how the paper's scheduler ships only small control
+//! messages while bulk data stays put.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+/// Message tags (MPI-style).
+pub mod tag {
+    pub const WEIGHTS: u32 = 1;
+    pub const BATCH: u32 = 2;
+    pub const RESULT: u32 = 3;
+    pub const SHUTDOWN: u32 = 4;
+}
+
+/// A delivered packet.
+#[derive(Debug)]
+pub struct Packet {
+    pub src: usize,
+    pub tag: u32,
+    pub payload: Vec<u8>,
+}
+
+/// One rank's endpoint.
+pub struct Communicator {
+    rank: usize,
+    txs: Vec<Sender<Packet>>,
+    rx: Receiver<Packet>,
+    sent: u64,
+    received: u64,
+}
+
+/// Build a fully-connected group of `size` ranks.
+pub fn group(size: usize) -> Vec<Communicator> {
+    assert!(size > 0);
+    let mut txs = Vec::with_capacity(size);
+    let mut rxs = Vec::with_capacity(size);
+    for _ in 0..size {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    rxs.into_iter()
+        .enumerate()
+        .map(|(rank, rx)| Communicator {
+            rank,
+            txs: txs.clone(),
+            rx,
+            sent: 0,
+            received: 0,
+        })
+        .collect()
+}
+
+/// Send/receive errors.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum MpiError {
+    #[error("rank {0} out of range")]
+    BadRank(usize),
+    #[error("peer disconnected")]
+    Disconnected,
+    #[error("recv timed out")]
+    Timeout,
+}
+
+impl Communicator {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.txs.len()
+    }
+
+    pub fn send(&mut self, dst: usize, tag: u32, payload: Vec<u8>) -> Result<(), MpiError> {
+        let tx = self.txs.get(dst).ok_or(MpiError::BadRank(dst))?;
+        tx.send(Packet { src: self.rank, tag, payload })
+            .map_err(|_| MpiError::Disconnected)?;
+        self.sent += 1;
+        Ok(())
+    }
+
+    /// Blocking receive.
+    pub fn recv(&mut self) -> Result<Packet, MpiError> {
+        let p = self.rx.recv().map_err(|_| MpiError::Disconnected)?;
+        self.received += 1;
+        Ok(p)
+    }
+
+    /// Receive with a timeout — the scheduler's 0.2 s polling loop uses
+    /// this instead of busy-waiting (the paper: "wakes up every 0.2
+    /// seconds to check if there is a new message").
+    pub fn recv_timeout(&mut self, dur: Duration) -> Result<Packet, MpiError> {
+        match self.rx.recv_timeout(dur) {
+            Ok(p) => {
+                self.received += 1;
+                Ok(p)
+            }
+            Err(RecvTimeoutError::Timeout) => Err(MpiError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(MpiError::Disconnected),
+        }
+    }
+
+    /// Broadcast from this rank to every other rank.
+    pub fn bcast(&mut self, tag: u32, payload: &[u8]) -> Result<(), MpiError> {
+        for dst in 0..self.size() {
+            if dst != self.rank {
+                self.send(dst, tag, payload.to_vec())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (self.sent, self.received)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Payload codecs (no serde offline — explicit LE byte layouts)
+// ---------------------------------------------------------------------
+
+/// Encode an f32 slice (LE).
+pub fn encode_f32s(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 * xs.len());
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Decode an f32 slice (LE); errors on misaligned length.
+pub fn decode_f32s(buf: &[u8]) -> Result<Vec<f32>, MpiError> {
+    if buf.len() % 4 != 0 {
+        return Err(MpiError::Disconnected);
+    }
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Encode a u32 slice (LE) — batch index lists.
+pub fn encode_u32s(xs: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 * xs.len());
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+pub fn decode_u32s(buf: &[u8]) -> Result<Vec<u32>, MpiError> {
+    if buf.len() % 4 != 0 {
+        return Err(MpiError::Disconnected);
+    }
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_to_point_across_threads() {
+        let mut comms = group(3);
+        let mut c2 = comms.pop().unwrap();
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        let t1 = std::thread::spawn(move || {
+            let p = c1.recv().unwrap();
+            assert_eq!(p.src, 0);
+            assert_eq!(p.tag, tag::BATCH);
+            c1.send(0, tag::RESULT, p.payload).unwrap();
+        });
+        let t2 = std::thread::spawn(move || {
+            let p = c2.recv().unwrap();
+            c2.send(0, tag::RESULT, p.payload).unwrap();
+        });
+        c0.send(1, tag::BATCH, vec![1, 2, 3]).unwrap();
+        c0.send(2, tag::BATCH, vec![4, 5]).unwrap();
+        let mut totals = 0usize;
+        for _ in 0..2 {
+            let p = c0.recv().unwrap();
+            assert_eq!(p.tag, tag::RESULT);
+            totals += p.payload.len();
+        }
+        assert_eq!(totals, 5);
+        t1.join().unwrap();
+        t2.join().unwrap();
+        assert_eq!(c0.stats(), (2, 2));
+    }
+
+    #[test]
+    fn timeout_polling() {
+        let mut comms = group(2);
+        let mut c0 = comms.remove(0);
+        assert_eq!(
+            c0.recv_timeout(Duration::from_millis(10)).unwrap_err(),
+            MpiError::Timeout
+        );
+    }
+
+    #[test]
+    fn bcast_reaches_all() {
+        let mut comms = group(4);
+        let mut rest: Vec<_> = comms.drain(1..).collect();
+        let mut c0 = comms.pop().unwrap();
+        c0.bcast(tag::WEIGHTS, &[9, 9]).unwrap();
+        for c in rest.iter_mut() {
+            let p = c.recv().unwrap();
+            assert_eq!(p.tag, tag::WEIGHTS);
+            assert_eq!(p.payload, vec![9, 9]);
+        }
+    }
+
+    #[test]
+    fn bad_rank_rejected() {
+        let mut comms = group(1);
+        let mut c0 = comms.pop().unwrap();
+        assert_eq!(c0.send(5, 0, vec![]).unwrap_err(), MpiError::BadRank(5));
+    }
+
+    #[test]
+    fn codecs_roundtrip() {
+        let f = vec![1.5f32, -2.25, 0.0, f32::MAX];
+        assert_eq!(decode_f32s(&encode_f32s(&f)).unwrap(), f);
+        let u = vec![0u32, 7, u32::MAX];
+        assert_eq!(decode_u32s(&encode_u32s(&u)).unwrap(), u);
+        assert!(decode_f32s(&[1, 2, 3]).is_err());
+    }
+}

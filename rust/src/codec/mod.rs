@@ -1,0 +1,10 @@
+//! Serialization substrates written from scratch (the offline build has no
+//! `serde`): a complete JSON value model with parser and writer
+//! ([`json`]), and the TOML subset used by experiment config files
+//! ([`toml`]).
+
+pub mod json;
+pub mod toml;
+
+pub use json::Json;
+pub use toml::TomlTable;

@@ -1,0 +1,308 @@
+//! TOML-subset parser for experiment configuration files.
+//!
+//! Supports the subset our configs use: `[table]` / `[table.sub]`
+//! headers, `key = value` with string / integer / float / bool / array
+//! values, `#` comments, and bare or quoted keys. No date-times, no
+//! multi-line strings, no inline tables, no arrays-of-tables — config
+//! files in `configs/` stay inside this subset by construction.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A flat table: dotted-path key → value. `[server]` + `drives = 36`
+/// becomes `"server.drives" → Int(36)`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlTable {
+    entries: BTreeMap<String, TomlValue>,
+}
+
+/// Parse error with line number.
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl TomlTable {
+    pub fn parse(text: &str) -> Result<TomlTable, TomlError> {
+        let mut entries = BTreeMap::new();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated table header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err("empty table name"));
+                }
+                prefix = name.to_string();
+            } else {
+                let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+                let key = unquote_key(line[..eq].trim()).map_err(|m| err(m))?;
+                let val = parse_value(line[eq + 1..].trim()).map_err(|m| err(m))?;
+                let full = if prefix.is_empty() {
+                    key
+                } else {
+                    format!("{prefix}.{key}")
+                };
+                if entries.insert(full.clone(), val).is_some() {
+                    return Err(err(&format!("duplicate key '{full}'")));
+                }
+            }
+        }
+        Ok(TomlTable { entries })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    pub fn str(&self, path: &str) -> Option<&str> {
+        self.get(path)?.as_str()
+    }
+    pub fn i64(&self, path: &str) -> Option<i64> {
+        self.get(path)?.as_i64()
+    }
+    pub fn u64(&self, path: &str) -> Option<u64> {
+        self.i64(path).filter(|v| *v >= 0).map(|v| v as u64)
+    }
+    pub fn f64(&self, path: &str) -> Option<f64> {
+        self.get(path)?.as_f64()
+    }
+    pub fn bool(&self, path: &str) -> Option<bool> {
+        self.get(path)?.as_bool()
+    }
+
+    /// All keys under a dotted prefix (for iterating `[workload.*]`).
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let pat = format!("{prefix}.");
+        self.entries.keys().filter_map(move |k| {
+            k.strip_prefix(&pat).map(|_| k.as_str())
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a basic string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote_key(k: &str) -> Result<String, &'static str> {
+    if k.is_empty() {
+        return Err("empty key");
+    }
+    if let Some(inner) = k.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        return Ok(inner.to_string());
+    }
+    if k.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.') {
+        Ok(k.to_string())
+    } else {
+        Err("invalid bare key")
+    }
+}
+
+fn parse_value(v: &str) -> Result<TomlValue, &'static str> {
+    if v.is_empty() {
+        return Err("empty value");
+    }
+    if let Some(inner) = v.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        // Handle the escapes our configs may use.
+        let mut s = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => s.push('\n'),
+                    Some('t') => s.push('\t'),
+                    Some('"') => s.push('"'),
+                    Some('\\') => s.push('\\'),
+                    _ => return Err("bad escape in string"),
+                }
+            } else {
+                s.push(c);
+            }
+        }
+        return Ok(TomlValue::Str(s));
+    }
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        // Arrays of scalars only — split on commas outside strings.
+        let mut depth_str = false;
+        let mut start = 0usize;
+        let bytes = inner.as_bytes();
+        for i in 0..bytes.len() {
+            match bytes[i] {
+                b'"' => depth_str = !depth_str,
+                b',' if !depth_str => {
+                    items.push(parse_value(inner[start..i].trim())?);
+                    start = i + 1;
+                }
+                _ => {}
+            }
+        }
+        items.push(parse_value(inner[start..].trim())?);
+        return Ok(TomlValue::Arr(items));
+    }
+    let clean = v.replace('_', "");
+    if clean.chars().all(|c| c.is_ascii_digit() || c == '-' || c == '+')
+        && clean.parse::<i64>().is_ok()
+    {
+        return Ok(TomlValue::Int(clean.parse().unwrap()));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err("unrecognized value")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# Solana experiment config
+seed = 42
+name = "fig5a"        # trailing comment
+
+[server]
+drives = 36
+host_threads = 16
+idle_power_w = 167.0
+enable_isp = true
+
+[sched]
+batch_sizes = [2, 4, 6, 8]
+batch_ratio = 20
+wakeup_s = 0.2
+apps = ["speech", "sentiment"]
+"#;
+
+    #[test]
+    fn parse_sample() {
+        let t = TomlTable::parse(SAMPLE).unwrap();
+        assert_eq!(t.i64("seed"), Some(42));
+        assert_eq!(t.str("name"), Some("fig5a"));
+        assert_eq!(t.u64("server.drives"), Some(36));
+        assert_eq!(t.f64("server.idle_power_w"), Some(167.0));
+        assert_eq!(t.bool("server.enable_isp"), Some(true));
+        let arr = t.get("sched.batch_sizes").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 4);
+        assert_eq!(arr[2].as_i64(), Some(6));
+        let apps = t.get("sched.apps").unwrap().as_arr().unwrap();
+        assert_eq!(apps[1].as_str(), Some("sentiment"));
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let t = TomlTable::parse("x = 3").unwrap();
+        assert_eq!(t.f64("x"), Some(3.0));
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(TomlTable::parse("a = 1\na = 2").is_err());
+        assert!(TomlTable::parse("a =").is_err());
+        assert!(TomlTable::parse("[unterminated").is_err());
+        assert!(TomlTable::parse("novalue").is_err());
+    }
+
+    #[test]
+    fn string_escapes() {
+        let t = TomlTable::parse(r#"s = "a\nb\"c""#).unwrap();
+        assert_eq!(t.str("s"), Some("a\nb\"c"));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let t = TomlTable::parse(r##"s = "a#b" # real comment"##).unwrap();
+        assert_eq!(t.str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn underscored_integers() {
+        let t = TomlTable::parse("n = 1_600_000").unwrap();
+        assert_eq!(t.i64("n"), Some(1_600_000));
+    }
+
+    #[test]
+    fn empty_array() {
+        let t = TomlTable::parse("a = []").unwrap();
+        assert_eq!(t.get("a").unwrap().as_arr().unwrap().len(), 0);
+    }
+}

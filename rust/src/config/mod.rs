@@ -1,0 +1,174 @@
+//! Typed experiment configuration loaded from TOML files (see
+//! `configs/*.toml`). Everything has a paper-faithful default; a config
+//! file overrides only what it names.
+//!
+//! ```toml
+//! seed = 42
+//! scale = 0.25
+//!
+//! [sched]
+//! csd_batch = 40000
+//! batch_ratio = 26
+//! wakeup_s = 0.2
+//! drives = 36
+//! isp_drives = 36
+//!
+//! [power]
+//! server_idle_w = 167.0
+//! csd_idle_w = 6.6
+//! ```
+
+use std::path::Path;
+
+use crate::codec::toml::TomlTable;
+use crate::power::PowerModel;
+use crate::sched::SchedConfig;
+use crate::workloads::App;
+
+/// A full experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub seed: u64,
+    /// Dataset scale factor vs the paper (1.0 = full size).
+    pub scale: f64,
+    pub app: Option<App>,
+    pub sched: SchedConfig,
+    pub power: PowerModel,
+    /// Whether the file explicitly set sched.csd_batch / batch_ratio
+    /// (CLI precedence: flag > file > per-app default).
+    pub batch_explicit: bool,
+    pub ratio_explicit: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            seed: 42,
+            scale: 0.25,
+            app: None,
+            sched: SchedConfig::default(),
+            power: PowerModel::default(),
+            batch_explicit: false,
+            ratio_explicit: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_file(path: impl AsRef<Path>) -> anyhow::Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> anyhow::Result<ExperimentConfig> {
+        let t = TomlTable::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut cfg = ExperimentConfig::default();
+        if let Some(v) = t.u64("seed") {
+            cfg.seed = v;
+            cfg.sched.seed = v;
+        }
+        if let Some(v) = t.f64("scale") {
+            anyhow::ensure!(v > 0.0 && v <= 1.0, "scale must be in (0, 1]");
+            cfg.scale = v;
+        }
+        if let Some(name) = t.str("app") {
+            cfg.app = Some(parse_app(name)?);
+        }
+        if let Some(v) = t.u64("sched.csd_batch") {
+            anyhow::ensure!(v > 0, "sched.csd_batch must be positive");
+            cfg.sched.csd_batch = v;
+            cfg.batch_explicit = true;
+        }
+        if let Some(v) = t.f64("sched.batch_ratio") {
+            anyhow::ensure!(v >= 1.0, "sched.batch_ratio must be >= 1");
+            cfg.sched.batch_ratio = v;
+            cfg.ratio_explicit = true;
+        }
+        if let Some(v) = t.f64("sched.wakeup_s") {
+            anyhow::ensure!(v > 0.0, "sched.wakeup_s must be positive");
+            cfg.sched.wakeup_secs = v;
+        }
+        if let Some(v) = t.u64("sched.drives") {
+            cfg.sched.drives = v as usize;
+        }
+        if let Some(v) = t.u64("sched.isp_drives") {
+            cfg.sched.isp_drives = v as usize;
+        }
+        if let Some(v) = t.bool("sched.use_host") {
+            cfg.sched.use_host = v;
+        }
+        if let Some(v) = t.f64("power.server_idle_w") {
+            cfg.power.server_idle_w = v;
+        }
+        if let Some(v) = t.f64("power.csd_idle_w") {
+            cfg.power.csd_idle_w = v;
+        }
+        if let Some(v) = t.f64("power.host_active_w") {
+            cfg.power.host_active_w = v;
+        }
+        if let Some(v) = t.f64("power.isp_active_w") {
+            cfg.power.isp_active_w = v;
+        }
+        anyhow::ensure!(
+            cfg.sched.isp_drives <= cfg.sched.drives,
+            "isp_drives ({}) exceeds drives ({})",
+            cfg.sched.isp_drives,
+            cfg.sched.drives
+        );
+        Ok(cfg)
+    }
+}
+
+/// Parse an app name from config/CLI.
+pub fn parse_app(name: &str) -> anyhow::Result<App> {
+    match name {
+        "speech" | "speech_to_text" | "stt" => Ok(App::SpeechToText),
+        "recommender" | "rec" | "movies" => Ok(App::Recommender),
+        "sentiment" | "tweets" => Ok(App::Sentiment),
+        other => anyhow::bail!(
+            "unknown app '{other}' (expected speech|recommender|sentiment)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_without_file() {
+        let c = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(c.sched.drives, 36);
+        assert_eq!(c.power.server_idle_w, 167.0);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let c = ExperimentConfig::from_toml(
+            "seed = 7\nscale = 0.5\napp = \"sentiment\"\n[sched]\ncsd_batch = 1000\ndrives = 12\nisp_drives = 12\n[power]\ncsd_idle_w = 7.0\n",
+        )
+        .unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.sched.seed, 7);
+        assert_eq!(c.scale, 0.5);
+        assert_eq!(c.app, Some(App::Sentiment));
+        assert_eq!(c.sched.csd_batch, 1000);
+        assert_eq!(c.sched.drives, 12);
+        assert_eq!(c.power.csd_idle_w, 7.0);
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        assert!(ExperimentConfig::from_toml("scale = 2.0").is_err());
+        assert!(ExperimentConfig::from_toml("[sched]\ncsd_batch = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[sched]\ndrives = 4\nisp_drives = 8").is_err());
+        assert!(ExperimentConfig::from_toml("app = \"nope\"").is_err());
+    }
+
+    #[test]
+    fn app_aliases() {
+        assert_eq!(parse_app("stt").unwrap(), App::SpeechToText);
+        assert_eq!(parse_app("movies").unwrap(), App::Recommender);
+        assert_eq!(parse_app("tweets").unwrap(), App::Sentiment);
+    }
+}

@@ -1,0 +1,229 @@
+//! NAND flash array model: geometry, timing, and channel/die contention.
+//!
+//! §III-A1 of the paper: the BE talks to the flash packages over a
+//! 16-channel data bus capable of concurrent IO. We model each die as a
+//! single-server resource (tR / tPROG / tBERS occupancy) and each channel
+//! as a serialized bus (page transfer at ONFI-class bandwidth). This is
+//! the standard SSD-simulator decomposition (cf. MQSim): an operation
+//! occupies its die for the cell time, then its channel for the data
+//! transfer.
+
+use crate::sim::{Pipe, Servers, SimTime};
+
+/// Physical page address.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PhysAddr {
+    pub channel: u16,
+    pub die: u16,
+    pub block: u32,
+    pub page: u32,
+}
+
+/// Flash geometry + timing. Defaults model the 12-TB Solana prototype:
+/// 16 channels × 8 dies × 2500 blocks × 2304 pages × 16 KiB ≈ 12.1 TB.
+#[derive(Clone, Debug)]
+pub struct FlashConfig {
+    pub channels: u16,
+    pub dies_per_channel: u16,
+    pub blocks_per_die: u32,
+    pub pages_per_block: u32,
+    pub page_bytes: u64,
+    /// Cell read time tR (s) — TLC-class.
+    pub read_secs: f64,
+    /// Page program time tPROG (s).
+    pub program_secs: f64,
+    /// Block erase time tBERS (s).
+    pub erase_secs: f64,
+    /// Per-channel bus bandwidth (bytes/s) — ONFI 4 class.
+    pub channel_bw: f64,
+    /// Per-operation channel command overhead (s).
+    pub channel_cmd_secs: f64,
+}
+
+impl Default for FlashConfig {
+    fn default() -> Self {
+        FlashConfig {
+            channels: 16,
+            dies_per_channel: 8,
+            blocks_per_die: 2500,
+            pages_per_block: 2304,
+            page_bytes: 16 * 1024,
+            read_secs: 70e-6,
+            program_secs: 650e-6,
+            erase_secs: 3.5e-3,
+            channel_bw: 800e6,
+            channel_cmd_secs: 1e-6,
+        }
+    }
+}
+
+impl FlashConfig {
+    /// Tiny geometry for tests: 2 channels × 2 dies × 8 blocks × 16 pages
+    /// × 4 KiB = 4 MiB. Same code paths, GC reachable in milliseconds.
+    pub fn tiny() -> FlashConfig {
+        FlashConfig {
+            channels: 2,
+            dies_per_channel: 2,
+            blocks_per_die: 8,
+            pages_per_block: 16,
+            page_bytes: 4096,
+            ..FlashConfig::default()
+        }
+    }
+
+    pub fn dies(&self) -> usize {
+        self.channels as usize * self.dies_per_channel as usize
+    }
+
+    pub fn pages_per_die(&self) -> u64 {
+        self.blocks_per_die as u64 * self.pages_per_block as u64
+    }
+
+    pub fn total_pages(&self) -> u64 {
+        self.dies() as u64 * self.pages_per_die()
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.total_pages() * self.page_bytes
+    }
+
+    pub fn die_index(&self, a: &PhysAddr) -> usize {
+        a.channel as usize * self.dies_per_channel as usize + a.die as usize
+    }
+}
+
+/// The flash array: per-die occupancy + per-channel bus.
+pub struct FlashArray {
+    pub cfg: FlashConfig,
+    dies: Vec<Servers>,
+    channels: Vec<Pipe>,
+    reads: u64,
+    programs: u64,
+    erases: u64,
+}
+
+impl FlashArray {
+    pub fn new(cfg: FlashConfig) -> FlashArray {
+        let dies = (0..cfg.dies()).map(|_| Servers::new(1)).collect();
+        let channels = (0..cfg.channels as usize)
+            .map(|_| Pipe::new(cfg.channel_bw, cfg.channel_cmd_secs))
+            .collect();
+        FlashArray { cfg, dies, channels, reads: 0, programs: 0, erases: 0 }
+    }
+
+    /// Read one page: die busy for tR, then the channel moves the page.
+    /// Returns the time the page is in controller DRAM.
+    pub fn read_page(&mut self, now: SimTime, addr: PhysAddr) -> SimTime {
+        let die = self.cfg.die_index(&addr);
+        let cell_done = self.dies[die].acquire(now, self.cfg.read_secs);
+        let xfer = self.channels[addr.channel as usize].transfer(cell_done, self.cfg.page_bytes);
+        self.reads += 1;
+        xfer.end
+    }
+
+    /// Program one page: channel moves data to the die, then tPROG.
+    pub fn program_page(&mut self, now: SimTime, addr: PhysAddr) -> SimTime {
+        let xfer = self.channels[addr.channel as usize].transfer(now, self.cfg.page_bytes);
+        let die = self.cfg.die_index(&addr);
+        self.programs += 1;
+        self.dies[die].acquire(xfer.end, self.cfg.program_secs)
+    }
+
+    /// Erase a block: die busy for tBERS (no data on the channel).
+    pub fn erase_block(&mut self, now: SimTime, channel: u16, die: u16) -> SimTime {
+        let idx = channel as usize * self.cfg.dies_per_channel as usize + die as usize;
+        self.erases += 1;
+        self.dies[idx].acquire(now, self.cfg.erase_secs)
+    }
+
+    pub fn counts(&self) -> (u64, u64, u64) {
+        (self.reads, self.programs, self.erases)
+    }
+
+    /// Total busy seconds across dies (for power/utilization accounting).
+    pub fn die_busy_secs(&self) -> f64 {
+        self.dies.iter().map(|d| d.busy_secs()).sum()
+    }
+
+    pub fn channel_busy_secs(&self) -> f64 {
+        self.channels.iter().map(|c| c.busy_secs()).sum()
+    }
+
+    /// When all in-flight flash work drains.
+    pub fn drain_time(&self) -> SimTime {
+        let d = self.dies.iter().map(|x| x.drain_time()).fold(0.0, f64::max);
+        let c = self.channels.iter().map(|x| x.busy_until()).fold(0.0, f64::max);
+        d.max(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addr(channel: u16, die: u16, block: u32, page: u32) -> PhysAddr {
+        PhysAddr { channel, die, block, page }
+    }
+
+    #[test]
+    fn geometry_capacity_is_12tb_class() {
+        let cfg = FlashConfig::default();
+        let tb = cfg.capacity_bytes() as f64 / 1e12;
+        assert!((11.5..13.0).contains(&tb), "capacity {tb} TB");
+        assert_eq!(cfg.dies(), 128);
+    }
+
+    #[test]
+    fn tiny_geometry_math() {
+        let cfg = FlashConfig::tiny();
+        assert_eq!(cfg.total_pages(), 2 * 2 * 8 * 16);
+        assert_eq!(cfg.capacity_bytes(), 2 * 2 * 8 * 16 * 4096);
+    }
+
+    #[test]
+    fn read_page_timing_unloaded() {
+        let cfg = FlashConfig::default();
+        let mut f = FlashArray::new(cfg.clone());
+        let done = f.read_page(0.0, addr(0, 0, 0, 0));
+        let expect = cfg.read_secs + cfg.channel_cmd_secs + cfg.page_bytes as f64 / cfg.channel_bw;
+        assert!((done - expect).abs() < 1e-12, "{done} vs {expect}");
+    }
+
+    #[test]
+    fn dies_on_different_channels_are_parallel() {
+        let mut f = FlashArray::new(FlashConfig::default());
+        let d0 = f.read_page(0.0, addr(0, 0, 0, 0));
+        let d1 = f.read_page(0.0, addr(1, 0, 0, 0));
+        assert!((d0 - d1).abs() < 1e-12, "independent channels overlap fully");
+    }
+
+    #[test]
+    fn same_die_serializes_cell_time() {
+        let cfg = FlashConfig::default();
+        let mut f = FlashArray::new(cfg.clone());
+        let d0 = f.read_page(0.0, addr(0, 0, 0, 0));
+        let d1 = f.read_page(0.0, addr(0, 0, 0, 1));
+        assert!(d1 > d0, "second read on same die queues");
+        assert!(d1 - d0 >= cfg.read_secs - 1e-9);
+    }
+
+    #[test]
+    fn same_channel_different_die_overlaps_cell_time() {
+        let cfg = FlashConfig::default();
+        let mut f = FlashArray::new(cfg.clone());
+        // two dies on channel 0: tR overlaps, channel transfer serializes
+        let d0 = f.read_page(0.0, addr(0, 0, 0, 0));
+        let d1 = f.read_page(0.0, addr(0, 1, 0, 0));
+        let xfer = cfg.channel_cmd_secs + cfg.page_bytes as f64 / cfg.channel_bw;
+        assert!((d1 - d0 - xfer).abs() < 1e-9, "serialized only on the bus");
+    }
+
+    #[test]
+    fn program_and_erase_counts() {
+        let mut f = FlashArray::new(FlashConfig::tiny());
+        f.program_page(0.0, addr(0, 0, 0, 0));
+        f.erase_block(1.0, 0, 0);
+        let (r, p, e) = f.counts();
+        assert_eq!((r, p, e), (0, 1, 1));
+    }
+}

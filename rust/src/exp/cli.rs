@@ -1,0 +1,221 @@
+//! CLI dispatch for the `solana` binary.
+//!
+//! ```text
+//! solana run   --app sentiment --drives 36 --isp-drives 36 --batch 40000
+//! solana fig5  --app speech [--scale 0.25]
+//! solana fig6 | fig7 | table1 | power
+//! solana ablate --which ratio|datapath|wakeup --app sentiment
+//! solana version | help
+//! ```
+
+use crate::cli::Command;
+use crate::config::{parse_app, ExperimentConfig};
+use crate::exp::{self, Scale};
+use crate::metrics::Metrics;
+use crate::sched;
+use crate::workloads::{App, AppModel};
+
+fn commands() -> Vec<Command> {
+    vec![
+        Command::new("run", "run one benchmark under the scheduler")
+            .opt("app", Some("sentiment"), "speech|recommender|sentiment")
+            .opt("config", None, "TOML config file (configs/*.toml)")
+            .opt("drives", None, "populated drive bays (default 36)")
+            .opt("isp-drives", None, "drives with ISP engaged (default = drives)")
+            .opt("batch", None, "CSD batch size (items)")
+            .opt("ratio", None, "host/CSD batch ratio")
+            .opt("scale", None, "dataset scale vs paper (0..1], default 0.25")
+            .flag("baseline", "disable all ISP engines (storage-only)")
+            .flag("json", "emit the report as JSON"),
+        Command::new("fig5", "regenerate Fig 5 (throughput sweep)")
+            .opt("app", Some("speech"), "speech|recommender|sentiment")
+            .opt("scale", None, "dataset scale (default 0.25)"),
+        Command::new("fig6", "regenerate Fig 6 (1-node batch sweep)")
+            .opt("scale", None, "dataset scale"),
+        Command::new("fig7", "regenerate Fig 7 (energy per query)")
+            .opt("scale", None, "dataset scale"),
+        Command::new("table1", "regenerate Table I (summary)")
+            .opt("scale", None, "dataset scale"),
+        Command::new("power", "print the power breakdown (§IV-C)"),
+        Command::new("ablate", "run an ablation study")
+            .opt("which", Some("ratio"), "ratio|datapath|wakeup")
+            .opt("app", Some("sentiment"), "benchmark app")
+            .opt("scale", None, "dataset scale"),
+        Command::new("version", "print the version"),
+        Command::new("help", "show this help"),
+    ]
+}
+
+/// Dispatch CLI arguments; returns the process exit code.
+pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
+    let name = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest: Vec<String> = argv.iter().skip(1).cloned().collect();
+    let cmds = commands();
+    let Some(cmd) = cmds.iter().find(|c| c.name == name) else {
+        eprintln!("unknown command '{name}'");
+        print_help(&cmds);
+        return Ok(2);
+    };
+    let args = cmd.parse(&rest)?;
+    let scale = match args.f64("scale")? {
+        Some(s) => {
+            anyhow::ensure!(s > 0.0 && s <= 1.0, "--scale must be in (0,1]");
+            Scale(s)
+        }
+        None => Scale::from_env(),
+    };
+    match name {
+        "version" => println!("solana-isp {}", crate::VERSION),
+        "help" => print_help(&cmds),
+        "run" => {
+            let mut cfg = match args.str("config") {
+                Some(path) => ExperimentConfig::from_file(path)?,
+                None => ExperimentConfig::default(),
+            };
+            let app = match args.str("app") {
+                Some(a) => parse_app(a)?,
+                None => cfg.app.unwrap_or(App::Sentiment),
+            };
+            if let Some(d) = args.u64("drives")? {
+                cfg.sched.drives = d as usize;
+                cfg.sched.isp_drives = cfg.sched.isp_drives.min(d as usize);
+            }
+            if let Some(d) = args.u64("isp-drives")? {
+                cfg.sched.isp_drives = d as usize;
+            }
+            if args.flag("baseline") {
+                cfg.sched.isp_drives = 0;
+            }
+            if let Some(b) = args.u64("batch")? {
+                cfg.sched.csd_batch = b;
+            } else if !cfg.batch_explicit {
+                cfg.sched.csd_batch = exp::default_batch(app);
+            }
+            if let Some(r) = args.f64("ratio")? {
+                cfg.sched.batch_ratio = r;
+            } else if !cfg.ratio_explicit {
+                cfg.sched.batch_ratio = exp::batch_ratio(app);
+            }
+            // --scale beats the config file; the config beats the default.
+            let scale = match args.f64("scale")? {
+                Some(_) => scale,
+                None => Scale(cfg.scale),
+            };
+            let items = scale.items(app);
+            let model = AppModel::for_app(app, items);
+            let mut metrics = Metrics::new();
+            let r = sched::run(&model, &cfg.sched, &cfg.power, &mut metrics)?;
+            if args.flag("json") {
+                println!("{}", report_json(&r).to_pretty());
+            } else {
+                print_report(&r);
+            }
+        }
+        "fig5" => {
+            let app = parse_app(args.str("app").unwrap_or("speech"))?;
+            let suffix = match app {
+                App::SpeechToText => "a",
+                App::Recommender => "b",
+                App::Sentiment => "c",
+            };
+            exp::emit(&exp::fig5(app, scale)?, &format!("fig5{suffix}"))?;
+        }
+        "fig6" => exp::emit(&exp::fig6(scale)?, "fig6")?,
+        "fig7" => exp::emit(&exp::fig7(scale)?, "fig7")?,
+        "table1" => exp::emit(&exp::table1(scale)?, "table1")?,
+        "power" => exp::emit(&exp::power_breakdown(), "power")?,
+        "ablate" => {
+            let app = parse_app(args.str("app").unwrap_or("sentiment"))?;
+            match args.str("which").unwrap_or("ratio") {
+                "ratio" => exp::emit(&exp::ablate_batch_ratio(app, scale)?, "ablate_ratio")?,
+                "datapath" => exp::emit(&exp::ablate_datapath(app, scale)?, "ablate_datapath")?,
+                "wakeup" => exp::emit(&exp::ablate_wakeup(app, scale)?, "ablate_wakeup")?,
+                other => anyhow::bail!("unknown ablation '{other}'"),
+            }
+        }
+        _ => unreachable!(),
+    }
+    Ok(0)
+}
+
+fn print_help(cmds: &[Command]) {
+    println!("solana-isp {} — Solana CSD reproduction\n", crate::VERSION);
+    println!("commands:");
+    for c in cmds {
+        println!("  {:<10} {}", c.name, c.about);
+    }
+    println!("\nrun `solana <command> --help-like-nonsense` to see its options error message.");
+}
+
+fn print_report(r: &sched::RunReport) {
+    println!("== {} run ==", r.app);
+    println!("items               {:>14}", r.total_items);
+    println!("makespan            {:>14}", crate::util::human_secs(r.makespan_secs));
+    println!("throughput          {:>11.1} items/s", r.items_per_sec);
+    if r.words_per_sec != r.items_per_sec {
+        println!("                    {:>11.1} words/s", r.words_per_sec);
+    }
+    println!("host/csd items      {:>7} / {}", r.host_items, r.csd_items);
+    println!("csd data share      {:>13.1}%", r.csd_data_fraction() * 100.0);
+    println!("pcie bytes          {:>14}", crate::util::human_bytes(r.pcie_bytes));
+    println!("in-storage bytes    {:>14}", crate::util::human_bytes(r.isp_bytes));
+    println!("tunnel messages     {:>14}", r.tunnel_messages);
+    println!("energy              {:>11.1} J ({:.1} W avg)", r.energy_j, r.avg_power_w);
+    println!("energy/item         {:>11.4} J", r.energy_per_item_j);
+    println!("mean batch latency  {:>11.2} s", r.mean_batch_latency);
+}
+
+fn report_json(r: &sched::RunReport) -> crate::codec::json::Json {
+    use crate::codec::json::Json;
+    let mut j = Json::obj();
+    j.set("app", r.app.into())
+        .set("total_items", r.total_items.into())
+        .set("makespan_secs", r.makespan_secs.into())
+        .set("items_per_sec", r.items_per_sec.into())
+        .set("words_per_sec", r.words_per_sec.into())
+        .set("host_items", r.host_items.into())
+        .set("csd_items", r.csd_items.into())
+        .set("pcie_bytes", r.pcie_bytes.into())
+        .set("isp_bytes", r.isp_bytes.into())
+        .set("tunnel_messages", r.tunnel_messages.into())
+        .set("energy_j", r.energy_j.into())
+        .set("avg_power_w", r.avg_power_w.into())
+        .set("energy_per_item_j", r.energy_per_item_j.into())
+        .set("mean_batch_latency_s", r.mean_batch_latency.into());
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn version_and_help() {
+        assert_eq!(dispatch(&sv(&["version"])).unwrap(), 0);
+        assert_eq!(dispatch(&sv(&["help"])).unwrap(), 0);
+        assert_eq!(dispatch(&sv(&["nonsense"])).unwrap(), 2);
+    }
+
+    #[test]
+    fn run_small_benchmark() {
+        let code = dispatch(&sv(&[
+            "run", "--app", "sentiment", "--scale", "0.01", "--batch", "5000", "--json",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn power_command() {
+        assert_eq!(dispatch(&sv(&["power"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn bad_scale_rejected() {
+        assert!(dispatch(&sv(&["run", "--scale", "3.0"])).is_err());
+    }
+}

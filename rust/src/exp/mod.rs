@@ -1,0 +1,406 @@
+//! Experiment drivers: one function per paper figure/table, shared by
+//! the `cargo bench` targets, the examples, and the `solana` CLI.
+//!
+//! Experiment index (DESIGN.md §6):
+//!
+//! | fn | paper artifact |
+//! |----|----------------|
+//! | [`fig5`] | Fig 5(a/b/c): throughput vs batch size × #CSDs |
+//! | [`fig6`] | Fig 6: 1-node sentiment throughput vs batch size |
+//! | [`fig7`] | Fig 7: normalized energy/query vs #CSDs |
+//! | [`table1`] | Table I: summary of all benchmarks |
+//! | [`power_breakdown`] | §IV-C wall-power measurements |
+//! | [`ablate_batch_ratio`] | A1: off-optimal batch ratios under-utilize |
+//! | [`ablate_datapath`] | A2: shared-FS index dispatch vs tunnel data |
+//! | [`ablate_wakeup`] | A3: scheduler polling period sensitivity |
+
+pub mod cli;
+
+use crate::metrics::{Metrics, Table};
+use crate::power::PowerModel;
+use crate::sched::{run, RunReport, SchedConfig};
+use crate::workloads::{App, AppModel};
+
+pub use cli::dispatch;
+
+/// Scale factor applied to the paper's dataset sizes (1.0 = full paper
+/// scale; benches use smaller factors for quick runs via
+/// `SOLANA_BENCH_FAST`).
+#[derive(Clone, Copy, Debug)]
+pub struct Scale(pub f64);
+
+impl Scale {
+    pub fn items(&self, app: App) -> u64 {
+        ((AppModel::paper_items(app) as f64 * self.0) as u64).max(1_000)
+    }
+
+    pub fn from_env() -> Scale {
+        if std::env::var("SOLANA_BENCH_FAST").ok().as_deref() == Some("1") {
+            Scale(0.05)
+        } else {
+            Scale(0.25)
+        }
+    }
+}
+
+/// Default batch-size sweep per app (the paper's Fig 5 x-values; the
+/// recommender's are not stated in the paper — we use a range around its
+/// operating point, see DESIGN.md).
+pub fn batch_sizes(app: App) -> Vec<u64> {
+    match app {
+        App::SpeechToText => vec![2, 4, 6, 8],
+        App::Recommender => vec![64, 128, 256, 512],
+        App::Sentiment => vec![10_000, 20_000, 40_000, 80_000],
+    }
+}
+
+/// Default batch ratio per app (≈ host/CSD speed ratio, §IV-A).
+pub fn batch_ratio(app: App) -> f64 {
+    AppModel::for_app(app, 1).natural_batch_ratio().round()
+}
+
+/// #CSD sweep for Fig 5/7 (0 = host-only baseline).
+pub const CSD_COUNTS: [usize; 6] = [0, 4, 9, 18, 27, 36];
+
+fn cfg_for(app: App, batch: u64, isp_drives: usize) -> SchedConfig {
+    SchedConfig {
+        csd_batch: batch,
+        batch_ratio: batch_ratio(app),
+        drives: 36,
+        isp_drives,
+        ..SchedConfig::default()
+    }
+}
+
+/// One throughput cell of Fig 5.
+pub fn run_cell(app: App, items: u64, batch: u64, isp_drives: usize) -> anyhow::Result<RunReport> {
+    let model = AppModel::for_app(app, items);
+    let mut metrics = Metrics::new();
+    run(&model, &cfg_for(app, batch, isp_drives), &PowerModel::default(), &mut metrics)
+}
+
+/// Fig 5(a/b/c): throughput vs batch size × engaged CSDs.
+/// Rows: one per (batch, csds) with items/s and words/s.
+pub fn fig5(app: App, scale: Scale) -> anyhow::Result<Table> {
+    let items = scale.items(app);
+    let unit = if app == App::SpeechToText { "words/s" } else { "queries/s" };
+    let mut t = Table::new(
+        &format!("Fig 5 — {} throughput ({} items)", app.name(), items),
+        &["batch", "csds", unit, "host items", "csd items", "csd share"],
+    );
+    for &batch in &batch_sizes(app) {
+        for &csds in &CSD_COUNTS {
+            let r = run_cell(app, items, batch, csds)?;
+            let rate = if app == App::SpeechToText { r.words_per_sec } else { r.items_per_sec };
+            t.row(vec![
+                batch.to_string(),
+                csds.to_string(),
+                format!("{rate:.1}"),
+                r.host_items.to_string(),
+                r.csd_items.to_string(),
+                format!("{:.2}", r.csd_data_fraction()),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Fig 6: single-node sentiment throughput vs batch size (log sweep),
+/// host and CSD — run end-to-end with one compute node each.
+pub fn fig6(scale: Scale) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Fig 6 — 1-node sentiment throughput vs batch size",
+        &["batch", "host q/s", "csd q/s", "host batch latency s", "csd batch latency s"],
+    );
+    let batches = [10u64, 100, 1_000, 4_000, 10_000, 40_000, 80_000];
+    for &b in &batches {
+        let items = (scale.items(App::Sentiment) / 8).max(4 * b);
+        let model = AppModel::sentiment(items);
+        let power = PowerModel::default();
+        // host only, one drive holding the data
+        let mut m1 = Metrics::new();
+        let host = run(
+            &model,
+            &SchedConfig {
+                csd_batch: b,
+                batch_ratio: 1.0,
+                drives: 1,
+                isp_drives: 0,
+                ..SchedConfig::default()
+            },
+            &power,
+            &mut m1,
+        )?;
+        // csd only
+        let mut m2 = Metrics::new();
+        let csd = run(
+            &model,
+            &SchedConfig {
+                csd_batch: b,
+                batch_ratio: 1.0,
+                drives: 1,
+                isp_drives: 1,
+                use_host: false,
+                ..SchedConfig::default()
+            },
+            &power,
+            &mut m2,
+        )?;
+        let hl = m1.histogram("sched.host_batch_latency").map(|h| h.mean()).unwrap_or(0.0);
+        let cl = m2.histogram("sched.csd_batch_latency").map(|h| h.mean()).unwrap_or(0.0);
+        t.row(vec![
+            b.to_string(),
+            format!("{:.1}", host.items_per_sec),
+            format!("{:.1}", csd.items_per_sec),
+            format!("{hl:.3}"),
+            format!("{cl:.3}"),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Fig 7: energy per query vs #CSDs, normalized to the host-only setup.
+pub fn fig7(scale: Scale) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Fig 7 — energy per query, normalized to host-only",
+        &["csds", "speech", "recommender", "sentiment"],
+    );
+    let mut base: Vec<f64> = Vec::new();
+    for &csds in &CSD_COUNTS {
+        let mut cells = vec![csds.to_string()];
+        for (i, app) in App::all().iter().enumerate() {
+            let batch = default_batch(*app);
+            let r = run_cell(*app, scale.items(*app), batch, csds)?;
+            if csds == 0 {
+                base.push(r.energy_per_item_j);
+                cells.push("1.000".to_string());
+            } else {
+                cells.push(format!("{:.3}", r.energy_per_item_j / base[i]));
+            }
+        }
+        t.row(cells);
+    }
+    Ok(t)
+}
+
+/// The paper's per-app operating point in Fig 5 (best batch).
+pub fn default_batch(app: App) -> u64 {
+    match app {
+        App::SpeechToText => 6,
+        App::Recommender => 256,
+        App::Sentiment => 40_000,
+    }
+}
+
+/// Table I: the summary row block for every app.
+pub fn table1(scale: Scale) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Table I — summary of experimental results",
+        &[
+            "application",
+            "items",
+            "max speedup",
+            "energy/query host (mJ)",
+            "energy/query w/CSD (mJ)",
+            "energy saving",
+            "data on host",
+            "data in CSDs",
+        ],
+    );
+    for app in App::all() {
+        let items = scale.items(app);
+        let batch = default_batch(app);
+        let base = run_cell(app, items, batch, 0)?;
+        let isp = run_cell(app, items, batch, 36)?;
+        let speedup = isp.items_per_sec / base.items_per_sec;
+        // the paper reports energy per word for speech
+        let divisor = AppModel::for_app(app, items).words_per_item;
+        let e_host = base.energy_per_item_j / divisor * 1e3;
+        let e_isp = isp.energy_per_item_j / divisor * 1e3;
+        t.row(vec![
+            app.name().to_string(),
+            items.to_string(),
+            format!("{speedup:.1}x"),
+            format!("{e_host:.0}"),
+            format!("{e_isp:.0}"),
+            format!("{:.0}%", (1.0 - e_isp / e_host) * 100.0),
+            format!("{:.0}%", (1.0 - isp.csd_data_fraction()) * 100.0),
+            format!("{:.0}%", isp.csd_data_fraction() * 100.0),
+        ]);
+    }
+    Ok(t)
+}
+
+/// §IV-C: wall power in the four measured states.
+pub fn power_breakdown() -> Table {
+    let p = PowerModel::default();
+    let mut t = Table::new(
+        "Power breakdown (paper §IV-C)",
+        &["state", "model W", "paper W"],
+    );
+    t.row(vec!["idle, no drives".into(), format!("{:.1}", p.instantaneous_w(0, 0.0, 0)), "167".into()]);
+    t.row(vec!["idle, 36 CSDs".into(), format!("{:.1}", p.instantaneous_w(36, 0.0, 0)), "405".into()]);
+    t.row(vec!["running, ISP off".into(), format!("{:.1}", p.instantaneous_w(36, 1.0, 0)), "482".into()]);
+    t.row(vec!["running, 36 ISPs".into(), format!("{:.1}", p.instantaneous_w(36, 1.0, 36)), "492".into()]);
+    t
+}
+
+/// A1: batch-ratio sweep at fixed batch size — off-optimal ratios
+/// under-utilize one side (§IV-A).
+pub fn ablate_batch_ratio(app: App, scale: Scale) -> anyhow::Result<Table> {
+    let items = scale.items(app);
+    let natural = batch_ratio(app);
+    let mut t = Table::new(
+        &format!("A1 — batch-ratio sweep ({}; natural ≈ {natural})", app.name()),
+        &["ratio", "items/s", "host util", "mean csd idle gap s"],
+    );
+    for mult in [0.25, 0.5, 1.0, 2.0, 4.0] {
+        let ratio = (natural * mult).max(1.0);
+        let model = AppModel::for_app(app, items);
+        let mut m = Metrics::new();
+        let cfg = SchedConfig {
+            // batch small enough that the run is many batches long per
+            // node (a single-tail-batch run would mask the ratio)
+            csd_batch: (default_batch(app) / 8).max(1),
+            batch_ratio: ratio,
+            drives: 36,
+            isp_drives: 36,
+            // the paper's plain scheduler — our fair-share tail fix
+            // hides exactly the under-utilization this ablation shows
+            fair_tail: false,
+            ..SchedConfig::default()
+        };
+        let r = run(&model, &cfg, &PowerModel::default(), &mut m)?;
+        let host_util = r.host_busy_secs / r.makespan_secs;
+        let idle_gap = (r.makespan_secs * 36.0 - r.isp_busy_secs) / 36.0 / r.csd_batches.max(1) as f64;
+        t.row(vec![
+            format!("{ratio:.0}"),
+            format!("{:.1}", r.items_per_sec),
+            format!("{host_util:.2}"),
+            format!("{idle_gap:.3}"),
+        ]);
+    }
+    Ok(t)
+}
+
+/// A2: what if the scheduler shipped *data* over the TCP/IP tunnel
+/// instead of indexes into the shared FS? (Why OCFS2 matters, §IV-A.)
+///
+/// Run on an IO-bound scan workload: the paper's NLP apps are
+/// A53-compute-bound, so their data path barely shows; a grep-like scan
+/// is where "GBps of PCIe/DMA vs MBps of TCP/IP" decides everything.
+/// The `app` argument selects the *paper* workload shown alongside for
+/// contrast.
+pub fn ablate_datapath(app: App, scale: Scale) -> anyhow::Result<Table> {
+    let items = (scale.items(App::Sentiment) / 100).max(5_000);
+    let base = AppModel::scan(items);
+    let mut t = Table::new(
+        &format!("A2 — dispatch datapath (IO-bound scan; contrast app: {})", app.name()),
+        &["dispatch", "items/s", "speedup vs host-only"],
+    );
+    let power = PowerModel::default();
+    let mut m = Metrics::new();
+    let cfg = SchedConfig {
+        csd_batch: 256,
+        batch_ratio: 8.0,
+        ..SchedConfig::default()
+    };
+    let host_only = run(&base, &SchedConfig { isp_drives: 0, ..cfg.clone() }, &power, &mut m)?;
+    // index-only dispatch (the paper's design): ISPs read via local DMA
+    let shared_fs = run(&base, &cfg, &power, &mut m)?;
+    // tunnel-data dispatch: every CSD item's bytes cross the ~120 MB/s
+    // tunnel (serialized per drive) before the scan can run
+    let mut tunneled = base.clone();
+    let tun = crate::interconnect::TcpTunnel::default();
+    tunneled.csd_item_secs += tun.unloaded_secs(base.bytes_per_item) * crate::workloads::ISP_CORES;
+    let tunnel_run = run(&tunneled, &cfg, &power, &mut m)?;
+    for (name, r) in [
+        ("host-only", &host_only),
+        ("shared-fs indexes", &shared_fs),
+        ("tunnel data", &tunnel_run),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            format!("{:.1}", r.items_per_sec),
+            format!("{:.2}x", r.items_per_sec / host_only.items_per_sec),
+        ]);
+    }
+    Ok(t)
+}
+
+/// A3: scheduler wakeup period sensitivity (paper fixes 0.2 s).
+pub fn ablate_wakeup(app: App, scale: Scale) -> anyhow::Result<Table> {
+    let items = scale.items(app);
+    let model = AppModel::for_app(app, items);
+    let mut t = Table::new(
+        &format!("A3 — scheduler wakeup period ({})", app.name()),
+        &["wakeup s", "items/s", "tunnel msgs"],
+    );
+    for wakeup in [0.02, 0.1, 0.2, 0.5, 1.0, 2.0] {
+        let mut m = Metrics::new();
+        let cfg = SchedConfig {
+            wakeup_secs: wakeup,
+            ..cfg_for(app, default_batch(app), 36)
+        };
+        let r = run(&model, &cfg, &PowerModel::default(), &mut m)?;
+        t.row(vec![
+            format!("{wakeup}"),
+            format!("{:.1}", r.items_per_sec),
+            r.tunnel_messages.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Write a table to `target/bench-results/<name>.{txt,csv}` and print it.
+pub fn emit(table: &Table, name: &str) -> anyhow::Result<()> {
+    print!("{}", table.render());
+    let dir = std::path::Path::new("target/bench-results");
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{name}.txt")), table.render())?;
+    std::fs::write(dir.join(format!("{name}.csv")), table.to_csv())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_ratios_are_natural() {
+        assert!((batch_ratio(App::Sentiment) - 26.0).abs() < 1.0);
+        assert!((batch_ratio(App::SpeechToText) - 19.0).abs() < 1.5);
+    }
+
+    #[test]
+    fn fig5_speech_small_scale_shape() {
+        // tiny scale: monotone in #CSDs at fixed batch
+        let items = 2_620;
+        let r0 = run_cell(App::SpeechToText, items, 6, 0).unwrap();
+        let r18 = run_cell(App::SpeechToText, items, 6, 18).unwrap();
+        let r36 = run_cell(App::SpeechToText, items, 6, 36).unwrap();
+        assert!(r18.words_per_sec > r0.words_per_sec);
+        assert!(r36.words_per_sec > r18.words_per_sec);
+    }
+
+    #[test]
+    fn power_breakdown_matches_paper() {
+        let t = power_breakdown();
+        let rendered = t.render();
+        assert!(rendered.contains("167.0"));
+        assert!(rendered.contains("404.6"));
+        assert!(rendered.contains("481.6"));
+        assert!(rendered.contains("491.7"));
+    }
+
+    #[test]
+    fn table1_quarter_scale_speedups() {
+        let t = table1(Scale(0.25)).unwrap();
+        assert_eq!(t.rows.len(), 3);
+        // speedups all > 1.5x at quarter scale
+        for row in &t.rows {
+            let sp: f64 = row[2].trim_end_matches('x').parse().unwrap();
+            assert!(sp > 1.5, "{row:?}");
+        }
+    }
+}

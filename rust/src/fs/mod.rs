@@ -1,0 +1,396 @@
+//! Shared-disk file system (OCFS2 analogue).
+//!
+//! §III-B: "We use the Oracle Cluster File System (OCFS2) to enable
+//! sharing file systems and mounting the same partitions from both the
+//! host and the ISP. OCFS2 requires a TCP/IP communication link to
+//! orchestrate and update file systems of the two mounting points."
+//!
+//! This module implements the pieces that matter for the paper's
+//! experiments: an extent-based on-disk layout (so file reads become
+//! physical extent reads against the FTL), an inode namespace shared by
+//! two mount points, and a distributed lock manager whose *lock mastering
+//! traffic crosses the TCP/IP tunnel* — the cost the scheduler avoids by
+//! shipping only indexes. Lock caching mirrors OCFS2's behaviour: a node
+//! holding a cached lock re-acquires it for free until the other node
+//! forces a downgrade.
+
+use std::collections::BTreeMap;
+
+use crate::interconnect::TcpTunnel;
+use crate::sim::SimTime;
+use crate::util::div_ceil;
+
+/// Which mount point is acting (§III-B: host and ISP mount the same
+/// partition).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mount {
+    Host,
+    Isp,
+}
+
+/// A contiguous run of file-system blocks on the device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Extent {
+    /// First byte address on the logical device.
+    pub start_byte: u64,
+    pub bytes: u64,
+}
+
+/// Lock modes for the per-inode DLM lock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LockMode {
+    /// Protected read — shareable.
+    Read,
+    /// Exclusive — required for writes.
+    Write,
+}
+
+#[derive(Clone, Debug, Default)]
+struct DlmLock {
+    /// Protected-read cache per mount (host, isp) — OCFS2 PR locks are
+    /// shareable, so both mounts can hold a cached read lock at once.
+    read_cached: [bool; 2],
+    /// Exclusive holder, if any (implies the right to read too).
+    write_holder: Option<Mount>,
+}
+
+fn mount_idx(m: Mount) -> usize {
+    match m {
+        Mount::Host => 0,
+        Mount::Isp => 1,
+    }
+}
+
+/// An inode: size + extent list + its DLM lock.
+#[derive(Clone, Debug)]
+pub struct Inode {
+    pub size: u64,
+    pub extents: Vec<Extent>,
+    lock: DlmLock,
+}
+
+/// DLM traffic statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DlmStats {
+    pub acquisitions: u64,
+    pub cached_hits: u64,
+    pub remote_grants: u64,
+    pub messages: u64,
+}
+
+/// The shared file system on one CSD partition.
+pub struct SharedFs {
+    /// FS block size (OCFS2 default cluster size class).
+    pub block_bytes: u64,
+    /// Device capacity in bytes.
+    pub capacity: u64,
+    /// Next free byte (extent allocator is first-fit bump + free list).
+    next_free: u64,
+    free_list: Vec<Extent>,
+    inodes: BTreeMap<String, Inode>,
+    pub dlm: DlmStats,
+}
+
+impl SharedFs {
+    pub fn new(capacity: u64, block_bytes: u64) -> SharedFs {
+        assert!(block_bytes.is_power_of_two());
+        SharedFs {
+            block_bytes,
+            capacity,
+            next_free: 0,
+            free_list: Vec::new(),
+            inodes: BTreeMap::new(),
+            dlm: DlmStats::default(),
+        }
+    }
+
+    fn round_up(&self, bytes: u64) -> u64 {
+        div_ceil(bytes.max(1), self.block_bytes) * self.block_bytes
+    }
+
+    /// Create a file of `size` bytes; allocates extents. Returns an error
+    /// if the name exists or space is exhausted.
+    pub fn create(&mut self, name: &str, size: u64) -> anyhow::Result<()> {
+        if self.inodes.contains_key(name) {
+            anyhow::bail!("file exists: {name}");
+        }
+        let need = self.round_up(size);
+        let mut extents = Vec::new();
+        let mut remaining = need;
+        // First-fit from the free list.
+        let mut i = 0;
+        while remaining > 0 && i < self.free_list.len() {
+            let e = self.free_list[i];
+            let take = e.bytes.min(remaining);
+            extents.push(Extent { start_byte: e.start_byte, bytes: take });
+            if take == e.bytes {
+                self.free_list.remove(i);
+            } else {
+                self.free_list[i] = Extent { start_byte: e.start_byte + take, bytes: e.bytes - take };
+                i += 1;
+            }
+            remaining -= take;
+        }
+        if remaining > 0 {
+            if self.next_free + remaining > self.capacity {
+                // roll back free-list takes
+                for e in extents {
+                    self.free_list.push(e);
+                }
+                anyhow::bail!("no space for {name}: need {need} bytes");
+            }
+            extents.push(Extent { start_byte: self.next_free, bytes: remaining });
+            self.next_free += remaining;
+        }
+        self.inodes.insert(
+            name.to_string(),
+            Inode { size, extents, lock: DlmLock::default() },
+        );
+        Ok(())
+    }
+
+    /// Delete a file, returning its extents to the free list.
+    pub fn unlink(&mut self, name: &str) -> anyhow::Result<()> {
+        let inode = self
+            .inodes
+            .remove(name)
+            .ok_or_else(|| anyhow::anyhow!("no such file: {name}"))?;
+        self.free_list.extend(inode.extents);
+        Ok(())
+    }
+
+    pub fn stat(&self, name: &str) -> Option<(u64, usize)> {
+        self.inodes.get(name).map(|i| (i.size, i.extents.len()))
+    }
+
+    pub fn exists(&self, name: &str) -> bool {
+        self.inodes.contains_key(name)
+    }
+
+    /// Acquire the inode's DLM lock from `mount` at `now`.
+    ///
+    /// OCFS2 semantics (simplified to two mounts): a lock cached by this
+    /// mount in a compatible mode is free; anything else masters the lock
+    /// over the tunnel (one request/grant round trip) and possibly
+    /// revokes the peer's cache. Returns the grant time.
+    pub fn lock(
+        &mut self,
+        now: SimTime,
+        tunnel: &mut TcpTunnel,
+        name: &str,
+        mount: Mount,
+        mode: LockMode,
+    ) -> anyhow::Result<SimTime> {
+        let inode = self
+            .inodes
+            .get_mut(name)
+            .ok_or_else(|| anyhow::anyhow!("lock on missing file: {name}"))?;
+        self.dlm.acquisitions += 1;
+        let l = &mut inode.lock;
+        let cached = match mode {
+            LockMode::Read => {
+                l.read_cached[mount_idx(mount)] || l.write_holder == Some(mount)
+            }
+            LockMode::Write => l.write_holder == Some(mount),
+        };
+        if cached {
+            self.dlm.cached_hits += 1;
+            return Ok(now);
+        }
+        // Remote mastering: request + grant over the tunnel (~64 B each).
+        let granted = tunnel.round_trip(now, 64, 64);
+        self.dlm.remote_grants += 1;
+        self.dlm.messages += 2;
+        match mode {
+            LockMode::Read => {
+                l.read_cached[mount_idx(mount)] = true;
+                // A peer's exclusive lock is downgraded by the grant.
+                if l.write_holder.is_some() && l.write_holder != Some(mount) {
+                    l.write_holder = None;
+                }
+            }
+            LockMode::Write => {
+                l.write_holder = Some(mount);
+                // Revoke the peer's read cache.
+                let peer = 1 - mount_idx(mount);
+                l.read_cached[peer] = false;
+            }
+        }
+        Ok(granted)
+    }
+
+    /// Map a byte range of a file to device extents for the FCU.
+    /// Returns `(device_byte_offset, bytes)` runs covering the range.
+    pub fn map_range(&self, name: &str, offset: u64, len: u64) -> anyhow::Result<Vec<(u64, u64)>> {
+        let inode = self
+            .inodes
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no such file: {name}"))?;
+        if offset + len > self.round_up(inode.size) {
+            anyhow::bail!(
+                "read past EOF: {name} offset {offset} len {len} size {}",
+                inode.size
+            );
+        }
+        let mut runs = Vec::new();
+        let mut file_pos = 0u64;
+        let mut remaining = len;
+        let mut start = offset;
+        for e in &inode.extents {
+            let e_end = file_pos + e.bytes;
+            if start < e_end && remaining > 0 {
+                let within = start - file_pos;
+                let take = (e.bytes - within).min(remaining);
+                runs.push((e.start_byte + within, take));
+                remaining -= take;
+                start += take;
+            }
+            file_pos = e_end;
+            if remaining == 0 {
+                break;
+            }
+        }
+        if remaining > 0 {
+            anyhow::bail!("extent map incomplete for {name}");
+        }
+        Ok(runs)
+    }
+
+    /// Bytes currently allocated (for tests / reports).
+    pub fn allocated_bytes(&self) -> u64 {
+        self.inodes
+            .values()
+            .flat_map(|i| i.extents.iter())
+            .map(|e| e.bytes)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check, forall};
+
+    fn fs() -> SharedFs {
+        SharedFs::new(1 << 30, 4096)
+    }
+
+    #[test]
+    fn create_stat_unlink() {
+        let mut f = fs();
+        f.create("corpus.bin", 10_000).unwrap();
+        let (size, extents) = f.stat("corpus.bin").unwrap();
+        assert_eq!(size, 10_000);
+        assert_eq!(extents, 1);
+        assert_eq!(f.allocated_bytes(), 12_288); // rounded to 3 blocks
+        f.unlink("corpus.bin").unwrap();
+        assert!(!f.exists("corpus.bin"));
+    }
+
+    #[test]
+    fn duplicate_create_fails() {
+        let mut f = fs();
+        f.create("a", 1).unwrap();
+        assert!(f.create("a", 1).is_err());
+    }
+
+    #[test]
+    fn out_of_space_fails_cleanly() {
+        let mut f = SharedFs::new(8192, 4096);
+        f.create("a", 8192).unwrap();
+        assert!(f.create("b", 1).is_err());
+        f.unlink("a").unwrap();
+        f.create("b", 4096).unwrap(); // reuses freed extent
+        let (_, ext) = f.stat("b").unwrap();
+        assert_eq!(ext, 1);
+    }
+
+    #[test]
+    fn map_range_single_extent() {
+        let mut f = fs();
+        f.create("x", 100_000).unwrap();
+        let runs = f.map_range("x", 5_000, 10_000).unwrap();
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].1, 10_000);
+    }
+
+    #[test]
+    fn map_range_across_fragmented_extents() {
+        let mut f = SharedFs::new(1 << 20, 4096);
+        // Fragment: a(2 blocks) b(1 block) then free a → c straddles.
+        f.create("a", 8192).unwrap();
+        f.create("b", 4096).unwrap();
+        f.unlink("a").unwrap();
+        f.create("c", 16384).unwrap(); // 8 KiB from free list + 8 KiB bump
+        let (_, extents) = f.stat("c").unwrap();
+        assert_eq!(extents, 2);
+        let runs = f.map_range("c", 4096, 8192).unwrap();
+        assert_eq!(runs.iter().map(|r| r.1).sum::<u64>(), 8192);
+        assert_eq!(runs.len(), 2, "straddles the extent boundary");
+    }
+
+    #[test]
+    fn read_past_eof_rejected() {
+        let mut f = fs();
+        f.create("x", 4096).unwrap();
+        assert!(f.map_range("x", 0, 8192).is_err());
+    }
+
+    #[test]
+    fn dlm_lock_caching() {
+        let mut f = fs();
+        let mut tun = TcpTunnel::default();
+        f.create("data", 4096).unwrap();
+        // First acquisition masters over the tunnel.
+        let t1 = f.lock(0.0, &mut tun, "data", Mount::Isp, LockMode::Read).unwrap();
+        assert!(t1 > 0.0);
+        assert_eq!(f.dlm.remote_grants, 1);
+        // Second from the same mount: cached, free.
+        let t2 = f.lock(t1, &mut tun, "data", Mount::Isp, LockMode::Read).unwrap();
+        assert_eq!(t2, t1);
+        assert_eq!(f.dlm.cached_hits, 1);
+        // Host steals it: tunnel round trip again.
+        let t3 = f.lock(t2, &mut tun, "data", Mount::Host, LockMode::Write).unwrap();
+        assert!(t3 > t2);
+        assert_eq!(f.dlm.remote_grants, 2);
+        assert_eq!(tun.messages(), 4);
+    }
+
+    #[test]
+    fn write_lock_allows_read_by_holder() {
+        let mut f = fs();
+        let mut tun = TcpTunnel::default();
+        f.create("data", 4096).unwrap();
+        f.lock(0.0, &mut tun, "data", Mount::Host, LockMode::Write).unwrap();
+        let t = f.lock(1.0, &mut tun, "data", Mount::Host, LockMode::Read).unwrap();
+        assert_eq!(t, 1.0, "write holder reads for free");
+    }
+
+    #[test]
+    fn property_map_range_covers_exactly() {
+        forall("fs map_range covers requested bytes", 100, |g| {
+            let mut f = SharedFs::new(1 << 22, 4096);
+            // create a few files with churn to fragment
+            let n = g.usize(1..=6);
+            for i in 0..n {
+                let sz = g.u64(1..=100_000);
+                f.create(&format!("f{i}"), sz).map_err(|e| e.to_string())?;
+                if g.bool() && i > 0 {
+                    let _ = f.unlink(&format!("f{}", i - 1));
+                }
+            }
+            let sz = g.u64(4096..=200_000);
+            f.create("target", sz).map_err(|e| e.to_string())?;
+            let off = g.u64(0..=sz - 1);
+            let len = g.u64(1..=sz - off);
+            let runs = f.map_range("target", off, len).map_err(|e| e.to_string())?;
+            let total: u64 = runs.iter().map(|r| r.1).sum();
+            check(total == len, format!("covered {total} != requested {len}"))?;
+            // runs must fall inside the device
+            for (start, bytes) in runs {
+                check(start + bytes <= 1 << 22, "run outside device")?;
+            }
+            Ok(())
+        });
+    }
+}

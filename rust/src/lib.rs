@@ -1,0 +1,51 @@
+//! # solana-isp
+//!
+//! Full-system reproduction of *"In-storage Processing of I/O Intensive
+//! Applications on Computational Storage Drives"* (HeydariGorji et al.,
+//! 2021) — the **Solana** computational storage drive (CSD) and the
+//! MPI-style pull scheduler that distributes NLP workloads over a storage
+//! server's host CPU and up to 36 CSDs.
+//!
+//! The physical testbed (a 12-TB E1.S CSD ASIC with an embedded quad-core
+//! ARM Cortex-A53 ISP engine, mounted 36-up in an AIC FB128-LX server) is
+//! reproduced as a deterministic discrete-event full-system simulator,
+//! calibrated to the paper's measured single-node rates and power numbers.
+//! The NLP compute itself is *real*: JAX/Pallas models are AOT-lowered to
+//! HLO at build time and executed from Rust through the PJRT CPU client
+//! (see [`runtime`]) — Python never runs on the request path.
+//!
+//! Layer map:
+//! * **L3** — this crate: simulator, device models, shared FS, scheduler,
+//!   power/energy accounting, workloads, experiment drivers.
+//! * **L2** — `python/compile/model.py`: JAX graphs for the three NLP
+//!   benchmarks (sentiment LR train+infer, recommender cosine top-k,
+//!   speech acoustic model).
+//! * **L1** — `python/compile/kernels/`: Pallas tiled similarity/GEMM
+//!   kernels (interpret mode), verified against a pure-jnp oracle.
+//!
+//! See `DESIGN.md` for the module inventory and the experiment index.
+
+pub mod bench_support;
+pub mod cli;
+pub mod cluster;
+pub mod codec;
+pub mod config;
+pub mod csd;
+pub mod exp;
+pub mod fs;
+pub mod interconnect;
+pub mod metrics;
+pub mod nlp;
+pub mod power;
+pub mod prop;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+pub mod workloads;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Version string reported by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

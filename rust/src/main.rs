@@ -1,0 +1,15 @@
+//! `solana` — CLI entrypoint for the Solana ISP reproduction.
+//!
+//! Subcommands are registered in [`solana_isp::exp`] (experiment drivers)
+//! and dispatched here; run `solana help` for the list.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match solana_isp::exp::dispatch(&args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

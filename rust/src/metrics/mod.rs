@@ -1,0 +1,354 @@
+//! Metrics registry: counters, gauges, histograms, and time series keyed
+//! by name, plus text/CSV/JSON report emitters. The simulator, device
+//! models, scheduler, and power meter all record into a [`Metrics`]
+//! instance owned by the experiment driver; benches read the same
+//! counters the paper's figures plot (words/s, queries/s, bytes moved,
+//! Joules).
+
+use std::collections::BTreeMap;
+
+use crate::codec::json::Json;
+use crate::util::stats::{percentile_sorted, Welford};
+
+/// A histogram with power-of-two-ish fixed buckets plus exact reservoir
+/// of up to `CAP` samples for accurate percentiles in reports.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    welford: Welford,
+    samples: Vec<f64>,
+    cap: usize,
+    /// Number of samples dropped from the reservoir (recorded beyond cap).
+    overflow: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::with_capacity(65_536)
+    }
+}
+
+impl Histogram {
+    pub fn with_capacity(cap: usize) -> Self {
+        Histogram { welford: Welford::new(), samples: Vec::new(), cap, overflow: 0 }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.welford.push(v);
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+        } else {
+            self.overflow += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.welford.count()
+    }
+    pub fn mean(&self) -> f64 {
+        self.welford.mean()
+    }
+    pub fn std(&self) -> f64 {
+        self.welford.std()
+    }
+    pub fn min(&self) -> f64 {
+        self.welford.min()
+    }
+    pub fn max(&self) -> f64 {
+        self.welford.max()
+    }
+
+    pub fn percentile(&self, pct: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile_sorted(&sorted, pct)
+    }
+}
+
+/// A named point-in-time series (e.g. power draw over simulated time).
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub points: Vec<(f64, f64)>, // (time, value)
+}
+
+impl Series {
+    pub fn push(&mut self, t: f64, v: f64) {
+        self.points.push((t, v));
+    }
+
+    /// Trapezoidal integral — turns a power series (W) into energy (J).
+    pub fn integral(&self) -> f64 {
+        self.points
+            .windows(2)
+            .map(|w| 0.5 * (w[0].1 + w[1].1) * (w[1].0 - w[0].0))
+            .sum()
+    }
+}
+
+/// Central metrics registry.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    counters: BTreeMap<String, f64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+    series: BTreeMap<String, Series>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    // ---- counters ----
+    pub fn inc(&mut self, name: &str, by: f64) {
+        *self.counters.entry(name.to_string()).or_insert(0.0) += by;
+    }
+    pub fn counter(&self, name: &str) -> f64 {
+        self.counters.get(name).copied().unwrap_or(0.0)
+    }
+
+    // ---- gauges ----
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    // ---- histograms ----
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.histograms.entry(name.to_string()).or_default().record(v);
+    }
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    // ---- series ----
+    pub fn sample(&mut self, name: &str, t: f64, v: f64) {
+        self.series.entry(name.to_string()).or_default().push(t, v);
+    }
+    pub fn series(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    /// Merge another registry into this one (counters add, gauges take the
+    /// other's values, histograms/series concatenate).
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            self.inc(k, *v);
+        }
+        for (k, v) in &other.gauges {
+            self.set_gauge(k, *v);
+        }
+        for (k, h) in &other.histograms {
+            let dst = self.histograms.entry(k.clone()).or_default();
+            for &s in &h.samples {
+                dst.record(s);
+            }
+        }
+        for (k, s) in &other.series {
+            let dst = self.series.entry(k.clone()).or_default();
+            dst.points.extend_from_slice(&s.points);
+        }
+    }
+
+    /// Render counters and histogram summaries as a JSON object.
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters.set(k, (*v).into());
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &self.gauges {
+            gauges.set(k, (*v).into());
+        }
+        let mut hists = Json::obj();
+        for (k, h) in &self.histograms {
+            let mut o = Json::obj();
+            o.set("count", (h.count() as f64).into())
+                .set("mean", h.mean().into())
+                .set("p50", h.percentile(50.0).into())
+                .set("p99", h.percentile(99.0).into())
+                .set("max", h.max().into());
+            hists.set(k, o);
+        }
+        root.set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", hists);
+        root
+    }
+
+    /// Human-readable dump, sorted by key.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k:<48} {v:>16.3}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("{k:<48} {v:>16.3} (gauge)\n"));
+        }
+        for (k, h) in &self.histograms {
+            out.push_str(&format!(
+                "{k:<48} n={} mean={:.4} p50={:.4} p99={:.4}\n",
+                h.count(),
+                h.mean(),
+                h.percentile(50.0),
+                h.percentile(99.0)
+            ));
+        }
+        out
+    }
+}
+
+/// Fixed-width text table builder used by experiment drivers to print the
+/// paper's figure/table rows.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "table row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                line.push_str(&format!("{:>w$}  ", cells[i], w = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.inc("io.bytes", 100.0);
+        m.inc("io.bytes", 28.0);
+        assert_eq!(m.counter("io.bytes"), 128.0);
+        assert_eq!(m.counter("missing"), 0.0);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let mut h = Histogram::default();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        assert!((h.percentile(50.0) - 50.5).abs() < 1.0);
+        assert_eq!(h.max(), 100.0);
+    }
+
+    #[test]
+    fn histogram_reservoir_overflow_keeps_welford_exact() {
+        let mut h = Histogram::with_capacity(10);
+        for i in 0..1000 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 499.5).abs() < 1e-9);
+        assert_eq!(h.overflow, 990);
+    }
+
+    #[test]
+    fn series_integral_constant_power() {
+        let mut s = Series::default();
+        s.push(0.0, 100.0);
+        s.push(10.0, 100.0);
+        assert!((s.integral() - 1000.0).abs() < 1e-9); // 100 W × 10 s
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Metrics::new();
+        a.inc("x", 1.0);
+        a.observe("lat", 5.0);
+        let mut b = Metrics::new();
+        b.inc("x", 2.0);
+        b.observe("lat", 7.0);
+        a.merge(&b);
+        assert_eq!(a.counter("x"), 3.0);
+        assert_eq!(a.histogram("lat").unwrap().count(), 2);
+    }
+
+    #[test]
+    fn table_renders_and_csv() {
+        let mut t = Table::new("Fig 5(a)", &["batch", "csds", "words/s"]);
+        t.row(vec!["6".into(), "36".into(), "296.0".into()]);
+        let txt = t.render();
+        assert!(txt.contains("Fig 5(a)"));
+        assert!(txt.contains("296.0"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("batch,csds,words/s"));
+    }
+
+    #[test]
+    fn json_export_parses() {
+        let mut m = Metrics::new();
+        m.inc("q", 42.0);
+        m.observe("lat", 1.0);
+        let j = m.to_json();
+        assert_eq!(j.at(&["counters", "q"]).unwrap().as_f64(), Some(42.0));
+        assert_eq!(j.at(&["histograms", "lat", "count"]).unwrap().as_u64(), Some(1));
+    }
+}

@@ -1,0 +1,82 @@
+//! Edit distance and word-error-rate — the speech benchmark's output
+//! quality metric ("output accuracy: same", Table I: ISP and host runs
+//! must produce identical transcripts; WER measures both against the
+//! reference).
+
+/// Levenshtein distance over arbitrary comparable tokens.
+pub fn levenshtein<T: PartialEq>(a: &[T], b: &[T]) -> usize {
+    if a.is_empty() {
+        return b.len();
+    }
+    if b.is_empty() {
+        return a.len();
+    }
+    // Single-row DP.
+    let mut row: Vec<usize> = (0..=b.len()).collect();
+    for (i, ai) in a.iter().enumerate() {
+        let mut prev = row[0];
+        row[0] = i + 1;
+        for (j, bj) in b.iter().enumerate() {
+            let cost = if ai == bj { 0 } else { 1 };
+            let val = (prev + cost).min(row[j] + 1).min(row[j + 1] + 1);
+            prev = row[j + 1];
+            row[j + 1] = val;
+        }
+    }
+    row[b.len()]
+}
+
+/// Word error rate: edit distance over word tokens ÷ reference length.
+pub fn wer(reference: &str, hypothesis: &str) -> f64 {
+    let r = super::tokenize(reference);
+    let h = super::tokenize(hypothesis);
+    if r.is_empty() {
+        return if h.is_empty() { 0.0 } else { 1.0 };
+    }
+    levenshtein(&r, &h) as f64 / r.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check, forall};
+
+    #[test]
+    fn distance_basics() {
+        assert_eq!(levenshtein(b"kitten", b"sitting"), 3);
+        assert_eq!(levenshtein(b"abc", b"abc"), 0);
+        assert_eq!(levenshtein(b"", b"abc"), 3);
+        assert_eq!(levenshtein(b"abc", b""), 3);
+    }
+
+    #[test]
+    fn wer_basics() {
+        assert_eq!(wer("the cat sat", "the cat sat"), 0.0);
+        assert!((wer("the cat sat", "the cat") - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(wer("", ""), 0.0);
+        assert_eq!(wer("", "something"), 1.0);
+    }
+
+    #[test]
+    fn property_metric_axioms() {
+        forall("levenshtein is a metric", 120, |g| {
+            let a = g.vec_u64(0..=5, 0, 16);
+            let b = g.vec_u64(0..=5, 0, 16);
+            let c = g.vec_u64(0..=5, 0, 16);
+            let dab = levenshtein(&a, &b);
+            let dba = levenshtein(&b, &a);
+            check(dab == dba, "symmetry")?;
+            check(
+                (dab == 0) == (a == b),
+                "identity of indiscernibles",
+            )?;
+            let dac = levenshtein(&a, &c);
+            let dcb = levenshtein(&c, &b);
+            check(dab <= dac + dcb, "triangle inequality")?;
+            check(
+                dab <= a.len().max(b.len()),
+                "bounded by longer length",
+            )
+        });
+    }
+}

@@ -1,0 +1,287 @@
+//! Feature extraction: TF-IDF item vectors for the recommender and the
+//! MFCC-like frame stream + pretrained acoustic weights for speech.
+//!
+//! The speech pipeline is a *functional* stand-in for Vosk: synthetic
+//! audio features are generated from transcripts with noise, and a
+//! deterministic "pretrained" acoustic model (built here, executed via
+//! the AOT `acoustic_forward` artifact) maps frames back to character
+//! log-probs; the Rust side greedy-decodes with CTC-style collapse. The
+//! whole path — flash → features → PJRT inference → decode → WER — is
+//! real; only the waveform synthesis is synthetic.
+
+use super::corpus::MovieCatalog;
+use super::text::{hash_token, l2_normalize, tokenize};
+use crate::util::Rng;
+
+// ---------------------------------------------------------------------
+// Recommender features
+// ---------------------------------------------------------------------
+
+/// Build L2-normalized TF-IDF feature rows (`n × dim`, row-major) for the
+/// catalogue via the hashing trick with IDF weighting.
+pub fn movie_features(catalog: &MovieCatalog, dim: usize) -> Vec<f32> {
+    let n = catalog.len();
+    // Document frequencies (hashed into the same buckets).
+    let mut df = vec![0u32; dim];
+    let mut docs_tokens: Vec<Vec<(usize, f32)>> = Vec::with_capacity(n);
+    for m in &catalog.movies {
+        let doc = m.metadata_doc();
+        let toks = tokenize(&doc);
+        let mut seen = vec![false; dim];
+        let mut counts: Vec<(usize, f32)> = Vec::new();
+        for t in &toks {
+            let h = hash_token(t);
+            let idx = (h % dim as u64) as usize;
+            let sign = if (h >> 63) == 0 { 1.0 } else { -1.0 };
+            counts.push((idx, sign));
+            if !seen[idx] {
+                seen[idx] = true;
+                df[idx] += 1;
+            }
+        }
+        docs_tokens.push(counts);
+    }
+    let mut out = vec![0.0f32; n * dim];
+    for (i, counts) in docs_tokens.iter().enumerate() {
+        let row = &mut out[i * dim..(i + 1) * dim];
+        for &(idx, sign) in counts {
+            let idf = ((n as f32 + 1.0) / (df[idx] as f32 + 1.0)).ln() + 1.0;
+            row[idx] += sign * idf;
+        }
+        l2_normalize(row);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Speech features + pretrained acoustic model
+// ---------------------------------------------------------------------
+
+/// Character vocabulary: a–z, space, apostrophe, CTC blank.
+pub const VOCAB: usize = 29;
+pub const BLANK: usize = 28;
+/// Feature dimension per frame (MFCC-like).
+pub const FRAME_DIM: usize = 40;
+
+/// Map a transcript character to its vocab index (None = unsupported).
+pub fn char_to_idx(c: char) -> Option<usize> {
+    match c {
+        'a'..='z' => Some(c as usize - 'a' as usize),
+        ' ' => Some(26),
+        '\'' => Some(27),
+        _ => None,
+    }
+}
+
+pub fn idx_to_char(i: usize) -> char {
+    match i {
+        0..=25 => (b'a' + i as u8) as char,
+        26 => ' ',
+        27 => '\'',
+        _ => '\u{2205}', // blank — never emitted by the decoder
+    }
+}
+
+/// Synthesize the MFCC-like frame stream for a transcript: each character
+/// emits 2–3 frames of (one-hot + Gaussian noise); a blank frame is
+/// inserted between repeated characters (as real CTC alignments have).
+/// Returns a row-major `[n_frames × FRAME_DIM]` buffer.
+pub fn speech_frames(transcript: &str, rng: &mut Rng, noise: f64) -> Vec<f32> {
+    let mut frames: Vec<f32> = Vec::new();
+    let mut push_frame = |idx: usize, rng: &mut Rng| {
+        let start = frames.len();
+        frames.resize(start + FRAME_DIM, 0.0);
+        let f = &mut frames[start..];
+        for v in f.iter_mut() {
+            *v = (rng.gaussian() * noise) as f32;
+        }
+        f[idx] += 1.0;
+    };
+    let mut prev: Option<usize> = None;
+    for c in transcript.chars() {
+        let Some(idx) = char_to_idx(c) else { continue };
+        if prev == Some(idx) {
+            push_frame(BLANK, rng); // separator for repeated chars
+        }
+        let reps = rng.range_u64(2, 3);
+        for _ in 0..reps {
+            push_frame(idx, rng);
+        }
+        prev = Some(idx);
+    }
+    frames
+}
+
+/// Build the deterministic "pretrained" acoustic model weights matching
+/// `acoustic_forward`'s signature: the identity-routing MLP that maps the
+/// one-hot feature subspace through both hidden layers to the logits,
+/// with sharpening gain. Shapes: w1[F,H] b1[H] w2[H,H] b2[H] w3[H,V] b3[V].
+pub fn oracle_acoustic_weights(hidden: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let gain = 8.0f32; // sharpens the softmax; noise-robust
+    let mut w1 = vec![0.0f32; FRAME_DIM * hidden];
+    for c in 0..VOCAB {
+        w1[c * hidden + c] = 1.0;
+    }
+    let b1 = vec![0.0f32; hidden];
+    let mut w2 = vec![0.0f32; hidden * hidden];
+    for c in 0..VOCAB {
+        w2[c * hidden + c] = 1.0;
+    }
+    let b2 = vec![0.0f32; hidden];
+    let mut w3 = vec![0.0f32; hidden * VOCAB];
+    for c in 0..VOCAB {
+        w3[c * VOCAB + c] = gain;
+    }
+    let b3 = vec![0.0f32; VOCAB];
+    (w1, b1, w2, b2, w3, b3)
+}
+
+/// Greedy CTC decode: per-frame argmax, collapse repeats, drop blanks.
+/// `logprobs` is row-major `[t × VOCAB]`.
+pub fn greedy_ctc_decode(logprobs: &[f32], t: usize) -> String {
+    assert_eq!(logprobs.len(), t * VOCAB);
+    let mut out = String::new();
+    let mut prev = BLANK;
+    for f in 0..t {
+        let row = &logprobs[f * VOCAB..(f + 1) * VOCAB];
+        let mut best = 0usize;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        if best != prev && best != BLANK {
+            out.push(idx_to_char(best));
+        }
+        prev = best;
+    }
+    out
+}
+
+/// Pure-Rust acoustic forward (oracle for tests and a CPU fallback):
+/// relu(relu(x W1 + b1) W2 + b2) W3 + b3 → per-row argmax-compatible
+/// logits (softmax omitted — argmax invariant).
+pub fn acoustic_forward_rust(
+    frames: &[f32],
+    t: usize,
+    hidden: usize,
+    weights: &(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>),
+) -> Vec<f32> {
+    let (w1, b1, w2, b2, w3, b3) = weights;
+    let mut h1 = vec![0.0f32; t * hidden];
+    matmul_bias_relu(frames, w1, b1, t, FRAME_DIM, hidden, &mut h1, true);
+    let mut h2 = vec![0.0f32; t * hidden];
+    matmul_bias_relu(&h1, w2, b2, t, hidden, hidden, &mut h2, true);
+    let mut logits = vec![0.0f32; t * VOCAB];
+    matmul_bias_relu(&h2, w3, b3, t, hidden, VOCAB, &mut logits, false);
+    logits
+}
+
+fn matmul_bias_relu(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    relu: bool,
+) {
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = b[j];
+            for p in 0..k {
+                acc += x[i * k + p] * w[p * n + j];
+            }
+            out[i * n + j] = if relu { acc.max(0.0) } else { acc };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nlp::corpus::SpeechCorpus;
+    use crate::nlp::wer;
+
+    #[test]
+    fn movie_features_normalized_and_similar_for_shared_metadata() {
+        let c = MovieCatalog::generate(1, 500);
+        let feats = movie_features(&c, 64);
+        assert_eq!(feats.len(), 500 * 64);
+        for i in 0..500 {
+            let row = &feats[i * 64..(i + 1) * 64];
+            let norm: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-4, "row {i} norm {norm}");
+        }
+        // self-similarity is maximal
+        let dot = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| x * y).sum()
+        };
+        let r0 = &feats[0..64];
+        let self_sim = dot(r0, r0);
+        for i in 1..500 {
+            let s = dot(r0, &feats[i * 64..(i + 1) * 64]);
+            assert!(s <= self_sim + 1e-5);
+        }
+    }
+
+    #[test]
+    fn char_roundtrip() {
+        for c in "abcz' ".chars() {
+            let i = char_to_idx(c).unwrap();
+            assert_eq!(idx_to_char(i), c);
+        }
+        assert!(char_to_idx('!').is_none());
+    }
+
+    #[test]
+    fn frames_then_rust_decode_recovers_transcript() {
+        let mut rng = Rng::new(7);
+        let text = "the quick brown fox";
+        let frames = speech_frames(text, &mut rng, 0.05);
+        let t = frames.len() / FRAME_DIM;
+        let weights = oracle_acoustic_weights(256);
+        let logits = acoustic_forward_rust(&frames, t, 256, &weights);
+        let decoded = greedy_ctc_decode(&logits, t);
+        assert_eq!(decoded, text);
+    }
+
+    #[test]
+    fn repeated_chars_survive_collapse() {
+        let mut rng = Rng::new(8);
+        let text = "hello all";
+        let frames = speech_frames(text, &mut rng, 0.02);
+        let t = frames.len() / FRAME_DIM;
+        let weights = oracle_acoustic_weights(256);
+        let logits = acoustic_forward_rust(&frames, t, 256, &weights);
+        assert_eq!(greedy_ctc_decode(&logits, t), text, "double-l preserved");
+    }
+
+    #[test]
+    fn noise_degrades_gracefully() {
+        let mut rng = Rng::new(9);
+        let corpus = SpeechCorpus::generate(10, 20);
+        let weights = oracle_acoustic_weights(256);
+        let mut total_wer = 0.0;
+        for clip in &corpus.clips {
+            let frames = speech_frames(&clip.transcript, &mut rng, 0.15);
+            let t = frames.len() / FRAME_DIM;
+            let logits = acoustic_forward_rust(&frames, t, 256, &weights);
+            total_wer += wer(&clip.transcript, &greedy_ctc_decode(&logits, t));
+        }
+        let mean = total_wer / 20.0;
+        assert!(mean < 0.15, "mean WER {mean} too high at moderate noise");
+    }
+
+    #[test]
+    fn decode_drops_blanks_and_collapses() {
+        // hand-built logprob stream: a a blank a b b
+        let seq = [0usize, 0, BLANK, 0, 1, 1];
+        let mut lp = vec![-10.0f32; seq.len() * VOCAB];
+        for (f, &c) in seq.iter().enumerate() {
+            lp[f * VOCAB + c] = 0.0;
+        }
+        assert_eq!(greedy_ctc_decode(&lp, seq.len()), "aab");
+    }
+}

@@ -1,0 +1,18 @@
+//! NLP substrates: tokenization, feature hashing, synthetic corpora, and
+//! decode/score utilities shared by the three benchmark apps.
+//!
+//! The paper's datasets (LJSpeech audio, MovieLens metadata, Sentiment140
+//! tweets) are not redistributable inside this environment, so
+//! [`corpus`] generates deterministic synthetic equivalents with the same
+//! statistical shape (sizes, length distributions, label balance, skew) —
+//! see DESIGN.md §2 for the substitution argument. Everything is seeded:
+//! two runs produce byte-identical corpora.
+
+pub mod corpus;
+pub mod edit;
+pub mod features;
+pub mod text;
+
+pub use corpus::{MovieCatalog, SpeechCorpus, TweetCorpus};
+pub use edit::{levenshtein, wer};
+pub use text::{hash_token, tokenize, HashingVectorizer};

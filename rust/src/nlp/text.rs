@@ -1,0 +1,140 @@
+//! Tokenization and feature hashing (the "hashing trick" vectorizer used
+//! by the sentiment pipeline, mirroring what the NLTK benchmark does with
+//! its bag-of-words features).
+
+/// Lowercase word tokenizer: splits on non-alphanumeric, drops empties.
+pub fn tokenize(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for c in text.chars() {
+        if c.is_alphanumeric() || c == '\'' {
+            cur.extend(c.to_lowercase());
+        } else if !cur.is_empty() {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// FNV-1a 64-bit token hash.
+pub fn hash_token(token: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in token.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Hashing vectorizer: token counts into `buckets` dimensions with a
+/// sign hash (reduces collision bias), then L2 normalization.
+#[derive(Clone, Debug)]
+pub struct HashingVectorizer {
+    pub buckets: usize,
+}
+
+impl HashingVectorizer {
+    pub fn new(buckets: usize) -> Self {
+        assert!(buckets > 0);
+        HashingVectorizer { buckets }
+    }
+
+    /// Vectorize into a fresh dense vector.
+    pub fn vectorize(&self, text: &str) -> Vec<f32> {
+        let mut v = vec![0.0f32; self.buckets];
+        self.vectorize_into(text, &mut v);
+        v
+    }
+
+    /// Vectorize into a caller-provided buffer (hot path: no allocation).
+    pub fn vectorize_into(&self, text: &str, out: &mut [f32]) {
+        assert_eq!(out.len(), self.buckets);
+        out.fill(0.0);
+        let mut any = false;
+        for tok in tokenize(text) {
+            let h = hash_token(&tok);
+            let idx = (h % self.buckets as u64) as usize;
+            let sign = if (h >> 63) == 0 { 1.0 } else { -1.0 };
+            out[idx] += sign;
+            any = true;
+        }
+        if any {
+            let norm = out.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if norm > 0.0 {
+                out.iter_mut().for_each(|x| *x /= norm);
+            }
+        }
+    }
+}
+
+/// L2-normalize a vector in place; no-op on zero vectors.
+pub fn l2_normalize(v: &mut [f32]) {
+    let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if norm > 1e-12 {
+        v.iter_mut().for_each(|x| *x /= norm);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check, forall};
+
+    #[test]
+    fn tokenize_basics() {
+        assert_eq!(tokenize("Hello, World!"), vec!["hello", "world"]);
+        assert_eq!(tokenize("it's a-b c"), vec!["it's", "a", "b", "c"]);
+        assert!(tokenize("  ...  ").is_empty());
+        assert_eq!(tokenize("héllo wörld"), vec!["héllo", "wörld"]);
+    }
+
+    #[test]
+    fn hash_is_stable_and_spread() {
+        assert_eq!(hash_token("movie"), hash_token("movie"));
+        assert_ne!(hash_token("movie"), hash_token("movies"));
+    }
+
+    #[test]
+    fn vectorize_normalized_and_deterministic() {
+        let v = HashingVectorizer::new(64);
+        let a = v.vectorize("great fantastic wonderful movie");
+        let b = v.vectorize("great fantastic wonderful movie");
+        assert_eq!(a, b);
+        let norm: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn empty_text_is_zero_vector() {
+        let v = HashingVectorizer::new(16);
+        assert_eq!(v.vectorize("!!!"), vec![0.0; 16]);
+    }
+
+    #[test]
+    fn different_texts_differ() {
+        let v = HashingVectorizer::new(4096);
+        let a = v.vectorize("i loved this movie");
+        let b = v.vectorize("i hated this movie");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn property_vectorizer_norm_and_reuse() {
+        forall("hashing vectorizer invariants", 100, |g| {
+            let v = HashingVectorizer::new(g.usize(1..=512));
+            let text = g.ascii_string(120);
+            let dense = v.vectorize(&text);
+            let mut reused = vec![7.0f32; v.buckets]; // dirty buffer
+            v.vectorize_into(&text, &mut reused);
+            check(dense == reused, "into == fresh")?;
+            let norm: f32 = dense.iter().map(|x| x * x).sum::<f32>().sqrt();
+            check(
+                norm == 0.0 || (norm - 1.0).abs() < 1e-4,
+                format!("norm {norm}"),
+            )
+        });
+    }
+}

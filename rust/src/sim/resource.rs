@@ -1,0 +1,285 @@
+//! Analytic FIFO resources: k-server queues and shared bandwidth pipes.
+//!
+//! With non-preemptive FIFO service and service times known at submit
+//! time, queueing outcomes can be computed directly instead of simulated
+//! event-by-event:
+//!
+//! * [`Servers`] — k parallel servers (CPU cores, flash channels, NVMe
+//!   queue pairs). A job entering at `now` with service time `s` starts at
+//!   `max(now, earliest_free)` and completes `s` later.
+//! * [`Pipe`] — a serialized link (PCIe lane group, intra-chip bus,
+//!   TCP/IP tunnel). A transfer occupies the link for `latency +
+//!   bytes/bandwidth`; concurrent transfers queue behind its busy-until
+//!   horizon.
+//!
+//! Both track utilization (busy seconds) so the power model can integrate
+//! active vs idle energy.
+
+use std::collections::BinaryHeap;
+use std::cmp::Reverse;
+
+use super::SimTime;
+
+/// Total order wrapper for f64 times inside heaps (no NaNs by invariant).
+#[derive(Clone, Copy, PartialEq, Debug)]
+struct T(f64);
+impl Eq for T {}
+impl PartialOrd for T {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for T {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("NaN time")
+    }
+}
+
+/// k-server analytic FIFO queue.
+///
+/// Capacity 1 (flash dies, serialized links) skips the heap entirely —
+/// a single `free_at` scalar (§Perf: the per-page device loop dominates
+/// full-sweep simulation time).
+#[derive(Debug, Clone)]
+pub struct Servers {
+    free_at: BinaryHeap<Reverse<T>>,
+    /// Fast path for capacity == 1.
+    single_free: SimTime,
+    capacity: usize,
+    busy_secs: f64,
+    jobs: u64,
+    last_completion: SimTime,
+}
+
+impl Servers {
+    pub fn new(capacity: usize) -> Servers {
+        assert!(capacity > 0);
+        let mut free_at = BinaryHeap::new();
+        if capacity > 1 {
+            free_at.reserve(capacity);
+            for _ in 0..capacity {
+                free_at.push(Reverse(T(0.0)));
+            }
+        }
+        Servers {
+            free_at,
+            single_free: 0.0,
+            capacity,
+            busy_secs: 0.0,
+            jobs: 0,
+            last_completion: 0.0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Submit a job at `now` with the given service time; returns its
+    /// completion time.
+    #[inline]
+    pub fn acquire(&mut self, now: SimTime, service: SimTime) -> SimTime {
+        debug_assert!(service >= 0.0);
+        let done = if self.capacity == 1 {
+            let start = if now > self.single_free { now } else { self.single_free };
+            let done = start + service;
+            self.single_free = done;
+            done
+        } else {
+            let Reverse(T(free)) = self.free_at.pop().expect("capacity>0");
+            let start = now.max(free);
+            let done = start + service;
+            self.free_at.push(Reverse(T(done)));
+            done
+        };
+        self.busy_secs += service;
+        self.jobs += 1;
+        if done > self.last_completion {
+            self.last_completion = done;
+        }
+        done
+    }
+
+    /// Earliest time a new job submitted at `now` would start.
+    pub fn next_start(&self, now: SimTime) -> SimTime {
+        if self.capacity == 1 {
+            return now.max(self.single_free);
+        }
+        let Reverse(T(free)) = *self.free_at.peek().expect("capacity>0");
+        now.max(free)
+    }
+
+    /// Time when all queued work drains.
+    pub fn drain_time(&self) -> SimTime {
+        self.last_completion
+    }
+
+    /// Total service seconds delivered (for utilization = busy/(cap×T)).
+    pub fn busy_secs(&self) -> f64 {
+        self.busy_secs
+    }
+
+    pub fn jobs(&self) -> u64 {
+        self.jobs
+    }
+
+    /// Utilization over `[0, horizon]`.
+    pub fn utilization(&self, horizon: SimTime) -> f64 {
+        if horizon <= 0.0 {
+            return 0.0;
+        }
+        (self.busy_secs / (self.capacity as f64 * horizon)).min(1.0)
+    }
+}
+
+/// A serialized bandwidth resource.
+#[derive(Debug, Clone)]
+pub struct Pipe {
+    /// Bytes per second.
+    pub bandwidth: f64,
+    /// Fixed per-transfer latency in seconds (protocol + DMA setup).
+    pub latency: SimTime,
+    busy_until: SimTime,
+    bytes_moved: u64,
+    transfers: u64,
+    busy_secs: f64,
+}
+
+/// Outcome of a [`Pipe::transfer`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transfer {
+    /// When the transfer began moving bytes (after queueing).
+    pub start: SimTime,
+    /// When the last byte arrived.
+    pub end: SimTime,
+}
+
+impl Pipe {
+    pub fn new(bandwidth: f64, latency: SimTime) -> Pipe {
+        assert!(bandwidth > 0.0);
+        assert!(latency >= 0.0);
+        Pipe { bandwidth, latency, busy_until: 0.0, bytes_moved: 0, transfers: 0, busy_secs: 0.0 }
+    }
+
+    /// Enqueue a transfer of `bytes` at `now`; returns its start/end.
+    pub fn transfer(&mut self, now: SimTime, bytes: u64) -> Transfer {
+        let start = now.max(self.busy_until);
+        let xfer = self.latency + bytes as f64 / self.bandwidth;
+        let end = start + xfer;
+        self.busy_until = end;
+        self.bytes_moved += bytes;
+        self.transfers += 1;
+        self.busy_secs += xfer;
+        Transfer { start, end }
+    }
+
+    /// Pure cost of a transfer ignoring queueing (for estimates).
+    pub fn unloaded_secs(&self, bytes: u64) -> SimTime {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+
+    pub fn bytes_moved(&self) -> u64 {
+        self.bytes_moved
+    }
+
+    pub fn transfers(&self) -> u64 {
+        self.transfers
+    }
+
+    pub fn busy_secs(&self) -> f64 {
+        self.busy_secs
+    }
+
+    pub fn busy_until(&self) -> SimTime {
+        self.busy_until
+    }
+
+    pub fn utilization(&self, horizon: SimTime) -> f64 {
+        if horizon <= 0.0 {
+            return 0.0;
+        }
+        (self.busy_secs / horizon).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check, forall};
+
+    #[test]
+    fn single_server_serializes() {
+        let mut s = Servers::new(1);
+        assert_eq!(s.acquire(0.0, 1.0), 1.0);
+        assert_eq!(s.acquire(0.0, 1.0), 2.0);
+        assert_eq!(s.acquire(5.0, 1.0), 6.0); // idle gap honoured
+        assert_eq!(s.jobs(), 3);
+        assert!((s.busy_secs() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_server_parallelism() {
+        let mut s = Servers::new(4);
+        let dones: Vec<f64> = (0..8).map(|_| s.acquire(0.0, 2.0)).collect();
+        // first 4 finish at 2.0, next 4 at 4.0
+        assert_eq!(&dones[..4], &[2.0; 4]);
+        assert_eq!(&dones[4..], &[4.0; 4]);
+        assert_eq!(s.drain_time(), 4.0);
+        assert!((s.utilization(4.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipe_queues_and_accounts() {
+        let mut p = Pipe::new(1000.0, 0.5); // 1 KB/s, 0.5 s setup
+        let t1 = p.transfer(0.0, 1000); // 0.5 + 1.0 = ends 1.5
+        assert_eq!(t1, Transfer { start: 0.0, end: 1.5 });
+        let t2 = p.transfer(0.0, 500); // queued behind t1
+        assert_eq!(t2.start, 1.5);
+        assert!((t2.end - 2.5).abs() < 1e-12);
+        assert_eq!(p.bytes_moved(), 1500);
+        assert_eq!(p.transfers(), 2);
+    }
+
+    #[test]
+    fn property_servers_conserve_work() {
+        forall("servers conserve work", 150, |g| {
+            let cap = g.usize(1..=8);
+            let mut s = Servers::new(cap);
+            let services = g.vec_f64(0.0, 5.0, 1, 64);
+            let mut arrivals: Vec<f64> = g.vec_f64(0.0, 10.0, services.len(), services.len());
+            arrivals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let total: f64 = services.iter().sum();
+            let mut max_done: f64 = 0.0;
+            for (i, &svc) in services.iter().enumerate() {
+                let done = s.acquire(arrivals[i], svc);
+                check(done >= arrivals[i] + svc - 1e-12, "done before arrival+service")?;
+                max_done = max_done.max(done);
+            }
+            // busy time is conserved exactly
+            check((s.busy_secs() - total).abs() < 1e-9, "busy != sum(service)")?;
+            // makespan is at least total/cap and at most arrival span + total
+            let lb = total / cap as f64;
+            check(max_done + 1e-9 >= lb, format!("makespan {max_done} < {lb}"))?;
+            let ub = arrivals.last().unwrap() + total;
+            check(max_done <= ub + 1e-9, "makespan exceeds serial bound")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_pipe_fifo_no_overlap() {
+        forall("pipe transfers never overlap", 150, |g| {
+            let mut p = Pipe::new(g.f64(1.0, 1e9), g.f64(0.0, 0.01));
+            let mut arrivals = g.vec_f64(0.0, 10.0, 1, 64);
+            arrivals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut prev_end = 0.0f64;
+            for &a in &arrivals {
+                let tr = p.transfer(a, g.u64(0..=1_000_000));
+                check(tr.start + 1e-12 >= prev_end, "overlapping transfers")?;
+                check(tr.end >= tr.start, "end before start")?;
+                prev_end = tr.end;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,118 @@
+//! Small self-contained utilities: deterministic PRNG, statistics,
+//! byte-size formatting. No external dependencies — the offline build
+//! environment has no `rand`, so [`rng::Rng`] (xoshiro256++) is the
+//! crate-wide randomness source. Everything here is deterministic given a
+//! seed, which the simulator relies on for reproducible experiments.
+
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Summary;
+
+/// Fast hasher for integer-keyed hot-path maps (FTL page tables): a
+/// splitmix64 finalizer instead of SipHash. Keys are u64 page numbers /
+/// small structs — DoS resistance is irrelevant, lookup latency is not
+/// (§Perf: the per-page device loop is the simulator's hottest path).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FastHasher(u64);
+
+impl std::hash::Hasher for FastHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.0 = self.0.rotate_left(31) ^ v.wrapping_mul(0x9E3779B97F4A7C15);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.write_u64(v as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, v: u16) {
+        self.write_u64(v as u64);
+    }
+}
+
+/// `HashMap` with the fast integer hasher.
+pub type FastMap<K, V> =
+    std::collections::HashMap<K, V, std::hash::BuildHasherDefault<FastHasher>>;
+
+/// Format a byte count as a human-readable string (binary units).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    if bytes < 1024 {
+        return format!("{bytes} B");
+    }
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    format!("{v:.2} {}", UNITS[unit])
+}
+
+/// Format a duration in seconds with an adaptive unit.
+pub fn human_secs(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2} s")
+    } else {
+        format!("{:.1} min", secs / 60.0)
+    }
+}
+
+/// Integer ceiling division.
+pub fn div_ceil(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(12 * 1024 * 1024 * 1024 * 1024), "12.00 TiB");
+    }
+
+    #[test]
+    fn human_secs_units() {
+        assert_eq!(human_secs(0.5e-9 * 2.0), "1.0 ns");
+        assert!(human_secs(0.002).ends_with("ms"));
+        assert!(human_secs(3.0).ends_with("s"));
+        assert!(human_secs(600.0).ends_with("min"));
+    }
+
+    #[test]
+    fn div_ceil_basics() {
+        assert_eq!(div_ceil(10, 3), 4);
+        assert_eq!(div_ceil(9, 3), 3);
+        assert_eq!(div_ceil(1, 4096), 1);
+        assert_eq!(div_ceil(0, 7), 0);
+    }
+}

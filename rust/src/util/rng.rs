@@ -1,0 +1,269 @@
+//! Deterministic PRNG: xoshiro256++ seeded via splitmix64.
+//!
+//! The offline build has no `rand` crate; this is the project's only
+//! randomness source. xoshiro256++ is the same generator family the
+//! `rand_xoshiro` crate ships; splitmix64 seeding follows the reference
+//! implementation (Blackman & Vigna). Determinism matters: every
+//! experiment in EXPERIMENTS.md is keyed by an explicit seed.
+
+/// splitmix64 step — used for seeding and as a cheap standalone mixer.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ pseudo-random generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via splitmix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent stream for a named sub-component.
+    /// Hashes the label into the seed so `fork("flash")` and
+    /// `fork("sched")` never correlate.
+    pub fn fork(&mut self, label: &str) -> Rng {
+        let mut h: u64 = 0xcbf29ce484222325; // FNV-1a
+        for b in label.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        Rng::new(self.next_u64() ^ h)
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits → [0,1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's method, unbiased enough for
+    /// simulation purposes via rejection).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Simple rejection sampling on the top bits.
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Uniform integer in `[lo, hi]` inclusive.
+    #[inline]
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// `true` with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple and
+    /// deterministic, throughput is irrelevant here).
+    pub fn gaussian(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Normal with mean/std, truncated at `lo`.
+    pub fn gaussian_trunc(&mut self, mean: f64, std: f64, lo: f64) -> f64 {
+        (mean + std * self.gaussian()).max(lo)
+    }
+
+    /// Exponential with the given rate.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        -self.f64().max(1e-300).ln() / rate
+    }
+
+    /// Zipf-like rank sample over `[0, n)` with exponent `s` (used for
+    /// skewed query popularity in the recommender workload). Uses
+    /// inverse-CDF over a precomputable harmonic approximation; for the
+    /// modest `n` here a direct rejection method is fine.
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        debug_assert!(n > 0);
+        // Approximate inverse CDF: P(rank < k) ≈ (k/n)^(1-s) for s<1;
+        // for general s use the standard rejection-inversion lite:
+        if s <= 0.0 {
+            return self.below(n);
+        }
+        let nf = n as f64;
+        loop {
+            let u = self.f64();
+            // inverse of integral of x^-s from 1..n
+            let x = if (s - 1.0).abs() < 1e-9 {
+                nf.powf(u)
+            } else {
+                let t = 1.0 - s;
+                ((nf.powf(t) - 1.0) * u + 1.0).powf(1.0 / t)
+            };
+            let k = x.floor() as u64;
+            if k >= 1 && k <= n {
+                return k - 1;
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        if xs.is_empty() {
+            return;
+        }
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty(), "choose from empty slice");
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(9);
+        let mut seen = [false; 10];
+        for _ in 0..1_000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues hit");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(1234);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn zipf_skewed_towards_low_ranks() {
+        let mut r = Rng::new(5);
+        let n = 1000u64;
+        let mut low = 0usize;
+        let total = 20_000;
+        for _ in 0..total {
+            if r.zipf(n, 1.0) < 100 {
+                low += 1;
+            }
+        }
+        // Zipf(1.0): top-10% of ranks should hold well over 10% of mass.
+        assert!(low as f64 / total as f64 > 0.25, "low mass {low}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(11);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>(), "shuffled order changed");
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Rng::new(3);
+        let mut a = root.fork("flash");
+        let mut b = root.fork("sched");
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(21);
+        let n = 50_000;
+        let mean = (0..n).map(|_| r.exponential(4.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean {mean}");
+    }
+}

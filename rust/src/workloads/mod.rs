@@ -1,0 +1,258 @@
+//! The three NLP benchmark applications (§IV-B), end-to-end.
+//!
+//! Each app has two faces:
+//!
+//! * a **compute pipeline** that does the real work through the PJRT
+//!   runtime (featurize → AOT executable → decode/score) — used by the
+//!   examples and the accuracy checks ("output accuracy: same", Table I);
+//! * an [`AppModel`] — the *calibrated* workload description the
+//!   simulator schedules: per-item service times on the host Xeon and on
+//!   the CSD's A53, bytes read per item, output bytes per item, and
+//!   per-batch fixed overheads. Calibration constants come straight from
+//!   the paper's single-node measurements and are documented inline.
+
+pub mod recommender;
+pub mod sentiment;
+pub mod speech;
+
+pub use recommender::RecommenderApp;
+pub use sentiment::SentimentApp;
+pub use speech::SpeechApp;
+
+/// Which benchmark.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum App {
+    SpeechToText,
+    Recommender,
+    Sentiment,
+}
+
+impl App {
+    pub fn name(&self) -> &'static str {
+        match self {
+            App::SpeechToText => "speech_to_text",
+            App::Recommender => "recommender",
+            App::Sentiment => "sentiment",
+        }
+    }
+
+    pub fn all() -> [App; 3] {
+        [App::SpeechToText, App::Recommender, App::Sentiment]
+    }
+}
+
+/// Calibrated workload model consumed by the scheduler/simulator.
+///
+/// Service times are *per item, per execution unit*: a node with `k`
+/// units processes a batch of `B` items in `B × item_secs / k` (+ IO +
+/// fixed overhead). Node-level rates therefore reproduce the paper's
+/// single-node numbers:
+///
+/// | app        | host node rate      | CSD node rate     | source |
+/// |------------|---------------------|-------------------|--------|
+/// | speech     | 102 words/s         | 5.3 words/s       | §IV-B1 |
+/// | recommender| 579 q/s             | ≈25.8 q/s         | §IV-B2 (1506−579)/36 |
+/// | sentiment  | 9496 q/s            | 364 q/s           | §IV-B3 / Fig 6 |
+#[derive(Clone, Debug)]
+pub struct AppModel {
+    pub app: App,
+    /// Total items in the benchmark run (clips / queries / tweets).
+    pub items: u64,
+    /// Average flash bytes read per item.
+    pub bytes_per_item: u64,
+    /// Output bytes sent back to the host per item (ISP path).
+    pub output_bytes_per_item: u64,
+    /// Per-item service seconds on one host hardware thread (16 total).
+    pub host_item_secs: f64,
+    /// Per-item service seconds on one ISP core (4 total).
+    pub csd_item_secs: f64,
+    /// Fixed per-batch overhead on the host (dispatch, process wakeup).
+    pub host_batch_overhead: f64,
+    /// Fixed per-batch overhead on a CSD (tunnel dispatch, slower cores).
+    pub csd_batch_overhead: f64,
+    /// Words per item (speech reports words/s; 1.0 elsewhere).
+    pub words_per_item: f64,
+}
+
+pub const HOST_THREADS: f64 = 16.0;
+pub const ISP_CORES: f64 = 4.0;
+
+impl AppModel {
+    /// Speech-to-text over the LJ-like corpus (13,100 clips, ~3.3 GB).
+    ///
+    /// Host: 102 words/s ÷ 17.23 words/clip = 5.92 clips/s nodewide ⇒
+    /// per-thread 16/5.92 = 2.70 s/clip. CSD: 5.3 words/s ⇒ 0.308
+    /// clips/s ⇒ per-core 4/0.308 = 13.0 s/clip.
+    pub fn speech(items: u64) -> AppModel {
+        let words_per_item = 17.23;
+        AppModel {
+            app: App::SpeechToText,
+            items,
+            bytes_per_item: 290_000, // ≈3.8 GB / 13,100 clips (§IV-B1)
+            output_bytes_per_item: 95, // 1.2 MB of text / 13,100 clips
+            host_item_secs: HOST_THREADS / (102.0 / words_per_item),
+            csd_item_secs: ISP_CORES / (5.3 / words_per_item),
+            host_batch_overhead: 0.05,
+            csd_batch_overhead: 0.20,
+            words_per_item,
+        }
+    }
+
+    /// Movie recommender over the 58 K catalogue: each query reads its
+    /// precomputed similarity-matrix row from flash (58,000 × 4 B ≈
+    /// 232 KB — "ran the training process once and stored the matrix on
+    /// flash", §IV-B2) and top-10 filters.
+    pub fn recommender(items: u64) -> AppModel {
+        AppModel {
+            app: App::Recommender,
+            items,
+            bytes_per_item: 232_000,
+            output_bytes_per_item: 80, // 10 ids + scores
+            host_item_secs: HOST_THREADS / 579.0,
+            csd_item_secs: ISP_CORES / 25.75,
+            host_batch_overhead: 0.05,
+            csd_batch_overhead: 0.20,
+            words_per_item: 1.0,
+        }
+    }
+
+    /// Twitter sentiment: tiny per-item input, model resident.
+    pub fn sentiment(items: u64) -> AppModel {
+        AppModel {
+            app: App::Sentiment,
+            items,
+            bytes_per_item: 140,
+            output_bytes_per_item: 1,
+            host_item_secs: HOST_THREADS / 9496.0,
+            csd_item_secs: ISP_CORES / 364.0,
+            host_batch_overhead: 0.05,
+            csd_batch_overhead: 0.20,
+            words_per_item: 1.0,
+        }
+    }
+
+    /// IO-bound synthetic scan (ablation A2 only): grep-like filtering
+    /// of 1-MiB log chunks. Compute is memory-bound (~1.2 GB/s per A53
+    /// core with NEON, ~6 GB/s per Xeon thread), so the *data path* —
+    /// local flash DMA vs the MB/s tunnel — decides throughput. This is
+    /// the workload class where index-only dispatch into the shared FS
+    /// is not just cheaper but the difference between scaling and
+    /// collapsing (DESIGN.md A2).
+    pub fn scan(items: u64) -> AppModel {
+        let chunk = 1 << 20;
+        AppModel {
+            app: App::Sentiment, // reuses reporting units (items/s)
+            items,
+            bytes_per_item: chunk,
+            output_bytes_per_item: 32,
+            host_item_secs: chunk as f64 / 6.0e9,
+            csd_item_secs: chunk as f64 / 1.2e9,
+            host_batch_overhead: 0.05,
+            csd_batch_overhead: 0.20,
+            words_per_item: 1.0,
+        }
+    }
+
+    pub fn for_app(app: App, items: u64) -> AppModel {
+        match app {
+            App::SpeechToText => AppModel::speech(items),
+            App::Recommender => AppModel::recommender(items),
+            App::Sentiment => AppModel::sentiment(items),
+        }
+    }
+
+    /// Paper-default total items for the full benchmark run.
+    pub fn paper_items(app: App) -> u64 {
+        match app {
+            App::SpeechToText => 13_100,
+            App::Recommender => 58_000,
+            App::Sentiment => 8_000_000, // 1.6 M tweets duplicated ×5 (§IV-B3)
+        }
+    }
+
+    /// Node-level steady-state rate (items/s) ignoring batch overheads.
+    pub fn host_rate(&self) -> f64 {
+        HOST_THREADS / self.host_item_secs
+    }
+
+    pub fn csd_rate(&self) -> f64 {
+        ISP_CORES / self.csd_item_secs
+    }
+
+    /// The paper's batch ratio: host-batch = ratio × csd-batch (§IV-A,
+    /// "considerably large, ranging from 20 to 30").
+    pub fn natural_batch_ratio(&self) -> f64 {
+        self.host_rate() / self.csd_rate()
+    }
+
+    /// Single-node throughput at a given batch size (items/s), including
+    /// the fixed per-batch overhead — this is the Fig. 6 curve.
+    pub fn node_rate_at_batch(&self, batch: u64, is_host: bool) -> f64 {
+        let (units, item_secs, overhead) = if is_host {
+            (HOST_THREADS, self.host_item_secs, self.host_batch_overhead)
+        } else {
+            (ISP_CORES, self.csd_item_secs, self.csd_batch_overhead)
+        };
+        let service = batch as f64 * item_secs / units;
+        batch as f64 / (overhead + service)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_reproduces_paper_single_node_rates() {
+        let sp = AppModel::speech(13_100);
+        // words/s = clips/s × words/clip
+        let host_wps = sp.host_rate() * sp.words_per_item;
+        let csd_wps = sp.csd_rate() * sp.words_per_item;
+        assert!((host_wps - 102.0).abs() < 1.0, "host {host_wps} w/s");
+        assert!((csd_wps - 5.3).abs() < 0.1, "csd {csd_wps} w/s");
+
+        let rec = AppModel::recommender(58_000);
+        assert!((rec.host_rate() - 579.0).abs() < 1.0);
+        assert!((rec.csd_rate() - 25.75).abs() < 0.5);
+
+        let se = AppModel::sentiment(1_600_000);
+        assert!((se.host_rate() - 9496.0).abs() < 1.0);
+        assert!((se.csd_rate() - 364.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn batch_ratios_match_paper_range() {
+        // §IV-A: "ranging from 20 to 30"
+        for app in App::all() {
+            let m = AppModel::for_app(app, 1000);
+            let r = m.natural_batch_ratio();
+            assert!((15.0..32.0).contains(&r), "{:?} ratio {r}", app);
+        }
+        // §IV-B3: sentiment ratio 9496/364 ≈ 26
+        let s = AppModel::sentiment(1000).natural_batch_ratio();
+        assert!((s - 26.0).abs() < 0.5, "sentiment ratio {s}");
+    }
+
+    #[test]
+    fn fig6_shape_rate_grows_then_saturates() {
+        let m = AppModel::sentiment(1_000_000);
+        let small = m.node_rate_at_batch(10, true);
+        let mid = m.node_rate_at_batch(1_000, true);
+        let big = m.node_rate_at_batch(40_000, true);
+        let huge = m.node_rate_at_batch(80_000, true);
+        assert!(small < mid && mid < big, "ramp: {small} {mid} {big}");
+        // saturation: 40k → 80k gains < 2%
+        assert!((huge - big) / big < 0.02, "{big} vs {huge}");
+        // host saturates near 9496 q/s
+        assert!((big - 9496.0).abs() / 9496.0 < 0.02, "host sat {big}");
+        // CSD saturates near 364 q/s
+        let csd = m.node_rate_at_batch(40_000, false);
+        assert!((csd - 364.0).abs() / 364.0 < 0.02, "csd sat {csd}");
+    }
+
+    #[test]
+    fn paper_items_defaults() {
+        assert_eq!(AppModel::paper_items(App::SpeechToText), 13_100);
+        assert_eq!(AppModel::paper_items(App::Sentiment), 8_000_000);
+    }
+}

@@ -1,0 +1,149 @@
+//! Sentiment analysis benchmark (§IV-B3): train a binary classifier on
+//! labeled tweets, then serve predictions. Training and inference both
+//! run through AOT executables (`sentiment_train_step`, `sentiment_infer`)
+//! on the PJRT runtime — the same binary the ISP engines execute in the
+//! simulated cluster.
+
+use crate::nlp::corpus::Tweet;
+use crate::nlp::HashingVectorizer;
+use crate::runtime::{Engine, Tensor};
+use crate::util::Rng;
+
+/// Trained sentiment model + featurizer.
+pub struct SentimentApp {
+    pub vectorizer: HashingVectorizer,
+    pub w: Tensor,
+    pub b: Tensor,
+    features: usize,
+    train_batch: usize,
+}
+
+impl SentimentApp {
+    /// Assemble an app from pre-trained weights (e.g. received over the
+    /// live cluster's weight broadcast).
+    pub fn from_weights(features: usize, w: Tensor, b: Tensor) -> SentimentApp {
+        assert_eq!(w.shape, vec![features, 1]);
+        assert_eq!(b.shape, vec![1]);
+        SentimentApp {
+            vectorizer: HashingVectorizer::new(features),
+            w,
+            b,
+            features,
+            train_batch: 256,
+        }
+    }
+
+    /// Train on `tweets` for `epochs` passes of SGD (batch 256, lr
+    /// decayed per epoch). Returns the fitted app and the loss curve.
+    pub fn train(
+        eng: &mut Engine,
+        tweets: &[Tweet],
+        epochs: usize,
+        seed: u64,
+    ) -> anyhow::Result<(SentimentApp, Vec<f32>)> {
+        let f = eng.manifest.dim("sent_features")? as usize;
+        let bt = eng.manifest.dim("sent_train_batch")? as usize;
+        let vectorizer = HashingVectorizer::new(f);
+        let mut w = Tensor::zeros(vec![f, 1]);
+        let mut b = Tensor::zeros(vec![1]);
+        let mut order: Vec<usize> = (0..tweets.len()).collect();
+        let mut rng = Rng::new(seed);
+        let mut losses = Vec::new();
+        let variant = format!("b{bt}");
+        let mut x = Tensor::zeros(vec![bt, f]);
+        let mut y = Tensor::zeros(vec![bt]);
+        for epoch in 0..epochs {
+            rng.shuffle(&mut order);
+            let lr = Tensor::scalar(12.0 / (1.0 + 0.5 * epoch as f32));
+            for chunk in order.chunks_exact(bt) {
+                for (row, &ti) in chunk.iter().enumerate() {
+                    let t = &tweets[ti];
+                    vectorizer.vectorize_into(&t.text, &mut x.data[row * f..(row + 1) * f]);
+                    y.data[row] = if t.positive { 1.0 } else { 0.0 };
+                }
+                let out = eng.run(
+                    "sentiment_train_step",
+                    &variant,
+                    &[x.clone(), y.clone(), w, b, lr.clone()],
+                )?;
+                let mut it = out.into_iter();
+                w = it.next().unwrap();
+                b = it.next().unwrap();
+                losses.push(it.next().unwrap().data[0]);
+            }
+        }
+        Ok((
+            SentimentApp { vectorizer, w, b, features: f, train_batch: bt },
+            losses,
+        ))
+    }
+
+    /// Classify a batch of texts; pads the final chunk to the AOT batch
+    /// shape. Returns P(positive) per text.
+    pub fn predict(&self, eng: &mut Engine, texts: &[&str]) -> anyhow::Result<Vec<f32>> {
+        let f = self.features;
+        let b = 32usize; // serving variant
+        let mut probs = Vec::with_capacity(texts.len());
+        let mut x = Tensor::zeros(vec![b, f]);
+        for chunk in texts.chunks(b) {
+            for (row, text) in chunk.iter().enumerate() {
+                self.vectorizer
+                    .vectorize_into(text, &mut x.data[row * f..(row + 1) * f]);
+            }
+            for row in chunk.len()..b {
+                x.data[row * f..(row + 1) * f].fill(0.0);
+            }
+            let out = eng.run(
+                "sentiment_infer",
+                "b32",
+                &[x.clone(), self.w.clone(), self.b.clone()],
+            )?;
+            probs.extend_from_slice(&out[0].data[..chunk.len()]);
+        }
+        Ok(probs)
+    }
+
+    /// Accuracy over labeled tweets.
+    pub fn accuracy(&self, eng: &mut Engine, tweets: &[Tweet]) -> anyhow::Result<f64> {
+        let texts: Vec<&str> = tweets.iter().map(|t| t.text.as_str()).collect();
+        let probs = self.predict(eng, &texts)?;
+        let correct = probs
+            .iter()
+            .zip(tweets)
+            .filter(|(p, t)| (**p > 0.5) == t.positive)
+            .count();
+        Ok(correct as f64 / tweets.len() as f64)
+    }
+
+    pub fn train_batch(&self) -> usize {
+        self.train_batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nlp::corpus::TweetCorpus;
+
+    #[test]
+    fn trains_to_high_accuracy_and_serves() {
+        let Some(mut eng) = Engine::load_default() else { return };
+        let mut corpus = TweetCorpus::new(11);
+        let train = corpus.take(2048);
+        let test = corpus.take(512);
+        let (app, losses) = SentimentApp::train(&mut eng, &train, 4, 5).unwrap();
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.7),
+            "loss fell: {:?} -> {:?}",
+            losses.first(),
+            losses.last()
+        );
+        let acc = app.accuracy(&mut eng, &test).unwrap();
+        assert!(acc > 0.85, "test accuracy {acc}");
+        // ragged batch: predict a non-multiple-of-32 count
+        let texts: Vec<&str> = test[..37].iter().map(|t| t.text.as_str()).collect();
+        let probs = app.predict(&mut eng, &texts).unwrap();
+        assert_eq!(probs.len(), 37);
+        assert!(probs.iter().all(|p| (0.0..=1.0).contains(p)));
+    }
+}

@@ -1,0 +1,147 @@
+//! Speech-to-text benchmark (§IV-B1): transcribe LJ-like clips through
+//! the AOT acoustic model + greedy CTC decode, and score WER against the
+//! reference transcripts.
+//!
+//! Pipeline per clip: synth MFCC-like frames (the flash-resident "audio")
+//! → chunk to the AOT frame window → `acoustic_forward` on PJRT → concat
+//! log-probs → greedy CTC collapse → WER.
+
+use crate::nlp::corpus::{Clip, SpeechCorpus};
+use crate::nlp::features::{
+    greedy_ctc_decode, oracle_acoustic_weights, speech_frames, BLANK, FRAME_DIM, VOCAB,
+};
+use crate::nlp::wer;
+use crate::runtime::{Engine, Tensor};
+use crate::util::Rng;
+
+/// The speech app: corpus + pretrained acoustic weights (device-side
+/// tensors prepared once).
+pub struct SpeechApp {
+    pub corpus: SpeechCorpus,
+    weights: Vec<Tensor>,
+    frames_per_chunk: usize,
+    /// Feature-synthesis noise (σ of the Gaussian added to the one-hot).
+    pub noise: f64,
+}
+
+/// Result of transcribing one clip.
+#[derive(Clone, Debug)]
+pub struct Transcription {
+    pub clip_id: u32,
+    pub text: String,
+    pub wer: f64,
+    pub frames: usize,
+    pub chunks: usize,
+}
+
+impl SpeechApp {
+    pub fn new(eng: &Engine, corpus: SpeechCorpus) -> anyhow::Result<SpeechApp> {
+        let t = eng.manifest.dim("speech_frames")? as usize;
+        let f = eng.manifest.dim("speech_features")? as usize;
+        let h = eng.manifest.dim("speech_hidden")? as usize;
+        let v = eng.manifest.dim("speech_vocab")? as usize;
+        anyhow::ensure!(f == FRAME_DIM && v == VOCAB, "manifest dims drifted");
+        let (w1, b1, w2, b2, w3, b3) = oracle_acoustic_weights(h);
+        let weights = vec![
+            Tensor::new(vec![f, h], w1),
+            Tensor::new(vec![h], b1),
+            Tensor::new(vec![h, h], w2),
+            Tensor::new(vec![h], b2),
+            Tensor::new(vec![h, v], w3),
+            Tensor::new(vec![v], b3),
+        ];
+        Ok(SpeechApp { corpus, weights, frames_per_chunk: t, noise: 0.08 })
+    }
+
+    /// Transcribe one clip through the PJRT acoustic model.
+    pub fn transcribe(
+        &self,
+        eng: &mut Engine,
+        clip: &Clip,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Transcription> {
+        let t = self.frames_per_chunk;
+        let mut frames = speech_frames(&clip.transcript, rng, self.noise);
+        let n_frames = frames.len() / FRAME_DIM;
+        // Pad to a whole number of chunks with blank frames.
+        let chunks = n_frames.div_ceil(t).max(1);
+        frames.resize(chunks * t * FRAME_DIM, 0.0);
+        for pad in n_frames..chunks * t {
+            frames[pad * FRAME_DIM + BLANK] = 1.0;
+        }
+        let variant = format!("t{t}");
+        let mut logprobs: Vec<f32> = Vec::with_capacity(chunks * t * VOCAB);
+        for c in 0..chunks {
+            let chunk =
+                Tensor::new(vec![t, FRAME_DIM], frames[c * t * FRAME_DIM..(c + 1) * t * FRAME_DIM].to_vec());
+            let mut inputs = Vec::with_capacity(7);
+            inputs.push(chunk);
+            inputs.extend(self.weights.iter().cloned());
+            let out = eng.run("acoustic_forward", &variant, &inputs)?;
+            logprobs.extend_from_slice(&out[0].data);
+        }
+        let text = greedy_ctc_decode(&logprobs, chunks * t);
+        let wer = wer(&clip.transcript, &text);
+        Ok(Transcription { clip_id: clip.id, text, wer, frames: n_frames, chunks })
+    }
+
+    /// Transcribe a set of clips; returns (mean WER, transcriptions).
+    pub fn transcribe_set(
+        &self,
+        eng: &mut Engine,
+        clip_ids: &[u32],
+        seed: u64,
+    ) -> anyhow::Result<(f64, Vec<Transcription>)> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::with_capacity(clip_ids.len());
+        let mut total = 0.0;
+        for &id in clip_ids {
+            let tr = self.transcribe(eng, &self.corpus.clips[id as usize], &mut rng)?;
+            total += tr.wer;
+            out.push(tr);
+        }
+        Ok((total / clip_ids.len().max(1) as f64, out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transcribes_with_low_wer() {
+        let Some(mut eng) = Engine::load_default() else { return };
+        let corpus = SpeechCorpus::generate(31, 8);
+        let app = SpeechApp::new(&eng, corpus).unwrap();
+        let ids: Vec<u32> = (0..8).collect();
+        let (mean_wer, trs) = app.transcribe_set(&mut eng, &ids, 77).unwrap();
+        assert!(mean_wer < 0.10, "mean WER {mean_wer}");
+        for tr in &trs {
+            assert!(!tr.text.is_empty());
+            assert!(tr.chunks >= 1);
+            assert_eq!(tr.frames.div_ceil(100).max(1), tr.chunks);
+        }
+    }
+
+    #[test]
+    fn pjrt_and_rust_decodes_agree() {
+        // "output accuracy: same" — the ISP path (PJRT) and a pure-Rust
+        // forward must produce identical transcripts.
+        let Some(mut eng) = Engine::load_default() else { return };
+        let corpus = SpeechCorpus::generate(32, 3);
+        let app = SpeechApp::new(&eng, corpus).unwrap();
+        for clip in &app.corpus.clips {
+            let mut rng_a = Rng::new(5);
+            let tr = app.transcribe(&mut eng, clip, &mut rng_a).unwrap();
+            // rust oracle on the same frames
+            let mut rng_b = Rng::new(5);
+            let frames = speech_frames(&clip.transcript, &mut rng_b, app.noise);
+            let t = frames.len() / FRAME_DIM;
+            let weights = oracle_acoustic_weights(256);
+            let logits =
+                crate::nlp::features::acoustic_forward_rust(&frames, t, 256, &weights);
+            let rust_text = greedy_ctc_decode(&logits, t);
+            assert_eq!(tr.text, rust_text, "clip {}", clip.id);
+        }
+    }
+}

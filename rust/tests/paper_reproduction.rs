@@ -1,0 +1,186 @@
+//! The reproduction gate: every headline claim in the paper, asserted at
+//! full paper scale against the simulated testbed. Tolerances are wide
+//! enough for a different substrate but tight enough that the *shape* —
+//! who wins, by roughly what factor — must hold.
+
+use solana_isp::metrics::Metrics;
+use solana_isp::power::PowerModel;
+use solana_isp::sched::{run, RunReport, SchedConfig};
+use solana_isp::workloads::{App, AppModel};
+
+fn pair(app: App, items: u64, batch: u64, ratio: f64) -> (RunReport, RunReport) {
+    let model = AppModel::for_app(app, items);
+    let power = PowerModel::default();
+    let cfg = SchedConfig { csd_batch: batch, batch_ratio: ratio, ..SchedConfig::default() };
+    let mut m = Metrics::new();
+    let base = run(&model, &SchedConfig { isp_drives: 0, ..cfg.clone() }, &power, &mut m).unwrap();
+    let isp = run(&model, &cfg, &power, &mut m).unwrap();
+    (base, isp)
+}
+
+#[test]
+fn speech_fig5a_headline() {
+    // Paper: 96 → 296 words/s with 36 CSDs (3.1x), batch size 6.
+    let (base, isp) = pair(App::SpeechToText, 13_100, 6, 20.0);
+    assert!((90.0..112.0).contains(&base.words_per_sec), "base {}", base.words_per_sec);
+    assert!((255.0..320.0).contains(&isp.words_per_sec), "isp {}", isp.words_per_sec);
+    let speedup = isp.words_per_sec / base.words_per_sec;
+    assert!((2.5..3.4).contains(&speedup), "speedup {speedup}");
+}
+
+#[test]
+fn speech_batch_insensitivity() {
+    // Paper: "processing speed does not change much (less than 7%) when
+    // varying the batch size" — we allow 12% across 2..8.
+    let mut rates = Vec::new();
+    for batch in [2u64, 4, 6, 8] {
+        let (_, isp) = pair(App::SpeechToText, 13_100, batch, 20.0);
+        rates.push(isp.words_per_sec);
+    }
+    let max = rates.iter().cloned().fold(0.0, f64::max);
+    let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!((max - min) / max < 0.12, "batch sensitivity {rates:?}");
+}
+
+#[test]
+fn speech_data_transfer_reduction() {
+    // Paper: 68% of the input never left the storage units; only ~1.2 MB
+    // of text came back.
+    let (_, isp) = pair(App::SpeechToText, 13_100, 6, 20.0);
+    let frac = isp.csd_data_fraction();
+    assert!((0.55..0.75).contains(&frac), "csd share {frac}");
+    let total_bytes = 13_100u64 * 290_000;
+    let stayed = isp.isp_bytes as f64 / total_bytes as f64;
+    assert!(stayed > 0.5, "in-storage byte share {stayed}");
+}
+
+#[test]
+fn recommender_fig5b_headline() {
+    // Paper: 579 → 1506 q/s (2.6x).
+    let (base, isp) = pair(App::Recommender, 58_000, 256, 22.0);
+    assert!((530.0..600.0).contains(&base.items_per_sec), "base {}", base.items_per_sec);
+    let speedup = isp.items_per_sec / base.items_per_sec;
+    assert!((2.2..2.9).contains(&speedup), "speedup {speedup}");
+}
+
+#[test]
+fn sentiment_fig5c_headline() {
+    // Paper: 9496 → 20994 q/s (2.2x) at batch 40k over 8M tweets.
+    let (base, isp) = pair(App::Sentiment, 8_000_000, 40_000, 26.0);
+    assert!((9_000.0..9_800.0).contains(&base.items_per_sec), "base {}", base.items_per_sec);
+    let speedup = isp.items_per_sec / base.items_per_sec;
+    assert!((1.9..2.5).contains(&speedup), "speedup {speedup}");
+}
+
+#[test]
+fn sentiment_fig5c_batch_sweep_shape() {
+    // Fig 5(c): across the paper's sweep {10k, 20k, 40k, 80k} every point
+    // lands near the 2.2x speedup with a modest spread. (Which exact
+    // batch peaks depends on tail quantization; the paper measured 40k
+    // best by a small margin — see EXPERIMENTS.md §Deviations.)
+    let mut speedups = Vec::new();
+    for batch in [10_000u64, 20_000, 40_000, 80_000] {
+        let (base, isp) = pair(App::Sentiment, 4_000_000, batch, 26.0);
+        speedups.push(isp.items_per_sec / base.items_per_sec);
+    }
+    for (i, s) in speedups.iter().enumerate() {
+        assert!((1.8..2.6).contains(s), "batch idx {i}: speedup {s}");
+    }
+    let max = speedups.iter().cloned().fold(0.0, f64::max);
+    let min = speedups.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!((max - min) / max < 0.25, "spread too wide: {speedups:?}");
+}
+
+#[test]
+fn table1_energy_savings() {
+    // Paper Table I: energy saving per query 67% / 61% / 54%.
+    for (app, items, batch, ratio, expect) in [
+        (App::SpeechToText, 13_100u64, 6u64, 20.0, 0.67),
+        (App::Recommender, 58_000, 256, 22.0, 0.61),
+        (App::Sentiment, 8_000_000, 40_000, 26.0, 0.54),
+    ] {
+        let (base, isp) = pair(app, items, batch, ratio);
+        let saving = 1.0 - isp.energy_per_item_j / base.energy_per_item_j;
+        assert!(
+            (saving - expect).abs() < 0.10,
+            "{app:?}: saving {saving:.2} vs paper {expect}"
+        );
+    }
+}
+
+#[test]
+fn table1_data_split() {
+    // Paper Table I: data processed in CSDs 68% / 64% / 56%.
+    for (app, items, batch, ratio, expect) in [
+        (App::SpeechToText, 13_100u64, 6u64, 20.0, 0.68),
+        (App::Recommender, 58_000, 256, 22.0, 0.64),
+        (App::Sentiment, 8_000_000, 40_000, 26.0, 0.56),
+    ] {
+        let (_, isp) = pair(app, items, batch, ratio);
+        let share = isp.csd_data_fraction();
+        assert!(
+            (share - expect).abs() < 0.08,
+            "{app:?}: csd share {share:.2} vs paper {expect}"
+        );
+    }
+}
+
+#[test]
+fn fig6_single_node_rates() {
+    // Fig 6 endpoints: host saturates ≈9496 q/s, CSD ≈364 q/s at 40k.
+    let m = AppModel::sentiment(1);
+    let host = m.node_rate_at_batch(40_000, true);
+    let csd = m.node_rate_at_batch(40_000, false);
+    assert!((host - 9_496.0).abs() / 9_496.0 < 0.03, "host {host}");
+    assert!((csd - 364.0).abs() / 364.0 < 0.03, "csd {csd}");
+    // ratio ≈ 26 (the paper sets the batch ratio from exactly this)
+    let ratio = host / csd;
+    assert!((ratio - 26.0).abs() < 1.0, "ratio {ratio}");
+}
+
+#[test]
+fn fig7_energy_monotone_in_csds() {
+    // Fig 7: normalized energy/query decreases as CSDs are engaged.
+    for app in App::all() {
+        let items = AppModel::paper_items(app) / 4;
+        let batch = match app {
+            App::SpeechToText => 6,
+            App::Recommender => 256,
+            App::Sentiment => 40_000,
+        };
+        let model = AppModel::for_app(app, items);
+        let power = PowerModel::default();
+        let mut last = f64::INFINITY;
+        for csds in [0usize, 9, 36] {
+            let mut m = Metrics::new();
+            let cfg = SchedConfig {
+                csd_batch: batch,
+                batch_ratio: 22.0,
+                isp_drives: csds,
+                ..SchedConfig::default()
+            };
+            let r = run(&model, &cfg, &power, &mut m).unwrap();
+            assert!(
+                r.energy_per_item_j < last * 1.001,
+                "{app:?}: energy/query rose at {csds} CSDs"
+            );
+            last = r.energy_per_item_j;
+        }
+    }
+}
+
+#[test]
+fn determinism_same_seed_same_report() {
+    let model = AppModel::sentiment(300_000);
+    let cfg = SchedConfig { csd_batch: 20_000, batch_ratio: 26.0, ..SchedConfig::default() };
+    let power = PowerModel::default();
+    let mut m1 = Metrics::new();
+    let mut m2 = Metrics::new();
+    let a = run(&model, &cfg, &power, &mut m1).unwrap();
+    let b = run(&model, &cfg, &power, &mut m2).unwrap();
+    assert_eq!(a.makespan_secs, b.makespan_secs);
+    assert_eq!(a.host_items, b.host_items);
+    assert_eq!(a.pcie_bytes, b.pcie_bytes);
+    assert_eq!(a.energy_j, b.energy_j);
+    assert_eq!(a.tunnel_messages, b.tunnel_messages);
+}

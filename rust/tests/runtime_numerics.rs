@@ -1,0 +1,178 @@
+//! Integration: the PJRT runtime executes real AOT artifacts and the
+//! numbers match Rust-side oracles.
+//!
+//! These tests skip (with a note) when `artifacts/` hasn't been built —
+//! the Makefile runs `make artifacts` before `cargo test`.
+
+use solana_isp::runtime::{Engine, Tensor};
+use solana_isp::util::Rng;
+
+fn engine() -> Option<Engine> {
+    Engine::load_default()
+}
+
+/// Deterministic pseudo-random tensor.
+fn rand_tensor(rng: &mut Rng, shape: Vec<usize>, scale: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data = (0..n).map(|_| (rng.f64() as f32 - 0.5) * 2.0 * scale).collect();
+    Tensor::new(shape, data)
+}
+
+#[test]
+fn sentiment_infer_matches_rust_oracle() {
+    let Some(mut eng) = engine() else { return };
+    let f = eng.manifest.dim("sent_features").unwrap() as usize;
+    let b = 32usize;
+    let mut rng = Rng::new(42);
+    let x = rand_tensor(&mut rng, vec![b, f], 1.0);
+    let w = rand_tensor(&mut rng, vec![f, 1], 0.05);
+    let bias = Tensor::new(vec![1], vec![0.1]);
+    let out = eng.run("sentiment_infer", "b32", &[x.clone(), w.clone(), bias.clone()]).unwrap();
+    assert_eq!(out.len(), 1);
+    let probs = &out[0];
+    assert_eq!(probs.shape, vec![b]);
+    // Rust oracle: sigmoid(x @ w + b)
+    for i in 0..b {
+        let mut logit = 0.1f64;
+        for j in 0..f {
+            logit += (x.data[i * f + j] * w.data[j]) as f64;
+        }
+        let expect = 1.0 / (1.0 + (-logit).exp());
+        let got = probs.data[i] as f64;
+        assert!(
+            (got - expect).abs() < 1e-4,
+            "row {i}: got {got}, expect {expect}"
+        );
+    }
+}
+
+#[test]
+fn sentiment_train_step_decreases_loss() {
+    let Some(mut eng) = engine() else { return };
+    let f = eng.manifest.dim("sent_features").unwrap() as usize;
+    let b = eng.manifest.dim("sent_train_batch").unwrap() as usize;
+    let mut rng = Rng::new(7);
+    // Separable data: feature 0 => positive, feature 1 => negative.
+    let mut x = Tensor::zeros(vec![b, f]);
+    let mut y = Tensor::zeros(vec![b]);
+    for i in 0..b {
+        let pos = rng.chance(0.5);
+        y.data[i] = if pos { 1.0 } else { 0.0 };
+        x.data[i * f + usize::from(!pos)] = 1.0;
+    }
+    let mut w = Tensor::zeros(vec![f, 1]);
+    let mut bias = Tensor::zeros(vec![1]);
+    let lr = Tensor::scalar(5.0);
+    let mut losses = Vec::new();
+    for _ in 0..10 {
+        let out = eng
+            .run(
+                "sentiment_train_step",
+                &format!("b{b}"),
+                &[x.clone(), y.clone(), w, bias, lr.clone()],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 3);
+        w = out[0].clone();
+        bias = out[1].clone();
+        losses.push(out[2].data[0]);
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.5),
+        "loss should halve: {losses:?}"
+    );
+}
+
+#[test]
+fn recommender_topk_puts_self_first() {
+    let Some(mut eng) = engine() else { return };
+    let n = eng.manifest.dim("rec_items").unwrap() as usize;
+    let d = eng.manifest.dim("rec_dim").unwrap() as usize;
+    let k = eng.manifest.dim("rec_topk").unwrap() as usize;
+    let mut rng = Rng::new(3);
+    // Unit-normalized random rows.
+    let mut m = rand_tensor(&mut rng, vec![n, d], 1.0);
+    for i in 0..n {
+        let row = &mut m.data[i * d..(i + 1) * d];
+        let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-8);
+        row.iter_mut().for_each(|v| *v /= norm);
+    }
+    let pop = Tensor::new(vec![n], vec![1.0; n]);
+    let probe = 12_345usize % n;
+    let q = Tensor::new(vec![1, d], m.row(probe).to_vec());
+    let out = eng.run("recommender_topk", "q1", &[m, pop, q]).unwrap();
+    assert_eq!(out.len(), 2);
+    let (vals, idx) = (&out[0], &out[1]);
+    assert_eq!(vals.shape, vec![1, k]);
+    assert_eq!(idx.shape, vec![1, k]);
+    assert!(idx.was_i32);
+    assert_eq!(idx.as_i32()[0] as usize, probe, "self is most similar");
+    // scores descending
+    for w in vals.data.windows(2) {
+        assert!(w[0] >= w[1] - 1e-6);
+    }
+}
+
+#[test]
+fn acoustic_forward_emits_log_distributions() {
+    let Some(mut eng) = engine() else { return };
+    let t = eng.manifest.dim("speech_frames").unwrap() as usize;
+    let f = eng.manifest.dim("speech_features").unwrap() as usize;
+    let h = eng.manifest.dim("speech_hidden").unwrap() as usize;
+    let v = eng.manifest.dim("speech_vocab").unwrap() as usize;
+    let mut rng = Rng::new(9);
+    let frames = rand_tensor(&mut rng, vec![t, f], 1.0);
+    let w1 = rand_tensor(&mut rng, vec![f, h], 0.1);
+    let b1 = Tensor::zeros(vec![h]);
+    let w2 = rand_tensor(&mut rng, vec![h, h], 0.1);
+    let b2 = Tensor::zeros(vec![h]);
+    let w3 = rand_tensor(&mut rng, vec![h, v], 0.1);
+    let b3 = Tensor::zeros(vec![v]);
+    let out = eng
+        .run(
+            "acoustic_forward",
+            &format!("t{t}"),
+            &[frames, w1, b1, w2, b2, w3, b3],
+        )
+        .unwrap();
+    let lp = &out[0];
+    assert_eq!(lp.shape, vec![t, v]);
+    for row in 0..t {
+        let s: f64 = lp.data[row * v..(row + 1) * v]
+            .iter()
+            .map(|&l| (l as f64).exp())
+            .sum();
+        assert!((s - 1.0).abs() < 1e-3, "row {row} sums to {s}");
+    }
+}
+
+#[test]
+fn input_validation_rejects_wrong_shapes() {
+    let Some(mut eng) = engine() else { return };
+    let bad = Tensor::zeros(vec![2, 2]);
+    let err = eng
+        .run("sentiment_infer", "b32", &[bad.clone(), bad.clone(), bad])
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shape"), "{msg}");
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some(mut eng) = engine() else { return };
+    let f = eng.manifest.dim("sent_features").unwrap() as usize;
+    let mut rng = Rng::new(1);
+    let x = rand_tensor(&mut rng, vec![32, f], 1.0);
+    let w = Tensor::zeros(vec![f, 1]);
+    let b = Tensor::zeros(vec![1]);
+    let t0 = std::time::Instant::now();
+    eng.run("sentiment_infer", "b32", &[x.clone(), w.clone(), b.clone()]).unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    for _ in 0..5 {
+        eng.run("sentiment_infer", "b32", &[x.clone(), w.clone(), b.clone()]).unwrap();
+    }
+    let rest = t1.elapsed() / 5;
+    assert!(rest < first, "cached executions ({rest:?}) beat compile+run ({first:?})");
+    assert_eq!(eng.executions(), 6);
+}

@@ -1,0 +1,225 @@
+//! Cross-module integration: device stack (flash+FTL+FCU+FS) consistency,
+//! failure injection, scheduler property sweeps, and CLI smoke.
+
+use solana_isp::cluster::StorageServer;
+use solana_isp::csd::{CsdConfig, IoRequester};
+use solana_isp::fs::{LockMode, Mount, SharedFs};
+use solana_isp::interconnect::TcpTunnel;
+use solana_isp::metrics::Metrics;
+use solana_isp::power::PowerModel;
+use solana_isp::prop::{check, forall};
+use solana_isp::sched::{run, SchedConfig};
+use solana_isp::workloads::{App, AppModel};
+
+// ---------------------------------------------------------------------
+// Device stack
+// ---------------------------------------------------------------------
+
+#[test]
+fn fs_extents_land_inside_flash_capacity() {
+    let cfg = CsdConfig::tiny();
+    let cap = cfg.flash.capacity_bytes();
+    let mut fs = SharedFs::new(cap, 4096);
+    fs.create("a", cap / 4).unwrap();
+    fs.create("b", cap / 4).unwrap();
+    let runs = fs.map_range("a", 0, cap / 4).unwrap();
+    for (start, len) in runs {
+        assert!(start + len <= cap);
+    }
+}
+
+#[test]
+fn ingest_read_roundtrip_counts_every_byte() {
+    let mut s = StorageServer::new(2, CsdConfig::tiny());
+    let bytes = 1 << 20;
+    let t = s.ingest(0.0, 0, "data", bytes).unwrap();
+    let r = s.isp_read(t, 0, "data", 0, bytes).unwrap();
+    assert!(r.done > t);
+    let io = s.bays[0].csd.fcu.io;
+    assert_eq!(io.host_write_bytes, bytes);
+    assert_eq!(io.isp_read_bytes, bytes);
+    // flash-level accounting: at least bytes/page pages touched
+    let (reads, programs, _) = s.bays[0].csd.fcu.flash.counts();
+    assert!(programs >= bytes / 4096);
+    assert!(reads >= bytes / 4096);
+}
+
+#[test]
+fn failure_injection_fs_errors_surface() {
+    let mut s = StorageServer::new(1, CsdConfig::tiny());
+    // read of a file that was never ingested
+    assert!(s.host_read(0.0, 0, "ghost", 0, 4096).is_err());
+    // read past EOF
+    s.ingest(0.0, 0, "small", 4096).unwrap();
+    assert!(s.host_read(1.0, 0, "small", 0, 1 << 20).is_err());
+    // duplicate ingest
+    assert!(s.ingest(1.0, 0, "small", 4096).is_err());
+    // drive out of space
+    let cap = CsdConfig::tiny().flash.capacity_bytes();
+    assert!(s.ingest(1.0, 0, "huge", cap * 2).is_err());
+}
+
+#[test]
+fn dlm_traffic_is_bounded_by_lock_caching() {
+    // Alternating readers only master the lock once per side.
+    let mut fs = SharedFs::new(1 << 24, 4096);
+    let mut tun = TcpTunnel::default();
+    fs.create("shared", 1 << 20).unwrap();
+    let mut t = 0.0;
+    for _ in 0..100 {
+        t = fs.lock(t, &mut tun, "shared", Mount::Host, LockMode::Read).unwrap();
+        t = fs.lock(t, &mut tun, "shared", Mount::Isp, LockMode::Read).unwrap();
+    }
+    assert_eq!(fs.dlm.remote_grants, 2, "PR locks cache on both mounts");
+    assert_eq!(fs.dlm.cached_hits, 198);
+}
+
+#[test]
+fn gc_under_sustained_overwrite_keeps_device_usable() {
+    let cfg = CsdConfig::tiny();
+    let mut server = StorageServer::new(1, cfg.clone());
+    let quarter = cfg.flash.capacity_bytes() / 4;
+    server.ingest(0.0, 0, "hot", quarter).unwrap();
+    // Overwrite *slices* of the hot file many times (partial-block
+    // invalidation is what makes GC relocate valid pages → WAF > 1).
+    let mut t = 1.0;
+    let slice = quarter / 3;
+    for round in 0..36u64 {
+        let off = (round % 3) * slice;
+        let bay = &mut server.bays[0];
+        let runs = bay.fs.map_range("hot", off, slice).unwrap();
+        for (dev_off, len) in runs {
+            t = bay.csd.write(t, dev_off, len, IoRequester::Host).max(t);
+        }
+    }
+    let stats = server.bays[0].csd.fcu.ftl_stats();
+    assert!(stats.gc_runs > 0, "GC ran under churn: {stats:?}");
+    assert!(stats.blocks_erased > 0, "{stats:?}");
+    assert!(
+        stats.waf() >= 1.0 && stats.waf() < 6.0,
+        "sane WAF: {} ({stats:?})",
+        stats.waf()
+    );
+    // device still serves reads
+    let r = server.isp_read(t, 0, "hot", 0, quarter).unwrap();
+    assert!(r.done > t);
+}
+
+// ---------------------------------------------------------------------
+// Scheduler property sweeps
+// ---------------------------------------------------------------------
+
+#[test]
+fn property_scheduler_conserves_items_across_configs() {
+    forall("scheduler conservation", 12, |g| {
+        let drives = g.usize(1..=36);
+        let isp_drives = g.usize(0..=drives);
+        let items = g.u64(1_000..=80_000);
+        let batch = g.u64(10..=40_000);
+        let ratio = g.f64(1.0, 30.0);
+        let app = *g.rng().choose(&App::all());
+        let model = AppModel::for_app(app, items);
+        let cfg = SchedConfig {
+            csd_batch: batch,
+            batch_ratio: ratio,
+            drives,
+            isp_drives,
+            ..SchedConfig::default()
+        };
+        let mut m = Metrics::new();
+        let r = run(&model, &cfg, &PowerModel::default(), &mut m)
+            .map_err(|e| e.to_string())?;
+        check(
+            r.host_items + r.csd_items == items,
+            format!("lost items: {} + {} != {items}", r.host_items, r.csd_items),
+        )?;
+        check(r.makespan_secs > 0.0, "zero makespan")?;
+        check(r.items_per_sec.is_finite(), "rate not finite")?;
+        check(
+            r.host_busy_secs <= r.makespan_secs + 1e-6,
+            "host busy beyond makespan",
+        )?;
+        check(
+            r.isp_busy_secs <= r.makespan_secs * drives as f64 + 1e-6,
+            "isp busy beyond capacity",
+        )?;
+        if isp_drives == 0 {
+            check(r.csd_items == 0, "baseline ran ISP work")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_energy_consistent_with_power_bounds() {
+    forall("energy within power envelope", 8, |g| {
+        let drives = g.usize(1..=36);
+        let items = g.u64(10_000..=200_000);
+        let model = AppModel::sentiment(items);
+        let cfg = SchedConfig {
+            csd_batch: g.u64(1_000..=40_000),
+            batch_ratio: 26.0,
+            drives,
+            isp_drives: drives,
+            ..SchedConfig::default()
+        };
+        let p = PowerModel::default();
+        let mut m = Metrics::new();
+        let r = run(&model, &cfg, &p, &mut m).map_err(|e| e.to_string())?;
+        let min_w = p.instantaneous_w(drives, 0.0, 0);
+        let max_w = p.instantaneous_w(drives, 1.0, drives);
+        check(
+            r.avg_power_w >= min_w - 1e-6 && r.avg_power_w <= max_w + 1e-6,
+            format!("avg power {} outside [{min_w}, {max_w}]", r.avg_power_w),
+        )
+    });
+}
+
+#[test]
+fn adding_isp_drives_never_hurts_throughput_much() {
+    // Monotonicity (within tolerance — tail quantization can cost a
+    // little): engaging more ISP engines should not reduce throughput.
+    let items = 1_000_000;
+    let model = AppModel::sentiment(items);
+    let power = PowerModel::default();
+    let mut prev = 0.0;
+    for isp in [0usize, 9, 18, 36] {
+        let cfg = SchedConfig {
+            csd_batch: 20_000,
+            batch_ratio: 26.0,
+            isp_drives: isp,
+            ..SchedConfig::default()
+        };
+        let mut m = Metrics::new();
+        let r = run(&model, &cfg, &power, &mut m).unwrap();
+        assert!(
+            r.items_per_sec > prev * 0.97,
+            "throughput regressed at {isp} ISPs: {} < {prev}",
+            r.items_per_sec
+        );
+        prev = r.items_per_sec;
+    }
+}
+
+// ---------------------------------------------------------------------
+// CLI smoke
+// ---------------------------------------------------------------------
+
+#[test]
+fn cli_subcommands_smoke() {
+    let sv = |xs: &[&str]| xs.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+    assert_eq!(solana_isp::exp::dispatch(&sv(&["version"])).unwrap(), 0);
+    assert_eq!(solana_isp::exp::dispatch(&sv(&["power"])).unwrap(), 0);
+    assert_eq!(
+        solana_isp::exp::dispatch(&sv(&[
+            "run", "--app", "speech", "--scale", "0.02", "--drives", "6", "--json"
+        ]))
+        .unwrap(),
+        0
+    );
+    assert_eq!(
+        solana_isp::exp::dispatch(&sv(&["run", "--app", "sentiment", "--scale", "0.01", "--baseline"]))
+            .unwrap(),
+        0
+    );
+}
