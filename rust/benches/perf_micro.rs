@@ -6,12 +6,13 @@
 
 use solana_isp::bench_support::Bencher;
 use solana_isp::csd::{CsdConfig, Fcu, IoRequester};
+use solana_isp::exp::{self, pool, Scale};
 use solana_isp::metrics::Metrics;
 use solana_isp::power::PowerModel;
 use solana_isp::runtime::{Engine, Tensor};
 use solana_isp::sched::{run, SchedConfig};
 use solana_isp::sim::{EventQueue, Pipe, Servers};
-use solana_isp::workloads::AppModel;
+use solana_isp::workloads::{App, AppModel};
 
 fn main() -> anyhow::Result<()> {
     let mut b = Bencher::from_env();
@@ -98,6 +99,62 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(r.items_per_sec);
         13_100
     });
+
+    // Wake coalescing (ISSUE-1 tentpole): identical simulated results,
+    // far fewer DES events. Report the event counts once, then time both
+    // modes on the paper's Fig 5(a) speech operating point.
+    {
+        let speech_cfg = |coalesce: bool| SchedConfig {
+            csd_batch: 6,
+            batch_ratio: 20.0,
+            coalesce_wakes: coalesce,
+            ..SchedConfig::default()
+        };
+        let model = AppModel::speech(13_100);
+        let mut m = Metrics::new();
+        let naive = run(&model, &speech_cfg(false), &PowerModel::default(), &mut m).unwrap();
+        let coal = run(&model, &speech_cfg(true), &PowerModel::default(), &mut m).unwrap();
+        assert_eq!(naive.makespan_secs.to_bits(), coal.makespan_secs.to_bits());
+        println!(
+            "sched.run speech events_executed: naive={} ({} wakes) coalesced={} ({} wakes) => {:.1}x fewer events",
+            naive.events_executed,
+            naive.wake_events,
+            coal.events_executed,
+            coal.wake_events,
+            naive.events_executed as f64 / coal.events_executed.max(1) as f64,
+        );
+        b.bench("sched.run speech 13k naive wakes", || {
+            let mut m = Metrics::new();
+            let r = run(&model, &speech_cfg(false), &PowerModel::default(), &mut m).unwrap();
+            std::hint::black_box(r.items_per_sec);
+            13_100
+        });
+        b.bench("sched.run speech 13k coalesced wakes", || {
+            let mut m = Metrics::new();
+            let r = run(&model, &speech_cfg(true), &PowerModel::default(), &mut m).unwrap();
+            std::hint::black_box(r.items_per_sec);
+            13_100
+        });
+    }
+
+    // Parallel sweep runner: the same Fig 5 sweep on one worker vs the
+    // full pool (outputs are byte-identical; only wall-clock moves).
+    {
+        let scale = Scale(0.02);
+        let threads = pool::pool_size();
+        pool::set_threads(1);
+        b.bench("exp.fig5 speech sweep 1 thread", || {
+            let t = exp::fig5(App::SpeechToText, scale).expect("fig5 sequential");
+            t.rows.len() as u64
+        });
+        pool::set_threads(threads);
+        b.bench("exp.fig5 speech sweep pooled", || {
+            let t = exp::fig5(App::SpeechToText, scale).expect("fig5 parallel");
+            t.rows.len() as u64
+        });
+        pool::set_threads(0);
+        println!("exp.fig5 pooled sweep used {threads} worker threads");
+    }
 
     // PJRT hot path (skipped when artifacts are absent).
     if let Some(mut eng) = Engine::load_default() {

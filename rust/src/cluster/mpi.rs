@@ -58,15 +58,24 @@ pub fn group(size: usize) -> Vec<Communicator> {
 }
 
 /// Send/receive errors.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum MpiError {
-    #[error("rank {0} out of range")]
     BadRank(usize),
-    #[error("peer disconnected")]
     Disconnected,
-    #[error("recv timed out")]
     Timeout,
 }
+
+impl std::fmt::Display for MpiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MpiError::BadRank(r) => write!(f, "rank {r} out of range"),
+            MpiError::Disconnected => write!(f, "peer disconnected"),
+            MpiError::Timeout => write!(f, "recv timed out"),
+        }
+    }
+}
+
+impl std::error::Error for MpiError {}
 
 impl Communicator {
     pub fn rank(&self) -> usize {

@@ -97,6 +97,9 @@ impl ExperimentConfig {
         if let Some(v) = t.bool("sched.use_host") {
             cfg.sched.use_host = v;
         }
+        if let Some(v) = t.bool("sched.coalesce_wakes") {
+            cfg.sched.coalesce_wakes = v;
+        }
         if let Some(v) = t.f64("power.server_idle_w") {
             cfg.power.server_idle_w = v;
         }
@@ -140,6 +143,13 @@ mod tests {
         let c = ExperimentConfig::from_toml("").unwrap();
         assert_eq!(c.sched.drives, 36);
         assert_eq!(c.power.server_idle_w, 167.0);
+    }
+
+    #[test]
+    fn coalesce_wakes_override() {
+        let c = ExperimentConfig::from_toml("[sched]\ncoalesce_wakes = false\n").unwrap();
+        assert!(!c.sched.coalesce_wakes);
+        assert!(ExperimentConfig::from_toml("").unwrap().sched.coalesce_wakes);
     }
 
     #[test]

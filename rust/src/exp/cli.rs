@@ -2,11 +2,15 @@
 //!
 //! ```text
 //! solana run   --app sentiment --drives 36 --isp-drives 36 --batch 40000
-//! solana fig5  --app speech [--scale 0.25]
+//! solana fig5  --app speech [--scale 0.25] [--threads 8]
 //! solana fig6 | fig7 | table1 | power
 //! solana ablate --which ratio|datapath|wakeup --app sentiment
 //! solana version | help
 //! ```
+//!
+//! Sweep commands accept `--threads N` to size the parallel cell runner
+//! (overrides `SOLANA_THREADS`; default: all cores). Results are
+//! byte-identical at any thread count.
 
 use crate::cli::Command;
 use crate::config::{parse_app, ExperimentConfig};
@@ -29,18 +33,23 @@ fn commands() -> Vec<Command> {
             .flag("json", "emit the report as JSON"),
         Command::new("fig5", "regenerate Fig 5 (throughput sweep)")
             .opt("app", Some("speech"), "speech|recommender|sentiment")
-            .opt("scale", None, "dataset scale (default 0.25)"),
+            .opt("scale", None, "dataset scale (default 0.25)")
+            .opt("threads", None, "sweep worker threads (default: SOLANA_THREADS or all cores)"),
         Command::new("fig6", "regenerate Fig 6 (1-node batch sweep)")
-            .opt("scale", None, "dataset scale"),
+            .opt("scale", None, "dataset scale")
+            .opt("threads", None, "sweep worker threads"),
         Command::new("fig7", "regenerate Fig 7 (energy per query)")
-            .opt("scale", None, "dataset scale"),
+            .opt("scale", None, "dataset scale")
+            .opt("threads", None, "sweep worker threads"),
         Command::new("table1", "regenerate Table I (summary)")
-            .opt("scale", None, "dataset scale"),
+            .opt("scale", None, "dataset scale")
+            .opt("threads", None, "sweep worker threads"),
         Command::new("power", "print the power breakdown (§IV-C)"),
         Command::new("ablate", "run an ablation study")
             .opt("which", Some("ratio"), "ratio|datapath|wakeup")
             .opt("app", Some("sentiment"), "benchmark app")
-            .opt("scale", None, "dataset scale"),
+            .opt("scale", None, "dataset scale")
+            .opt("threads", None, "sweep worker threads"),
         Command::new("version", "print the version"),
         Command::new("help", "show this help"),
     ]
@@ -64,6 +73,10 @@ pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
         }
         None => Scale::from_env(),
     };
+    if let Some(n) = args.u64("threads")? {
+        anyhow::ensure!(n >= 1, "--threads must be >= 1");
+        exp::pool::set_threads(n as usize);
+    }
     match name {
         "version" => println!("solana-isp {}", crate::VERSION),
         "help" => print_help(&cmds),
@@ -163,6 +176,7 @@ fn print_report(r: &sched::RunReport) {
     println!("energy              {:>11.1} J ({:.1} W avg)", r.energy_j, r.avg_power_w);
     println!("energy/item         {:>11.4} J", r.energy_per_item_j);
     println!("mean batch latency  {:>11.2} s", r.mean_batch_latency);
+    println!("des events          {:>14} ({} wakes)", r.events_executed, r.wake_events);
 }
 
 fn report_json(r: &sched::RunReport) -> crate::codec::json::Json {
@@ -181,7 +195,9 @@ fn report_json(r: &sched::RunReport) -> crate::codec::json::Json {
         .set("energy_j", r.energy_j.into())
         .set("avg_power_w", r.avg_power_w.into())
         .set("energy_per_item_j", r.energy_per_item_j.into())
-        .set("mean_batch_latency_s", r.mean_batch_latency.into());
+        .set("mean_batch_latency_s", r.mean_batch_latency.into())
+        .set("events_executed", r.events_executed.into())
+        .set("wake_events", r.wake_events.into());
     j
 }
 

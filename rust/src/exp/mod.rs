@@ -13,8 +13,15 @@
 //! | [`ablate_batch_ratio`] | A1: off-optimal batch ratios under-utilize |
 //! | [`ablate_datapath`] | A2: shared-FS index dispatch vs tunnel data |
 //! | [`ablate_wakeup`] | A3: scheduler polling period sensitivity |
+//!
+//! Every sweep fans its independent cells out over the deterministic
+//! worker pool in [`pool`] (sized by `--threads` / `SOLANA_THREADS` /
+//! core count). Each cell owns its `Metrics` and simulated server, and
+//! results are collected in input order, so the emitted tables are
+//! byte-identical to a sequential run.
 
 pub mod cli;
+pub mod pool;
 
 use crate::metrics::{Metrics, Table};
 use crate::power::PowerModel;
@@ -81,6 +88,7 @@ pub fn run_cell(app: App, items: u64, batch: u64, isp_drives: usize) -> anyhow::
 
 /// Fig 5(a/b/c): throughput vs batch size × engaged CSDs.
 /// Rows: one per (batch, csds) with items/s and words/s.
+/// Cells run concurrently on the [`pool`]; rows stay in sweep order.
 pub fn fig5(app: App, scale: Scale) -> anyhow::Result<Table> {
     let items = scale.items(app);
     let unit = if app == App::SpeechToText { "words/s" } else { "queries/s" };
@@ -88,33 +96,41 @@ pub fn fig5(app: App, scale: Scale) -> anyhow::Result<Table> {
         &format!("Fig 5 — {} throughput ({} items)", app.name(), items),
         &["batch", "csds", unit, "host items", "csd items", "csd share"],
     );
+    let mut cells: Vec<(u64, usize)> = Vec::new();
     for &batch in &batch_sizes(app) {
         for &csds in &CSD_COUNTS {
-            let r = run_cell(app, items, batch, csds)?;
-            let rate = if app == App::SpeechToText { r.words_per_sec } else { r.items_per_sec };
-            t.row(vec![
-                batch.to_string(),
-                csds.to_string(),
-                format!("{rate:.1}"),
-                r.host_items.to_string(),
-                r.csd_items.to_string(),
-                format!("{:.2}", r.csd_data_fraction()),
-            ]);
+            cells.push((batch, csds));
         }
+    }
+    let specs = cells.clone();
+    let reports = pool::map_cells(cells, move |(batch, csds)| run_cell(app, items, batch, csds));
+    for ((batch, csds), r) in specs.into_iter().zip(reports) {
+        let r = r?;
+        let rate = if app == App::SpeechToText { r.words_per_sec } else { r.items_per_sec };
+        t.row(vec![
+            batch.to_string(),
+            csds.to_string(),
+            format!("{rate:.1}"),
+            r.host_items.to_string(),
+            r.csd_items.to_string(),
+            format!("{:.2}", r.csd_data_fraction()),
+        ]);
     }
     Ok(t)
 }
 
 /// Fig 6: single-node sentiment throughput vs batch size (log sweep),
-/// host and CSD — run end-to-end with one compute node each.
+/// host and CSD — run end-to-end with one compute node each. Each batch
+/// point (a host-only plus a CSD-only run) is one pool cell.
 pub fn fig6(scale: Scale) -> anyhow::Result<Table> {
     let mut t = Table::new(
         "Fig 6 — 1-node sentiment throughput vs batch size",
         &["batch", "host q/s", "csd q/s", "host batch latency s", "csd batch latency s"],
     );
     let batches = [10u64, 100, 1_000, 4_000, 10_000, 40_000, 80_000];
-    for &b in &batches {
-        let items = (scale.items(App::Sentiment) / 8).max(4 * b);
+    let base_items = scale.items(App::Sentiment);
+    let results = pool::map_cells(batches.to_vec(), move |b| {
+        let items = (base_items / 8).max(4 * b);
         let model = AppModel::sentiment(items);
         let power = PowerModel::default();
         // host only, one drive holding the data
@@ -148,10 +164,14 @@ pub fn fig6(scale: Scale) -> anyhow::Result<Table> {
         )?;
         let hl = m1.histogram("sched.host_batch_latency").map(|h| h.mean()).unwrap_or(0.0);
         let cl = m2.histogram("sched.csd_batch_latency").map(|h| h.mean()).unwrap_or(0.0);
+        Ok((host.items_per_sec, csd.items_per_sec, hl, cl))
+    });
+    for (&b, res) in batches.iter().zip(results) {
+        let (host_rate, csd_rate, hl, cl) = res?;
         t.row(vec![
             b.to_string(),
-            format!("{:.1}", host.items_per_sec),
-            format!("{:.1}", csd.items_per_sec),
+            format!("{host_rate:.1}"),
+            format!("{csd_rate:.1}"),
             format!("{hl:.3}"),
             format!("{cl:.3}"),
         ]);
@@ -160,17 +180,34 @@ pub fn fig6(scale: Scale) -> anyhow::Result<Table> {
 }
 
 /// Fig 7: energy per query vs #CSDs, normalized to the host-only setup.
+/// All (csds × app) cells run concurrently; normalization against the
+/// csds=0 baseline happens after collection, in sweep order.
 pub fn fig7(scale: Scale) -> anyhow::Result<Table> {
     let mut t = Table::new(
         "Fig 7 — energy per query, normalized to host-only",
         &["csds", "speech", "recommender", "sentiment"],
     );
+    let mut specs: Vec<(usize, App)> = Vec::new();
+    for &csds in &CSD_COUNTS {
+        for app in App::all() {
+            specs.push((csds, app));
+        }
+    }
+    let ordered = specs.clone();
+    let reports = pool::map_cells(specs, move |(csds, app)| {
+        run_cell(app, scale.items(app), default_batch(app), csds)
+    });
+    // Re-join results to sweep cells by zipping the same spec vec the
+    // pool consumed — a structural mismatch between the two loops fails
+    // loudly instead of silently pairing rows with the wrong report.
+    let mut it = ordered.into_iter().zip(reports);
     let mut base: Vec<f64> = Vec::new();
     for &csds in &CSD_COUNTS {
         let mut cells = vec![csds.to_string()];
         for (i, app) in App::all().iter().enumerate() {
-            let batch = default_batch(*app);
-            let r = run_cell(*app, scale.items(*app), batch, csds)?;
+            let ((spec_csds, spec_app), r) = it.next().expect("one report per sweep cell");
+            assert_eq!((spec_csds, spec_app), (csds, *app), "sweep order drifted");
+            let r = r?;
             if csds == 0 {
                 base.push(r.energy_per_item_j);
                 cells.push("1.000".to_string());
@@ -207,11 +244,24 @@ pub fn table1(scale: Scale) -> anyhow::Result<Table> {
             "data in CSDs",
         ],
     );
+    let mut specs: Vec<(App, usize)> = Vec::new();
+    for app in App::all() {
+        specs.push((app, 0));
+        specs.push((app, 36));
+    }
+    let ordered = specs.clone();
+    let reports = pool::map_cells(specs, move |(app, csds)| {
+        run_cell(app, scale.items(app), default_batch(app), csds)
+    });
+    let mut it = ordered.into_iter().zip(reports);
     for app in App::all() {
         let items = scale.items(app);
-        let batch = default_batch(app);
-        let base = run_cell(app, items, batch, 0)?;
-        let isp = run_cell(app, items, batch, 36)?;
+        let (base_spec, base) = it.next().expect("baseline cell");
+        let (isp_spec, isp) = it.next().expect("isp cell");
+        assert_eq!(base_spec, (app, 0), "sweep order drifted");
+        assert_eq!(isp_spec, (app, 36), "sweep order drifted");
+        let base = base?;
+        let isp = isp?;
         let speedup = isp.items_per_sec / base.items_per_sec;
         // the paper reports energy per word for speech
         let divisor = AppModel::for_app(app, items).words_per_item;
@@ -254,7 +304,7 @@ pub fn ablate_batch_ratio(app: App, scale: Scale) -> anyhow::Result<Table> {
         &format!("A1 — batch-ratio sweep ({}; natural ≈ {natural})", app.name()),
         &["ratio", "items/s", "host util", "mean csd idle gap s"],
     );
-    for mult in [0.25, 0.5, 1.0, 2.0, 4.0] {
+    let results = pool::map_cells(vec![0.25, 0.5, 1.0, 2.0, 4.0], move |mult| {
         let ratio = (natural * mult).max(1.0);
         let model = AppModel::for_app(app, items);
         let mut m = Metrics::new();
@@ -271,6 +321,10 @@ pub fn ablate_batch_ratio(app: App, scale: Scale) -> anyhow::Result<Table> {
             ..SchedConfig::default()
         };
         let r = run(&model, &cfg, &PowerModel::default(), &mut m)?;
+        Ok((ratio, r))
+    });
+    for res in results {
+        let (ratio, r) = res?;
         let host_util = r.host_busy_secs / r.makespan_secs;
         let idle_gap = (r.makespan_secs * 36.0 - r.isp_busy_secs) / 36.0 / r.csd_batches.max(1) as f64;
         t.row(vec![
@@ -298,55 +352,72 @@ pub fn ablate_datapath(app: App, scale: Scale) -> anyhow::Result<Table> {
         &format!("A2 — dispatch datapath (IO-bound scan; contrast app: {})", app.name()),
         &["dispatch", "items/s", "speedup vs host-only"],
     );
-    let power = PowerModel::default();
-    let mut m = Metrics::new();
     let cfg = SchedConfig {
         csd_batch: 256,
         batch_ratio: 8.0,
         ..SchedConfig::default()
     };
-    let host_only = run(&base, &SchedConfig { isp_drives: 0, ..cfg.clone() }, &power, &mut m)?;
-    // index-only dispatch (the paper's design): ISPs read via local DMA
-    let shared_fs = run(&base, &cfg, &power, &mut m)?;
     // tunnel-data dispatch: every CSD item's bytes cross the ~120 MB/s
     // tunnel (serialized per drive) before the scan can run
     let mut tunneled = base.clone();
     let tun = crate::interconnect::TcpTunnel::default();
     tunneled.csd_item_secs += tun.unloaded_secs(base.bytes_per_item) * crate::workloads::ISP_CORES;
-    let tunnel_run = run(&tunneled, &cfg, &power, &mut m)?;
-    for (name, r) in [
-        ("host-only", &host_only),
-        ("shared-fs indexes", &shared_fs),
-        ("tunnel data", &tunnel_run),
-    ] {
+    let specs: Vec<(&'static str, AppModel, SchedConfig)> = vec![
+        ("host-only", base.clone(), SchedConfig { isp_drives: 0, ..cfg.clone() }),
+        // index-only dispatch (the paper's design): ISPs read via local DMA
+        ("shared-fs indexes", base, cfg.clone()),
+        ("tunnel data", tunneled, cfg),
+    ];
+    let results = pool::map_cells(specs, |(name, model, cfg)| {
+        let mut m = Metrics::new();
+        let r = run(&model, &cfg, &PowerModel::default(), &mut m)?;
+        Ok((name, r))
+    });
+    let mut rows = Vec::with_capacity(results.len());
+    for res in results {
+        rows.push(res?);
+    }
+    let host_rate = rows[0].1.items_per_sec;
+    for (name, r) in &rows {
         t.row(vec![
             name.to_string(),
             format!("{:.1}", r.items_per_sec),
-            format!("{:.2}x", r.items_per_sec / host_only.items_per_sec),
+            format!("{:.2}x", r.items_per_sec / host_rate),
         ]);
     }
     Ok(t)
 }
 
-/// A3: scheduler wakeup period sensitivity (paper fixes 0.2 s).
+/// A3: scheduler wakeup period sensitivity (paper fixes 0.2 s), run in
+/// both wake modes. Throughput and tunnel traffic are identical by the
+/// coalescing invariant (the test suite asserts bit-identity); the two
+/// event columns show what the fast path actually saves at each period.
 pub fn ablate_wakeup(app: App, scale: Scale) -> anyhow::Result<Table> {
     let items = scale.items(app);
-    let model = AppModel::for_app(app, items);
     let mut t = Table::new(
         &format!("A3 — scheduler wakeup period ({})", app.name()),
-        &["wakeup s", "items/s", "tunnel msgs"],
+        &["wakeup s", "items/s", "tunnel msgs", "events coalesced", "events naive"],
     );
-    for wakeup in [0.02, 0.1, 0.2, 0.5, 1.0, 2.0] {
-        let mut m = Metrics::new();
-        let cfg = SchedConfig {
+    let results = pool::map_cells(vec![0.02, 0.1, 0.2, 0.5, 1.0, 2.0], move |wakeup| {
+        let model = AppModel::for_app(app, items);
+        let mk = |coalesce: bool| SchedConfig {
             wakeup_secs: wakeup,
+            coalesce_wakes: coalesce,
             ..cfg_for(app, default_batch(app), 36)
         };
-        let r = run(&model, &cfg, &PowerModel::default(), &mut m)?;
+        let mut m = Metrics::new();
+        let coal = run(&model, &mk(true), &PowerModel::default(), &mut m)?;
+        let naive = run(&model, &mk(false), &PowerModel::default(), &mut m)?;
+        Ok((wakeup, coal, naive))
+    });
+    for res in results {
+        let (wakeup, coal, naive) = res?;
         t.row(vec![
             format!("{wakeup}"),
-            format!("{:.1}", r.items_per_sec),
-            r.tunnel_messages.to_string(),
+            format!("{:.1}", coal.items_per_sec),
+            coal.tunnel_messages.to_string(),
+            coal.events_executed.to_string(),
+            naive.events_executed.to_string(),
         ]);
     }
     Ok(t)
@@ -381,6 +452,31 @@ mod tests {
         let r36 = run_cell(App::SpeechToText, items, 6, 36).unwrap();
         assert!(r18.words_per_sec > r0.words_per_sec);
         assert!(r36.words_per_sec > r18.words_per_sec);
+    }
+
+    #[test]
+    fn parallel_sweep_output_is_byte_identical_to_sequential() {
+        // Same cells, same order, same strings — thread count must only
+        // change wall-clock. (Other tests may race pool::set_threads;
+        // that's fine, any pool size must produce these exact bytes.)
+        let scale = Scale(0.005);
+        pool::set_threads(1);
+        let seq = fig5(App::Sentiment, scale).unwrap().render();
+        pool::set_threads(4);
+        let par = fig5(App::Sentiment, scale).unwrap().render();
+        pool::set_threads(0);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn ablate_wakeup_reports_event_savings() {
+        let t = ablate_wakeup(App::Sentiment, Scale(0.005)).unwrap();
+        assert_eq!(t.headers.len(), 5);
+        for row in &t.rows {
+            let coalesced: u64 = row[3].parse().unwrap();
+            let naive: u64 = row[4].parse().unwrap();
+            assert!(coalesced <= naive, "coalesced {coalesced} > naive {naive}");
+        }
     }
 
     #[test]

@@ -1,0 +1,150 @@
+//! Deterministic parallel sweep runner.
+//!
+//! The figure/table drivers in [`crate::exp`] are embarrassingly
+//! parallel: every sweep cell is an independent virtual-time run that
+//! owns its [`crate::metrics::Metrics`] and its simulated
+//! [`crate::cluster::StorageServer`]. This module fans those cells out
+//! over a fixed-size pool of `std::thread` workers while keeping the
+//! output *deterministic*: results come back in input order, and each
+//! cell's simulation is bit-identical to a sequential run (the simulator
+//! shares no mutable state across cells).
+//!
+//! Pool size resolution, highest precedence first:
+//!
+//! 1. [`set_threads`] (the CLI's `--threads`, benches comparing modes);
+//! 2. the `SOLANA_THREADS` environment variable;
+//! 3. `std::thread::available_parallelism()`.
+//!
+//! `set_threads(0)` clears the override, falling back to 2 and 3.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Process-wide override set by [`set_threads`]; 0 means "not set".
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the worker-pool size for subsequent sweeps (0 clears the
+/// override). Thread counts never change simulated results — only
+/// wall-clock — so racing overrides from concurrent tests are benign.
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::SeqCst);
+}
+
+/// The worker-pool size the next sweep will use (see module docs for
+/// the precedence order).
+pub fn pool_size() -> usize {
+    let o = THREAD_OVERRIDE.load(Ordering::SeqCst);
+    if o > 0 {
+        return o;
+    }
+    if let Ok(s) = std::env::var("SOLANA_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f` over every input on the worker pool; the result vector is in
+/// input order regardless of which worker finished when. Each slot holds
+/// that cell's own `Result` — one failing cell does not poison its
+/// neighbours (the caller decides whether to bail).
+///
+/// Work is pulled from a shared cursor, so long cells never leave
+/// workers idle behind a static partition.
+pub fn map_cells<I, T, F>(inputs: Vec<I>, f: F) -> Vec<anyhow::Result<T>>
+where
+    I: Send,
+    T: Send,
+    F: Fn(I) -> anyhow::Result<T> + Sync,
+{
+    let n = inputs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = pool_size().min(n);
+    if workers <= 1 {
+        return inputs.into_iter().map(f).collect();
+    }
+    let jobs: Vec<Mutex<Option<I>>> = inputs.into_iter().map(|i| Mutex::new(Some(i))).collect();
+    let slots: Vec<Mutex<Option<anyhow::Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let input = jobs[i]
+                    .lock()
+                    .expect("job mutex")
+                    .take()
+                    .expect("each job is taken exactly once");
+                let out = f(input);
+                *slots[i].lock().expect("slot mutex") = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("slot mutex")
+                .expect("every claimed slot was filled")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_input_order() {
+        let inputs: Vec<u64> = (0..100).collect();
+        let out = map_cells(inputs, |i| {
+            // Finish out of order on purpose.
+            if i % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            Ok(i * 2)
+        });
+        let vals: Vec<u64> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(vals, (0..100).map(|i| i * 2).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn errors_stay_in_their_slot() {
+        let out = map_cells(vec![1u64, 0, 3], |i| {
+            anyhow::ensure!(i != 0, "zero cell");
+            Ok(i)
+        });
+        assert!(out[0].is_ok());
+        assert!(out[1].is_err());
+        assert!(out[2].is_ok());
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let out: Vec<anyhow::Result<u64>> = map_cells(Vec::<u64>::new(), |i| Ok(i));
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_size_is_at_least_one() {
+        assert!(pool_size() >= 1);
+    }
+
+    #[test]
+    fn non_send_free_inputs_move_through() {
+        // Heap-owning inputs and outputs move across the pool intact.
+        let inputs: Vec<String> = (0..16).map(|i| format!("cell-{i}")).collect();
+        let out = map_cells(inputs, |s| Ok(s + "!"));
+        for (i, r) in out.into_iter().enumerate() {
+            assert_eq!(r.unwrap(), format!("cell-{i}!"));
+        }
+    }
+}

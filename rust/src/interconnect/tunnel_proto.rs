@@ -30,19 +30,32 @@ pub struct Frame {
 }
 
 /// Encode/decode errors.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum FrameError {
-    #[error("payload exceeds MTU: {0} > {MTU}")]
     TooBig(usize),
-    #[error("short buffer: {0} bytes")]
     Short(usize),
-    #[error("bad magic {0:#x}")]
     BadMagic(u32),
-    #[error("length field {len} exceeds buffer {have}")]
     BadLength { len: usize, have: usize },
-    #[error("crc mismatch: header {header:#x} computed {computed:#x}")]
     BadCrc { header: u32, computed: u32 },
 }
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::TooBig(n) => write!(f, "payload exceeds MTU: {n} > {MTU}"),
+            FrameError::Short(n) => write!(f, "short buffer: {n} bytes"),
+            FrameError::BadMagic(m) => write!(f, "bad magic {m:#x}"),
+            FrameError::BadLength { len, have } => {
+                write!(f, "length field {len} exceeds buffer {have}")
+            }
+            FrameError::BadCrc { header, computed } => {
+                write!(f, "crc mismatch: header {header:#x} computed {computed:#x}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
 
 /// CRC-32 (IEEE, bitwise — cold path, clarity over speed).
 pub fn crc32(data: &[u8]) -> u32 {

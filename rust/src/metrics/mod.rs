@@ -4,6 +4,14 @@
 //! instance owned by the experiment driver; benches read the same
 //! counters the paper's figures plot (words/s, queries/s, bytes moved,
 //! Joules).
+//!
+//! Hot-path recording is allocation-free: names resolve once to a
+//! [`CounterId`]/[`HistogramId`] handle (or lazily on first use of the
+//! string API), and values live in dense `Vec` stores indexed by those
+//! handles. The scheduler's per-batch `observe` — called once per
+//! dispatched batch across millions of simulated items — pre-resolves
+//! its handles at run start and never touches a `String` again
+//! (§Perf: the old `entry(name.to_string())` allocated per event).
 
 use std::collections::BTreeMap;
 
@@ -87,12 +95,28 @@ impl Series {
     }
 }
 
+/// Stable handle to a counter slot, issued by [`Metrics::counter_id`].
+///
+/// Valid for the lifetime of the `Metrics` that issued it (slots are
+/// never removed or reordered). Using a handle from a *different*
+/// registry is a logic error: it indexes whatever lives in that slot
+/// there, or panics if the slot does not exist.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CounterId(usize);
+
+/// Stable handle to a histogram slot, issued by
+/// [`Metrics::histogram_id`]. Same validity rules as [`CounterId`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistogramId(usize);
+
 /// Central metrics registry.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
-    counters: BTreeMap<String, f64>,
+    counter_index: BTreeMap<String, usize>,
+    counter_vals: Vec<f64>,
     gauges: BTreeMap<String, f64>,
-    histograms: BTreeMap<String, Histogram>,
+    hist_index: BTreeMap<String, usize>,
+    hist_store: Vec<Histogram>,
     series: BTreeMap<String, Series>,
 }
 
@@ -102,11 +126,40 @@ impl Metrics {
     }
 
     // ---- counters ----
-    pub fn inc(&mut self, name: &str, by: f64) {
-        *self.counters.entry(name.to_string()).or_insert(0.0) += by;
+    /// Resolve `name` to a dense-slot handle, creating the counter (at
+    /// 0.0) if absent. Hot loops resolve once and use [`Metrics::inc_id`].
+    pub fn counter_id(&mut self, name: &str) -> CounterId {
+        if let Some(&i) = self.counter_index.get(name) {
+            return CounterId(i);
+        }
+        let i = self.counter_vals.len();
+        self.counter_vals.push(0.0);
+        self.counter_index.insert(name.to_string(), i);
+        CounterId(i)
     }
+
+    /// Increment through a pre-resolved handle: no lookup, no allocation.
+    #[inline]
+    pub fn inc_id(&mut self, id: CounterId, by: f64) {
+        self.counter_vals[id.0] += by;
+    }
+
+    /// Increment by name. Allocation-free when the counter already
+    /// exists; the name is interned on first use.
+    pub fn inc(&mut self, name: &str, by: f64) {
+        if let Some(&i) = self.counter_index.get(name) {
+            self.counter_vals[i] += by;
+        } else {
+            let id = self.counter_id(name);
+            self.inc_id(id, by);
+        }
+    }
+
     pub fn counter(&self, name: &str) -> f64 {
-        self.counters.get(name).copied().unwrap_or(0.0)
+        self.counter_index
+            .get(name)
+            .map(|&i| self.counter_vals[i])
+            .unwrap_or(0.0)
     }
 
     // ---- gauges ----
@@ -118,11 +171,37 @@ impl Metrics {
     }
 
     // ---- histograms ----
-    pub fn observe(&mut self, name: &str, v: f64) {
-        self.histograms.entry(name.to_string()).or_default().record(v);
+    /// Resolve `name` to a dense-slot handle, creating an empty histogram
+    /// if absent. Hot loops resolve once and use [`Metrics::observe_id`].
+    pub fn histogram_id(&mut self, name: &str) -> HistogramId {
+        if let Some(&i) = self.hist_index.get(name) {
+            return HistogramId(i);
+        }
+        let i = self.hist_store.len();
+        self.hist_store.push(Histogram::default());
+        self.hist_index.insert(name.to_string(), i);
+        HistogramId(i)
     }
+
+    /// Record through a pre-resolved handle: no lookup, no allocation
+    /// (beyond the reservoir's own growth).
+    #[inline]
+    pub fn observe_id(&mut self, id: HistogramId, v: f64) {
+        self.hist_store[id.0].record(v);
+    }
+
+    /// Record by name. Allocation-free when the histogram already exists.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        if let Some(&i) = self.hist_index.get(name) {
+            self.hist_store[i].record(v);
+        } else {
+            let id = self.histogram_id(name);
+            self.observe_id(id, v);
+        }
+    }
+
     pub fn histogram(&self, name: &str) -> Option<&Histogram> {
-        self.histograms.get(name)
+        self.hist_index.get(name).map(|&i| &self.hist_store[i])
     }
 
     // ---- series ----
@@ -136,16 +215,16 @@ impl Metrics {
     /// Merge another registry into this one (counters add, gauges take the
     /// other's values, histograms/series concatenate).
     pub fn merge(&mut self, other: &Metrics) {
-        for (k, v) in &other.counters {
-            self.inc(k, *v);
+        for (k, &i) in &other.counter_index {
+            self.inc(k, other.counter_vals[i]);
         }
         for (k, v) in &other.gauges {
             self.set_gauge(k, *v);
         }
-        for (k, h) in &other.histograms {
-            let dst = self.histograms.entry(k.clone()).or_default();
-            for &s in &h.samples {
-                dst.record(s);
+        for (k, &i) in &other.hist_index {
+            let id = self.histogram_id(k);
+            for &s in &other.hist_store[i].samples {
+                self.hist_store[id.0].record(s);
             }
         }
         for (k, s) in &other.series {
@@ -158,15 +237,21 @@ impl Metrics {
     pub fn to_json(&self) -> Json {
         let mut root = Json::obj();
         let mut counters = Json::obj();
-        for (k, v) in &self.counters {
-            counters.set(k, (*v).into());
+        for (k, &i) in &self.counter_index {
+            counters.set(k, self.counter_vals[i].into());
         }
         let mut gauges = Json::obj();
         for (k, v) in &self.gauges {
             gauges.set(k, (*v).into());
         }
         let mut hists = Json::obj();
-        for (k, h) in &self.histograms {
+        for (k, &i) in &self.hist_index {
+            let h = &self.hist_store[i];
+            // Pre-registered but never-recorded histograms (id handles
+            // are created eagerly) would emit NaN percentiles; skip them.
+            if h.count() == 0 {
+                continue;
+            }
             let mut o = Json::obj();
             o.set("count", (h.count() as f64).into())
                 .set("mean", h.mean().into())
@@ -184,13 +269,18 @@ impl Metrics {
     /// Human-readable dump, sorted by key.
     pub fn report(&self) -> String {
         let mut out = String::new();
-        for (k, v) in &self.counters {
+        for (k, &i) in &self.counter_index {
+            let v = self.counter_vals[i];
             out.push_str(&format!("{k:<48} {v:>16.3}\n"));
         }
         for (k, v) in &self.gauges {
             out.push_str(&format!("{k:<48} {v:>16.3} (gauge)\n"));
         }
-        for (k, h) in &self.histograms {
+        for (k, &i) in &self.hist_index {
+            let h = &self.hist_store[i];
+            if h.count() == 0 {
+                continue;
+            }
             out.push_str(&format!(
                 "{k:<48} n={} mean={:.4} p50={:.4} p99={:.4}\n",
                 h.count(),
@@ -340,6 +430,42 @@ mod tests {
         let csv = t.to_csv();
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.starts_with("batch,csds,words/s"));
+    }
+
+    #[test]
+    fn id_handles_alias_the_named_slots() {
+        let mut m = Metrics::new();
+        let c = m.counter_id("sched.items");
+        let h = m.histogram_id("sched.lat");
+        // handles are stable across later interning of other names
+        m.inc("other.counter", 1.0);
+        m.observe("other.hist", 2.0);
+        m.inc_id(c, 5.0);
+        m.inc_id(c, 7.0);
+        m.inc("sched.items", 8.0);
+        assert_eq!(m.counter("sched.items"), 20.0);
+        m.observe_id(h, 1.0);
+        m.observe_id(h, 3.0);
+        m.observe("sched.lat", 5.0);
+        let hist = m.histogram("sched.lat").unwrap();
+        assert_eq!(hist.count(), 3);
+        assert!((hist.mean() - 3.0).abs() < 1e-12);
+        // resolving the same name again returns the same slot
+        assert_eq!(m.counter_id("sched.items"), c);
+        assert_eq!(m.histogram_id("sched.lat"), h);
+    }
+
+    #[test]
+    fn empty_preregistered_histograms_stay_out_of_reports() {
+        let mut m = Metrics::new();
+        let _ = m.histogram_id("never.recorded");
+        m.observe("real", 1.0);
+        let j = m.to_json();
+        assert!(j.at(&["histograms", "never.recorded"]).is_none());
+        assert!(j.at(&["histograms", "real", "count"]).is_some());
+        assert!(!m.report().contains("never.recorded"));
+        // but the slot exists and is queryable
+        assert_eq!(m.histogram("never.recorded").unwrap().count(), 0);
     }
 
     #[test]

@@ -19,6 +19,34 @@
 //! The runner executes this protocol in virtual time against the full
 //! device models in [`crate::cluster`] and reports the quantities the
 //! paper's figures plot.
+//!
+//! # The wake-grid invariant and wake coalescing
+//!
+//! Dispatch decisions happen **only** at points of the wake grid
+//! `t0 + k·wakeup_secs` (`t0` = ingest completion): acks mutate node
+//! state when they pop, but work is handed out exclusively by `Wake`
+//! events, and every wake is scheduled a whole number of periods after
+//! the previous one. Two consequences the fast path exploits:
+//!
+//! 1. A completed wake leaves nothing dispatchable — an idle node with
+//!    reachable work is always given a batch during the wake — so every
+//!    grid point strictly before the next pending ack is a *no-op* wake.
+//!    With `coalesce_wakes` (default on) the runner skips those no-op
+//!    grid points: it peeks the earliest pending event
+//!    ([`EventQueue::peek_time`]) and schedules the next wake at the
+//!    first grid point at or after it, walking the grid with the same
+//!    float additions the naive chain performs so executed wakes keep
+//!    **bit-identical** timestamps.
+//! 2. CSD acks dispatched by one wake whose delivery times are
+//!    bit-identical (lockstep drives are the common case) are batched
+//!    into a single calendar entry, processed in dispatch order —
+//!    exactly the order the separate entries would pop in.
+//!
+//! Both transformations change only the number of events executed
+//! ([`RunReport::events_executed`], [`RunReport::wake_events`]); every
+//! other field of [`RunReport`] is bit-identical with coalescing on or
+//! off. Ablation A3 ([`crate::exp::ablate_wakeup`]) and the property
+//! test below compare the two modes.
 
 pub mod live;
 pub mod locality;
@@ -52,6 +80,12 @@ pub struct SchedConfig {
     /// its fair share so host and CSDs finish together. Disable to get
     /// the paper's plain behaviour (ablation A1 shows the difference).
     pub fair_tail: bool,
+    /// Skip no-op polling wakes (and batch same-timestamp CSD acks)
+    /// by jumping to the next wake-grid point at or after the earliest
+    /// pending ack. Simulated results are bit-identical either way — see
+    /// the module docs — only `events_executed`/`wake_events` change.
+    /// Default on; turn off for the faithful-naive baseline (A3).
+    pub coalesce_wakes: bool,
     /// Deterministic seed (shard layout etc.).
     pub seed: u64,
 }
@@ -66,6 +100,7 @@ impl Default for SchedConfig {
             isp_drives: 36,
             use_host: true,
             fair_tail: true,
+            coalesce_wakes: true,
             seed: 42,
         }
     }
@@ -113,6 +148,11 @@ pub struct RunReport {
     pub mean_batch_latency: f64,
     pub host_batches: u64,
     pub csd_batches: u64,
+    /// Total DES calendar events executed for this run (acks + wakes).
+    /// Wake coalescing drives this down; every other field is unchanged.
+    pub events_executed: u64,
+    /// Scheduler polling wakes among `events_executed`.
+    pub wake_events: u64,
 }
 
 impl RunReport {
@@ -126,14 +166,58 @@ impl RunReport {
     }
 }
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 enum Ev {
-    /// Scheduler polling wake.
+    /// Scheduler polling wake (always on the wake grid).
     Wake,
     /// Host finished its batch (local ack).
     HostDone { items: u64, dispatched: f64 },
     /// CSD ack delivered over the tunnel.
     CsdAck { drive: usize, items: u64, dispatched: f64 },
+    /// Several CSD acks from one wake whose delivery times are
+    /// bit-identical, batched into a single calendar entry (coalesced
+    /// mode only). Entries are `(drive, items)` in dispatch order, which
+    /// is exactly the order the separate events would pop in: equal
+    /// time, and all of this wake's acks are contiguous in seq order.
+    CsdAckBatch { acks: Vec<(usize, u64)>, dispatched: f64 },
+}
+
+/// Pending same-timestamp ack groups accumulated during one wake's CSD
+/// dispatch pass (coalesced mode). Groups keep first-occurrence order;
+/// lookup is a linear scan over at most `isp_drives` entries.
+struct AckGroups {
+    groups: Vec<(f64, Vec<(usize, u64)>)>,
+}
+
+impl AckGroups {
+    fn new() -> AckGroups {
+        AckGroups { groups: Vec::new() }
+    }
+
+    fn push(&mut self, ack_time: f64, drive: usize, items: u64) {
+        for (t, g) in &mut self.groups {
+            if *t == ack_time {
+                g.push((drive, items));
+                return;
+            }
+        }
+        self.groups.push((ack_time, vec![(drive, items)]));
+    }
+
+    /// Schedule every group: single acks stay plain `CsdAck` events,
+    /// larger groups become one `CsdAckBatch`. Scheduling in
+    /// first-occurrence order keeps seq order consistent with the
+    /// uncoalesced run for any same-timestamp tie-breaks.
+    fn schedule(self, q: &mut EventQueue<Ev>, dispatched: f64) {
+        for (t, mut g) in self.groups {
+            if g.len() == 1 {
+                let (drive, items) = g.pop().expect("non-empty group");
+                q.schedule_at(t, Ev::CsdAck { drive, items, dispatched });
+            } else {
+                q.schedule_at(t, Ev::CsdAckBatch { acks: g, dispatched });
+            }
+        }
+    }
 }
 
 /// Simulated dataset shard name on each drive.
@@ -153,6 +237,11 @@ pub fn run(
     anyhow::ensure!(cfg.drives > 0, "need at least one drive for data");
     anyhow::ensure!(cfg.isp_drives <= cfg.drives, "isp_drives exceeds drives");
     anyhow::ensure!(cfg.use_host || cfg.use_isp(), "no compute nodes enabled");
+    anyhow::ensure!(
+        cfg.wakeup_secs > 0.0 && cfg.wakeup_secs.is_finite(),
+        "wakeup_secs must be positive and finite, got {}",
+        cfg.wakeup_secs
+    );
     let mut server = StorageServer::new(cfg.drives, CsdConfig::default());
 
     // ---- ingest: stripe the dataset across drives --------------------
@@ -177,8 +266,24 @@ pub fn run(
     let mut q: EventQueue<Ev> = EventQueue::new();
     q.schedule_at(t0, Ev::Wake);
 
+    // Per-batch latency histograms, resolved to handles once so the ack
+    // hot path never allocates a key string (§Perf).
+    let host_lat = metrics.histogram_id("sched.host_batch_latency");
+    let csd_lat = metrics.histogram_id("sched.csd_batch_latency");
+
     let mut host_idle = true;
-    let mut csd_idle = vec![true; cfg.drives];
+    // Idle-drive index: the ISP drives currently waiting for a batch, in
+    // ascending drive order (BTreeSet iteration), so CSD dispatch walks
+    // only idle drives yet visits them in exactly the order the plain
+    // 0..isp_drives scan would. Drives whose shard has drained are
+    // retired from the index for good (shards never refill).
+    let mut idle_isp: std::collections::BTreeSet<usize> = (0..cfg.isp_drives).collect();
+    let mut cand_buf: Vec<usize> = Vec::with_capacity(cfg.isp_drives);
+    let mut csd_busy: usize = 0;
+    // Incremental bookkeeping: running count instead of an O(drives)
+    // `shard_remaining.iter().sum()` on every wake.
+    let mut total_remaining: u64 = model.items;
+    let mut wake_events = 0u64;
     let mut host_items = 0u64;
     let mut csd_items = 0u64;
     let mut host_busy_secs = 0.0f64;
@@ -199,33 +304,46 @@ pub fn run(
                 last_completion = now;
                 latency_sum += now - dispatched;
                 latency_n += 1;
-                metrics.observe("sched.host_batch_latency", now - dispatched);
+                metrics.observe_id(host_lat, now - dispatched);
             }
             Ev::CsdAck { drive, items, dispatched } => {
-                csd_idle[drive] = true;
+                csd_busy -= 1;
+                idle_isp.insert(drive);
                 csd_items += items;
                 last_completion = now;
                 latency_sum += now - dispatched;
                 latency_n += 1;
-                metrics.observe("sched.csd_batch_latency", now - dispatched);
+                metrics.observe_id(csd_lat, now - dispatched);
+            }
+            Ev::CsdAckBatch { acks, dispatched } => {
+                for (drive, items) in acks {
+                    csd_busy -= 1;
+                    idle_isp.insert(drive);
+                    csd_items += items;
+                    last_completion = now;
+                    latency_sum += now - dispatched;
+                    latency_n += 1;
+                    metrics.observe_id(csd_lat, now - dispatched);
+                }
             }
             Ev::Wake => {
+                wake_events += 1;
                 // ---- dispatch to the host --------------------------------
-                let total_remaining: u64 = shard_remaining.iter().sum();
-                if cfg.use_host && host_idle && total_remaining > 0 {
+                let remaining_at_wake = total_remaining;
+                if cfg.use_host && host_idle && remaining_at_wake > 0 {
                     // Near the end of the run the host's batch shrinks to
                     // its *fair share* of what's left, so host and CSDs
                     // drain together instead of leaving a long CSD tail.
                     let fair = if cfg.use_isp() && cfg.fair_tail {
                         let host_rate = HOST_THREADS / model.host_item_secs;
                         let csd_rate = cfg.isp_drives as f64 * ISP_CORES / model.csd_item_secs;
-                        ((total_remaining as f64 * host_rate / (host_rate + csd_rate)).ceil()
+                        ((remaining_at_wake as f64 * host_rate / (host_rate + csd_rate)).ceil()
                             as u64)
                             .max(1)
                     } else {
-                        total_remaining
+                        remaining_at_wake
                     };
-                    let take = host_batch_target.min(total_remaining).min(fair);
+                    let take = host_batch_target.min(remaining_at_wake).min(fair);
                     // Proportional take across shards: every drive's shard
                     // drains at the same fractional rate, keeping each
                     // CSD's local work alive (an ISP can only process
@@ -249,7 +367,7 @@ pub fn run(
                             let share = if pass == 0 {
                                 crate::util::div_ceil(
                                     take * avail,
-                                    total_remaining.max(1),
+                                    remaining_at_wake.max(1),
                                 )
                             } else {
                                 left
@@ -262,6 +380,7 @@ pub fn run(
                             let r = server.host_read(now, d, SHARD, shard_offset[d], bytes)?;
                             shard_offset[d] += bytes;
                             shard_remaining[d] -= n;
+                            total_remaining -= n;
                             left -= n;
                             io_done = io_done.max(r.done);
                         }
@@ -283,13 +402,20 @@ pub fn run(
                     }
                 }
                 // ---- dispatch to each idle CSD ---------------------------
-                if cfg.use_isp() {
-                    for d in 0..cfg.isp_drives {
-                        if !csd_idle[d] || shard_remaining[d] == 0 {
+                if cfg.use_isp() && !idle_isp.is_empty() {
+                    cand_buf.clear();
+                    cand_buf.extend(idle_isp.iter().copied());
+                    let mut groups = AckGroups::new();
+                    for &d in &cand_buf {
+                        if shard_remaining[d] == 0 {
+                            // An empty shard never refills: retire the
+                            // drive from the idle index for good.
+                            idle_isp.remove(&d);
                             continue;
                         }
                         let n = cfg.csd_batch.min(shard_remaining[d]);
                         shard_remaining[d] -= n;
+                        total_remaining -= n;
                         // dispatch message: header + the item indexes only
                         let delivered = server.send_to_isp(now, d, 64 + 8 * n);
                         let bytes = n * model.bytes_per_item;
@@ -302,16 +428,37 @@ pub fn run(
                         let ack = server
                             .send_to_host(done, d, 64 + n * model.output_bytes_per_item);
                         isp_busy_secs += done - delivered;
-                        csd_idle[d] = false;
+                        idle_isp.remove(&d);
+                        csd_busy += 1;
                         csd_batches += 1;
-                        q.schedule_at(ack, Ev::CsdAck { drive: d, items: n, dispatched: now });
+                        if cfg.coalesce_wakes {
+                            groups.push(ack, d, n);
+                        } else {
+                            q.schedule_at(ack, Ev::CsdAck { drive: d, items: n, dispatched: now });
+                        }
                     }
+                    groups.schedule(&mut q, now);
                 }
                 // ---- keep polling while anything is outstanding ----------
-                let work_left = shard_remaining.iter().any(|&r| r > 0);
-                let busy = !host_idle || csd_idle.iter().any(|i| !*i);
+                let work_left = total_remaining > 0;
+                let busy = !host_idle || csd_busy > 0;
                 if work_left || busy {
-                    q.schedule_at(now + cfg.wakeup_secs, Ev::Wake);
+                    let mut next = now + cfg.wakeup_secs;
+                    if cfg.coalesce_wakes {
+                        // A completed wake leaves nothing dispatchable
+                        // (see the module docs), so every grid point
+                        // strictly before the next pending ack is a no-op
+                        // wake: walk the grid past them. The walk repeats
+                        // the naive chain's additions so the chosen wake
+                        // timestamp is bit-identical to the wake the
+                        // naive run would execute.
+                        if let Some(t_next_ev) = q.peek_time() {
+                            while next < t_next_ev {
+                                next += cfg.wakeup_secs;
+                            }
+                        }
+                    }
+                    q.schedule_at(next, Ev::Wake);
                 }
             }
         }
@@ -371,17 +518,121 @@ pub fn run(
         mean_batch_latency: if latency_n > 0 { latency_sum / latency_n as f64 } else { 0.0 },
         host_batches,
         csd_batches,
+        events_executed: q.events_executed(),
+        wake_events,
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop::{check, forall};
     use crate::workloads::App;
 
     fn quick(model: AppModel, cfg: SchedConfig) -> RunReport {
         let mut m = Metrics::new();
         run(&model, &cfg, &PowerModel::default(), &mut m).unwrap()
+    }
+
+    /// Field-by-field bit-identity of everything a run *means* — i.e.
+    /// every `RunReport` field except the event-count diagnostics, which
+    /// coalescing changes on purpose.
+    fn check_reports_bit_identical(a: &RunReport, b: &RunReport) -> Result<(), String> {
+        fn f64_eq(name: &str, x: f64, y: f64) -> Result<(), String> {
+            check(
+                x.to_bits() == y.to_bits(),
+                format!("{name}: {x:?} != {y:?} (bitwise)"),
+            )
+        }
+        check(a.app == b.app, "app")?;
+        check(a.total_items == b.total_items, "total_items")?;
+        f64_eq("makespan_secs", a.makespan_secs, b.makespan_secs)?;
+        f64_eq("items_per_sec", a.items_per_sec, b.items_per_sec)?;
+        f64_eq("words_per_sec", a.words_per_sec, b.words_per_sec)?;
+        check(a.host_items == b.host_items, "host_items")?;
+        check(a.csd_items == b.csd_items, "csd_items")?;
+        check(a.pcie_bytes == b.pcie_bytes, "pcie_bytes")?;
+        check(a.isp_bytes == b.isp_bytes, "isp_bytes")?;
+        check(a.tunnel_messages == b.tunnel_messages, "tunnel_messages")?;
+        f64_eq("energy_j", a.energy_j, b.energy_j)?;
+        f64_eq("avg_power_w", a.avg_power_w, b.avg_power_w)?;
+        f64_eq("energy_per_item_j", a.energy_per_item_j, b.energy_per_item_j)?;
+        f64_eq("host_busy_secs", a.host_busy_secs, b.host_busy_secs)?;
+        f64_eq("isp_busy_secs", a.isp_busy_secs, b.isp_busy_secs)?;
+        f64_eq("mean_batch_latency", a.mean_batch_latency, b.mean_batch_latency)?;
+        check(a.host_batches == b.host_batches, "host_batches")?;
+        check(a.csd_batches == b.csd_batches, "csd_batches")?;
+        Ok(())
+    }
+
+    #[test]
+    fn property_coalescing_is_bit_identical_across_apps_and_configs() {
+        forall("wake coalescing equivalence", 10, |g| {
+            let drives = g.usize(1..=36);
+            let isp_drives = g.usize(0..=drives);
+            let items = g.u64(500..=20_000);
+            let batch = g.u64(1..=2_000);
+            let ratio = g.f64(1.0, 30.0);
+            let wakeup = [0.05, 0.1, 0.2, 0.5][g.usize(0..=3)];
+            let fair_tail = g.bool();
+            let app = *g.rng().choose(&App::all());
+            let model = AppModel::for_app(app, items);
+            let mk = |coalesce: bool| SchedConfig {
+                csd_batch: batch,
+                batch_ratio: ratio,
+                wakeup_secs: wakeup,
+                drives,
+                isp_drives,
+                use_host: true,
+                fair_tail,
+                coalesce_wakes: coalesce,
+                seed: 42,
+            };
+            let run_one = |coalesce: bool| -> Result<RunReport, String> {
+                let mut m = Metrics::new();
+                run(&model, &mk(coalesce), &PowerModel::default(), &mut m)
+                    .map_err(|e| e.to_string())
+            };
+            let naive = run_one(false)?;
+            let coal = run_one(true)?;
+            check_reports_bit_identical(&naive, &coal).map_err(|e| {
+                format!("{app:?} drives={drives} isp={isp_drives} items={items} batch={batch} ratio={ratio:.2} wakeup={wakeup} fair_tail={fair_tail}: {e}")
+            })?;
+            check(
+                coal.events_executed <= naive.events_executed,
+                format!(
+                    "coalescing executed more events: {} > {}",
+                    coal.events_executed, naive.events_executed
+                ),
+            )
+        });
+    }
+
+    #[test]
+    fn coalescing_cuts_events_on_fig5a_speech() {
+        // The ISSUE-1 regression gate: the paper's Fig 5(a) operating
+        // point (speech, csd_batch=6, 36 drives, 13,100 clips).
+        let mk = |coalesce: bool| SchedConfig {
+            csd_batch: 6,
+            batch_ratio: 20.0,
+            coalesce_wakes: coalesce,
+            ..SchedConfig::default()
+        };
+        let naive = quick(AppModel::speech(13_100), mk(false));
+        let coal = quick(AppModel::speech(13_100), mk(true));
+        check_reports_bit_identical(&naive, &coal).unwrap();
+        assert!(
+            naive.events_executed >= 5 * coal.events_executed,
+            "events_executed should drop >= 5x: naive {} vs coalesced {}",
+            naive.events_executed,
+            coal.events_executed
+        );
+        assert!(
+            naive.wake_events >= 5 * coal.wake_events,
+            "wake_events should drop >= 5x: naive {} vs coalesced {}",
+            naive.wake_events,
+            coal.wake_events
+        );
     }
 
     #[test]

@@ -106,6 +106,11 @@ impl<E> EventQueue<E> {
     }
 
     /// Peek the next event time without popping.
+    ///
+    /// This is what wake coalescing in [`crate::sched`] builds on: when a
+    /// scheduler wake finds nothing dispatchable, the earliest pending
+    /// ack bounds how far ahead the next wake can safely jump on the
+    /// wake grid without changing any simulated result.
     pub fn peek_time(&self) -> Option<SimTime> {
         self.heap.peek().map(|e| e.time)
     }

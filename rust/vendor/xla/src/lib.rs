@@ -1,0 +1,191 @@
+//! Offline API stub of the XLA/PJRT Rust bindings.
+//!
+//! The real bindings need the `xla_extension` C++ distribution, which the
+//! offline build environment does not ship. This stub is type-compatible
+//! with the surface `solana_isp::runtime` uses; every entry point that
+//! would touch PJRT returns [`Error`] instead. `PjRtClient::cpu()`
+//! failing is the load-bearing part: `runtime::Engine::load`/
+//! `load_default` then report the runtime as unavailable and all
+//! runtime-dependent tests, benches, and examples skip — the same
+//! graceful path taken when `artifacts/` has not been built.
+//!
+//! Swap this path dependency for the real `xla` crate to run the actual
+//! PJRT CPU engine; no caller changes are needed.
+
+use std::path::Path;
+
+/// Error type; callers format it with `{:?}`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: XLA/PJRT is unavailable in this offline build (stub crate)"
+    )))
+}
+
+/// Element types the runtime distinguishes; mirrors the real crate's
+/// names so `match shape.ty()` arms stay source-compatible.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+/// Array shape: dimensions plus element type.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn new(dims: Vec<i64>, ty: ElementType) -> ArrayShape {
+        ArrayShape { dims, ty }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Marker for element types transferable to/from device buffers.
+pub trait ArrayElement: Copy + 'static {}
+impl ArrayElement for f32 {}
+impl ArrayElement for f64 {}
+impl ArrayElement for i32 {}
+impl ArrayElement for i64 {}
+impl ArrayElement for u8 {}
+
+/// Host-side literal (constant tensor value).
+#[derive(Clone, Debug, Default)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unavailable("Literal::array_shape")
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        unavailable(&format!("HloModuleProto::from_text_file({:?})", path.as_ref()))
+    }
+}
+
+/// An XLA computation ready for compilation.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _inputs: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Always fails in the stub — see the module docs.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err:?}").contains("offline"), "{err:?}");
+    }
+
+    #[test]
+    fn shape_accessors() {
+        let s = ArrayShape::new(vec![2, 3], ElementType::F32);
+        assert_eq!(s.dims(), &[2, 3]);
+        assert_eq!(s.ty(), ElementType::F32);
+    }
+}
