@@ -1,0 +1,26 @@
+//! `cargo bench --bench ablate_dispatch` — regenerates A4: polling vs
+//! event-driven dispatch across the batch-size sweep (ISSUE-2 tentpole).
+//!
+//! Scale with `SOLANA_BENCH_FAST=1` (5%) or default 25% of the paper's
+//! dataset sizes; the *shape* (event-driven never slower, gap largest at
+//! small batches) is scale-invariant. See the `sched` module docs.
+
+use solana_isp::bench_support::Bencher;
+use solana_isp::exp::{self, Scale};
+#[allow(unused_imports)]
+use solana_isp::workloads::App;
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::from_env();
+    let table = exp::ablate_dispatch(App::SpeechToText, scale)?;
+    exp::emit(&table, "ablate_dispatch")?;
+    // Wall-time of regenerating the artifact (simulator throughput):
+    let mut b = Bencher::new(0, if std::env::var("SOLANA_BENCH_FAST").is_ok() { 1 } else { 2 });
+    b.bench("ablate_dispatch", || {
+        let t = exp::ablate_dispatch(App::SpeechToText, scale).expect("rerun");
+        t.rows.len() as u64
+    });
+    print!("{}", b.report());
+    b.write_json("ablate_dispatch")?;
+    Ok(())
+}

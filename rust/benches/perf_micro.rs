@@ -10,7 +10,7 @@ use solana_isp::exp::{self, pool, Scale};
 use solana_isp::metrics::Metrics;
 use solana_isp::power::PowerModel;
 use solana_isp::runtime::{Engine, Tensor};
-use solana_isp::sched::{run, SchedConfig};
+use solana_isp::sched::{run, DispatchMode, SchedConfig};
 use solana_isp::sim::{EventQueue, Pipe, Servers};
 use solana_isp::workloads::{App, AppModel};
 
@@ -137,6 +137,42 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
+    // Dispatch modes (ISSUE-2 tentpole): event-driven dispatch re-arms a
+    // node the moment its ack pops, removing the polling grid's mean
+    // half-period idle gap per batch. Report the simulated makespans
+    // once, then time both modes at the Fig 5(a) speech point.
+    {
+        let speech_cfg = |dispatch: DispatchMode| SchedConfig {
+            csd_batch: 6,
+            batch_ratio: 20.0,
+            dispatch,
+            ..SchedConfig::default()
+        };
+        let model = AppModel::speech(13_100);
+        let mut m = Metrics::new();
+        let poll = run(&model, &speech_cfg(DispatchMode::Polling), &PowerModel::default(), &mut m)
+            .unwrap();
+        let event =
+            run(&model, &speech_cfg(DispatchMode::EventDriven), &PowerModel::default(), &mut m)
+                .unwrap();
+        assert!(event.makespan_secs <= poll.makespan_secs + 1e-9);
+        println!(
+            "sched.run speech simulated makespan: polling={:.2}s event-driven={:.2}s => {:.3}x ({} vs {} events)",
+            poll.makespan_secs,
+            event.makespan_secs,
+            poll.makespan_secs / event.makespan_secs,
+            poll.events_executed,
+            event.events_executed,
+        );
+        b.bench("sched.run speech 13k event-driven", || {
+            let mut m = Metrics::new();
+            let r = run(&model, &speech_cfg(DispatchMode::EventDriven), &PowerModel::default(), &mut m)
+                .unwrap();
+            std::hint::black_box(r.items_per_sec);
+            13_100
+        });
+    }
+
     // Parallel sweep runner: the same Fig 5 sweep on one worker vs the
     // full pool (outputs are byte-identical; only wall-clock moves).
     {
@@ -173,5 +209,11 @@ fn main() -> anyhow::Result<()> {
 
     print!("{}", b.report());
     b.write_json("perf_micro")?;
+    // Opt-in committable trajectory point (BENCH_NNNN.json): CI sets the
+    // env var and uploads bench-trajectory/ as an artifact.
+    if std::env::var("SOLANA_BENCH_TRAJECTORY").ok().as_deref() == Some("1") {
+        let p = b.write_trajectory("perf_micro")?;
+        println!("bench trajectory point written to {}", p.display());
+    }
     Ok(())
 }

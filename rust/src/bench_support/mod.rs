@@ -132,6 +132,51 @@ impl Bencher {
         std::fs::create_dir_all(dir)?;
         std::fs::write(dir.join(format!("{file}.json")), self.to_json().to_pretty())
     }
+
+    /// Promote this run's results to a committable *trajectory point*:
+    /// `<dir>/BENCH_NNNN.json` with `NNNN` the first free index, so
+    /// successive toolchain-equipped runs accumulate a performance
+    /// history alongside the ephemeral `target/bench-results` dumps.
+    /// `perf_micro` calls this when `SOLANA_BENCH_TRAJECTORY=1` (CI sets
+    /// it and uploads the directory as an artifact; committing the file
+    /// records the point).
+    pub fn write_trajectory_in(
+        &self,
+        dir: &std::path::Path,
+        bench: &str,
+    ) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let mut n = 1u32;
+        let path = loop {
+            let p = dir.join(format!("BENCH_{n:04}.json"));
+            if !p.exists() {
+                break p;
+            }
+            n += 1;
+        };
+        let unix_time = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let mut j = Json::obj();
+        j.set("bench", bench.into())
+            .set("unix_time", unix_time.into())
+            .set("results", self.to_json());
+        std::fs::write(&path, j.to_pretty())?;
+        Ok(path)
+    }
+
+    /// [`Bencher::write_trajectory_in`] under `bench-trajectory/` at the
+    /// **workspace root**. Bench binaries run with their working
+    /// directory set to the *package* root (`rust/`), not the workspace
+    /// root, so the directory is anchored off the compile-time
+    /// `CARGO_MANIFEST_DIR` rather than the cwd — the committable file
+    /// always lands at `<repo>/bench-trajectory/BENCH_NNNN.json`.
+    pub fn write_trajectory(&self, bench: &str) -> std::io::Result<std::path::PathBuf> {
+        let pkg = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+        let root = pkg.parent().unwrap_or(pkg);
+        self.write_trajectory_in(&root.join("bench-trajectory"), bench)
+    }
 }
 
 #[cfg(test)]
@@ -152,6 +197,23 @@ mod tests {
         assert_eq!(r.iters, 5);
         assert!(r.secs_per_iter.mean > 0.0);
         assert!(r.throughput.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn trajectory_points_number_sequentially() {
+        let dir = std::path::Path::new("target/test-bench-trajectory");
+        let _ = std::fs::remove_dir_all(dir);
+        let mut b = Bencher::new(0, 1);
+        b.bench("case", || 1);
+        let p1 = b.write_trajectory_in(dir, "perf_micro").unwrap();
+        let p2 = b.write_trajectory_in(dir, "perf_micro").unwrap();
+        assert!(p1.ends_with("BENCH_0001.json"), "{p1:?}");
+        assert!(p2.ends_with("BENCH_0002.json"), "{p2:?}");
+        let text = std::fs::read_to_string(&p1).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("bench").and_then(|b| b.as_str()), Some("perf_micro"));
+        assert!(j.get("results").is_some());
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

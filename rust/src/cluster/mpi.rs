@@ -7,7 +7,7 @@
 //! need, mirroring how the paper's scheduler ships only small control
 //! messages while bulk data stays put.
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::time::Duration;
 
 /// Message tags (MPI-style).
@@ -115,6 +115,23 @@ impl Communicator {
         }
     }
 
+    /// Non-blocking receive: pop one queued packet if any is waiting.
+    /// An empty queue maps to [`MpiError::Timeout`] (a zero-length
+    /// timeout), so callers drain with the same error handling as the
+    /// polling path. The event-driven live scheduler uses this to
+    /// re-arm every worker whose RESULT is already queued without
+    /// waiting out the polling grid.
+    pub fn try_recv(&mut self) -> Result<Packet, MpiError> {
+        match self.rx.try_recv() {
+            Ok(p) => {
+                self.received += 1;
+                Ok(p)
+            }
+            Err(TryRecvError::Empty) => Err(MpiError::Timeout),
+            Err(TryRecvError::Disconnected) => Err(MpiError::Disconnected),
+        }
+    }
+
     /// Broadcast from this rank to every other rank.
     pub fn bcast(&mut self, tag: u32, payload: &[u8]) -> Result<(), MpiError> {
         for dst in 0..self.size() {
@@ -215,6 +232,20 @@ mod tests {
             c0.recv_timeout(Duration::from_millis(10)).unwrap_err(),
             MpiError::Timeout
         );
+    }
+
+    #[test]
+    fn try_recv_drains_without_blocking() {
+        let mut comms = group(2);
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        assert_eq!(c0.try_recv().unwrap_err(), MpiError::Timeout);
+        c1.send(0, tag::RESULT, vec![7]).unwrap();
+        c1.send(0, tag::RESULT, vec![8]).unwrap();
+        assert_eq!(c0.try_recv().unwrap().payload, vec![7]);
+        assert_eq!(c0.try_recv().unwrap().payload, vec![8]);
+        assert_eq!(c0.try_recv().unwrap_err(), MpiError::Timeout);
+        assert_eq!(c0.stats(), (0, 2));
     }
 
     #[test]

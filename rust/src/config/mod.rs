@@ -12,6 +12,7 @@
 //! wakeup_s = 0.2
 //! drives = 36
 //! isp_drives = 36
+//! dispatch = "polling"   # or "event" — see sched::DispatchMode (A4)
 //!
 //! [power]
 //! server_idle_w = 167.0
@@ -22,7 +23,7 @@ use std::path::Path;
 
 use crate::codec::toml::TomlTable;
 use crate::power::PowerModel;
-use crate::sched::SchedConfig;
+use crate::sched::{DispatchMode, SchedConfig};
 use crate::workloads::App;
 
 /// A full experiment description.
@@ -100,6 +101,9 @@ impl ExperimentConfig {
         if let Some(v) = t.bool("sched.coalesce_wakes") {
             cfg.sched.coalesce_wakes = v;
         }
+        if let Some(v) = t.str("sched.dispatch") {
+            cfg.sched.dispatch = parse_dispatch(v)?;
+        }
         if let Some(v) = t.f64("power.server_idle_w") {
             cfg.power.server_idle_w = v;
         }
@@ -131,6 +135,15 @@ pub fn parse_app(name: &str) -> anyhow::Result<App> {
         other => anyhow::bail!(
             "unknown app '{other}' (expected speech|recommender|sentiment)"
         ),
+    }
+}
+
+/// Parse a dispatch mode from config/CLI (see [`DispatchMode`]).
+pub fn parse_dispatch(name: &str) -> anyhow::Result<DispatchMode> {
+    match name {
+        "polling" | "poll" => Ok(DispatchMode::Polling),
+        "event" | "event-driven" | "event_driven" | "eventdriven" => Ok(DispatchMode::EventDriven),
+        other => anyhow::bail!("unknown dispatch mode '{other}' (expected polling|event)"),
     }
 }
 
@@ -173,6 +186,28 @@ mod tests {
         assert!(ExperimentConfig::from_toml("[sched]\ncsd_batch = 0").is_err());
         assert!(ExperimentConfig::from_toml("[sched]\ndrives = 4\nisp_drives = 8").is_err());
         assert!(ExperimentConfig::from_toml("app = \"nope\"").is_err());
+    }
+
+    #[test]
+    fn dispatch_override() {
+        let c = ExperimentConfig::from_toml("[sched]\ndispatch = \"event\"\n").unwrap();
+        assert_eq!(c.sched.dispatch, DispatchMode::EventDriven);
+        let d = ExperimentConfig::from_toml("[sched]\ndispatch = \"polling\"\n").unwrap();
+        assert_eq!(d.sched.dispatch, DispatchMode::Polling);
+        assert_eq!(
+            ExperimentConfig::from_toml("").unwrap().sched.dispatch,
+            DispatchMode::Polling,
+            "polling stays the paper-faithful default"
+        );
+        assert!(ExperimentConfig::from_toml("[sched]\ndispatch = \"sometimes\"").is_err());
+    }
+
+    #[test]
+    fn dispatch_aliases() {
+        assert_eq!(parse_dispatch("poll").unwrap(), DispatchMode::Polling);
+        assert_eq!(parse_dispatch("event-driven").unwrap(), DispatchMode::EventDriven);
+        assert_eq!(parse_dispatch("event_driven").unwrap(), DispatchMode::EventDriven);
+        assert!(parse_dispatch("grid").is_err());
     }
 
     #[test]

@@ -2,9 +2,10 @@
 //!
 //! ```text
 //! solana run   --app sentiment --drives 36 --isp-drives 36 --batch 40000
+//! solana run   --app speech --dispatch event   # off-grid dispatch (A4)
 //! solana fig5  --app speech [--scale 0.25] [--threads 8]
 //! solana fig6 | fig7 | table1 | power
-//! solana ablate --which ratio|datapath|wakeup --app sentiment
+//! solana ablate --which ratio|datapath|wakeup|dispatch --app sentiment
 //! solana version | help
 //! ```
 //!
@@ -13,7 +14,7 @@
 //! byte-identical at any thread count.
 
 use crate::cli::Command;
-use crate::config::{parse_app, ExperimentConfig};
+use crate::config::{parse_app, parse_dispatch, ExperimentConfig};
 use crate::exp::{self, Scale};
 use crate::metrics::Metrics;
 use crate::sched;
@@ -28,6 +29,7 @@ fn commands() -> Vec<Command> {
             .opt("isp-drives", None, "drives with ISP engaged (default = drives)")
             .opt("batch", None, "CSD batch size (items)")
             .opt("ratio", None, "host/CSD batch ratio")
+            .opt("dispatch", None, "polling|event — when batches are handed out (default polling, the paper's 0.2 s grid; event = re-arm on ack, A4)")
             .opt("scale", None, "dataset scale vs paper (0..1], default 0.25")
             .flag("baseline", "disable all ISP engines (storage-only)")
             .flag("json", "emit the report as JSON"),
@@ -46,7 +48,7 @@ fn commands() -> Vec<Command> {
             .opt("threads", None, "sweep worker threads"),
         Command::new("power", "print the power breakdown (§IV-C)"),
         Command::new("ablate", "run an ablation study")
-            .opt("which", Some("ratio"), "ratio|datapath|wakeup")
+            .opt("which", Some("ratio"), "ratio|datapath|wakeup|dispatch")
             .opt("app", Some("sentiment"), "benchmark app")
             .opt("scale", None, "dataset scale")
             .opt("threads", None, "sweep worker threads"),
@@ -109,6 +111,9 @@ pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
             } else if !cfg.ratio_explicit {
                 cfg.sched.batch_ratio = exp::batch_ratio(app);
             }
+            if let Some(d) = args.str("dispatch") {
+                cfg.sched.dispatch = parse_dispatch(d)?;
+            }
             // --scale beats the config file; the config beats the default.
             let scale = match args.f64("scale")? {
                 Some(_) => scale,
@@ -143,6 +148,7 @@ pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
                 "ratio" => exp::emit(&exp::ablate_batch_ratio(app, scale)?, "ablate_ratio")?,
                 "datapath" => exp::emit(&exp::ablate_datapath(app, scale)?, "ablate_datapath")?,
                 "wakeup" => exp::emit(&exp::ablate_wakeup(app, scale)?, "ablate_wakeup")?,
+                "dispatch" => exp::emit(&exp::ablate_dispatch(app, scale)?, "ablate_dispatch")?,
                 other => anyhow::bail!("unknown ablation '{other}'"),
             }
         }
@@ -162,6 +168,7 @@ fn print_help(cmds: &[Command]) {
 
 fn print_report(r: &sched::RunReport) {
     println!("== {} run ==", r.app);
+    println!("dispatch            {:>14}", r.dispatch);
     println!("items               {:>14}", r.total_items);
     println!("makespan            {:>14}", crate::util::human_secs(r.makespan_secs));
     println!("throughput          {:>11.1} items/s", r.items_per_sec);
@@ -183,6 +190,7 @@ fn report_json(r: &sched::RunReport) -> crate::codec::json::Json {
     use crate::codec::json::Json;
     let mut j = Json::obj();
     j.set("app", r.app.into())
+        .set("dispatch", r.dispatch.into())
         .set("total_items", r.total_items.into())
         .set("makespan_secs", r.makespan_secs.into())
         .set("items_per_sec", r.items_per_sec.into())
@@ -223,6 +231,33 @@ mod tests {
         ]))
         .unwrap();
         assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn run_event_driven_benchmark() {
+        let code = dispatch(&sv(&[
+            "run", "--app", "sentiment", "--scale", "0.01", "--batch", "5000",
+            "--dispatch", "event", "--json",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn ablate_dispatch_smoke() {
+        // the CI smoke invocation: `solana ablate --which dispatch --scale 0.005`
+        assert_eq!(
+            dispatch(&sv(&["ablate", "--which", "dispatch", "--scale", "0.005"])).unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn bad_dispatch_mode_rejected() {
+        assert!(dispatch(&sv(&[
+            "run", "--scale", "0.01", "--dispatch", "sometimes"
+        ]))
+        .is_err());
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! | [`ablate_batch_ratio`] | A1: off-optimal batch ratios under-utilize |
 //! | [`ablate_datapath`] | A2: shared-FS index dispatch vs tunnel data |
 //! | [`ablate_wakeup`] | A3: scheduler polling period sensitivity |
+//! | [`ablate_dispatch`] | A4: polling vs event-driven dispatch |
 //!
 //! Every sweep fans its independent cells out over the deterministic
 //! worker pool in [`pool`] (sized by `--threads` / `SOLANA_THREADS` /
@@ -25,7 +26,7 @@ pub mod pool;
 
 use crate::metrics::{Metrics, Table};
 use crate::power::PowerModel;
-use crate::sched::{run, RunReport, SchedConfig};
+use crate::sched::{run, DispatchMode, RunReport, SchedConfig};
 use crate::workloads::{App, AppModel};
 
 pub use cli::dispatch;
@@ -423,6 +424,56 @@ pub fn ablate_wakeup(app: App, scale: Scale) -> anyhow::Result<Table> {
     Ok(t)
 }
 
+/// A4: polling vs event-driven dispatch (`DispatchMode`, the ISSUE-2
+/// tentpole) across the app's batch-size sweep at 36 engaged CSDs.
+///
+/// Polling taxes every batch a mean half-period idle gap — the node's
+/// ack waits for the next wake-grid point before new work is handed out
+/// — so the relative makespan gap is largest at small batches, where
+/// that gap dominates the per-batch service time. Event-driven dispatch
+/// hands out each batch at or before the grid point polling would have
+/// used, so its makespan is ≤ polling's on every row (asserted by the
+/// test suite).
+pub fn ablate_dispatch(app: App, scale: Scale) -> anyhow::Result<Table> {
+    let items = scale.items(app);
+    let wakeup = SchedConfig::default().wakeup_secs;
+    let mut t = Table::new(
+        &format!("A4 — dispatch mode ({}; polling wakeup {wakeup} s)", app.name()),
+        &[
+            "batch",
+            "poll items/s",
+            "event items/s",
+            "speedup",
+            "poll makespan s",
+            "event makespan s",
+            "poll batch lat s",
+            "event batch lat s",
+        ],
+    );
+    let results = pool::map_cells(batch_sizes(app), move |batch| {
+        let model = AppModel::for_app(app, items);
+        let mk = |dispatch: DispatchMode| SchedConfig { dispatch, ..cfg_for(app, batch, 36) };
+        let mut m = Metrics::new();
+        let poll = run(&model, &mk(DispatchMode::Polling), &PowerModel::default(), &mut m)?;
+        let event = run(&model, &mk(DispatchMode::EventDriven), &PowerModel::default(), &mut m)?;
+        Ok((batch, poll, event))
+    });
+    for res in results {
+        let (batch, poll, event) = res?;
+        t.row(vec![
+            batch.to_string(),
+            format!("{:.1}", poll.items_per_sec),
+            format!("{:.1}", event.items_per_sec),
+            format!("{:.2}x", event.items_per_sec / poll.items_per_sec),
+            format!("{:.2}", poll.makespan_secs),
+            format!("{:.2}", event.makespan_secs),
+            format!("{:.3}", poll.mean_batch_latency),
+            format!("{:.3}", event.mean_batch_latency),
+        ]);
+    }
+    Ok(t)
+}
+
 /// Write a table to `target/bench-results/<name>.{txt,csv}` and print it.
 pub fn emit(table: &Table, name: &str) -> anyhow::Result<()> {
     print!("{}", table.render());
@@ -477,6 +528,55 @@ mod tests {
             let naive: u64 = row[4].parse().unwrap();
             assert!(coalesced <= naive, "coalesced {coalesced} > naive {naive}");
         }
+    }
+
+    #[test]
+    fn ablate_dispatch_event_driven_never_slower() {
+        // The A4 acceptance gate: event-driven makespan ≤ polling
+        // makespan at every operating point of the sweep (checked on the
+        // raw reports, not the rounded table strings).
+        let scale = Scale(0.005);
+        for app in [App::SpeechToText, App::Sentiment] {
+            let items = scale.items(app);
+            for &batch in &batch_sizes(app) {
+                let model = AppModel::for_app(app, items);
+                let mk = |dispatch: DispatchMode| SchedConfig { dispatch, ..cfg_for(app, batch, 36) };
+                let mut m = Metrics::new();
+                let poll =
+                    run(&model, &mk(DispatchMode::Polling), &PowerModel::default(), &mut m).unwrap();
+                let event =
+                    run(&model, &mk(DispatchMode::EventDriven), &PowerModel::default(), &mut m)
+                        .unwrap();
+                assert!(
+                    event.makespan_secs <= poll.makespan_secs + 1e-9,
+                    "{app:?} batch {batch}: event-driven {} > polling {}",
+                    event.makespan_secs,
+                    poll.makespan_secs
+                );
+                assert_eq!(event.host_items + event.csd_items, model.items);
+            }
+        }
+    }
+
+    #[test]
+    fn ablate_dispatch_table_shape_and_small_batch_gap() {
+        let t = ablate_dispatch(App::SpeechToText, Scale(0.005)).unwrap();
+        assert_eq!(t.headers.len(), 8);
+        assert_eq!(t.rows.len(), batch_sizes(App::SpeechToText).len());
+        let speedups: Vec<f64> = t
+            .rows
+            .iter()
+            .map(|r| r[3].trim_end_matches('x').parse().unwrap())
+            .collect();
+        for s in &speedups {
+            assert!(*s >= 0.99, "event-driven slower than polling: {speedups:?}");
+        }
+        // The polling tax is largest where the half-period idle gap
+        // dominates the per-batch service time: the smallest batch.
+        assert!(
+            speedups.first().unwrap() + 0.05 >= *speedups.last().unwrap(),
+            "expected the largest gap at the smallest batch: {speedups:?}"
+        );
     }
 
     #[test]

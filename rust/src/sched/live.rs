@@ -9,10 +9,17 @@
 //! pull/ack protocol: index-only batch dispatch, 0.2 s polling loop,
 //! batch-ratio-sized host batches processed on the coordinator itself.
 //! Python never runs — everything on the request path is this binary.
+//!
+//! Like the simulated scheduler, live mode supports both
+//! [`DispatchMode`]s: `Polling` (default) drains at most one worker
+//! message per wake period, while `EventDriven` drains every queued
+//! RESULT and re-arms each worker the moment its result is observed —
+//! worker turnaround is no longer bounded by the `recv_timeout` grid.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::DispatchMode;
 use crate::cluster::mpi::{self, tag, Communicator};
 use crate::nlp::corpus::{Tweet, TweetCorpus};
 use crate::runtime::{Engine, Tensor};
@@ -29,10 +36,13 @@ pub struct LiveConfig {
     pub ratio: usize,
     /// Total tweets to serve.
     pub items: usize,
-    /// Scheduler polling period (paper: 0.2 s).
+    /// Scheduler polling period (paper: 0.2 s). In event-driven mode
+    /// this only bounds the blocking wait for straggler results.
     pub wakeup: Duration,
     /// Training set size.
     pub train_items: usize,
+    /// Polling grid (the paper) vs re-arm-on-RESULT (see [`DispatchMode`]).
+    pub dispatch: DispatchMode,
     pub seed: u64,
 }
 
@@ -45,6 +55,7 @@ impl Default for LiveConfig {
             items: 4_096,
             wakeup: Duration::from_millis(200),
             train_items: 2_048,
+            dispatch: DispatchMode::Polling,
             seed: 11,
         }
     }
@@ -110,6 +121,127 @@ fn worker_main(
     }
 }
 
+/// Apply one worker RESULT packet to the serving state: protocol
+/// validation, exactly-once bookkeeping, accuracy tally. Returns the
+/// worker index (`src - 1`).
+///
+/// Validation added by ISSUE-2's satellites: the source rank must be a
+/// worker rank (a rank-0 packet used to underflow `src - 1`), and the
+/// payload must be a whole number of 5-byte `(u32 index, u8 label)`
+/// pairs (a misaligned payload used to silently drop trailing bytes and
+/// could misalign index/label pairing).
+fn absorb_result(
+    p: &mpi::Packet,
+    workers: usize,
+    serve: &[Tweet],
+    done: &mut [bool],
+    completed: &mut usize,
+    worker_items: &mut [usize],
+    correct: &mut usize,
+) -> anyhow::Result<usize> {
+    anyhow::ensure!(
+        (1..=workers).contains(&p.src),
+        "RESULT from rank {} outside the worker range 1..={workers}",
+        p.src
+    );
+    let worker = p.src - 1;
+    if !p.payload.is_empty() {
+        anyhow::ensure!(
+            p.payload.len() % 5 == 0,
+            "malformed RESULT payload from rank {}: {} bytes is not a whole \
+             number of 5-byte (u32 index, u8 label) pairs",
+            p.src,
+            p.payload.len()
+        );
+        let n_idx = p.payload.len() / 5; // 4B index + 1B label
+        let (idx_bytes, labels) = p.payload.split_at(4 * n_idx);
+        let idxs = mpi::decode_u32s(idx_bytes).map_err(|e| anyhow::anyhow!("{e}"))?;
+        // Validate the whole packet before tallying anything, so a
+        // rejected packet leaves the serving state untouched. `done` is
+        // marked during validation (which also catches duplicates
+        // *within* the packet) and rolled back if a later pair fails.
+        let mut marked = 0usize;
+        let mut violation: Option<String> = None;
+        for &idx in &idxs {
+            let idx = idx as usize;
+            if idx >= serve.len() {
+                violation = Some(format!(
+                    "RESULT index {idx} out of range ({} serving items)",
+                    serve.len()
+                ));
+                break;
+            }
+            if done[idx] {
+                violation = Some(format!("item {idx} served twice"));
+                break;
+            }
+            done[idx] = true;
+            marked += 1;
+        }
+        if let Some(msg) = violation {
+            for &idx in &idxs[..marked] {
+                done[idx as usize] = false;
+            }
+            anyhow::bail!("{msg}");
+        }
+        for (i, &idx) in idxs.iter().enumerate() {
+            let idx = idx as usize;
+            *completed += 1;
+            worker_items[worker] += 1;
+            if (labels[i] == 1) == serve[idx].positive {
+                *correct += 1;
+            }
+        }
+    }
+    Ok(worker)
+}
+
+/// Re-arm `dst` with the next index batch, if any items are left to
+/// hand out.
+fn send_next_batch(
+    c0: &mut Communicator,
+    next: &mut usize,
+    cfg: &LiveConfig,
+    dst: usize,
+) -> anyhow::Result<()> {
+    if *next < cfg.items {
+        let hi = (*next + cfg.batch).min(cfg.items);
+        let idxs: Vec<u32> = (*next..hi).map(|i| i as u32).collect();
+        *next = hi;
+        c0.send(dst, tag::BATCH, mpi::encode_u32s(&idxs))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    Ok(())
+}
+
+/// Handle one coordinator receive outcome, shared by every receive site
+/// in both dispatch modes: absorb + re-arm on RESULT, ignore other
+/// tags, map a timeout/empty queue to "no packet", surface transport
+/// errors. Returns whether a packet was processed.
+#[allow(clippy::too_many_arguments)]
+fn pump_coordinator(
+    res: Result<mpi::Packet, mpi::MpiError>,
+    c0: &mut Communicator,
+    next: &mut usize,
+    cfg: &LiveConfig,
+    serve: &[Tweet],
+    done: &mut [bool],
+    completed: &mut usize,
+    worker_items: &mut [usize],
+    correct: &mut usize,
+) -> anyhow::Result<bool> {
+    match res {
+        Ok(p) if p.tag == tag::RESULT => {
+            absorb_result(&p, cfg.workers, serve, done, completed, worker_items, correct)?;
+            send_next_batch(c0, next, cfg, p.src)?;
+            Ok(true)
+        }
+        Ok(_) => Ok(true),
+        Err(mpi::MpiError::Timeout) => Ok(false),
+        Err(e) => anyhow::bail!("coordinator recv: {e}"),
+    }
+}
+
 /// Run the live cluster; requires `make artifacts`.
 pub fn run_live(cfg: &LiveConfig) -> anyhow::Result<LiveReport> {
     anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
@@ -140,6 +272,7 @@ pub fn run_live(cfg: &LiveConfig) -> anyhow::Result<LiveReport> {
         .map_err(|e| anyhow::anyhow!("{e}"))?;
 
     // Pull/ack dispatch loop.
+    let event_driven = cfg.dispatch == DispatchMode::EventDriven;
     let t0 = Instant::now();
     let mut next = 0usize;
     let mut done = vec![false; cfg.items];
@@ -148,37 +281,39 @@ pub fn run_live(cfg: &LiveConfig) -> anyhow::Result<LiveReport> {
     let mut worker_items = vec![0usize; cfg.workers];
     let mut correct = 0usize;
     while completed < cfg.items {
-        // Drain worker messages for up to one wakeup period.
-        match c0.recv_timeout(cfg.wakeup) {
-            Ok(p) if p.tag == tag::RESULT => {
-                let worker = p.src - 1;
-                if !p.payload.is_empty() {
-                    let n_idx = p.payload.len() / 5; // 4B index + 1B label
-                    let (idx_bytes, labels) = p.payload.split_at(4 * n_idx);
-                    let idxs = mpi::decode_u32s(idx_bytes).map_err(|e| anyhow::anyhow!("{e}"))?;
-                    for (i, &idx) in idxs.iter().enumerate() {
-                        let idx = idx as usize;
-                        anyhow::ensure!(!done[idx], "item {idx} served twice");
-                        done[idx] = true;
-                        completed += 1;
-                        worker_items[worker] += 1;
-                        if (labels[i] == 1) == serve[idx].positive {
-                            correct += 1;
-                        }
-                    }
-                }
-                // Re-arm this worker with the next batch.
-                if next < cfg.items {
-                    let hi = (next + cfg.batch).min(cfg.items);
-                    let idxs: Vec<u32> = (next..hi).map(|i| i as u32).collect();
-                    next = hi;
-                    c0.send(p.src, tag::BATCH, mpi::encode_u32s(&idxs))
-                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        if event_driven {
+            // Event-driven dispatch: drain every RESULT already queued
+            // and re-arm each worker the moment its result is seen — no
+            // wake grid bounds worker turnaround.
+            loop {
+                let res = c0.try_recv();
+                if !pump_coordinator(
+                    res, &mut c0, &mut next, cfg, &serve, &mut done, &mut completed,
+                    &mut worker_items, &mut correct,
+                )? {
+                    break;
                 }
             }
-            Ok(_) => {}
-            Err(mpi::MpiError::Timeout) => {}
-            Err(e) => anyhow::bail!("coordinator recv: {e}"),
+            if completed >= cfg.items {
+                break;
+            }
+            if next >= cfg.items {
+                // Nothing left to hand out or process locally: block for
+                // the next straggler RESULT instead of spinning.
+                let res = c0.recv_timeout(cfg.wakeup);
+                pump_coordinator(
+                    res, &mut c0, &mut next, cfg, &serve, &mut done, &mut completed,
+                    &mut worker_items, &mut correct,
+                )?;
+            }
+        } else {
+            // The paper's polling loop: drain worker messages for up to
+            // one wakeup period (at most one message per wake).
+            let res = c0.recv_timeout(cfg.wakeup);
+            pump_coordinator(
+                res, &mut c0, &mut next, cfg, &serve, &mut done, &mut completed,
+                &mut worker_items, &mut correct,
+            )?;
         }
         // Host processes its own (ratio-sized) batch between polls.
         if next < cfg.items {
@@ -219,6 +354,93 @@ pub fn run_live(cfg: &LiveConfig) -> anyhow::Result<LiveReport> {
 mod tests {
     use super::*;
 
+    fn tally(n: usize, workers: usize) -> (Vec<Tweet>, Vec<bool>, usize, Vec<usize>, usize) {
+        let serve = TweetCorpus::new(1).take(n);
+        (serve, vec![false; n], 0, vec![0; workers], 0)
+    }
+
+    #[test]
+    fn absorb_result_tallies_well_formed_payloads() {
+        let (serve, mut done, mut completed, mut worker_items, mut correct) = tally(8, 2);
+        let mut payload = mpi::encode_u32s(&[1, 3]);
+        payload.extend_from_slice(&[u8::from(serve[1].positive), u8::from(serve[3].positive)]);
+        let p = mpi::Packet { src: 2, tag: tag::RESULT, payload };
+        let w = absorb_result(&p, 2, &serve, &mut done, &mut completed, &mut worker_items, &mut correct)
+            .unwrap();
+        assert_eq!(w, 1);
+        assert_eq!(completed, 2);
+        assert_eq!(worker_items, vec![0, 2]);
+        assert_eq!(correct, 2);
+        assert!(done[1] && done[3]);
+    }
+
+    #[test]
+    fn absorb_result_rejects_misaligned_payloads() {
+        // ISSUE-2 regression: `len / 5` silently dropped trailing bytes
+        // of a misaligned payload; now it is a protocol error.
+        let (serve, mut done, mut completed, mut worker_items, mut correct) = tally(4, 2);
+        for bad_len in [1usize, 4, 7, 9] {
+            let p = mpi::Packet { src: 1, tag: tag::RESULT, payload: vec![0u8; bad_len] };
+            let err = absorb_result(
+                &p, 2, &serve, &mut done, &mut completed, &mut worker_items, &mut correct,
+            )
+            .unwrap_err();
+            assert!(err.to_string().contains("5-byte"), "len {bad_len}: {err}");
+        }
+        assert_eq!(completed, 0, "malformed payloads must not tally anything");
+    }
+
+    #[test]
+    fn absorb_result_rejects_out_of_range_ranks() {
+        // ISSUE-2 regression: a rank-0 packet underflowed `src - 1`
+        // (panic); now any non-worker rank is a protocol error.
+        let (serve, mut done, mut completed, mut worker_items, mut correct) = tally(4, 2);
+        for bad_src in [0usize, 3, 99] {
+            let p = mpi::Packet { src: bad_src, tag: tag::RESULT, payload: Vec::new() };
+            let err = absorb_result(
+                &p, 2, &serve, &mut done, &mut completed, &mut worker_items, &mut correct,
+            )
+            .unwrap_err();
+            assert!(err.to_string().contains("worker range"), "src {bad_src}: {err}");
+        }
+    }
+
+    #[test]
+    fn absorb_result_rejects_bad_indexes_and_duplicates() {
+        let (serve, mut done, mut completed, mut worker_items, mut correct) = tally(4, 1);
+        // index out of range
+        let mut payload = mpi::encode_u32s(&[9]);
+        payload.push(1);
+        let p = mpi::Packet { src: 1, tag: tag::RESULT, payload };
+        let err = absorb_result(
+            &p, 1, &serve, &mut done, &mut completed, &mut worker_items, &mut correct,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // duplicate serve
+        done[2] = true;
+        let mut payload = mpi::encode_u32s(&[2]);
+        payload.push(0);
+        let p = mpi::Packet { src: 1, tag: tag::RESULT, payload };
+        let err = absorb_result(
+            &p, 1, &serve, &mut done, &mut completed, &mut worker_items, &mut correct,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("served twice"), "{err}");
+        // rejection is atomic: a packet whose *second* pair is invalid
+        // must not tally (or keep marks for) its valid first pair
+        let mut payload = mpi::encode_u32s(&[0, 9]);
+        payload.extend_from_slice(&[1, 1]);
+        let p = mpi::Packet { src: 1, tag: tag::RESULT, payload };
+        assert!(absorb_result(
+            &p, 1, &serve, &mut done, &mut completed, &mut worker_items, &mut correct,
+        )
+        .is_err());
+        assert!(!done[0], "rolled back the valid pair of a rejected packet");
+        assert_eq!(completed, 0);
+        assert_eq!(worker_items, vec![0]);
+    }
+
     #[test]
     fn live_cluster_serves_everything_exactly_once() {
         if Engine::load_default().is_none() {
@@ -231,6 +453,7 @@ mod tests {
             items: 1_024,
             train_items: 1_024,
             wakeup: Duration::from_millis(50),
+            dispatch: DispatchMode::Polling,
             seed: 3,
         };
         let r = run_live(&cfg).unwrap();
@@ -244,5 +467,31 @@ mod tests {
             "workers served some batches: {:?}",
             r.worker_items
         );
+    }
+
+    #[test]
+    fn live_cluster_event_driven_serves_everything_exactly_once() {
+        if Engine::load_default().is_none() {
+            return; // artifacts not built
+        }
+        let cfg = LiveConfig {
+            workers: 2,
+            batch: 32,
+            ratio: 4,
+            items: 1_024,
+            train_items: 1_024,
+            wakeup: Duration::from_millis(50),
+            dispatch: DispatchMode::EventDriven,
+            seed: 3,
+        };
+        let r = run_live(&cfg).unwrap();
+        let worker_total: usize = r.worker_items.iter().sum();
+        assert_eq!(r.host_items + worker_total, 1_024);
+        assert!(r.accuracy > 0.85, "accuracy {}", r.accuracy);
+        // No `worker_total > 0` assert here, deliberately: the
+        // event-driven coordinator never waits out a poll period, so on
+        // a fast host it can legitimately serve every item before the
+        // workers finish loading their engines — exactly-once serving
+        // and accuracy are the protocol guarantees, worker share is not.
     }
 }

@@ -89,6 +89,17 @@ pub fn div_ceil(a: u64, b: u64) -> u64 {
     (a + b - 1) / b
 }
 
+/// `ceil(a * b / d)` with the intermediate product widened to u128, for
+/// proportional shares of item counts whose product overflows u64 (the
+/// scheduler's pass-0 host share at paper-scale corpora: both factors
+/// can exceed 2^32). The result must fit u64 — guaranteed whenever
+/// `min(a, b) <= d`, which holds for any proportional share.
+pub fn mul_div_ceil(a: u64, b: u64, d: u64) -> u64 {
+    debug_assert!(d > 0);
+    let p = a as u128 * b as u128;
+    ((p + (d as u128 - 1)) / d as u128) as u64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,5 +125,22 @@ mod tests {
         assert_eq!(div_ceil(9, 3), 3);
         assert_eq!(div_ceil(1, 4096), 1);
         assert_eq!(div_ceil(0, 7), 0);
+    }
+
+    #[test]
+    fn mul_div_ceil_matches_div_ceil_in_range() {
+        for (a, b, d) in [(10u64, 3, 7), (9, 9, 3), (0, 5, 2), (1, 1, 4096)] {
+            assert_eq!(mul_div_ceil(a, b, d), div_ceil(a * b, d), "{a}*{b}/{d}");
+        }
+    }
+
+    #[test]
+    fn mul_div_ceil_survives_u64_overflowing_products() {
+        // take * avail ≈ 4e19 > u64::MAX ≈ 1.84e19 (the scheduler's
+        // paper-scale share); exact value checked against u128 math.
+        let (take, avail, rem) = (10_000_000_000u64, 4_000_000_000u64, 12_000_000_000u64);
+        let expect = ((take as u128 * avail as u128 + rem as u128 - 1) / rem as u128) as u64;
+        assert_eq!(mul_div_ceil(take, avail, rem), expect);
+        assert_eq!(mul_div_ceil(u64::MAX, u64::MAX, u64::MAX), u64::MAX);
     }
 }
