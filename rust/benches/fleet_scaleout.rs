@@ -1,0 +1,26 @@
+//! `cargo bench --bench fleet_scaleout` — regenerates Fig 8: fleet
+//! scale-out, 1→8 storage servers × three fleet shapes × three apps
+//! (the ISSUE-3 tentpole). See `cluster::fleet` for the topology model.
+//!
+//! Scale with `SOLANA_BENCH_FAST=1` (5%) or default 25% of the paper's
+//! dataset sizes; the *shape* (near-linear all-CSD scaling, SSD-half
+//! stragglers capping the mixed fleet) is scale-invariant above the
+//! polling-grid floor.
+
+use solana_isp::bench_support::Bencher;
+use solana_isp::exp::{self, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::from_env();
+    let table = exp::fig8_scaleout(scale)?;
+    exp::emit(&table, "fig8")?;
+    // Wall-time of regenerating the artifact (simulator throughput):
+    let mut b = Bencher::new(0, if std::env::var("SOLANA_BENCH_FAST").is_ok() { 1 } else { 2 });
+    b.bench("fig8_scaleout", || {
+        let t = exp::fig8_scaleout(scale).expect("rerun");
+        t.rows.len() as u64
+    });
+    print!("{}", b.report());
+    b.write_json("fleet_scaleout")?;
+    Ok(())
+}

@@ -1,0 +1,538 @@
+//! Fleet layer: N storage servers processing one sharded corpus.
+//!
+//! The paper's headline numbers come from "datacenter-grade storage
+//! servers comprised of clusters of the Solana" (§IV) — a *rack*, not a
+//! single host. This module lifts the single-server scheduler
+//! ([`crate::sched::run`], unchanged — it becomes the per-server inner
+//! loop) to a fleet of servers:
+//!
+//! 1. **Sharding** — the corpus is split across servers proportionally
+//!    to their storage capacity (drive census; every bay holds the same
+//!    drive model, so populated-bay count is the capacity weight), with
+//!    cumulative-quota rounding so the total is conserved exactly.
+//! 2. **Per-server phase** — each server runs the paper's pull scheduler
+//!    over its own shard in virtual time. Servers share nothing (their
+//!    own drives, own tunnels, own shared-FS partitions), so the runs
+//!    are independent and a 1-server fleet is *bit-identical* to a
+//!    direct [`crate::sched::run`] (property-tested).
+//! 3. **Aggregation phase** — after the slowest server finishes, every
+//!    non-head server ships its result block (per-item outputs + a
+//!    64-byte header) to the head server over the top-of-rack
+//!    [`RackLink`]; the transfers serialize on the head's downlink.
+//!
+//! Fleet shapes ([`FleetShape`]) cover the deployments the CSD
+//! literature argues about: `all-csd` (every server's ISPs engaged),
+//! `all-ssd` (plain enterprise-SSD baseline: same bays, every ISP off),
+//! and `mixed` (50/50, the survey's realistic datacenter configuration
+//! — arXiv 2112.09691). Experiment Fig 8
+//! ([`crate::exp::fig8_scaleout`], `solana fig8`, `cargo bench --bench
+//! fleet_scaleout`) sweeps 1→8 servers for all three apps in all three
+//! shapes.
+
+use crate::interconnect::RackLink;
+use crate::metrics::Metrics;
+use crate::power::PowerModel;
+use crate::sched::{self, RunReport, SchedConfig};
+use crate::workloads::{App, AppModel};
+
+/// Fleet composition: which servers get their ISP engines engaged.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FleetShape {
+    /// Every server is a CSD server (ISPs engaged per the template's
+    /// `isp_drives`).
+    #[default]
+    AllCsd,
+    /// Plain enterprise-SSD baseline: same drive census, every ISP
+    /// disabled — the fleet-level analogue of
+    /// [`SchedConfig::baseline`].
+    AllSsd,
+    /// 50/50 CSD/SSD servers (even-indexed servers are CSD, so the head
+    /// and any 1-server fleet stay CSD); the mixed deployment the CSD
+    /// survey flags as the realistic datacenter configuration.
+    Mixed,
+}
+
+impl FleetShape {
+    /// Stable lowercase name used by the CLI, TOML configs and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetShape::AllCsd => "all-csd",
+            FleetShape::AllSsd => "all-ssd",
+            FleetShape::Mixed => "mixed",
+        }
+    }
+
+    pub fn all() -> [FleetShape; 3] {
+        [FleetShape::AllCsd, FleetShape::AllSsd, FleetShape::Mixed]
+    }
+}
+
+/// One server's resolved place in the fleet: its scheduler config and
+/// its capacity weight for corpus sharding.
+#[derive(Clone, Debug)]
+pub struct ServerSpec {
+    pub index: usize,
+    pub sched: SchedConfig,
+    /// Capacity weight (populated bays; every bay holds the same drive
+    /// model, so the drive census is the capacity proxy).
+    pub weight: u64,
+}
+
+impl ServerSpec {
+    /// Whether this server computes in storage (any ISP engaged).
+    pub fn is_csd(&self) -> bool {
+        self.sched.isp_drives > 0
+    }
+}
+
+/// Fleet-level configuration: the per-server scheduler template plus
+/// the rack topology. Loaded from the `[fleet]` TOML section (see
+/// [`crate::config`]) and the `solana fleet` CLI.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Number of storage servers in the fleet.
+    pub servers: usize,
+    /// Which servers get their ISPs engaged.
+    pub shape: FleetShape,
+    /// Per-server scheduler template. `isp_drives` applies to CSD
+    /// servers; SSD-baseline servers run with every ISP disabled.
+    pub sched: SchedConfig,
+    /// Top-of-rack link bandwidth into the head server (bytes/s).
+    pub rack_bandwidth: f64,
+    /// Per-message overhead on the rack link (s).
+    pub rack_msg_overhead: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            servers: 1,
+            shape: FleetShape::AllCsd,
+            sched: SchedConfig::default(),
+            rack_bandwidth: crate::interconnect::RACK_BANDWIDTH,
+            rack_msg_overhead: crate::interconnect::RACK_MSG_OVERHEAD,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Resolve the per-server specs this fleet shape implies.
+    pub fn server_specs(&self) -> Vec<ServerSpec> {
+        (0..self.servers)
+            .map(|i| {
+                let mut sched = self.sched.clone();
+                let csd = match self.shape {
+                    FleetShape::AllCsd => true,
+                    FleetShape::AllSsd => false,
+                    FleetShape::Mixed => i % 2 == 0,
+                };
+                if !csd {
+                    sched.isp_drives = 0;
+                }
+                ServerSpec { index: i, sched, weight: self.sched.drives as u64 }
+            })
+            .collect()
+    }
+}
+
+/// Split `items` across weights proportionally, conserving the total
+/// exactly: server `i` gets quota `floor(items·W_{0..=i}/W) −
+/// floor(items·W_{0..<i}/W)` (cumulative-quota rounding; the product is
+/// widened through u128 like the scheduler's pass-0 share).
+pub fn shard_by_weight(items: u64, weights: &[u64]) -> Vec<u64> {
+    let total: u64 = weights.iter().sum();
+    assert!(total > 0, "shard_by_weight needs a positive total weight");
+    let mut shards = Vec::with_capacity(weights.len());
+    let mut cum: u64 = 0;
+    let mut prev: u64 = 0;
+    for &w in weights {
+        cum += w;
+        let hi = (items as u128 * cum as u128 / total as u128) as u64;
+        shards.push(hi - prev);
+        prev = hi;
+    }
+    debug_assert_eq!(prev, items);
+    shards
+}
+
+/// Everything a fleet run produces: the per-server [`RunReport`]s plus
+/// the cross-server rollups Fig 8 plots.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub app: &'static str,
+    /// [`FleetShape::name`] of the shape that produced this report.
+    pub shape: &'static str,
+    pub servers: usize,
+    pub total_items: u64,
+    /// Slowest server's processing phase plus the head's aggregation
+    /// drain (every server's clock starts when its shard is resident,
+    /// mirroring the single-server runner's post-ingest clock).
+    pub makespan_secs: f64,
+    pub items_per_sec: f64,
+    pub words_per_sec: f64,
+    pub host_items: u64,
+    pub csd_items: u64,
+    /// Result-aggregation traffic over the top-of-rack link.
+    pub rack_bytes: u64,
+    pub rack_messages: u64,
+    /// Aggregation-phase duration (barrier → last block delivered).
+    pub agg_secs: f64,
+    /// Sum of per-server energies plus idle power while a server waits
+    /// for the barrier + aggregation drain.
+    pub energy_j: f64,
+    pub energy_per_item_j: f64,
+    pub pcie_bytes: u64,
+    pub isp_bytes: u64,
+    pub tunnel_messages: u64,
+    /// One report per server, in server order — for a 1-server all-CSD
+    /// fleet this is bit-identical to a direct [`sched::run`]
+    /// (property-tested).
+    pub per_server: Vec<RunReport>,
+}
+
+/// Run one benchmark across the fleet; returns the fleet report.
+///
+/// Servers are simulated in server order — each is an independent
+/// virtual-time run, so the order only affects wall-clock, never
+/// results. Fleet-level sweeps (Fig 8) fan whole fleet cells out over
+/// [`crate::exp::pool`] instead of parallelizing inside one fleet.
+pub fn run_fleet(
+    app: App,
+    items: u64,
+    cfg: &FleetConfig,
+    power: &PowerModel,
+    metrics: &mut Metrics,
+) -> anyhow::Result<FleetReport> {
+    anyhow::ensure!(cfg.servers >= 1, "need at least one server in the fleet");
+    anyhow::ensure!(
+        cfg.sched.drives > 0,
+        "need at least one drive bay per server for data"
+    );
+    anyhow::ensure!(
+        cfg.rack_bandwidth > 0.0 && cfg.rack_bandwidth.is_finite(),
+        "rack_bandwidth must be positive and finite, got {}",
+        cfg.rack_bandwidth
+    );
+    anyhow::ensure!(
+        cfg.rack_msg_overhead >= 0.0 && cfg.rack_msg_overhead.is_finite(),
+        "rack_msg_overhead must be non-negative and finite, got {}",
+        cfg.rack_msg_overhead
+    );
+    let specs = cfg.server_specs();
+    let weights: Vec<u64> = specs.iter().map(|s| s.weight).collect();
+    let shards = shard_by_weight(items, &weights);
+
+    // ---- per-server phase -------------------------------------------
+    let mut per_server: Vec<RunReport> = Vec::with_capacity(cfg.servers);
+    for (spec, &n) in specs.iter().zip(&shards) {
+        let model = AppModel::for_app(app, n);
+        per_server.push(sched::run(&model, &spec.sched, power, metrics)?);
+    }
+
+    // ---- aggregation phase ------------------------------------------
+    // Barrier at the slowest server, then every non-head server ships
+    // its result block (64-byte header + per-item outputs) to the head;
+    // the blocks serialize on the head's downlink.
+    let barrier = per_server.iter().map(|r| r.makespan_secs).fold(0.0, f64::max);
+    let model = AppModel::for_app(app, items);
+    let mut rack = RackLink::new(cfg.rack_bandwidth, cfg.rack_msg_overhead);
+    let mut agg_end = barrier;
+    for (i, &n) in shards.iter().enumerate() {
+        if i == 0 || n == 0 {
+            continue; // head results are local; empty shards send nothing
+        }
+        let bytes = 64 + n * model.output_bytes_per_item;
+        agg_end = agg_end.max(rack.send(barrier, bytes));
+    }
+    let makespan = agg_end.max(1e-9);
+
+    // ---- rollups -----------------------------------------------------
+    // Energy: each server's own run, plus chassis+drive idle power for
+    // the gap between its finish and the end of aggregation (a server
+    // that drained early still burns idle watts until the fleet is
+    // done).
+    let mut energy = 0.0;
+    for (spec, r) in specs.iter().zip(&per_server) {
+        let gap = (agg_end - r.makespan_secs).max(0.0);
+        energy += r.energy_j + power.instantaneous_w(spec.sched.drives, 0.0, 0) * gap;
+    }
+    let items_per_sec = items as f64 / makespan;
+    let host_items: u64 = per_server.iter().map(|r| r.host_items).sum();
+    let csd_items: u64 = per_server.iter().map(|r| r.csd_items).sum();
+
+    metrics.inc("fleet.servers", cfg.servers as f64);
+    metrics.inc("fleet.rack_bytes", rack.bytes_moved() as f64);
+    metrics.inc("fleet.rack_messages", rack.messages() as f64);
+    metrics.inc("fleet.energy_j", energy);
+
+    Ok(FleetReport {
+        app: model.app.name(),
+        shape: cfg.shape.name(),
+        servers: cfg.servers,
+        total_items: items,
+        makespan_secs: makespan,
+        items_per_sec,
+        words_per_sec: items_per_sec * model.words_per_item,
+        host_items,
+        csd_items,
+        rack_bytes: rack.bytes_moved(),
+        rack_messages: rack.messages(),
+        agg_secs: agg_end - barrier,
+        energy_j: energy,
+        energy_per_item_j: if items > 0 { energy / items as f64 } else { 0.0 },
+        pcie_bytes: per_server.iter().map(|r| r.pcie_bytes).sum(),
+        isp_bytes: per_server.iter().map(|r| r.isp_bytes).sum(),
+        tunnel_messages: per_server.iter().map(|r| r.tunnel_messages).sum(),
+        per_server,
+    })
+}
+
+impl FleetReport {
+    /// Fraction of input data processed in storage, fleet-wide.
+    pub fn csd_data_fraction(&self) -> f64 {
+        if self.total_items == 0 {
+            return 0.0;
+        }
+        self.csd_items as f64 / self.total_items as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check, forall};
+
+    fn fleet(app: App, items: u64, cfg: &FleetConfig) -> FleetReport {
+        let mut m = Metrics::new();
+        run_fleet(app, items, cfg, &PowerModel::default(), &mut m).unwrap()
+    }
+
+    #[test]
+    fn shard_by_weight_conserves_and_is_proportional() {
+        let shards = shard_by_weight(100, &[1, 1, 1, 1]);
+        assert_eq!(shards, vec![25, 25, 25, 25]);
+        let shards = shard_by_weight(10, &[3, 1]);
+        assert_eq!(shards.iter().sum::<u64>(), 10);
+        assert!(shards[0] > shards[1]);
+        // indivisible: remainder lands deterministically, total exact
+        let shards = shard_by_weight(3275, &[36, 36, 36, 36]);
+        assert_eq!(shards.iter().sum::<u64>(), 3275);
+        assert_eq!(shards, vec![818, 819, 819, 819]);
+        // paper-scale corpora: the quota product needs u128
+        let shards = shard_by_weight(12_000_000_000, &[36, 36, 36]);
+        assert_eq!(shards.iter().sum::<u64>(), 12_000_000_000);
+    }
+
+    #[test]
+    fn shapes_resolve_isp_census() {
+        let mk = |shape| FleetConfig { servers: 5, shape, ..FleetConfig::default() };
+        let csd: Vec<bool> =
+            mk(FleetShape::AllCsd).server_specs().iter().map(|s| s.is_csd()).collect();
+        assert_eq!(csd, vec![true; 5]);
+        let ssd: Vec<bool> =
+            mk(FleetShape::AllSsd).server_specs().iter().map(|s| s.is_csd()).collect();
+        assert_eq!(ssd, vec![false; 5]);
+        let mixed: Vec<bool> =
+            mk(FleetShape::Mixed).server_specs().iter().map(|s| s.is_csd()).collect();
+        assert_eq!(mixed, vec![true, false, true, false, true]);
+        // the SSD servers keep their drive census — only the ISPs go
+        for s in mk(FleetShape::AllSsd).server_specs() {
+            assert_eq!(s.sched.drives, SchedConfig::default().drives);
+            assert_eq!(s.sched.isp_drives, 0);
+        }
+    }
+
+    #[test]
+    fn zero_servers_rejected() {
+        let cfg = FleetConfig { servers: 0, ..FleetConfig::default() };
+        let mut m = Metrics::new();
+        assert!(run_fleet(App::Sentiment, 100, &cfg, &PowerModel::default(), &mut m).is_err());
+    }
+
+    #[test]
+    fn all_ssd_fleet_moves_no_isp_bytes() {
+        let cfg = FleetConfig {
+            servers: 2,
+            shape: FleetShape::AllSsd,
+            sched: SchedConfig { csd_batch: 5_000, ..SchedConfig::default() },
+            ..FleetConfig::default()
+        };
+        let r = fleet(App::Sentiment, 50_000, &cfg);
+        assert_eq!(r.csd_items, 0);
+        assert_eq!(r.isp_bytes, 0);
+        assert_eq!(r.host_items, 50_000);
+    }
+
+    #[test]
+    fn aggregation_traffic_counts_every_non_head_shard() {
+        let servers = 4;
+        let items = 40_000u64;
+        let cfg = FleetConfig {
+            servers,
+            sched: SchedConfig { csd_batch: 2_000, ..SchedConfig::default() },
+            ..FleetConfig::default()
+        };
+        let r = fleet(App::Sentiment, items, &cfg);
+        assert_eq!(r.rack_messages, (servers - 1) as u64);
+        // equal weights, divisible corpus: 3 shards of 10k leave the rack
+        let out = AppModel::sentiment(1).output_bytes_per_item;
+        assert_eq!(r.rack_bytes, 3 * (64 + 10_000 * out));
+        assert!(r.agg_secs > 0.0);
+        assert_eq!(r.host_items + r.csd_items, items);
+    }
+
+    #[test]
+    fn one_server_fleet_rollup_matches_inner_report() {
+        let cfg = FleetConfig {
+            servers: 1,
+            sched: SchedConfig { csd_batch: 6, batch_ratio: 20.0, ..SchedConfig::default() },
+            ..FleetConfig::default()
+        };
+        let r = fleet(App::SpeechToText, 1_310, &cfg);
+        assert_eq!(r.per_server.len(), 1);
+        let inner = &r.per_server[0];
+        assert_eq!(r.makespan_secs.to_bits(), inner.makespan_secs.to_bits());
+        assert_eq!(r.items_per_sec.to_bits(), inner.items_per_sec.to_bits());
+        assert_eq!(r.energy_j.to_bits(), inner.energy_j.to_bits());
+        assert_eq!(r.rack_messages, 0);
+        assert_eq!(r.rack_bytes, 0);
+    }
+
+    #[test]
+    fn property_one_server_all_csd_fleet_is_bit_identical_to_direct_run() {
+        // ISSUE-3 satellite: the fleet layer adds *nothing* to a
+        // 1-server all-CSD fleet — its per-server RunReport is
+        // bit-identical to a direct sched::run with the same SchedConfig,
+        // across randomized configs × all three apps.
+        forall("1-server fleet ≡ direct run", 10, |g| {
+            let drives = g.usize(1..=36);
+            let isp_drives = g.usize(0..=drives);
+            let items = g.u64(500..=20_000);
+            let batch = g.u64(1..=2_000);
+            let ratio = g.f64(1.0, 30.0);
+            let fair_tail = g.bool();
+            let app = *g.rng().choose(&App::all());
+            let sched_cfg = SchedConfig {
+                csd_batch: batch,
+                batch_ratio: ratio,
+                drives,
+                isp_drives,
+                fair_tail,
+                ..SchedConfig::default()
+            };
+            let ctx = format!(
+                "{app:?} drives={drives} isp={isp_drives} items={items} batch={batch} ratio={ratio:.2} fair_tail={fair_tail}"
+            );
+            let model = AppModel::for_app(app, items);
+            let mut m1 = Metrics::new();
+            let direct = sched::run(&model, &sched_cfg, &PowerModel::default(), &mut m1)
+                .map_err(|e| format!("{ctx}: direct run failed: {e}"))?;
+            let fcfg = FleetConfig {
+                servers: 1,
+                shape: FleetShape::AllCsd,
+                sched: sched_cfg,
+                ..FleetConfig::default()
+            };
+            let mut m2 = Metrics::new();
+            let fleet = run_fleet(app, items, &fcfg, &PowerModel::default(), &mut m2)
+                .map_err(|e| format!("{ctx}: fleet run failed: {e}"))?;
+            check(fleet.per_server.len() == 1, format!("{ctx}: expected one per-server report"))?;
+            fleet.per_server[0]
+                .check_bit_identical(&direct)
+                .map_err(|e| format!("{ctx}: {e}"))?;
+            check(
+                fleet.makespan_secs.to_bits() == direct.makespan_secs.to_bits(),
+                format!(
+                    "{ctx}: fleet makespan {} != direct {}",
+                    fleet.makespan_secs, direct.makespan_secs
+                ),
+            )?;
+            check(
+                fleet.energy_j.to_bits() == direct.energy_j.to_bits(),
+                format!("{ctx}: fleet energy {} != direct {}", fleet.energy_j, direct.energy_j),
+            )
+        });
+    }
+
+    #[test]
+    fn scaleout_gate_four_all_csd_servers() {
+        // The ISSUE-3 acceptance gate behind `solana fleet --servers 4
+        // --shape all-csd` / Fig 8: 1→4 all-CSD servers buys ≥3.5×
+        // aggregate items/s while per-item energy stays within 10% of
+        // the single-server value. Runs at the Fig 8 operating point
+        // ([`crate::exp::scaleout_batch`]) on paper-sized corpora:
+        // shards must hold many CSD batches and per-server makespans
+        // must dwarf both one batch and the 0.2 s polling grid, or
+        // batch/grid quantization (not the fleet layer) dominates.
+        for (app, items) in
+            [(App::SpeechToText, 13_100), (App::Recommender, 58_000), (App::Sentiment, 2_000_000)]
+        {
+            let mk = |servers| FleetConfig {
+                servers,
+                shape: FleetShape::AllCsd,
+                sched: SchedConfig {
+                    csd_batch: crate::exp::scaleout_batch(app),
+                    batch_ratio: crate::exp::batch_ratio(app),
+                    ..SchedConfig::default()
+                },
+                ..FleetConfig::default()
+            };
+            let one = fleet(app, items, &mk(1));
+            let four = fleet(app, items, &mk(4));
+            let speedup = four.items_per_sec / one.items_per_sec;
+            assert!(
+                speedup >= 3.5,
+                "{app:?}: 1→4 servers speedup {speedup:.2}x ({:.1} vs {:.1} items/s)",
+                four.items_per_sec,
+                one.items_per_sec
+            );
+            assert!(
+                speedup <= 4.5,
+                "{app:?}: super-linear fleet scaling {speedup:.2}x is a bug"
+            );
+            let drift = (four.energy_per_item_j - one.energy_per_item_j).abs()
+                / one.energy_per_item_j;
+            assert!(
+                drift <= 0.10,
+                "{app:?}: per-item energy drifted {:.1}% (1 server {:.4} J, 4 servers {:.4} J)",
+                drift * 100.0,
+                one.energy_per_item_j,
+                four.energy_per_item_j
+            );
+            assert_eq!(four.host_items + four.csd_items, items);
+        }
+    }
+
+    #[test]
+    fn mixed_fleet_sits_between_csd_and_ssd() {
+        // At equal shard sizes the SSD half of a mixed fleet is the
+        // straggler, so mixed throughput lands between the two pure
+        // shapes (closer to all-SSD: the barrier waits for the slowest).
+        let items = 200_000;
+        let mk = |shape| FleetConfig {
+            servers: 4,
+            shape,
+            sched: SchedConfig {
+                csd_batch: 500, // scale-out operating point (exp::scaleout_batch)
+                batch_ratio: 26.0,
+                ..SchedConfig::default()
+            },
+            ..FleetConfig::default()
+        };
+        let csd = fleet(App::Sentiment, items, &mk(FleetShape::AllCsd));
+        let ssd = fleet(App::Sentiment, items, &mk(FleetShape::AllSsd));
+        let mixed = fleet(App::Sentiment, items, &mk(FleetShape::Mixed));
+        assert!(
+            csd.items_per_sec > mixed.items_per_sec && mixed.items_per_sec >= ssd.items_per_sec,
+            "csd {:.0} / mixed {:.0} / ssd {:.0} items/s",
+            csd.items_per_sec,
+            mixed.items_per_sec,
+            ssd.items_per_sec
+        );
+        assert!(mixed.csd_items > 0, "the CSD half processed in storage");
+        assert!(
+            mixed.csd_data_fraction() < csd.csd_data_fraction(),
+            "half the fleet offloads less than all of it"
+        );
+    }
+}

@@ -9,7 +9,30 @@
 //! This module provides *mechanics* (who moves which bytes over which
 //! link, who burns which compute seconds); the batching policy lives in
 //! [`crate::sched`].
+//!
+//! # Fleet layer (multi-server scale-out)
+//!
+//! One [`StorageServer`] is the paper's testbed; the paper's *deployment*
+//! is a rack of them. The [`fleet`] submodule lifts the single-server
+//! scheduler to N servers processing one sharded corpus:
+//!
+//! * [`fleet::FleetConfig`] describes the fleet — server count, a
+//!   per-server [`crate::sched::SchedConfig`] template, the
+//!   [`fleet::FleetShape`] (`all-csd`, the plain-SSD `all-ssd` baseline,
+//!   or the survey-realistic `mixed` 50/50), and the top-of-rack
+//!   [`crate::interconnect::RackLink`] parameters;
+//! * the corpus is sharded across servers by storage capacity
+//!   ([`fleet::shard_by_weight`], exact total conservation);
+//! * each server runs [`crate::sched::run`] over its shard unchanged —
+//!   a 1-server all-CSD fleet is bit-identical to a direct run
+//!   (property-tested) — and the per-server reports roll up into a
+//!   [`fleet::FleetReport`] after a rack-costed aggregation phase.
+//!
+//! Experiment Fig 8 ([`crate::exp::fig8_scaleout`], `solana fig8`,
+//! `solana fleet`) sweeps 1→8 servers across all three apps and all
+//! three shapes.
 
+pub mod fleet;
 pub mod mpi;
 
 use crate::csd::{Csd, CsdConfig, IoRequester};

@@ -16,6 +16,10 @@ pub mod tag {
     pub const BATCH: u32 = 2;
     pub const RESULT: u32 = 3;
     pub const SHUTDOWN: u32 = 4;
+    /// A worker failed; payload is the error text. Lets the coordinator
+    /// fail fast instead of waiting forever for a RESULT that will
+    /// never come.
+    pub const ERROR: u32 = 5;
 }
 
 /// A delivered packet.

@@ -17,10 +17,17 @@
 //! [power]
 //! server_idle_w = 167.0
 //! csd_idle_w = 6.6
+//!
+//! [fleet]
+//! servers = 4
+//! shape = "mixed"          # all-csd | all-ssd | mixed
+//! rack_bandwidth = 1.25e9  # top-of-rack link, bytes/s
+//! rack_msg_overhead_s = 50e-6
 //! ```
 
 use std::path::Path;
 
+use crate::cluster::fleet::{FleetConfig, FleetShape};
 use crate::codec::toml::TomlTable;
 use crate::power::PowerModel;
 use crate::sched::{DispatchMode, SchedConfig};
@@ -35,6 +42,10 @@ pub struct ExperimentConfig {
     pub app: Option<App>,
     pub sched: SchedConfig,
     pub power: PowerModel,
+    /// Fleet-level settings (`[fleet]`). Its `sched` template is kept in
+    /// sync with [`ExperimentConfig::sched`], so `solana fleet` sees the
+    /// same per-server scheduler the single-server commands use.
+    pub fleet: FleetConfig,
     /// Whether the file explicitly set sched.csd_batch / batch_ratio
     /// (CLI precedence: flag > file > per-app default).
     pub batch_explicit: bool,
@@ -49,6 +60,7 @@ impl Default for ExperimentConfig {
             app: None,
             sched: SchedConfig::default(),
             power: PowerModel::default(),
+            fleet: FleetConfig::default(),
             batch_explicit: false,
             ratio_explicit: false,
         }
@@ -116,12 +128,29 @@ impl ExperimentConfig {
         if let Some(v) = t.f64("power.isp_active_w") {
             cfg.power.isp_active_w = v;
         }
+        if let Some(v) = t.u64("fleet.servers") {
+            anyhow::ensure!(v >= 1, "fleet.servers must be >= 1");
+            cfg.fleet.servers = v as usize;
+        }
+        if let Some(v) = t.str("fleet.shape") {
+            cfg.fleet.shape = parse_shape(v)?;
+        }
+        if let Some(v) = t.f64("fleet.rack_bandwidth") {
+            anyhow::ensure!(v > 0.0, "fleet.rack_bandwidth must be positive");
+            cfg.fleet.rack_bandwidth = v;
+        }
+        if let Some(v) = t.f64("fleet.rack_msg_overhead_s") {
+            anyhow::ensure!(v >= 0.0, "fleet.rack_msg_overhead_s must be non-negative");
+            cfg.fleet.rack_msg_overhead = v;
+        }
         anyhow::ensure!(
             cfg.sched.isp_drives <= cfg.sched.drives,
             "isp_drives ({}) exceeds drives ({})",
             cfg.sched.isp_drives,
             cfg.sched.drives
         );
+        // The fleet's per-server template is the `[sched]` section.
+        cfg.fleet.sched = cfg.sched.clone();
         Ok(cfg)
     }
 }
@@ -135,6 +164,16 @@ pub fn parse_app(name: &str) -> anyhow::Result<App> {
         other => anyhow::bail!(
             "unknown app '{other}' (expected speech|recommender|sentiment)"
         ),
+    }
+}
+
+/// Parse a fleet shape from config/CLI (see [`FleetShape`]).
+pub fn parse_shape(name: &str) -> anyhow::Result<FleetShape> {
+    match name {
+        "all-csd" | "all_csd" | "csd" => Ok(FleetShape::AllCsd),
+        "all-ssd" | "all_ssd" | "ssd" | "baseline" => Ok(FleetShape::AllSsd),
+        "mixed" | "hybrid" => Ok(FleetShape::Mixed),
+        other => anyhow::bail!("unknown fleet shape '{other}' (expected all-csd|all-ssd|mixed)"),
     }
 }
 
@@ -208,6 +247,41 @@ mod tests {
         assert_eq!(parse_dispatch("event-driven").unwrap(), DispatchMode::EventDriven);
         assert_eq!(parse_dispatch("event_driven").unwrap(), DispatchMode::EventDriven);
         assert!(parse_dispatch("grid").is_err());
+    }
+
+    #[test]
+    fn fleet_section_parses_and_syncs_sched_template() {
+        let c = ExperimentConfig::from_toml(
+            "seed = 9\n[sched]\ncsd_batch = 123\n[fleet]\nservers = 4\nshape = \"mixed\"\nrack_bandwidth = 2.5e9\nrack_msg_overhead_s = 1e-4\n",
+        )
+        .unwrap();
+        assert_eq!(c.fleet.servers, 4);
+        assert_eq!(c.fleet.shape, FleetShape::Mixed);
+        assert_eq!(c.fleet.rack_bandwidth, 2.5e9);
+        assert_eq!(c.fleet.rack_msg_overhead, 1e-4);
+        assert_eq!(c.fleet.sched.csd_batch, 123, "[sched] is the fleet template");
+        assert_eq!(c.fleet.sched.seed, 9, "seed flows through the [sched] template");
+        // defaults without a [fleet] section
+        let d = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(d.fleet.servers, 1);
+        assert_eq!(d.fleet.shape, FleetShape::AllCsd);
+    }
+
+    #[test]
+    fn fleet_section_validation() {
+        assert!(ExperimentConfig::from_toml("[fleet]\nservers = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[fleet]\nshape = \"pyramid\"").is_err());
+        assert!(ExperimentConfig::from_toml("[fleet]\nrack_bandwidth = -1.0").is_err());
+        assert!(ExperimentConfig::from_toml("[fleet]\nrack_msg_overhead_s = -0.1").is_err());
+    }
+
+    #[test]
+    fn shape_aliases() {
+        assert_eq!(parse_shape("csd").unwrap(), FleetShape::AllCsd);
+        assert_eq!(parse_shape("all_ssd").unwrap(), FleetShape::AllSsd);
+        assert_eq!(parse_shape("baseline").unwrap(), FleetShape::AllSsd);
+        assert_eq!(parse_shape("hybrid").unwrap(), FleetShape::Mixed);
+        assert!(parse_shape("pyramid").is_err());
     }
 
     #[test]

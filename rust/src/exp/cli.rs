@@ -3,8 +3,9 @@
 //! ```text
 //! solana run   --app sentiment --drives 36 --isp-drives 36 --batch 40000
 //! solana run   --app speech --dispatch event   # off-grid dispatch (A4)
+//! solana fleet --servers 4 --shape all-csd     # multi-server scale-out
 //! solana fig5  --app speech [--scale 0.25] [--threads 8]
-//! solana fig6 | fig7 | table1 | power
+//! solana fig6 | fig7 | fig8 | table1 | power
 //! solana ablate --which ratio|datapath|wakeup|dispatch --app sentiment
 //! solana version | help
 //! ```
@@ -13,8 +14,9 @@
 //! (overrides `SOLANA_THREADS`; default: all cores). Results are
 //! byte-identical at any thread count.
 
-use crate::cli::Command;
-use crate::config::{parse_app, parse_dispatch, ExperimentConfig};
+use crate::cli::{Args, Command};
+use crate::cluster::fleet::{run_fleet, FleetReport};
+use crate::config::{parse_app, parse_dispatch, parse_shape, ExperimentConfig};
 use crate::exp::{self, Scale};
 use crate::metrics::Metrics;
 use crate::sched;
@@ -23,7 +25,7 @@ use crate::workloads::{App, AppModel};
 fn commands() -> Vec<Command> {
     vec![
         Command::new("run", "run one benchmark under the scheduler")
-            .opt("app", Some("sentiment"), "speech|recommender|sentiment")
+            .opt("app", None, "speech|recommender|sentiment (default: config app or sentiment)")
             .opt("config", None, "TOML config file (configs/*.toml)")
             .opt("drives", None, "populated drive bays (default 36)")
             .opt("isp-drives", None, "drives with ISP engaged (default = drives)")
@@ -33,6 +35,18 @@ fn commands() -> Vec<Command> {
             .opt("scale", None, "dataset scale vs paper (0..1], default 0.25")
             .flag("baseline", "disable all ISP engines (storage-only)")
             .flag("json", "emit the report as JSON"),
+        Command::new("fleet", "run one benchmark across N storage servers (sharded corpus)")
+            .opt("app", None, "speech|recommender|sentiment (default: config app or sentiment)")
+            .opt("config", None, "TOML config file ([fleet] + [sched] sections)")
+            .opt("servers", None, "storage servers in the fleet (default: config [fleet] or 1)")
+            .opt("shape", None, "all-csd|all-ssd|mixed — which servers engage ISPs (default: config [fleet] or all-csd)")
+            .opt("drives", None, "drive bays per server (default 36)")
+            .opt("isp-drives", None, "ISP-engaged drives per CSD server (default = drives)")
+            .opt("batch", None, "CSD batch size (items)")
+            .opt("ratio", None, "host/CSD batch ratio")
+            .opt("dispatch", None, "polling|event — per-server dispatch mode")
+            .opt("scale", None, "dataset scale vs paper (0..1], default 0.25")
+            .flag("json", "emit the fleet report as JSON"),
         Command::new("fig5", "regenerate Fig 5 (throughput sweep)")
             .opt("app", Some("speech"), "speech|recommender|sentiment")
             .opt("scale", None, "dataset scale (default 0.25)")
@@ -41,6 +55,9 @@ fn commands() -> Vec<Command> {
             .opt("scale", None, "dataset scale")
             .opt("threads", None, "sweep worker threads"),
         Command::new("fig7", "regenerate Fig 7 (energy per query)")
+            .opt("scale", None, "dataset scale")
+            .opt("threads", None, "sweep worker threads"),
+        Command::new("fig8", "regenerate Fig 8 (fleet scale-out sweep, 1→8 servers)")
             .opt("scale", None, "dataset scale")
             .opt("threads", None, "sweep worker threads"),
         Command::new("table1", "regenerate Table I (summary)")
@@ -55,6 +72,58 @@ fn commands() -> Vec<Command> {
         Command::new("version", "print the version"),
         Command::new("help", "show this help"),
     ]
+}
+
+/// Resolve the config-file / per-app-default / CLI-flag precedence
+/// shared by `run` and `fleet` (flags beat the file, the file beats the
+/// per-app defaults — including `--scale`, where `cli_scale` is the
+/// already-validated flag/env value used only when the flag was given).
+/// `default_batch_for` supplies the command's batch operating point:
+/// the Fig 5 best batch for `run`, the scale-out point for `fleet` (see
+/// [`exp::scaleout_batch`]).
+fn resolve_sched_args(
+    args: &Args,
+    default_batch_for: fn(App) -> u64,
+    cli_scale: Scale,
+) -> anyhow::Result<(App, ExperimentConfig, Scale)> {
+    let mut cfg = match args.str("config") {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::default(),
+    };
+    // No CLI default for --app: a hard default would shadow the config
+    // file's `app` key (flag > file > sentiment).
+    let app = match args.str("app") {
+        Some(a) => parse_app(a)?,
+        None => cfg.app.unwrap_or(App::Sentiment),
+    };
+    if let Some(d) = args.u64("drives")? {
+        cfg.sched.drives = d as usize;
+        cfg.sched.isp_drives = cfg.sched.isp_drives.min(d as usize);
+    }
+    if let Some(d) = args.u64("isp-drives")? {
+        cfg.sched.isp_drives = d as usize;
+    }
+    if args.flag("baseline") {
+        cfg.sched.isp_drives = 0;
+    }
+    if let Some(b) = args.u64("batch")? {
+        cfg.sched.csd_batch = b;
+    } else if !cfg.batch_explicit {
+        cfg.sched.csd_batch = default_batch_for(app);
+    }
+    if let Some(r) = args.f64("ratio")? {
+        cfg.sched.batch_ratio = r;
+    } else if !cfg.ratio_explicit {
+        cfg.sched.batch_ratio = exp::batch_ratio(app);
+    }
+    if let Some(d) = args.str("dispatch") {
+        cfg.sched.dispatch = parse_dispatch(d)?;
+    }
+    let scale = match args.f64("scale")? {
+        Some(_) => cli_scale,
+        None => Scale(cfg.scale),
+    };
+    Ok((app, cfg, scale))
 }
 
 /// Dispatch CLI arguments; returns the process exit code.
@@ -83,42 +152,7 @@ pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
         "version" => println!("solana-isp {}", crate::VERSION),
         "help" => print_help(&cmds),
         "run" => {
-            let mut cfg = match args.str("config") {
-                Some(path) => ExperimentConfig::from_file(path)?,
-                None => ExperimentConfig::default(),
-            };
-            let app = match args.str("app") {
-                Some(a) => parse_app(a)?,
-                None => cfg.app.unwrap_or(App::Sentiment),
-            };
-            if let Some(d) = args.u64("drives")? {
-                cfg.sched.drives = d as usize;
-                cfg.sched.isp_drives = cfg.sched.isp_drives.min(d as usize);
-            }
-            if let Some(d) = args.u64("isp-drives")? {
-                cfg.sched.isp_drives = d as usize;
-            }
-            if args.flag("baseline") {
-                cfg.sched.isp_drives = 0;
-            }
-            if let Some(b) = args.u64("batch")? {
-                cfg.sched.csd_batch = b;
-            } else if !cfg.batch_explicit {
-                cfg.sched.csd_batch = exp::default_batch(app);
-            }
-            if let Some(r) = args.f64("ratio")? {
-                cfg.sched.batch_ratio = r;
-            } else if !cfg.ratio_explicit {
-                cfg.sched.batch_ratio = exp::batch_ratio(app);
-            }
-            if let Some(d) = args.str("dispatch") {
-                cfg.sched.dispatch = parse_dispatch(d)?;
-            }
-            // --scale beats the config file; the config beats the default.
-            let scale = match args.f64("scale")? {
-                Some(_) => scale,
-                None => Scale(cfg.scale),
-            };
+            let (app, cfg, scale) = resolve_sched_args(&args, exp::default_batch, scale)?;
             let items = scale.items(app);
             let model = AppModel::for_app(app, items);
             let mut metrics = Metrics::new();
@@ -127,6 +161,27 @@ pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
                 println!("{}", report_json(&r).to_pretty());
             } else {
                 print_report(&r);
+            }
+        }
+        "fleet" => {
+            let (app, cfg, scale) = resolve_sched_args(&args, exp::scaleout_batch, scale)?;
+            let mut fcfg = cfg.fleet.clone();
+            // CLI sched overrides feed the per-server template too.
+            fcfg.sched = cfg.sched.clone();
+            if let Some(n) = args.u64("servers")? {
+                anyhow::ensure!(n >= 1, "--servers must be >= 1");
+                fcfg.servers = n as usize;
+            }
+            if let Some(s) = args.str("shape") {
+                fcfg.shape = parse_shape(s)?;
+            }
+            let items = scale.items(app);
+            let mut metrics = Metrics::new();
+            let r = run_fleet(app, items, &fcfg, &cfg.power, &mut metrics)?;
+            if args.flag("json") {
+                println!("{}", fleet_json(&r).to_pretty());
+            } else {
+                print_fleet_report(&r);
             }
         }
         "fig5" => {
@@ -140,6 +195,7 @@ pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
         }
         "fig6" => exp::emit(&exp::fig6(scale)?, "fig6")?,
         "fig7" => exp::emit(&exp::fig7(scale)?, "fig7")?,
+        "fig8" => exp::emit(&exp::fig8_scaleout(scale)?, "fig8")?,
         "table1" => exp::emit(&exp::table1(scale)?, "table1")?,
         "power" => exp::emit(&exp::power_breakdown(), "power")?,
         "ablate" => {
@@ -184,6 +240,74 @@ fn print_report(r: &sched::RunReport) {
     println!("energy/item         {:>11.4} J", r.energy_per_item_j);
     println!("mean batch latency  {:>11.2} s", r.mean_batch_latency);
     println!("des events          {:>14} ({} wakes)", r.events_executed, r.wake_events);
+}
+
+fn print_fleet_report(r: &FleetReport) {
+    println!("== {} fleet run ==", r.app);
+    println!("shape               {:>14}", r.shape);
+    println!("servers             {:>14}", r.servers);
+    println!("items               {:>14}", r.total_items);
+    println!("makespan            {:>14}", crate::util::human_secs(r.makespan_secs));
+    println!("agg phase           {:>14}", crate::util::human_secs(r.agg_secs));
+    println!("throughput          {:>11.1} items/s", r.items_per_sec);
+    if r.words_per_sec != r.items_per_sec {
+        println!("                    {:>11.1} words/s", r.words_per_sec);
+    }
+    println!("host/csd items      {:>7} / {}", r.host_items, r.csd_items);
+    println!("csd data share      {:>13.1}%", r.csd_data_fraction() * 100.0);
+    println!("pcie bytes          {:>14}", crate::util::human_bytes(r.pcie_bytes));
+    println!("in-storage bytes    {:>14}", crate::util::human_bytes(r.isp_bytes));
+    println!("rack bytes          {:>14}", crate::util::human_bytes(r.rack_bytes));
+    println!("rack messages       {:>14}", r.rack_messages);
+    println!("tunnel messages     {:>14}", r.tunnel_messages);
+    println!("energy              {:>11.1} J", r.energy_j);
+    println!("energy/item         {:>11.4} J", r.energy_per_item_j);
+    for (i, s) in r.per_server.iter().enumerate() {
+        println!(
+            "  server {i:<2} {:>9} items  {:>9.1} items/s  makespan {:>10}",
+            s.total_items,
+            s.items_per_sec,
+            crate::util::human_secs(s.makespan_secs)
+        );
+    }
+}
+
+fn fleet_json(r: &FleetReport) -> crate::codec::json::Json {
+    use crate::codec::json::Json;
+    let mut j = Json::obj();
+    j.set("app", r.app.into())
+        .set("shape", r.shape.into())
+        .set("servers", (r.servers as u64).into())
+        .set("total_items", r.total_items.into())
+        .set("makespan_secs", r.makespan_secs.into())
+        .set("agg_secs", r.agg_secs.into())
+        .set("items_per_sec", r.items_per_sec.into())
+        .set("words_per_sec", r.words_per_sec.into())
+        .set("host_items", r.host_items.into())
+        .set("csd_items", r.csd_items.into())
+        .set("pcie_bytes", r.pcie_bytes.into())
+        .set("isp_bytes", r.isp_bytes.into())
+        .set("rack_bytes", r.rack_bytes.into())
+        .set("rack_messages", r.rack_messages.into())
+        .set("tunnel_messages", r.tunnel_messages.into())
+        .set("energy_j", r.energy_j.into())
+        .set("energy_per_item_j", r.energy_per_item_j.into());
+    let servers: Vec<Json> = r
+        .per_server
+        .iter()
+        .map(|s| {
+            let mut o = Json::obj();
+            o.set("items", s.total_items.into())
+                .set("items_per_sec", s.items_per_sec.into())
+                .set("makespan_secs", s.makespan_secs.into())
+                .set("host_items", s.host_items.into())
+                .set("csd_items", s.csd_items.into())
+                .set("energy_j", s.energy_j.into());
+            o
+        })
+        .collect();
+    j.set("per_server", servers.into());
+    j
 }
 
 fn report_json(r: &sched::RunReport) -> crate::codec::json::Json {
@@ -241,6 +365,50 @@ mod tests {
         ]))
         .unwrap();
         assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn config_file_app_applies_when_flag_absent() {
+        // Regression: --app used to carry a hard CLI default, which
+        // always shadowed the config file's `app` key.
+        let path = std::env::temp_dir()
+            .join(format!("solana_cli_app_precedence_{}.toml", std::process::id()));
+        std::fs::write(&path, "app = \"speech\"\n").unwrap();
+        let cmd = commands().into_iter().find(|c| c.name == "run").unwrap();
+        let args = cmd.parse(&sv(&["--config", path.to_str().unwrap()])).unwrap();
+        let (app, _, _) = resolve_sched_args(&args, exp::default_batch, Scale(0.5)).unwrap();
+        assert_eq!(app, App::SpeechToText, "config app applies without a flag");
+        let args = cmd
+            .parse(&sv(&["--config", path.to_str().unwrap(), "--app", "sentiment"]))
+            .unwrap();
+        let (app, _, scale) = resolve_sched_args(&args, exp::default_batch, Scale(0.5)).unwrap();
+        assert_eq!(app, App::Sentiment, "an explicit flag still beats the file");
+        assert_eq!(scale.0, 0.25, "no --scale flag: the config default applies, not cli_scale");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fleet_run_all_shapes() {
+        // the acceptance invocation (tiny scale) plus the other shapes
+        for shape in ["all-csd", "all-ssd", "mixed"] {
+            let code = dispatch(&sv(&[
+                "fleet", "--servers", "4", "--shape", shape, "--app", "sentiment",
+                "--scale", "0.01", "--json",
+            ]))
+            .unwrap();
+            assert_eq!(code, 0, "shape {shape}");
+        }
+    }
+
+    #[test]
+    fn fleet_rejects_nonsense() {
+        assert!(dispatch(&sv(&["fleet", "--servers", "0", "--scale", "0.01"])).is_err());
+        assert!(dispatch(&sv(&["fleet", "--shape", "pyramid", "--scale", "0.01"])).is_err());
+    }
+
+    #[test]
+    fn fig8_smoke() {
+        assert_eq!(dispatch(&sv(&["fig8", "--scale", "0.005"])).unwrap(), 0);
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! | [`ablate_datapath`] | A2: shared-FS index dispatch vs tunnel data |
 //! | [`ablate_wakeup`] | A3: scheduler polling period sensitivity |
 //! | [`ablate_dispatch`] | A4: polling vs event-driven dispatch |
+//! | [`fig8_scaleout`] | Fig 8 (ours): fleet scale-out, 1→8 servers × 3 shapes |
 //!
 //! Every sweep fans its independent cells out over the deterministic
 //! worker pool in [`pool`] (sized by `--threads` / `SOLANA_THREADS` /
@@ -24,6 +25,7 @@
 pub mod cli;
 pub mod pool;
 
+use crate::cluster::fleet::{run_fleet, FleetConfig, FleetShape};
 use crate::metrics::{Metrics, Table};
 use crate::power::PowerModel;
 use crate::sched::{run, DispatchMode, RunReport, SchedConfig};
@@ -474,6 +476,109 @@ pub fn ablate_dispatch(app: App, scale: Scale) -> anyhow::Result<Table> {
     Ok(t)
 }
 
+/// Server-count sweep for Fig 8 (fleet scale-out).
+pub const SERVER_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// Per-app CSD batch size for the scale-out sweep (Fig 8).
+///
+/// Deliberately much smaller than [`default_batch`]: sharding a corpus
+/// over 8 servers divides every drive's shard by 8, and at the Fig 5
+/// operating batches a shard can be *smaller than one CSD batch* (a
+/// sentiment drive holds ~7 k items of an 8-server 0.25-scale shard vs
+/// a 40 k-item batch). Batch granularity — one indivisible
+/// `overhead + n·t_item/cores` chunk per drive — would then dominate
+/// the makespan and masquerade as poor fleet scaling. The scale-out
+/// operating point keeps many batches per drive at every fleet size, so
+/// Fig 8 measures the topology (sharding + barrier + rack aggregation),
+/// not batch quantization. This is a real scheduling consequence of
+/// scale-out, not a benchmarking trick: a fleet scheduler must shrink
+/// batches as shards shrink.
+pub fn scaleout_batch(app: App) -> u64 {
+    match app {
+        App::SpeechToText => 2,
+        App::Recommender => 16,
+        App::Sentiment => 500,
+    }
+}
+
+/// Fig 8 (ours): fleet-level scale-out — aggregate throughput, per-item
+/// energy and rack aggregation traffic for 1→8 storage servers, for all
+/// three apps in all three fleet shapes (`all-csd`, the plain-SSD
+/// `all-ssd` baseline, `mixed` 50/50). Every fleet cell runs its own
+/// servers sequentially in virtual time; the (app × shape × servers)
+/// cells fan out over the [`pool`]. Speedup is normalized to the
+/// 1-server fleet of the same (app, shape). Batches come from
+/// [`scaleout_batch`] (see there for why the Fig 5 operating batches
+/// are wrong for sharded corpora).
+pub fn fig8_scaleout(scale: Scale) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Fig 8 — fleet scale-out: 1→8 storage servers",
+        &[
+            "app",
+            "shape",
+            "servers",
+            "items/s",
+            "speedup",
+            "energy/item J",
+            "rack KiB",
+            "makespan s",
+        ],
+    );
+    let mut specs: Vec<(App, FleetShape, usize)> = Vec::new();
+    for app in App::all() {
+        for shape in FleetShape::all() {
+            for &servers in &SERVER_COUNTS {
+                specs.push((app, shape, servers));
+            }
+        }
+    }
+    let ordered = specs.clone();
+    let reports = pool::map_cells(specs, move |(app, shape, servers)| {
+        let cfg = FleetConfig {
+            servers,
+            shape,
+            sched: SchedConfig {
+                csd_batch: scaleout_batch(app),
+                batch_ratio: batch_ratio(app),
+                ..SchedConfig::default()
+            },
+            ..FleetConfig::default()
+        };
+        let mut m = Metrics::new();
+        run_fleet(app, scale.items(app), &cfg, &PowerModel::default(), &mut m)
+    });
+    let mut it = ordered.into_iter().zip(reports);
+    for app in App::all() {
+        for shape in FleetShape::all() {
+            let mut base_rate = 0.0f64;
+            for &servers in &SERVER_COUNTS {
+                let ((spec_app, spec_shape, spec_servers), r) =
+                    it.next().expect("one report per sweep cell");
+                assert_eq!(
+                    (spec_app, spec_shape, spec_servers),
+                    (app, shape, servers),
+                    "sweep order drifted"
+                );
+                let r = r?;
+                if servers == SERVER_COUNTS[0] {
+                    base_rate = r.items_per_sec;
+                }
+                t.row(vec![
+                    app.name().to_string(),
+                    shape.name().to_string(),
+                    servers.to_string(),
+                    format!("{:.1}", r.items_per_sec),
+                    format!("{:.2}x", r.items_per_sec / base_rate),
+                    format!("{:.4}", r.energy_per_item_j),
+                    format!("{:.1}", r.rack_bytes as f64 / 1024.0),
+                    format!("{:.2}", r.makespan_secs),
+                ]);
+            }
+        }
+    }
+    Ok(t)
+}
+
 /// Write a table to `target/bench-results/<name>.{txt,csv}` and print it.
 pub fn emit(table: &Table, name: &str) -> anyhow::Result<()> {
     print!("{}", table.render());
@@ -577,6 +682,31 @@ mod tests {
             speedups.first().unwrap() + 0.05 >= *speedups.last().unwrap(),
             "expected the largest gap at the smallest batch: {speedups:?}"
         );
+    }
+
+    #[test]
+    fn fig8_scaleout_shape_and_normalization() {
+        let t = fig8_scaleout(Scale(0.005)).unwrap();
+        assert_eq!(t.headers.len(), 8);
+        assert_eq!(t.rows.len(), 3 * 3 * SERVER_COUNTS.len(), "apps × shapes × server counts");
+        // every (app, shape) block starts at its own 1-server baseline
+        for block in t.rows.chunks(SERVER_COUNTS.len()) {
+            assert_eq!(block[0][2], "1");
+            assert_eq!(block[0][4], "1.00x");
+            // 1-server fleets never touch the rack
+            assert_eq!(block[0][6], "0.0");
+        }
+        // even at tiny scale, 8 all-CSD sentiment servers strictly beat 1
+        // (the ≥3.5× 1→4 acceptance gate runs at realistic corpus sizes
+        // in cluster::fleet::tests — tiny scales are granularity-bound)
+        let sent_csd = t
+            .rows
+            .iter()
+            .find(|r| r[0] == "sentiment" && r[1] == "all-csd" && r[2] == "8")
+            .expect("sentiment all-csd 8-server row");
+        let speedup: f64 = sent_csd[4].trim_end_matches('x').parse().unwrap();
+        assert!(speedup > 1.0, "8-server sentiment speedup {speedup}");
+        assert_ne!(sent_csd[6], "0.0", "an 8-server fleet aggregates over the rack");
     }
 
     #[test]

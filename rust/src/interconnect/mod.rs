@@ -122,6 +122,56 @@ impl TcpTunnel {
     }
 }
 
+/// Default rack-link parameters (one 10 GbE port: ~1.25 GB/s usable
+/// after framing, ~50 µs per message for NIC + switch + kernel path),
+/// shared with [`crate::cluster::fleet::FleetConfig`] so the two
+/// defaults cannot drift apart.
+pub const RACK_BANDWIDTH: f64 = 1.25e9;
+pub const RACK_MSG_OVERHEAD: SimTime = 50e-6;
+
+/// Top-of-rack aggregation link (the fleet layer's cross-server path).
+///
+/// When a [`crate::cluster::fleet`] run finishes its per-server phase,
+/// every non-head server ships its result block to the head server for
+/// the cross-server aggregation/merge. Each server's uplink into the
+/// rack switch is uncontended, but the head's single downlink is
+/// shared, so result transfers serialize FIFO there — that is the pipe
+/// this type models. A rack link *is* a message link with different
+/// physics (switched Ethernet port instead of the in-box NVMe tunnel),
+/// so it composes [`TcpTunnel`]'s pipe + per-message-overhead
+/// accounting rather than re-implementing it.
+#[derive(Debug, Clone)]
+pub struct RackLink {
+    link: TcpTunnel,
+}
+
+impl Default for RackLink {
+    fn default() -> Self {
+        RackLink::new(RACK_BANDWIDTH, RACK_MSG_OVERHEAD)
+    }
+}
+
+impl RackLink {
+    pub fn new(bandwidth: f64, msg_overhead: SimTime) -> RackLink {
+        RackLink { link: TcpTunnel::new(bandwidth, msg_overhead) }
+    }
+
+    /// Deliver one result block of `bytes` entering the head's downlink
+    /// at `now`; returns completion time. Concurrent blocks queue behind
+    /// the link's busy horizon (FIFO).
+    pub fn send(&mut self, now: SimTime, bytes: u64) -> SimTime {
+        self.link.send(now, bytes)
+    }
+
+    pub fn messages(&self) -> u64 {
+        self.link.messages()
+    }
+
+    pub fn bytes_moved(&self) -> u64 {
+        self.link.bytes_moved()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,6 +200,26 @@ mod tests {
         let t = tun.round_trip(0.0, 64, 64);
         assert_eq!(tun.messages(), 2);
         assert!(t > 2.0 * 150e-6);
+    }
+
+    #[test]
+    fn rack_link_serializes_result_blocks() {
+        // Two 1.25 MB result blocks entering the head's downlink at the
+        // same instant: the second waits for the first (FIFO pipe).
+        let mut rack = RackLink::new(1.25e9, 0.0);
+        let a = rack.send(0.0, 1_250_000);
+        let b = rack.send(0.0, 1_250_000);
+        assert!((a - 1e-3).abs() < 1e-9, "first block {a}");
+        assert!((b - 2e-3).abs() < 1e-9, "second block queues: {b}");
+        assert_eq!(rack.messages(), 2);
+        assert_eq!(rack.bytes_moved(), 2_500_000);
+    }
+
+    #[test]
+    fn rack_link_small_message_dominated_by_overhead() {
+        let mut rack = RackLink::default();
+        let t = rack.send(0.0, 64);
+        assert!((t - (50e-6 + 64.0 / 1.25e9)).abs() < 1e-12, "{t}");
     }
 
     #[test]

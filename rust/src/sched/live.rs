@@ -15,6 +15,14 @@
 //! message per wake period, while `EventDriven` drains every queued
 //! RESULT and re-arms each worker the moment its result is observed —
 //! worker turnaround is no longer bounded by the `recv_timeout` grid.
+//!
+//! The protocol engine ([`run_live_with`]) is generic over a
+//! [`LiveClassifier`], so the full pull/ack loop — threads, loopback
+//! [`Communicator`]s, both dispatch modes — can be driven end-to-end
+//! without PJRT artifacts: the loopback integration test
+//! (`tests/live_loopback.rs`) substitutes a deterministic oracle model
+//! and asserts item conservation and cross-mode agreement, while
+//! [`run_live`] wires in the real AOT sentiment model.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -71,17 +79,51 @@ pub struct LiveReport {
     pub worker_items: Vec<usize>,
     pub accuracy: f64,
     pub messages: u64,
+    /// Sorted serving indices that were processed (exactly once each).
+    /// Equals `0..items` on success — the loopback integration test
+    /// asserts both dispatch modes produce the identical set.
+    pub processed_indices: Vec<u32>,
 }
 
-/// Worker rank body: receive weights, then serve index batches until
-/// shutdown. Each worker builds its own [`Engine`] — one runtime per
-/// (simulated) device, like each CSD's ISP runs its own binary.
+/// A sentiment classifier driving the live protocol. The production
+/// implementation wraps the AOT-compiled model + its PJRT [`Engine`]
+/// (one per node, like each CSD's ISP runs its own binary); the loopback
+/// integration test substitutes a deterministic oracle so the protocol
+/// itself is testable without artifacts.
+pub trait LiveClassifier: Send {
+    /// Classify each text as positive (`true`) or negative (`false`).
+    fn classify(&mut self, texts: &[&str]) -> anyhow::Result<Vec<bool>>;
+}
+
+/// Builds one [`LiveClassifier`] per worker rank from the broadcast
+/// weight vector (`w ++ b`, f32 LE). Called on the worker's own thread,
+/// mirroring how each ISP engine loads its own runtime.
+pub type WorkerFactory =
+    Arc<dyn Fn(usize, &[f32]) -> anyhow::Result<Box<dyn LiveClassifier>> + Send + Sync>;
+
+/// The production classifier: AOT sentiment model through PJRT.
+struct PjrtClassifier {
+    app: SentimentApp,
+    eng: Engine,
+}
+
+impl LiveClassifier for PjrtClassifier {
+    fn classify(&mut self, texts: &[&str]) -> anyhow::Result<Vec<bool>> {
+        let probs = self.app.predict(&mut self.eng, texts)?;
+        Ok(probs.iter().map(|p| *p > 0.5).collect())
+    }
+}
+
+/// Worker rank body: receive weights, build this rank's classifier via
+/// the factory, then serve index batches until shutdown. The spawn
+/// wrapper in [`run_live_with`] reports any `Err` back to rank 0 as a
+/// `tag::ERROR` message so the coordinator fails fast instead of
+/// waiting forever for a RESULT that will never come.
 fn worker_main(
-    mut comm: Communicator,
-    corpus: Arc<Vec<Tweet>>,
-    features: usize,
+    comm: &mut Communicator,
+    corpus: &Arc<Vec<Tweet>>,
+    factory: &WorkerFactory,
 ) -> anyhow::Result<usize> {
-    let mut eng = Engine::load(crate::runtime::default_artifacts_dir())?;
     // weights arrive first
     let weights = loop {
         let p = comm.recv().map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -91,12 +133,7 @@ fn worker_main(
             _ => continue,
         }
     };
-    let (w_raw, b_raw) = weights.split_at(features);
-    let app = SentimentApp::from_weights(
-        features,
-        Tensor::new(vec![features, 1], w_raw.to_vec()),
-        Tensor::new(vec![1], b_raw.to_vec()),
-    );
+    let mut model = factory(comm.rank(), &weights)?;
     let mut served = 0usize;
     // initial ack announces readiness (the pull in "pull-based")
     comm.send(0, tag::RESULT, Vec::new()).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -107,10 +144,10 @@ fn worker_main(
                 let idxs = mpi::decode_u32s(&p.payload).map_err(|e| anyhow::anyhow!("{e}"))?;
                 let texts: Vec<&str> =
                     idxs.iter().map(|&i| corpus[i as usize].text.as_str()).collect();
-                let probs = app.predict(&mut eng, &texts)?;
+                let preds = model.classify(&texts)?;
                 served += idxs.len();
                 // result = one byte per item (the label) + ack semantics
-                let labels: Vec<u8> = probs.iter().map(|p| u8::from(*p > 0.5)).collect();
+                let labels: Vec<u8> = preds.iter().map(|&b| u8::from(b)).collect();
                 let mut payload = mpi::encode_u32s(&idxs);
                 payload.extend_from_slice(&labels);
                 comm.send(0, tag::RESULT, payload).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -236,14 +273,23 @@ fn pump_coordinator(
             send_next_batch(c0, next, cfg, p.src)?;
             Ok(true)
         }
+        Ok(p) if p.tag == tag::ERROR => anyhow::bail!(
+            "worker rank {} failed: {}",
+            p.src,
+            String::from_utf8_lossy(&p.payload)
+        ),
         Ok(_) => Ok(true),
         Err(mpi::MpiError::Timeout) => Ok(false),
         Err(e) => anyhow::bail!("coordinator recv: {e}"),
     }
 }
 
-/// Run the live cluster; requires `make artifacts`.
+/// Run the live cluster with the real AOT sentiment model; requires
+/// `make artifacts`. Trains on the coordinator, then hands the protocol
+/// to [`run_live_with`].
 pub fn run_live(cfg: &LiveConfig) -> anyhow::Result<LiveReport> {
+    // Also checked by run_live_with, but fail fast here — before engine
+    // load, corpus generation and training.
     anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
     let mut eng = Engine::load(crate::runtime::default_artifacts_dir())?;
     let features = eng.manifest.dim("sent_features")? as usize;
@@ -256,18 +302,76 @@ pub fn run_live(cfg: &LiveConfig) -> anyhow::Result<LiveReport> {
     // Train on the coordinator through the AOT SGD step.
     let (app, _losses) = SentimentApp::train(&mut eng, &train, 3, cfg.seed)?;
 
-    // Spawn workers.
+    // Broadcast payload: w ++ b as f32 LE.
+    let mut weights = app.w.data.clone();
+    weights.extend_from_slice(&app.b.data);
+
+    let host: Box<dyn LiveClassifier> = Box::new(PjrtClassifier { app, eng });
+    let factory: WorkerFactory = Arc::new(move |_rank, w: &[f32]| {
+        // Each worker owns its Engine, exactly like each CSD's ISP.
+        let eng = Engine::load(crate::runtime::default_artifacts_dir())?;
+        let (w_raw, b_raw) = w.split_at(features);
+        let app = SentimentApp::from_weights(
+            features,
+            Tensor::new(vec![features, 1], w_raw.to_vec()),
+            Tensor::new(vec![1], b_raw.to_vec()),
+        );
+        Ok(Box::new(PjrtClassifier { app, eng }) as Box<dyn LiveClassifier>)
+    });
+    run_live_with(cfg, serve, weights, host, factory)
+}
+
+/// Run the live protocol — threads, weight broadcast, pull/ack dispatch
+/// in either [`DispatchMode`] — with pluggable classifiers. `serve` is
+/// the serving corpus, `weights` the broadcast payload handed to the
+/// [`WorkerFactory`] on each worker rank, `host` the coordinator's own
+/// classifier.
+pub fn run_live_with(
+    cfg: &LiveConfig,
+    serve: Arc<Vec<Tweet>>,
+    weights: Vec<f32>,
+    mut host: Box<dyn LiveClassifier>,
+    factory: WorkerFactory,
+) -> anyhow::Result<LiveReport> {
+    anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
+    anyhow::ensure!(
+        cfg.batch >= 1,
+        "batch must be >= 1 (a zero batch ping-pongs empty BATCH/RESULT messages forever)"
+    );
+    anyhow::ensure!(serve.len() == cfg.items, "serving corpus size != cfg.items");
+
+    // Spawn workers. A worker that errors reports back over the tunnel
+    // (tag::ERROR) before exiting, so the coordinator loop below can
+    // bail instead of polling forever for the missing RESULT.
     let mut comms = mpi::group(cfg.workers + 1);
     let mut handles = Vec::new();
-    for comm in comms.drain(1..) {
+    for mut comm in comms.drain(1..) {
         let corpus = Arc::clone(&serve);
-        handles.push(std::thread::spawn(move || worker_main(comm, corpus, features)));
+        let factory = Arc::clone(&factory);
+        handles.push(std::thread::spawn(move || {
+            // Catch panics too: an unreported worker death would leave
+            // the coordinator polling forever (rank 0 can never see a
+            // channel disconnect — every rank holds a clone of its
+            // sender).
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                worker_main(&mut comm, &corpus, &factory)
+            }))
+            .unwrap_or_else(|p| {
+                let msg = p
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| p.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "unknown panic".to_string());
+                Err(anyhow::anyhow!("worker panicked: {msg}"))
+            });
+            if let Err(ref e) = res {
+                let _ = comm.send(0, tag::ERROR, e.to_string().into_bytes());
+            }
+            res
+        }));
     }
     let mut c0 = comms.pop().unwrap();
 
-    // Broadcast weights (w ++ b as f32 LE).
-    let mut weights = app.w.data.clone();
-    weights.extend_from_slice(&app.b.data);
     c0.bcast(tag::WEIGHTS, &mpi::encode_f32s(&weights))
         .map_err(|e| anyhow::anyhow!("{e}"))?;
 
@@ -280,6 +384,11 @@ pub fn run_live(cfg: &LiveConfig) -> anyhow::Result<LiveReport> {
     let mut host_items = 0usize;
     let mut worker_items = vec![0usize; cfg.workers];
     let mut correct = 0usize;
+    // The dispatch loop proper, wrapped so an error (host classify
+    // failure, worker ERROR report, protocol violation) still falls
+    // through to the shutdown/join sequence below instead of leaving
+    // worker threads parked on a dead channel.
+    let mut protocol = || -> anyhow::Result<()> {
     while completed < cfg.items {
         if event_driven {
             // Event-driven dispatch: drain every RESULT already queued
@@ -321,24 +430,44 @@ pub fn run_live(cfg: &LiveConfig) -> anyhow::Result<LiveReport> {
             let idxs: Vec<usize> = (next..hi).collect();
             next = hi;
             let texts: Vec<&str> = idxs.iter().map(|&i| serve[i].text.as_str()).collect();
-            let probs = app.predict(&mut eng, &texts)?;
+            let preds = host.classify(&texts)?;
             for (k, &idx) in idxs.iter().enumerate() {
                 anyhow::ensure!(!done[idx], "item {idx} served twice");
                 done[idx] = true;
                 completed += 1;
                 host_items += 1;
-                if (probs[k] > 0.5) == serve[idx].positive {
+                if preds[k] == serve[idx].positive {
                     correct += 1;
                 }
             }
         }
     }
+    Ok(())
+    };
+    let protocol_result = protocol();
     let wall = t0.elapsed().as_secs_f64();
-    c0.bcast(tag::SHUTDOWN, &[]).map_err(|e| anyhow::anyhow!("{e}"))?;
-    for h in handles {
-        h.join().expect("worker panicked")?;
+    // Best-effort per-rank shutdown (a bcast would abort at the first
+    // already-exited worker's closed channel, stranding the rest), then
+    // join everyone: live workers exit on SHUTDOWN, failed workers have
+    // already returned their Err.
+    for dst in 1..=cfg.workers {
+        let _ = c0.send(dst, tag::SHUTDOWN, Vec::new());
+    }
+    let worker_results: Vec<anyhow::Result<usize>> =
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
+    // The coordinator's own error wins (it names the failing rank when a
+    // worker reported in); otherwise surface the first worker error.
+    protocol_result?;
+    for r in worker_results {
+        r?;
     }
     let (sent, received) = c0.stats();
+    let processed_indices: Vec<u32> = done
+        .iter()
+        .enumerate()
+        .filter(|(_, &d)| d)
+        .map(|(i, _)| i as u32)
+        .collect();
     Ok(LiveReport {
         items: cfg.items,
         wall_secs: wall,
@@ -347,6 +476,7 @@ pub fn run_live(cfg: &LiveConfig) -> anyhow::Result<LiveReport> {
         worker_items,
         accuracy: correct as f64 / cfg.items as f64,
         messages: sent + received,
+        processed_indices,
     })
 }
 

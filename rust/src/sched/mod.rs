@@ -233,6 +233,50 @@ impl RunReport {
         }
         self.csd_items as f64 / self.total_items as f64
     }
+
+    /// Field-by-field bit-identity of everything a run *means*: every
+    /// field except the event-count diagnostics (`events_executed`,
+    /// `wake_events`), which wake coalescing changes on purpose, and the
+    /// `dispatch` label, which names the mode rather than the outcome.
+    /// Floats are compared on their bit patterns, not with a tolerance.
+    /// Returns the first differing field. Used by the wake-coalescing
+    /// property test here and by the fleet layer's 1-server-fleet ≡
+    /// direct-run property ([`crate::cluster::fleet`]).
+    pub fn check_bit_identical(&self, other: &RunReport) -> Result<(), String> {
+        fn f64_eq(name: &str, x: f64, y: f64) -> Result<(), String> {
+            if x.to_bits() == y.to_bits() {
+                Ok(())
+            } else {
+                Err(format!("{name}: {x:?} != {y:?} (bitwise)"))
+            }
+        }
+        fn eq<T: PartialEq + std::fmt::Debug>(name: &str, x: T, y: T) -> Result<(), String> {
+            if x == y {
+                Ok(())
+            } else {
+                Err(format!("{name}: {x:?} != {y:?}"))
+            }
+        }
+        eq("app", self.app, other.app)?;
+        eq("total_items", self.total_items, other.total_items)?;
+        f64_eq("makespan_secs", self.makespan_secs, other.makespan_secs)?;
+        f64_eq("items_per_sec", self.items_per_sec, other.items_per_sec)?;
+        f64_eq("words_per_sec", self.words_per_sec, other.words_per_sec)?;
+        eq("host_items", self.host_items, other.host_items)?;
+        eq("csd_items", self.csd_items, other.csd_items)?;
+        eq("pcie_bytes", self.pcie_bytes, other.pcie_bytes)?;
+        eq("isp_bytes", self.isp_bytes, other.isp_bytes)?;
+        eq("tunnel_messages", self.tunnel_messages, other.tunnel_messages)?;
+        f64_eq("energy_j", self.energy_j, other.energy_j)?;
+        f64_eq("avg_power_w", self.avg_power_w, other.avg_power_w)?;
+        f64_eq("energy_per_item_j", self.energy_per_item_j, other.energy_per_item_j)?;
+        f64_eq("host_busy_secs", self.host_busy_secs, other.host_busy_secs)?;
+        f64_eq("isp_busy_secs", self.isp_busy_secs, other.isp_busy_secs)?;
+        f64_eq("mean_batch_latency", self.mean_batch_latency, other.mean_batch_latency)?;
+        eq("host_batches", self.host_batches, other.host_batches)?;
+        eq("csd_batches", self.csd_batches, other.csd_batches)?;
+        Ok(())
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -689,35 +733,11 @@ mod tests {
         run(&model, &cfg, &PowerModel::default(), &mut m).unwrap()
     }
 
-    /// Field-by-field bit-identity of everything a run *means* — i.e.
-    /// every `RunReport` field except the event-count diagnostics, which
-    /// coalescing changes on purpose.
+    /// Field-by-field bit-identity of everything a run *means* — see
+    /// [`RunReport::check_bit_identical`] (shared with the fleet layer's
+    /// 1-server property test).
     fn check_reports_bit_identical(a: &RunReport, b: &RunReport) -> Result<(), String> {
-        fn f64_eq(name: &str, x: f64, y: f64) -> Result<(), String> {
-            check(
-                x.to_bits() == y.to_bits(),
-                format!("{name}: {x:?} != {y:?} (bitwise)"),
-            )
-        }
-        check(a.app == b.app, "app")?;
-        check(a.total_items == b.total_items, "total_items")?;
-        f64_eq("makespan_secs", a.makespan_secs, b.makespan_secs)?;
-        f64_eq("items_per_sec", a.items_per_sec, b.items_per_sec)?;
-        f64_eq("words_per_sec", a.words_per_sec, b.words_per_sec)?;
-        check(a.host_items == b.host_items, "host_items")?;
-        check(a.csd_items == b.csd_items, "csd_items")?;
-        check(a.pcie_bytes == b.pcie_bytes, "pcie_bytes")?;
-        check(a.isp_bytes == b.isp_bytes, "isp_bytes")?;
-        check(a.tunnel_messages == b.tunnel_messages, "tunnel_messages")?;
-        f64_eq("energy_j", a.energy_j, b.energy_j)?;
-        f64_eq("avg_power_w", a.avg_power_w, b.avg_power_w)?;
-        f64_eq("energy_per_item_j", a.energy_per_item_j, b.energy_per_item_j)?;
-        f64_eq("host_busy_secs", a.host_busy_secs, b.host_busy_secs)?;
-        f64_eq("isp_busy_secs", a.isp_busy_secs, b.isp_busy_secs)?;
-        f64_eq("mean_batch_latency", a.mean_batch_latency, b.mean_batch_latency)?;
-        check(a.host_batches == b.host_batches, "host_batches")?;
-        check(a.csd_batches == b.csd_batches, "csd_batches")?;
-        Ok(())
+        a.check_bit_identical(b)
     }
 
     #[test]

@@ -1,0 +1,225 @@
+//! Golden-table regression net (ISSUE-3 satellite): every experiment
+//! table the repo emits — Fig 5 × 3 apps, Fig 6, Fig 7, Table I, the
+//! power breakdown, ablations A1–A4, and the new Fig 8 fleet sweep — is
+//! serialized at `--scale 0.01` and diffed **cell-by-cell** against a
+//! committed snapshot under `tests/golden/`. The comparison is an exact
+//! string match on the tables' fixed-precision formatting, so any
+//! single-cell perturbation (a float op reordered, a counter off by
+//! one, a format width change) trips the net.
+//!
+//! Workflow:
+//!
+//! * **normal run** — every table must match its `tests/golden/*.golden`
+//!   snapshot; a mismatch panics with the exact (row, column) and both
+//!   cell values, and drops the fresh rendering in
+//!   `target/golden-diffs/` for CI to upload.
+//! * **`SOLANA_UPDATE_GOLDEN=1 cargo test --test golden_tables`** —
+//!   regenerate every snapshot in place (then commit the diff).
+//! * **bootstrap** — a snapshot that does not exist yet is written and
+//!   reported (not failed), so the first toolchain-equipped run after a
+//!   table is added produces the files to commit. A clean checkout with
+//!   committed goldens never takes this path.
+//!
+//! Tables are deterministic by construction: every sweep runs on the
+//! deterministic [`exp::pool`] (input-order results, thread count only
+//! changes wall-clock) over a virtual-time simulator.
+
+use std::fs;
+use std::path::PathBuf;
+
+use solana_isp::exp::{self, Scale};
+use solana_isp::metrics::Table;
+use solana_isp::workloads::App;
+
+/// All goldens are pinned at 1% of the paper's dataset sizes: big
+/// enough to exercise every code path (multi-batch runs, fair tails,
+/// coalescing), small enough that the full net regenerates in seconds.
+const SCALE: Scale = Scale(0.01);
+
+fn golden_dir() -> PathBuf {
+    // Anchored to the package root, not the cwd — `cargo test` runs
+    // integration tests from the package dir but this stays correct
+    // from the workspace root too.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+fn diff_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target").join("golden-diffs")
+}
+
+/// Snapshot format: a `#`-prefixed title line, then the table's CSV
+/// (headers + rows) with every cell's exact formatted string.
+fn serialize(t: &Table) -> String {
+    format!("# {}\n{}", t.title, t.to_csv())
+}
+
+/// Cell-by-cell comparison; returns the first difference with its
+/// coordinates ("line" counts the title as line 0, headers as line 1).
+fn diff_tables(name: &str, golden: &str, fresh: &str) -> Result<(), String> {
+    let g: Vec<&str> = golden.lines().collect();
+    let f: Vec<&str> = fresh.lines().collect();
+    if g.len() != f.len() {
+        return Err(format!(
+            "{name}: line count changed: golden {} vs fresh {}",
+            g.len(),
+            f.len()
+        ));
+    }
+    for (line_no, (gl, fl)) in g.iter().zip(&f).enumerate() {
+        if gl == fl {
+            continue;
+        }
+        let gc: Vec<&str> = gl.split(',').collect();
+        let fc: Vec<&str> = fl.split(',').collect();
+        if gc.len() != fc.len() {
+            return Err(format!(
+                "{name} line {line_no}: column count changed: golden {} vs fresh {}",
+                gc.len(),
+                fc.len()
+            ));
+        }
+        // Unequal lines must differ in some cell (cells joined by ','
+        // reproduce the line), so this loop always returns.
+        for (col, (gcell, fcell)) in gc.iter().zip(&fc).enumerate() {
+            if gcell != fcell {
+                return Err(format!(
+                    "{name} line {line_no} col {col}: golden '{gcell}' != fresh '{fcell}'"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Check one table against its snapshot (or write it, per the module
+/// docs' workflow).
+fn check_table(name: &str, table: &Table) {
+    let fresh = serialize(table);
+    let dir = golden_dir();
+    let path = dir.join(format!("{name}.golden"));
+    let update = std::env::var("SOLANA_UPDATE_GOLDEN").ok().as_deref() == Some("1");
+    if update || !path.exists() {
+        // Tamper-evidence: once baselines are committed, CI sets
+        // SOLANA_REQUIRE_GOLDEN=1 so a deleted/renamed snapshot (or a
+        // typo'd table name) fails instead of silently re-bootstrapping
+        // and disabling that table's net forever.
+        let strict = std::env::var("SOLANA_REQUIRE_GOLDEN").ok().as_deref() == Some("1");
+        if !update && strict {
+            panic!(
+                "golden snapshot missing: {} (SOLANA_REQUIRE_GOLDEN=1 forbids bootstrap; use SOLANA_UPDATE_GOLDEN=1 to regenerate deliberately)",
+                path.display()
+            );
+        }
+        fs::create_dir_all(&dir).expect("create tests/golden");
+        fs::write(&path, &fresh).expect("write golden snapshot");
+        if !update {
+            eprintln!(
+                "golden: bootstrapped {} — commit it to pin this table",
+                path.display()
+            );
+        }
+        return;
+    }
+    let golden = fs::read_to_string(&path).expect("read golden snapshot");
+    if let Err(msg) = diff_tables(name, &golden, &fresh) {
+        let dd = diff_dir();
+        fs::create_dir_all(&dd).expect("create golden-diffs");
+        fs::write(dd.join(format!("{name}.fresh")), &fresh).expect("write fresh copy");
+        panic!(
+            "golden table drift: {msg}\nfresh copy: {}/{name}.fresh\naccept with: SOLANA_UPDATE_GOLDEN=1 cargo test --test golden_tables",
+            dd.display()
+        );
+    }
+}
+
+// ---- one test per table: independent failures, parallel runs ---------
+
+#[test]
+fn golden_fig5a_speech() {
+    check_table("fig5a_speech", &exp::fig5(App::SpeechToText, SCALE).unwrap());
+}
+
+#[test]
+fn golden_fig5b_recommender() {
+    check_table("fig5b_recommender", &exp::fig5(App::Recommender, SCALE).unwrap());
+}
+
+#[test]
+fn golden_fig5c_sentiment() {
+    check_table("fig5c_sentiment", &exp::fig5(App::Sentiment, SCALE).unwrap());
+}
+
+#[test]
+fn golden_fig6() {
+    check_table("fig6", &exp::fig6(SCALE).unwrap());
+}
+
+#[test]
+fn golden_fig7() {
+    check_table("fig7", &exp::fig7(SCALE).unwrap());
+}
+
+#[test]
+fn golden_table1() {
+    check_table("table1", &exp::table1(SCALE).unwrap());
+}
+
+#[test]
+fn golden_power_breakdown() {
+    check_table("power", &exp::power_breakdown());
+}
+
+#[test]
+fn golden_a1_batch_ratio() {
+    check_table("a1_batch_ratio", &exp::ablate_batch_ratio(App::Sentiment, SCALE).unwrap());
+}
+
+#[test]
+fn golden_a2_datapath() {
+    check_table("a2_datapath", &exp::ablate_datapath(App::Sentiment, SCALE).unwrap());
+}
+
+#[test]
+fn golden_a3_wakeup() {
+    check_table("a3_wakeup", &exp::ablate_wakeup(App::Sentiment, SCALE).unwrap());
+}
+
+#[test]
+fn golden_a4_dispatch() {
+    check_table("a4_dispatch", &exp::ablate_dispatch(App::SpeechToText, SCALE).unwrap());
+}
+
+#[test]
+fn golden_fig8_scaleout() {
+    check_table("fig8", &exp::fig8_scaleout(SCALE).unwrap());
+}
+
+// ---- the net itself is tested: a single-cell change must trip --------
+
+#[test]
+fn harness_catches_any_single_cell_perturbation() {
+    let t = exp::power_breakdown();
+    let golden = serialize(&t);
+    // Perturb every cell in turn; the diff must locate each one.
+    let lines: Vec<&str> = golden.lines().collect();
+    for (line_no, line) in lines.iter().enumerate().skip(1) {
+        let ncells = line.split(',').count();
+        for col in 0..ncells {
+            let mut cells: Vec<String> =
+                line.split(',').map(|c| c.to_string()).collect();
+            cells[col].push('~');
+            let mut perturbed: Vec<String> =
+                lines.iter().map(|l| l.to_string()).collect();
+            perturbed[line_no] = cells.join(",");
+            let fresh = perturbed.join("\n");
+            let err = diff_tables("power", &golden, &fresh)
+                .expect_err("perturbed cell must be caught");
+            assert!(
+                err.contains(&format!("line {line_no}")),
+                "diff should name line {line_no}: {err}"
+            );
+        }
+    }
+    // and an identical rendering passes
+    diff_tables("power", &golden, &golden).unwrap();
+}

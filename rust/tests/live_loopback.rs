@@ -1,0 +1,112 @@
+//! Live-mode loopback integration test (ISSUE-3 satellite): drive
+//! `sched::live` end-to-end — real OS threads, real in-process loopback
+//! `Communicator`s, the full WEIGHTS/BATCH/RESULT/SHUTDOWN protocol — in
+//! both dispatch modes, without PJRT artifacts. A deterministic oracle
+//! classifier stands in for the AOT model, so the assertions are about
+//! the *protocol*: every item served exactly once, and both modes agree
+//! on the processed index set.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use solana_isp::nlp::corpus::{Tweet, TweetCorpus};
+use solana_isp::sched::live::{run_live_with, LiveClassifier, LiveConfig, LiveReport, WorkerFactory};
+use solana_isp::sched::DispatchMode;
+
+const ITEMS: usize = 1_024;
+const SEED: u64 = 9;
+
+/// Deterministic stand-in for the AOT model: classifies by looking the
+/// text up in the ground-truth label map, so accuracy doubles as a
+/// payload-integrity check (a misrouted index/label pair shows up as a
+/// wrong answer).
+struct OracleClassifier {
+    labels: Arc<HashMap<String, bool>>,
+}
+
+impl LiveClassifier for OracleClassifier {
+    fn classify(&mut self, texts: &[&str]) -> anyhow::Result<Vec<bool>> {
+        texts
+            .iter()
+            .map(|t| {
+                self.labels
+                    .get(*t)
+                    .copied()
+                    .ok_or_else(|| anyhow::anyhow!("classifier saw a text outside the corpus"))
+            })
+            .collect()
+    }
+}
+
+fn run_mode(dispatch: DispatchMode) -> LiveReport {
+    let serve: Arc<Vec<Tweet>> = Arc::new(TweetCorpus::new(SEED).take(ITEMS));
+    let labels: Arc<HashMap<String, bool>> =
+        Arc::new(serve.iter().map(|t| (t.text.clone(), t.positive)).collect());
+    let cfg = LiveConfig {
+        workers: 3,
+        batch: 16,
+        ratio: 4,
+        items: ITEMS,
+        wakeup: Duration::from_millis(20),
+        train_items: 0, // unused: run_live_with takes the corpus directly
+        dispatch,
+        seed: SEED,
+    };
+    let host = Box::new(OracleClassifier { labels: Arc::clone(&labels) });
+    let factory: WorkerFactory = Arc::new(move |_rank, _weights: &[f32]| {
+        Ok(Box::new(OracleClassifier { labels: Arc::clone(&labels) }) as Box<dyn LiveClassifier>)
+    });
+    run_live_with(&cfg, serve, vec![0.0; 8], host, factory).expect("live protocol run")
+}
+
+fn check_conservation(mode: &str, r: &LiveReport) {
+    assert_eq!(r.items, ITEMS, "{mode}: item count");
+    let worker_total: usize = r.worker_items.iter().sum();
+    assert_eq!(
+        r.host_items + worker_total,
+        ITEMS,
+        "{mode}: host {} + workers {worker_total} must cover every item exactly once",
+        r.host_items
+    );
+    // Not redundant with the counter check above: processed_indices is
+    // derived from the done[] array, host/worker_items from separate
+    // counters — a bug that tallies without marking (or vice versa)
+    // trips exactly one of the two. The *set contents* are asserted
+    // once, cross-mode, in the test body, so that comparison stays
+    // load-bearing.
+    assert_eq!(
+        r.processed_indices.len(),
+        ITEMS,
+        "{mode}: done[] marks must match the {ITEMS}-item corpus"
+    );
+    // The oracle is exact on corpus texts, so anything below 100%
+    // means the protocol misrouted an index/label pair. (Duplicate
+    // random tweet texts could in principle collide in the label map;
+    // with same-text collisions the labels still agree or the corpus
+    // seed would need changing — keep a hair of slack.)
+    assert!(r.accuracy > 0.99, "{mode}: accuracy {} (payload misrouting?)", r.accuracy);
+    assert!(r.messages > 0, "{mode}: tunnel carried protocol traffic");
+    assert!(r.wall_secs > 0.0 && r.items_per_sec > 0.0, "{mode}: sane wall-clock report");
+}
+
+#[test]
+fn live_loopback_both_modes_conserve_and_agree() {
+    // One protocol run per dispatch mode: each must conserve (every
+    // index exactly once, oracle accuracy = payload routing intact),
+    // and the two modes — which hand out batches on different clocks —
+    // must agree on the processed index set.
+    let poll = run_mode(DispatchMode::Polling);
+    check_conservation("polling", &poll);
+    let event = run_mode(DispatchMode::EventDriven);
+    check_conservation("event-driven", &event);
+    assert_eq!(
+        poll.processed_indices,
+        (0..ITEMS as u32).collect::<Vec<u32>>(),
+        "polling covers every serving index exactly once"
+    );
+    assert_eq!(
+        poll.processed_indices, event.processed_indices,
+        "dispatch modes disagree on the processed index set"
+    );
+}
