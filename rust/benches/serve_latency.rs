@@ -1,0 +1,28 @@
+//! `cargo bench --bench serve_latency` — regenerates Fig 9: per-request
+//! serving latency vs offered load across fleet shapes (the ISSUE-4
+//! tentpole). See `traffic` for the serving frontend and `exp` for the
+//! sweep definition.
+//!
+//! Scale with `SOLANA_BENCH_FAST=1` (5%) or default 25% of the paper's
+//! dataset sizes; the *shape* (flat latency below the knee, blowup past
+//! it, all-CSD sustaining ~2.5× the all-SSD rate under the SLO) is
+//! scale-invariant — only the tail resolution improves with more
+//! requests.
+
+use solana_isp::bench_support::Bencher;
+use solana_isp::exp::{self, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::from_env();
+    let table = exp::fig9_latency(scale)?;
+    exp::emit(&table, "fig9")?;
+    // Wall-time of regenerating the artifact (simulator throughput):
+    let mut b = Bencher::new(0, if std::env::var("SOLANA_BENCH_FAST").is_ok() { 1 } else { 2 });
+    b.bench("fig9_serve_latency", || {
+        let t = exp::fig9_latency(scale).expect("rerun");
+        t.rows.len() as u64
+    });
+    print!("{}", b.report());
+    b.write_json("serve_latency")?;
+    Ok(())
+}

@@ -101,6 +101,11 @@ pub struct FleetConfig {
     pub rack_bandwidth: f64,
     /// Per-message overhead on the rack link (s).
     pub rack_msg_overhead: f64,
+    /// Heterogeneous capacity weights, one per server (`[fleet]
+    /// weights = [..]` / `solana fleet --weights`). `None` (default)
+    /// weighs every server by its drive census, today's homogeneous
+    /// behavior. Must have exactly `servers` positive entries.
+    pub weights: Option<Vec<u64>>,
 }
 
 impl Default for FleetConfig {
@@ -111,12 +116,17 @@ impl Default for FleetConfig {
             sched: SchedConfig::default(),
             rack_bandwidth: crate::interconnect::RACK_BANDWIDTH,
             rack_msg_overhead: crate::interconnect::RACK_MSG_OVERHEAD,
+            weights: None,
         }
     }
 }
 
 impl FleetConfig {
-    /// Resolve the per-server specs this fleet shape implies.
+    /// Resolve the per-server specs this fleet shape implies. Capacity
+    /// weights come from the explicit `weights` override when present
+    /// (heterogeneous fleets), else every server weighs its drive
+    /// census. Use [`FleetConfig::validate_weights`] first when the
+    /// config came from user input.
     pub fn server_specs(&self) -> Vec<ServerSpec> {
         (0..self.servers)
             .map(|i| {
@@ -129,9 +139,42 @@ impl FleetConfig {
                 if !csd {
                     sched.isp_drives = 0;
                 }
-                ServerSpec { index: i, sched, weight: self.sched.drives as u64 }
+                let weight = match &self.weights {
+                    Some(w) => {
+                        // The `weights` invariant (one positive entry
+                        // per server) is checked by `validate_weights`
+                        // on every config-driven path; a library caller
+                        // that skips it must not get silently-padded
+                        // weights.
+                        assert_eq!(
+                            w.len(),
+                            self.servers,
+                            "fleet.weights has {} entries for {} servers (call validate_weights)",
+                            w.len(),
+                            self.servers
+                        );
+                        w[i]
+                    }
+                    None => self.sched.drives as u64,
+                };
+                ServerSpec { index: i, sched, weight }
             })
             .collect()
+    }
+
+    /// Check an explicit weight vector against the fleet: exactly one
+    /// positive weight per server.
+    pub fn validate_weights(&self) -> anyhow::Result<()> {
+        if let Some(w) = &self.weights {
+            anyhow::ensure!(
+                w.len() == self.servers,
+                "fleet.weights has {} entries for {} servers",
+                w.len(),
+                self.servers
+            );
+            anyhow::ensure!(w.iter().all(|&x| x > 0), "fleet.weights must all be positive");
+        }
+        Ok(())
     }
 }
 
@@ -218,6 +261,7 @@ pub fn run_fleet(
         "rack_msg_overhead must be non-negative and finite, got {}",
         cfg.rack_msg_overhead
     );
+    cfg.validate_weights()?;
     let specs = cfg.server_specs();
     let weights: Vec<u64> = specs.iter().map(|s| s.weight).collect();
     let shards = shard_by_weight(items, &weights);
@@ -347,6 +391,66 @@ mod tests {
         let cfg = FleetConfig { servers: 0, ..FleetConfig::default() };
         let mut m = Metrics::new();
         assert!(run_fleet(App::Sentiment, 100, &cfg, &PowerModel::default(), &mut m).is_err());
+    }
+
+    #[test]
+    fn explicit_weights_feed_server_specs_and_sharding() {
+        // The ISSUE-4 satellite: `[fleet] weights = [..]` overrides the
+        // drive-census default, and the corpus shards proportionally.
+        let cfg = FleetConfig {
+            servers: 3,
+            weights: Some(vec![3, 1, 2]),
+            sched: SchedConfig { csd_batch: 2_000, ..SchedConfig::default() },
+            ..FleetConfig::default()
+        };
+        let specs = cfg.server_specs();
+        assert_eq!(specs.iter().map(|s| s.weight).collect::<Vec<_>>(), vec![3, 1, 2]);
+        let r = fleet(App::Sentiment, 60_000, &cfg);
+        assert_eq!(r.per_server[0].total_items, 30_000);
+        assert_eq!(r.per_server[1].total_items, 10_000);
+        assert_eq!(r.per_server[2].total_items, 20_000);
+        assert_eq!(r.host_items + r.csd_items, 60_000);
+        // Default (no weights): drive census everywhere.
+        let homog = FleetConfig { servers: 3, ..FleetConfig::default() };
+        for s in homog.server_specs() {
+            assert_eq!(s.weight, SchedConfig::default().drives as u64);
+        }
+    }
+
+    #[test]
+    fn bad_weight_vectors_rejected() {
+        let mut m = Metrics::new();
+        let wrong_len = FleetConfig { servers: 2, weights: Some(vec![1]), ..FleetConfig::default() };
+        assert!(run_fleet(App::Sentiment, 100, &wrong_len, &PowerModel::default(), &mut m).is_err());
+        let zero = FleetConfig { servers: 2, weights: Some(vec![1, 0]), ..FleetConfig::default() };
+        assert!(run_fleet(App::Sentiment, 100, &zero, &PowerModel::default(), &mut m).is_err());
+    }
+
+    #[test]
+    fn property_shard_by_weight_conserves_over_uneven_weights() {
+        // The ISSUE-4 satellite: for any positive weight vector and any
+        // corpus size, the weighted shards sum to the corpus exactly and
+        // each shard is within one quantum of its proportional share.
+        forall("weighted sharding conservation", 50, |g| {
+            let n = g.usize(1..=12);
+            let weights: Vec<u64> = (0..n).map(|_| g.u64(1..=10_000)).collect();
+            let items = g.u64(0..=50_000_000);
+            let shards = shard_by_weight(items, &weights);
+            check(shards.len() == n, format!("len {} != {n}", shards.len()))?;
+            check(
+                shards.iter().sum::<u64>() == items,
+                format!("weights {weights:?} items {items}: sum {} != {items}", shards.iter().sum::<u64>()),
+            )?;
+            let total: u64 = weights.iter().sum();
+            for (i, (&s, &w)) in shards.iter().zip(&weights).enumerate() {
+                let exact = items as f64 * w as f64 / total as f64;
+                check(
+                    (s as f64 - exact).abs() <= 1.0,
+                    format!("shard {i} = {s} vs exact {exact:.2} (weights {weights:?}, items {items})"),
+                )?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -23,6 +23,21 @@
 //! shape = "mixed"          # all-csd | all-ssd | mixed
 //! rack_bandwidth = 1.25e9  # top-of-rack link, bytes/s
 //! rack_msg_overhead_s = 50e-6
+//! weights = [36, 12, 36, 12]  # heterogeneous capacity weights (one per server)
+//!
+//! [traffic]
+//! process = "poisson"      # poisson | bursty | closed — see traffic::ArrivalProcess
+//! load = 0.7               # offered load, fraction of fleet nominal capacity
+//! rate_rps = 5000.0        # absolute offered rate (overrides load)
+//! requests = 20000
+//! min_batch = 1            # batch formation: dispatch at this size ...
+//! batch_timeout_s = 0.05   # ... or when the oldest request waited this long
+//! clients = 64             # closed loop: concurrent clients
+//! think_s = 1.0            # closed loop: mean think time
+//! burstiness = 4.0         # bursty: peak/mean rate ratio
+//! burst_on_s = 1.0         # bursty: mean ON-window length
+//! policy = "jsq"           # rr | weighted | jsq — front-door balancer
+//! slo_p99_s = 2.5          # p99 SLO (default: 4x the CSD batch service time)
 //! ```
 
 use std::path::Path;
@@ -31,6 +46,7 @@ use crate::cluster::fleet::{FleetConfig, FleetShape};
 use crate::codec::toml::TomlTable;
 use crate::power::PowerModel;
 use crate::sched::{DispatchMode, SchedConfig};
+use crate::traffic::{parse_policy, parse_process, TrafficConfig};
 use crate::workloads::App;
 
 /// A full experiment description.
@@ -46,10 +62,14 @@ pub struct ExperimentConfig {
     /// sync with [`ExperimentConfig::sched`], so `solana fleet` sees the
     /// same per-server scheduler the single-server commands use.
     pub fleet: FleetConfig,
-    /// Whether the file explicitly set sched.csd_batch / batch_ratio
-    /// (CLI precedence: flag > file > per-app default).
+    /// Serving-traffic settings (`[traffic]`), consumed by
+    /// `solana serve` and the Fig 9 experiment.
+    pub traffic: TrafficConfig,
+    /// Whether the file explicitly set sched.csd_batch / batch_ratio /
+    /// traffic.requests (CLI precedence: flag > file > per-app default).
     pub batch_explicit: bool,
     pub ratio_explicit: bool,
+    pub requests_explicit: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -61,8 +81,10 @@ impl Default for ExperimentConfig {
             sched: SchedConfig::default(),
             power: PowerModel::default(),
             fleet: FleetConfig::default(),
+            traffic: TrafficConfig::default(),
             batch_explicit: false,
             ratio_explicit: false,
+            requests_explicit: false,
         }
     }
 }
@@ -79,6 +101,7 @@ impl ExperimentConfig {
         if let Some(v) = t.u64("seed") {
             cfg.seed = v;
             cfg.sched.seed = v;
+            cfg.traffic.seed = v;
         }
         if let Some(v) = t.f64("scale") {
             anyhow::ensure!(v > 0.0 && v <= 1.0, "scale must be in (0, 1]");
@@ -142,6 +165,67 @@ impl ExperimentConfig {
         if let Some(v) = t.f64("fleet.rack_msg_overhead_s") {
             anyhow::ensure!(v >= 0.0, "fleet.rack_msg_overhead_s must be non-negative");
             cfg.fleet.rack_msg_overhead = v;
+        }
+        if let Some(v) = t.get("fleet.weights") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("fleet.weights must be an array of integers"))?;
+            let mut weights = Vec::with_capacity(arr.len());
+            for x in arr {
+                let w = x
+                    .as_i64()
+                    .filter(|&w| w > 0)
+                    .ok_or_else(|| anyhow::anyhow!("fleet.weights entries must be positive integers"))?;
+                weights.push(w as u64);
+            }
+            cfg.fleet.weights = Some(weights);
+        }
+        if let Some(v) = t.str("traffic.process") {
+            cfg.traffic.process = parse_process(v)?;
+        }
+        if let Some(v) = t.f64("traffic.load") {
+            anyhow::ensure!(v > 0.0 && v.is_finite(), "traffic.load must be positive");
+            cfg.traffic.load = v;
+        }
+        if let Some(v) = t.f64("traffic.rate_rps") {
+            anyhow::ensure!(v > 0.0 && v.is_finite(), "traffic.rate_rps must be positive");
+            cfg.traffic.rate_rps = Some(v);
+        }
+        if let Some(v) = t.u64("traffic.requests") {
+            anyhow::ensure!(v >= 1, "traffic.requests must be >= 1");
+            cfg.traffic.requests = v;
+            cfg.requests_explicit = true;
+        }
+        if let Some(v) = t.u64("traffic.min_batch") {
+            anyhow::ensure!(v >= 1, "traffic.min_batch must be >= 1");
+            cfg.traffic.min_batch = v;
+        }
+        if let Some(v) = t.f64("traffic.batch_timeout_s") {
+            anyhow::ensure!(v >= 0.0 && v.is_finite(), "traffic.batch_timeout_s must be non-negative");
+            cfg.traffic.batch_timeout_s = v;
+        }
+        if let Some(v) = t.u64("traffic.clients") {
+            anyhow::ensure!(v >= 1, "traffic.clients must be >= 1");
+            cfg.traffic.clients = v as usize;
+        }
+        if let Some(v) = t.f64("traffic.think_s") {
+            anyhow::ensure!(v > 0.0 && v.is_finite(), "traffic.think_s must be positive");
+            cfg.traffic.think_s = v;
+        }
+        if let Some(v) = t.f64("traffic.burstiness") {
+            anyhow::ensure!(v >= 1.0 && v.is_finite(), "traffic.burstiness must be >= 1");
+            cfg.traffic.burstiness = v;
+        }
+        if let Some(v) = t.f64("traffic.burst_on_s") {
+            anyhow::ensure!(v > 0.0 && v.is_finite(), "traffic.burst_on_s must be positive");
+            cfg.traffic.burst_on_s = v;
+        }
+        if let Some(v) = t.str("traffic.policy") {
+            cfg.traffic.policy = parse_policy(v)?;
+        }
+        if let Some(v) = t.f64("traffic.slo_p99_s") {
+            anyhow::ensure!(v > 0.0 && v.is_finite(), "traffic.slo_p99_s must be positive");
+            cfg.traffic.slo_p99_s = Some(v);
         }
         anyhow::ensure!(
             cfg.sched.isp_drives <= cfg.sched.drives,
@@ -273,6 +357,54 @@ mod tests {
         assert!(ExperimentConfig::from_toml("[fleet]\nshape = \"pyramid\"").is_err());
         assert!(ExperimentConfig::from_toml("[fleet]\nrack_bandwidth = -1.0").is_err());
         assert!(ExperimentConfig::from_toml("[fleet]\nrack_msg_overhead_s = -0.1").is_err());
+    }
+
+    #[test]
+    fn traffic_section_parses_and_validates() {
+        use crate::traffic::{ArrivalProcess, LbPolicy};
+        let c = ExperimentConfig::from_toml(
+            "seed = 11\n[traffic]\nprocess = \"bursty\"\nload = 0.8\nrequests = 5000\nmin_batch = 32\nbatch_timeout_s = 0.02\nburstiness = 6.0\npolicy = \"weighted\"\nslo_p99_s = 1.5\n",
+        )
+        .unwrap();
+        assert_eq!(c.traffic.process, ArrivalProcess::Bursty);
+        assert_eq!(c.traffic.load, 0.8);
+        assert_eq!(c.traffic.requests, 5000);
+        assert_eq!(c.traffic.min_batch, 32);
+        assert_eq!(c.traffic.batch_timeout_s, 0.02);
+        assert_eq!(c.traffic.burstiness, 6.0);
+        assert_eq!(c.traffic.policy, LbPolicy::WeightedCapacity);
+        assert_eq!(c.traffic.slo_p99_s, Some(1.5));
+        assert_eq!(c.traffic.seed, 11, "global seed flows into the traffic seed");
+        // defaults without a [traffic] section
+        let d = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(d.traffic.process, ArrivalProcess::Poisson);
+        assert_eq!(d.traffic.min_batch, 1);
+        assert_eq!(d.traffic.policy, LbPolicy::JoinShortestQueue);
+        assert_eq!(d.traffic.slo_p99_s, None);
+        // validation
+        assert!(ExperimentConfig::from_toml("[traffic]\nload = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml("[traffic]\nprocess = \"psychic\"").is_err());
+        assert!(ExperimentConfig::from_toml("[traffic]\nmin_batch = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[traffic]\npolicy = \"chaos\"").is_err());
+        assert!(ExperimentConfig::from_toml("[traffic]\nburstiness = 0.5").is_err());
+    }
+
+    #[test]
+    fn fleet_weights_parse_and_validate() {
+        let c = ExperimentConfig::from_toml("[fleet]\nservers = 3\nweights = [36, 12, 24]\n")
+            .unwrap();
+        assert_eq!(c.fleet.weights, Some(vec![36, 12, 24]));
+        assert!(c.fleet.validate_weights().is_ok());
+        // no weights key → homogeneous default
+        assert_eq!(ExperimentConfig::from_toml("").unwrap().fleet.weights, None);
+        // bad entries rejected at parse time
+        assert!(ExperimentConfig::from_toml("[fleet]\nweights = [36, 0]").is_err());
+        assert!(ExperimentConfig::from_toml("[fleet]\nweights = [36, -2]").is_err());
+        assert!(ExperimentConfig::from_toml("[fleet]\nweights = \"36\"").is_err());
+        // length mismatch surfaces via validate_weights (servers known later)
+        let mismatch = ExperimentConfig::from_toml("[fleet]\nservers = 2\nweights = [1, 2, 3]\n")
+            .unwrap();
+        assert!(mismatch.fleet.validate_weights().is_err());
     }
 
     #[test]

@@ -4,8 +4,11 @@
 //! solana run   --app sentiment --drives 36 --isp-drives 36 --batch 40000
 //! solana run   --app speech --dispatch event   # off-grid dispatch (A4)
 //! solana fleet --servers 4 --shape all-csd     # multi-server scale-out
+//! solana fleet --servers 2 --weights 36,12     # heterogeneous capacity
+//! solana serve --app sentiment --load 0.7      # online serving, tail latency
+//! solana serve --process closed --clients 64   # closed-loop traffic
 //! solana fig5  --app speech [--scale 0.25] [--threads 8]
-//! solana fig6 | fig7 | fig8 | table1 | power
+//! solana fig6 | fig7 | fig8 | fig9 | table1 | power
 //! solana ablate --which ratio|datapath|wakeup|dispatch --app sentiment
 //! solana version | help
 //! ```
@@ -20,6 +23,7 @@ use crate::config::{parse_app, parse_dispatch, parse_shape, ExperimentConfig};
 use crate::exp::{self, Scale};
 use crate::metrics::Metrics;
 use crate::sched;
+use crate::traffic::{parse_policy, parse_process, serve_fleet, ServeReport};
 use crate::workloads::{App, AppModel};
 
 fn commands() -> Vec<Command> {
@@ -45,8 +49,30 @@ fn commands() -> Vec<Command> {
             .opt("batch", None, "CSD batch size (items)")
             .opt("ratio", None, "host/CSD batch ratio")
             .opt("dispatch", None, "polling|event — per-server dispatch mode")
+            .opt("weights", None, "comma-separated capacity weights, one per server (heterogeneous fleets)")
             .opt("scale", None, "dataset scale vs paper (0..1], default 0.25")
             .flag("json", "emit the fleet report as JSON"),
+        Command::new("serve", "serve online traffic and report tail latency")
+            .opt("app", None, "speech|recommender|sentiment (default: config app or sentiment)")
+            .opt("config", None, "TOML config file ([traffic] + [fleet] + [sched] sections)")
+            .opt("servers", None, "storage servers behind the balancer (default: config [fleet] or 1)")
+            .opt("shape", None, "all-csd|all-ssd|mixed — which servers engage ISPs")
+            .opt("weights", None, "comma-separated capacity weights, one per server")
+            .opt("drives", None, "drive bays per server (default 36)")
+            .opt("isp-drives", None, "ISP-engaged drives per CSD server (default = drives)")
+            .opt("batch", None, "CSD batch size (default: per-app scale-out point)")
+            .opt("ratio", None, "host/CSD batch ratio")
+            .opt("dispatch", None, "polling|event — when batches are handed out")
+            .opt("process", None, "poisson|bursty|closed — arrival process (default poisson)")
+            .opt("load", None, "offered load as a fraction of nominal capacity (default 0.5)")
+            .opt("rate", None, "absolute offered rate, requests/s (overrides --load; open-loop processes only)")
+            .opt("requests", None, "total requests (default: scaled corpus / 4)")
+            .opt("min-batch", None, "batch formation: dispatch at this many queued requests (default 1)")
+            .opt("clients", None, "closed loop: concurrent clients (default 64)")
+            .opt("policy", None, "rr|weighted|jsq — front-door balancer (default jsq)")
+            .opt("scale", None, "dataset scale vs paper (0..1], default 0.25")
+            .flag("baseline", "disable all ISP engines (storage-only)")
+            .flag("json", "emit the serving report as JSON"),
         Command::new("fig5", "regenerate Fig 5 (throughput sweep)")
             .opt("app", Some("speech"), "speech|recommender|sentiment")
             .opt("scale", None, "dataset scale (default 0.25)")
@@ -58,6 +84,9 @@ fn commands() -> Vec<Command> {
             .opt("scale", None, "dataset scale")
             .opt("threads", None, "sweep worker threads"),
         Command::new("fig8", "regenerate Fig 8 (fleet scale-out sweep, 1→8 servers)")
+            .opt("scale", None, "dataset scale")
+            .opt("threads", None, "sweep worker threads"),
+        Command::new("fig9", "regenerate Fig 9 (serving latency vs offered load)")
             .opt("scale", None, "dataset scale")
             .opt("threads", None, "sweep worker threads"),
         Command::new("table1", "regenerate Table I (summary)")
@@ -175,6 +204,10 @@ pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
             if let Some(s) = args.str("shape") {
                 fcfg.shape = parse_shape(s)?;
             }
+            if let Some(w) = args.u64_list("weights")? {
+                fcfg.weights = Some(w);
+            }
+            fcfg.validate_weights()?;
             let items = scale.items(app);
             let mut metrics = Metrics::new();
             let r = run_fleet(app, items, &fcfg, &cfg.power, &mut metrics)?;
@@ -182,6 +215,81 @@ pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
                 println!("{}", fleet_json(&r).to_pretty());
             } else {
                 print_fleet_report(&r);
+            }
+        }
+        "serve" => {
+            let (app, cfg, scale) = resolve_sched_args(&args, exp::scaleout_batch, scale)?;
+            let mut fcfg = cfg.fleet.clone();
+            fcfg.sched = cfg.sched.clone();
+            // Serving defaults to 1 server unless the config/flags say
+            // otherwise (the balancer degenerates, the rack is unused).
+            if let Some(n) = args.u64("servers")? {
+                anyhow::ensure!(n >= 1, "--servers must be >= 1");
+                fcfg.servers = n as usize;
+            }
+            if let Some(s) = args.str("shape") {
+                fcfg.shape = parse_shape(s)?;
+            }
+            if let Some(w) = args.u64_list("weights")? {
+                fcfg.weights = Some(w);
+            }
+            fcfg.validate_weights()?;
+            let mut tcfg = cfg.traffic.clone();
+            if let Some(p) = args.str("process") {
+                tcfg.process = parse_process(p)?;
+            }
+            if let Some(l) = args.f64("load")? {
+                anyhow::ensure!(l > 0.0 && l.is_finite(), "--load must be positive");
+                tcfg.load = l;
+            }
+            if let Some(r) = args.f64("rate")? {
+                anyhow::ensure!(r > 0.0 && r.is_finite(), "--rate must be positive");
+                tcfg.rate_rps = Some(r);
+            }
+            if let Some(n) = args.u64("requests")? {
+                anyhow::ensure!(n >= 1, "--requests must be >= 1");
+                tcfg.requests = n;
+            } else if !cfg.requests_explicit {
+                tcfg.requests = exp::fig9_requests(app, scale);
+            }
+            if let Some(n) = args.u64("min-batch")? {
+                anyhow::ensure!(n >= 1, "--min-batch must be >= 1");
+                tcfg.min_batch = n;
+            }
+            if let Some(n) = args.u64("clients")? {
+                anyhow::ensure!(n >= 1, "--clients must be >= 1");
+                tcfg.clients = n as usize;
+            }
+            if let Some(p) = args.str("policy") {
+                tcfg.policy = parse_policy(p)?;
+            }
+            // An explicit --load is meaningless for a closed loop
+            // (offered rate = clients/think): rejected, not silently
+            // ignored — mirroring serve_fleet's --rate guard.
+            anyhow::ensure!(
+                !(tcfg.process == crate::traffic::ArrivalProcess::ClosedLoop
+                    && args.f64("load")?.is_some()),
+                "--load does not apply to the closed-loop process: its offered rate is \
+                 clients/think_s; drop --load or use an open-loop process"
+            );
+            // p99 SLO: the `[traffic] slo_p99_s` override when present,
+            // else the per-app default (4× the CSD batch service time).
+            let slo = tcfg.slo_p99_s.unwrap_or_else(|| {
+                crate::traffic::default_slo_p99(&AppModel::for_app(app, 1), fcfg.sched.csd_batch)
+            });
+            let mut metrics = Metrics::new();
+            let r = serve_fleet(app, &fcfg, &tcfg, &cfg.power, &mut metrics)?;
+            if args.flag("json") {
+                let mut j = serve_json(&r);
+                j.set("slo_p99_s", slo.into()).set("meets_slo", (r.latency.p99 <= slo).into());
+                println!("{}", j.to_pretty());
+            } else {
+                print_serve_report(&r);
+                println!(
+                    "p99 SLO             {:>14}  [{}]",
+                    crate::util::human_secs(slo),
+                    if r.latency.p99 <= slo { "met" } else { "violated" }
+                );
             }
         }
         "fig5" => {
@@ -196,6 +304,7 @@ pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
         "fig6" => exp::emit(&exp::fig6(scale)?, "fig6")?,
         "fig7" => exp::emit(&exp::fig7(scale)?, "fig7")?,
         "fig8" => exp::emit(&exp::fig8_scaleout(scale)?, "fig8")?,
+        "fig9" => exp::emit(&exp::fig9_latency(scale)?, "fig9")?,
         "table1" => exp::emit(&exp::table1(scale)?, "table1")?,
         "power" => exp::emit(&exp::power_breakdown(), "power")?,
         "ablate" => {
@@ -270,6 +379,86 @@ fn print_fleet_report(r: &FleetReport) {
             crate::util::human_secs(s.makespan_secs)
         );
     }
+}
+
+fn print_serve_report(r: &ServeReport) {
+    println!("== {} serving run ==", r.app);
+    println!("shape               {:>14}", r.shape);
+    println!("servers             {:>14}", r.servers);
+    println!("policy              {:>14}", r.policy);
+    println!("process             {:>14}", r.process);
+    println!("dispatch            {:>14}", r.dispatch);
+    println!("requests            {:>14}", r.requests);
+    println!("offered             {:>11.1} req/s", r.offered_rps);
+    println!("achieved            {:>11.1} req/s", r.achieved_rps);
+    println!("duration            {:>14}", crate::util::human_secs(r.duration_secs));
+    println!("latency mean        {:>14}", crate::util::human_secs(r.latency.mean));
+    println!("        p50         {:>14}", crate::util::human_secs(r.latency.p50));
+    println!("        p95         {:>14}", crate::util::human_secs(r.latency.p95));
+    println!("        p99         {:>14}", crate::util::human_secs(r.latency.p99));
+    println!("        p99.9       {:>14}", crate::util::human_secs(r.latency.p999));
+    println!("        max         {:>14}", crate::util::human_secs(r.latency.max));
+    println!("host/csd items      {:>7} / {}", r.host_items, r.csd_items);
+    println!("csd share           {:>13.1}%", r.csd_share() * 100.0);
+    println!("host/csd batches    {:>7} / {}", r.host_batches, r.csd_batches);
+    println!("rack bytes          {:>14}", crate::util::human_bytes(r.rack_bytes));
+    println!("rack messages       {:>14}", r.rack_messages);
+    println!("energy              {:>11.1} J ({:.4} J/req)", r.energy_j, r.energy_per_req_j);
+    for s in &r.per_server {
+        println!(
+            "  server {:<2} {:>5} {:>9} served  host {:>9}  csd {:>9}",
+            s.index,
+            if s.is_csd { "csd" } else { "ssd" },
+            s.served,
+            s.host_items,
+            s.csd_items
+        );
+    }
+}
+
+fn serve_json(r: &ServeReport) -> crate::codec::json::Json {
+    use crate::codec::json::Json;
+    let mut j = Json::obj();
+    j.set("app", r.app.into())
+        .set("shape", r.shape.into())
+        .set("dispatch", r.dispatch.into())
+        .set("process", r.process.into())
+        .set("policy", r.policy.into())
+        .set("servers", (r.servers as u64).into())
+        .set("requests", r.requests.into())
+        .set("served", r.served.into())
+        .set("offered_rps", r.offered_rps.into())
+        .set("achieved_rps", r.achieved_rps.into())
+        .set("duration_secs", r.duration_secs.into())
+        .set("latency_mean_s", r.latency.mean.into())
+        .set("latency_p50_s", r.latency.p50.into())
+        .set("latency_p95_s", r.latency.p95.into())
+        .set("latency_p99_s", r.latency.p99.into())
+        .set("latency_p999_s", r.latency.p999.into())
+        .set("latency_max_s", r.latency.max.into())
+        .set("host_items", r.host_items.into())
+        .set("csd_items", r.csd_items.into())
+        .set("host_batches", r.host_batches.into())
+        .set("csd_batches", r.csd_batches.into())
+        .set("rack_bytes", r.rack_bytes.into())
+        .set("rack_messages", r.rack_messages.into())
+        .set("energy_j", r.energy_j.into())
+        .set("energy_per_req_j", r.energy_per_req_j.into());
+    let servers: Vec<Json> = r
+        .per_server
+        .iter()
+        .map(|s| {
+            let mut o = Json::obj();
+            o.set("index", (s.index as u64).into())
+                .set("is_csd", s.is_csd.into())
+                .set("served", s.served.into())
+                .set("host_items", s.host_items.into())
+                .set("csd_items", s.csd_items.into());
+            o
+        })
+        .collect();
+    j.set("per_server", servers.into());
+    j
 }
 
 fn fleet_json(r: &FleetReport) -> crate::codec::json::Json {
@@ -409,6 +598,70 @@ mod tests {
     #[test]
     fn fig8_smoke() {
         assert_eq!(dispatch(&sv(&["fig8", "--scale", "0.005"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn fig9_smoke() {
+        assert_eq!(dispatch(&sv(&["fig9", "--scale", "0.005"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn serve_smoke_all_processes() {
+        // the CI smoke invocation (`solana serve --scale 0.01`) plus the
+        // other arrival processes and both report formats
+        assert_eq!(dispatch(&sv(&["serve", "--scale", "0.01"])).unwrap(), 0);
+        for process in ["poisson", "bursty", "closed"] {
+            let code = dispatch(&sv(&[
+                "serve", "--app", "sentiment", "--scale", "0.01", "--requests", "1000",
+                "--process", process, "--json",
+            ]))
+            .unwrap();
+            assert_eq!(code, 0, "process {process}");
+        }
+    }
+
+    #[test]
+    fn serve_fleet_with_policies_and_weights() {
+        for policy in ["rr", "weighted", "jsq"] {
+            let code = dispatch(&sv(&[
+                "serve", "--servers", "2", "--shape", "mixed", "--policy", policy,
+                "--scale", "0.01", "--requests", "1000", "--json",
+            ]))
+            .unwrap();
+            assert_eq!(code, 0, "policy {policy}");
+        }
+        let code = dispatch(&sv(&[
+            "serve", "--servers", "2", "--weights", "36,12", "--scale", "0.01",
+            "--requests", "500",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn serve_rejects_nonsense() {
+        assert!(dispatch(&sv(&["serve", "--process", "psychic", "--scale", "0.01"])).is_err());
+        assert!(dispatch(&sv(&["serve", "--policy", "chaos", "--scale", "0.01"])).is_err());
+        assert!(dispatch(&sv(&["serve", "--load", "0", "--scale", "0.01"])).is_err());
+        assert!(dispatch(&sv(&["serve", "--min-batch", "0", "--scale", "0.01"])).is_err());
+        assert!(dispatch(&sv(&[
+            "serve", "--servers", "2", "--weights", "36", "--scale", "0.01"
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn fleet_weights_override() {
+        let code = dispatch(&sv(&[
+            "fleet", "--servers", "2", "--weights", "36,12", "--app", "sentiment",
+            "--scale", "0.01", "--json",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        assert!(dispatch(&sv(&[
+            "fleet", "--servers", "2", "--weights", "1,2,3", "--scale", "0.01"
+        ]))
+        .is_err());
     }
 
     #[test]

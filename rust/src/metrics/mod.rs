@@ -66,12 +66,11 @@ impl Histogram {
     }
 
     pub fn percentile(&self, pct: f64) -> f64 {
-        if self.samples.is_empty() {
-            return f64::NAN;
-        }
         let mut sorted = self.samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        percentile_sorted(&sorted, pct)
+        sorted.sort_by(f64::total_cmp);
+        // Empty histogram → NaN, preserving this method's legacy
+        // contract (callers skip zero-count histograms before reporting).
+        percentile_sorted(&sorted, pct).unwrap_or(f64::NAN)
     }
 }
 

@@ -280,7 +280,7 @@ impl RunReport {
 }
 
 #[derive(Clone, Debug)]
-enum Ev {
+pub(crate) enum Ev {
     /// Scheduler polling wake (always on the wake grid; in event-driven
     /// mode only the single bootstrap dispatch at `t0`).
     Wake,
@@ -335,8 +335,10 @@ impl AckGroups {
     }
 }
 
-/// Simulated dataset shard name on each drive.
-const SHARD: &str = "shard.dat";
+/// Simulated dataset shard name on each drive (shared with the serving
+/// frontend, whose resident corpus must be the file the dispatch paths
+/// read).
+pub(crate) const SHARD: &str = "shard.dat";
 
 /// Mutable protocol state plus the dispatch routines shared by both
 /// dispatch modes. The host- and CSD-dispatch bodies live here so the
@@ -345,31 +347,39 @@ const SHARD: &str = "shard.dat";
 /// runs. Polling-mode results stay bit-identical to the pre-refactor
 /// runner because the bodies perform the same float operations in the
 /// same order.
-struct SchedState<'a> {
-    model: &'a AppModel,
-    cfg: &'a SchedConfig,
-    server: StorageServer,
-    shard_remaining: Vec<u64>,
-    shard_offset: Vec<u64>,
-    host_idle: bool,
+///
+/// Crate-internal so the serving frontend ([`crate::traffic`]) can drive
+/// the *same* dispatch paths over an arrival-fed queue instead of a
+/// pre-loaded corpus: arrivals refill `shard_remaining` and the engine
+/// calls [`SchedState::dispatch_host`] / [`SchedState::dispatch_csds`],
+/// so service-time modeling (flash reads, tunnel messages, batch
+/// overheads) is reused, never duplicated.
+pub(crate) struct SchedState<'a> {
+    pub(crate) model: &'a AppModel,
+    pub(crate) cfg: &'a SchedConfig,
+    pub(crate) server: StorageServer,
+    pub(crate) shard_remaining: Vec<u64>,
+    pub(crate) shard_offset: Vec<u64>,
+    pub(crate) host_idle: bool,
     /// Idle-drive index: the ISP drives currently waiting for a batch,
     /// in ascending drive order (BTreeSet iteration), so CSD dispatch
     /// walks only idle drives yet visits them in exactly the order the
     /// plain 0..isp_drives scan would. Drives whose shard has drained
-    /// are retired from the index for good (shards never refill).
-    idle_isp: std::collections::BTreeSet<usize>,
+    /// are retired from the index (batch mode: shards never refill; the
+    /// serving frontend re-inserts a drive when a request lands on it).
+    pub(crate) idle_isp: std::collections::BTreeSet<usize>,
     cand_buf: Vec<usize>,
-    csd_busy: usize,
+    pub(crate) csd_busy: usize,
     /// Incremental bookkeeping: running count instead of an O(drives)
     /// `shard_remaining.iter().sum()` on every dispatch pass.
-    total_remaining: u64,
-    host_items: u64,
-    csd_items: u64,
-    host_busy_secs: f64,
-    isp_busy_secs: f64,
-    host_batches: u64,
-    csd_batches: u64,
-    last_completion: f64,
+    pub(crate) total_remaining: u64,
+    pub(crate) host_items: u64,
+    pub(crate) csd_items: u64,
+    pub(crate) host_busy_secs: f64,
+    pub(crate) isp_busy_secs: f64,
+    pub(crate) host_batches: u64,
+    pub(crate) csd_batches: u64,
+    pub(crate) last_completion: f64,
     latency_sum: f64,
     latency_n: u64,
     host_batch_target: u64,
@@ -377,9 +387,48 @@ struct SchedState<'a> {
     csd_lat: HistogramId,
 }
 
-impl SchedState<'_> {
+impl<'a> SchedState<'a> {
+    /// Build the protocol state over an already-ingested set of shards.
+    /// `t0` is the clock origin (ingest completion). Histogram handles
+    /// resolve against `metrics` once, here, so the ack hot path never
+    /// allocates a key string.
+    pub(crate) fn new(
+        model: &'a AppModel,
+        cfg: &'a SchedConfig,
+        server: StorageServer,
+        shard_remaining: Vec<u64>,
+        t0: f64,
+        metrics: &mut Metrics,
+    ) -> SchedState<'a> {
+        let total_remaining = shard_remaining.iter().sum();
+        SchedState {
+            model,
+            cfg,
+            server,
+            shard_remaining,
+            shard_offset: vec![0; cfg.drives],
+            host_idle: true,
+            idle_isp: (0..cfg.isp_drives).collect(),
+            cand_buf: Vec::with_capacity(cfg.isp_drives),
+            csd_busy: 0,
+            total_remaining,
+            host_items: 0,
+            csd_items: 0,
+            host_busy_secs: 0.0,
+            isp_busy_secs: 0.0,
+            host_batches: 0,
+            csd_batches: 0,
+            last_completion: t0,
+            latency_sum: 0.0,
+            latency_n: 0,
+            host_batch_target: cfg.host_batch(),
+            host_lat: metrics.histogram_id("sched.host_batch_latency"),
+            csd_lat: metrics.histogram_id("sched.csd_batch_latency"),
+        }
+    }
+
     /// Absorb a host ack: the host is idle again.
-    fn host_done(&mut self, now: f64, items: u64, dispatched: f64, metrics: &mut Metrics) {
+    pub(crate) fn host_done(&mut self, now: f64, items: u64, dispatched: f64, metrics: &mut Metrics) {
         self.host_idle = true;
         self.host_items += items;
         self.last_completion = now;
@@ -389,7 +438,7 @@ impl SchedState<'_> {
     }
 
     /// Absorb one CSD ack: the drive is idle again.
-    fn csd_ack(&mut self, now: f64, drive: usize, items: u64, dispatched: f64, metrics: &mut Metrics) {
+    pub(crate) fn csd_ack(&mut self, now: f64, drive: usize, items: u64, dispatched: f64, metrics: &mut Metrics) {
         self.csd_busy -= 1;
         self.idle_isp.insert(drive);
         self.csd_items += items;
@@ -402,7 +451,7 @@ impl SchedState<'_> {
     /// Hand the host its next batch if it is idle and work remains.
     /// Called from the `Wake` arm (polling) and from `HostDone`
     /// (event-driven).
-    fn dispatch_host(&mut self, now: f64, q: &mut EventQueue<Ev>) -> anyhow::Result<()> {
+    pub(crate) fn dispatch_host(&mut self, now: f64, q: &mut EventQueue<Ev>) -> anyhow::Result<()> {
         let remaining_at_wake = self.total_remaining;
         if !(self.cfg.use_host && self.host_idle && remaining_at_wake > 0) {
             return Ok(());
@@ -481,7 +530,7 @@ impl SchedState<'_> {
     /// (event-driven, where the idle set is typically just the drive
     /// that acked). `coalesce` batches same-timestamp acks into one
     /// calendar entry (coalesced polling mode only).
-    fn dispatch_csds(&mut self, now: f64, q: &mut EventQueue<Ev>, coalesce: bool) -> anyhow::Result<()> {
+    pub(crate) fn dispatch_csds(&mut self, now: f64, q: &mut EventQueue<Ev>, coalesce: bool) -> anyhow::Result<()> {
         if !self.cfg.use_isp() || self.idle_isp.is_empty() {
             return Ok(());
         }
@@ -568,36 +617,8 @@ pub fn run(
     let mut q: EventQueue<Ev> = EventQueue::new();
     q.schedule_at(t0, Ev::Wake);
 
-    // Per-batch latency histograms, resolved to handles once so the ack
-    // hot path never allocates a key string (§Perf).
-    let host_lat = metrics.histogram_id("sched.host_batch_latency");
-    let csd_lat = metrics.histogram_id("sched.csd_batch_latency");
-
     let event_driven = cfg.dispatch == DispatchMode::EventDriven;
-    let mut st = SchedState {
-        model,
-        cfg,
-        server,
-        shard_remaining,
-        shard_offset: vec![0; cfg.drives],
-        host_idle: true,
-        idle_isp: (0..cfg.isp_drives).collect(),
-        cand_buf: Vec::with_capacity(cfg.isp_drives),
-        csd_busy: 0,
-        total_remaining: model.items,
-        host_items: 0,
-        csd_items: 0,
-        host_busy_secs: 0.0,
-        isp_busy_secs: 0.0,
-        host_batches: 0,
-        csd_batches: 0,
-        last_completion: t0,
-        latency_sum: 0.0,
-        latency_n: 0,
-        host_batch_target: cfg.host_batch(),
-        host_lat,
-        csd_lat,
-    };
+    let mut st = SchedState::new(model, cfg, server, shard_remaining, t0, metrics);
     let mut wake_events = 0u64;
 
     while let Some((now, ev)) = q.pop() {

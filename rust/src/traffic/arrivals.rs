@@ -1,0 +1,400 @@
+//! Deterministic arrival-process generators for the serving layer.
+//!
+//! Three processes cover the traffic shapes the serving literature
+//! sweeps:
+//!
+//! * **Open-loop Poisson** — memoryless inter-arrival gaps at a fixed
+//!   offered rate. Open-loop means arrivals do *not* slow down when the
+//!   system congests, so queueing delay compounds past the knee — the
+//!   honest way to measure saturation (coordinated omission is
+//!   impossible by construction).
+//! * **Open-loop bursty** — an on/off MMPP-style modulated Poisson
+//!   process: exponentially-distributed ON windows arriving at
+//!   `burstiness ×` the mean rate, separated by silent OFF windows sized
+//!   so the long-run average stays the offered rate. Same mean load as
+//!   Poisson, much harsher tail.
+//! * **Closed-loop** — N clients, each issuing one request, waiting for
+//!   its response, thinking for an exponential pause, then issuing the
+//!   next. Closed loops self-throttle at saturation (offered load tracks
+//!   completions), so they probe *capacity* rather than tail blowup.
+//!
+//! All three are seeded through [`crate::util::Rng`]; the same seed
+//! yields the same request timeline bit-for-bit, which the serving
+//! determinism property test pins.
+//!
+//! Exponential sampling uses `-ln(u)/rate` on a fixed uniform stream, so
+//! two Poisson generators with the same seed and different rates emit
+//! *time-scaled copies* of the same sequence — load sweeps (Fig 9)
+//! compare the same traffic at different compression, not different
+//! traffic.
+
+use std::collections::BinaryHeap;
+
+use crate::util::Rng;
+
+/// Which arrival process generates the request timeline.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum ArrivalProcess {
+    /// Open-loop Poisson at the offered rate.
+    #[default]
+    Poisson,
+    /// Open-loop on/off bursty (MMPP-style): ON windows at
+    /// `burstiness ×` the offered rate, OFF windows of silence, same
+    /// long-run mean rate.
+    Bursty,
+    /// Closed-loop: `clients` concurrent clients with exponential think
+    /// time between response and next request.
+    ClosedLoop,
+}
+
+impl ArrivalProcess {
+    /// Stable lowercase name used by the CLI, TOML configs and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Bursty => "bursty",
+            ArrivalProcess::ClosedLoop => "closed",
+        }
+    }
+
+    pub fn all() -> [ArrivalProcess; 3] {
+        [ArrivalProcess::Poisson, ArrivalProcess::Bursty, ArrivalProcess::ClosedLoop]
+    }
+}
+
+/// One timestamped request. `id` is the global issue order (0-based) —
+/// the serving layer uses it for round-robin data placement, so a
+/// request's home drive is a pure function of its issue index.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time at the frontend (seconds, serving clock).
+    pub arrival: f64,
+}
+
+/// Min-heap entry for pending arrivals (closed-loop re-arms arrive out
+/// of issue order). Ordered by time, ties broken by insertion sequence
+/// so the pop order is total and deterministic.
+#[derive(Clone, Copy, Debug)]
+struct Pending {
+    time: f64,
+    seq: u64,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Pending {}
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap: reverse for earliest-first.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// A bounded stream of timestamped requests over one of the
+/// [`ArrivalProcess`] shapes. Open-loop processes are self-driving;
+/// the closed loop needs [`Arrivals::on_complete`] fed back to re-arm
+/// clients.
+#[derive(Clone, Debug)]
+pub struct Arrivals {
+    process: ArrivalProcess,
+    rng: Rng,
+    /// Total requests this stream will emit.
+    limit: u64,
+    issued: u64,
+    /// Open-loop Poisson/bursty cursor: next arrival instant.
+    next_open: f64,
+    /// Bursty state: end of the current ON window and the window pair
+    /// durations (`on_secs` at `peak_rate`, then `off_secs` silent).
+    on_until: f64,
+    peak_rate: f64,
+    mean_on_secs: f64,
+    mean_off_secs: f64,
+    rate: f64,
+    /// Closed-loop state.
+    think_secs: f64,
+    pending: BinaryHeap<Pending>,
+}
+
+impl Arrivals {
+    /// Open-loop Poisson at `rate` requests/s, `limit` requests total.
+    pub fn poisson(rate: f64, limit: u64, seed: u64) -> Arrivals {
+        assert!(rate > 0.0 && rate.is_finite(), "arrival rate must be positive");
+        let mut rng = Rng::new(seed).fork("traffic.poisson");
+        let first = rng.exponential(rate);
+        Arrivals {
+            process: ArrivalProcess::Poisson,
+            rng,
+            limit,
+            issued: 0,
+            next_open: first,
+            on_until: f64::INFINITY,
+            peak_rate: rate,
+            mean_on_secs: 0.0,
+            mean_off_secs: 0.0,
+            rate,
+            think_secs: 0.0,
+            pending: BinaryHeap::new(),
+        }
+    }
+
+    /// Open-loop bursty process with long-run mean `rate`: ON windows
+    /// (mean `mean_on_secs`) arrive at `burstiness × rate`, separated by
+    /// OFF windows sized so the duty cycle is `1/burstiness`.
+    pub fn bursty(rate: f64, burstiness: f64, mean_on_secs: f64, limit: u64, seed: u64) -> Arrivals {
+        assert!(rate > 0.0 && rate.is_finite(), "arrival rate must be positive");
+        assert!(burstiness >= 1.0, "burstiness must be >= 1 (peak/mean ratio)");
+        assert!(mean_on_secs > 0.0, "mean ON window must be positive");
+        let mut rng = Rng::new(seed).fork("traffic.bursty");
+        let peak_rate = rate * burstiness;
+        let mean_off_secs = mean_on_secs * (burstiness - 1.0);
+        let on_until = rng.exponential(1.0 / mean_on_secs);
+        let mut a = Arrivals {
+            process: ArrivalProcess::Bursty,
+            rng,
+            limit,
+            issued: 0,
+            next_open: 0.0,
+            on_until,
+            peak_rate,
+            mean_on_secs,
+            mean_off_secs,
+            rate,
+            think_secs: 0.0,
+            pending: BinaryHeap::new(),
+        };
+        let first = a.rng.exponential(peak_rate);
+        a.advance_bursty(first);
+        a
+    }
+
+    /// Closed loop: `clients` clients, exponential think with mean
+    /// `think_secs` between response and next request, `limit` requests
+    /// total. Clients stagger their first requests over one mean think
+    /// time so the opening instant is not a synchronized stampede.
+    pub fn closed_loop(clients: usize, think_secs: f64, limit: u64, seed: u64) -> Arrivals {
+        assert!(clients > 0, "closed loop needs at least one client");
+        assert!(think_secs > 0.0 && think_secs.is_finite(), "think time must be positive");
+        let mut rng = Rng::new(seed).fork("traffic.closed");
+        let mut pending = BinaryHeap::new();
+        for c in 0..clients.min(limit as usize) {
+            let t = rng.range_f64(0.0, think_secs);
+            pending.push(Pending { time: t, seq: c as u64 });
+        }
+        Arrivals {
+            process: ArrivalProcess::ClosedLoop,
+            rng,
+            limit,
+            issued: 0,
+            next_open: 0.0,
+            on_until: f64::INFINITY,
+            peak_rate: 0.0,
+            mean_on_secs: 0.0,
+            mean_off_secs: 0.0,
+            rate: 0.0,
+            think_secs,
+            pending,
+        }
+    }
+
+    pub fn process(&self) -> ArrivalProcess {
+        self.process
+    }
+
+    /// Total requests this stream will emit.
+    pub fn limit(&self) -> u64 {
+        self.limit
+    }
+
+    /// Requests emitted so far.
+    pub fn issued(&self) -> u64 {
+        self.issued
+    }
+
+    /// Time of the next arrival, if any remain.
+    pub fn peek(&self) -> Option<f64> {
+        if self.issued >= self.limit {
+            return None;
+        }
+        match self.process {
+            ArrivalProcess::Poisson | ArrivalProcess::Bursty => Some(self.next_open),
+            ArrivalProcess::ClosedLoop => self.pending.peek().map(|p| p.time),
+        }
+    }
+
+    /// Emit the next request and advance the process.
+    pub fn pop(&mut self) -> Option<Request> {
+        let arrival = self.peek()?;
+        let id = self.issued;
+        self.issued += 1;
+        match self.process {
+            ArrivalProcess::Poisson => {
+                self.next_open += self.rng.exponential(self.rate);
+            }
+            ArrivalProcess::Bursty => {
+                let gap = self.rng.exponential(self.peak_rate);
+                self.advance_bursty(gap);
+            }
+            ArrivalProcess::ClosedLoop => {
+                self.pending.pop();
+            }
+        }
+        Some(Request { id, arrival })
+    }
+
+    /// Spend `gap` seconds of ON-time from the current cursor, hopping
+    /// over OFF windows: arrivals only accrue while the source is ON.
+    /// Leaves `next_open` at the resulting arrival instant (inside an ON
+    /// window) — the invariant `peek` relies on.
+    fn advance_bursty(&mut self, gap: f64) {
+        while self.next_open + gap > self.on_until {
+            let spent_here = self.on_until - self.next_open;
+            let off = self.rng.exponential(1.0 / self.mean_off_secs);
+            let next_on_start = self.on_until + off;
+            self.next_open = next_on_start - spent_here;
+            self.on_until = next_on_start + self.rng.exponential(1.0 / self.mean_on_secs);
+        }
+        self.next_open += gap;
+    }
+
+    /// Feed a completion back (closed loop re-arms that client after a
+    /// think pause; a no-op for open-loop processes).
+    pub fn on_complete(&mut self, done: f64) {
+        if self.process != ArrivalProcess::ClosedLoop {
+            return;
+        }
+        // Re-arm only while unissued requests remain beyond the ones
+        // already waiting in the heap.
+        if self.issued + self.pending.len() as u64 >= self.limit {
+            return;
+        }
+        let think = self.rng.exponential(1.0 / self.think_secs);
+        let seq = self.issued + self.pending.len() as u64;
+        self.pending.push(Pending { time: done + think, seq });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain_open(mut a: Arrivals) -> Vec<f64> {
+        let mut ts = Vec::new();
+        while let Some(r) = a.pop() {
+            ts.push(r.arrival);
+        }
+        ts
+    }
+
+    #[test]
+    fn poisson_mean_rate_and_order() {
+        let ts = drain_open(Arrivals::poisson(100.0, 10_000, 42));
+        assert_eq!(ts.len(), 10_000);
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "arrivals sorted");
+        let measured = ts.len() as f64 / ts.last().unwrap();
+        assert!((measured / 100.0 - 1.0).abs() < 0.05, "rate {measured}");
+    }
+
+    #[test]
+    fn poisson_same_seed_is_bit_identical() {
+        let a = drain_open(Arrivals::poisson(50.0, 1_000, 7));
+        let b = drain_open(Arrivals::poisson(50.0, 1_000, 7));
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        let c = drain_open(Arrivals::poisson(50.0, 1_000, 8));
+        assert_ne!(a, c, "different seed, different timeline");
+    }
+
+    #[test]
+    fn poisson_rate_scales_the_same_timeline() {
+        // Same uniform stream → doubling the rate exactly halves every
+        // arrival instant. Load sweeps compare compressed copies of the
+        // same traffic.
+        let slow = drain_open(Arrivals::poisson(50.0, 500, 3));
+        let fast = drain_open(Arrivals::poisson(100.0, 500, 3));
+        for (s, f) in slow.iter().zip(&fast) {
+            assert!((s / f - 2.0).abs() < 1e-9, "{s} vs {f}");
+        }
+    }
+
+    #[test]
+    fn bursty_same_mean_rate_heavier_tail() {
+        let rate = 200.0;
+        let n = 20_000;
+        let poisson = drain_open(Arrivals::poisson(rate, n, 11));
+        let bursty = drain_open(Arrivals::bursty(rate, 4.0, 0.5, n, 11));
+        let p_span = poisson.last().unwrap();
+        let b_span = bursty.last().unwrap();
+        // Long-run mean near the offered rate for both. The bursty
+        // bound is looser: the span is dominated by ~50 exponential
+        // OFF-windows, so its relative spread is ~10% even at n = 20k.
+        assert!((n as f64 / p_span / rate - 1.0).abs() < 0.15);
+        assert!((n as f64 / b_span / rate - 1.0).abs() < 0.30, "bursty mean rate off: {}", n as f64 / b_span / rate);
+        // Burstiness: the max ON-window instantaneous rate (arrivals in
+        // any 100 ms window) is much higher for the bursty process.
+        let peak = |ts: &[f64]| {
+            let mut best = 0usize;
+            let mut lo = 0usize;
+            for hi in 0..ts.len() {
+                while ts[hi] - ts[lo] > 0.1 {
+                    lo += 1;
+                }
+                best = best.max(hi - lo + 1);
+            }
+            best
+        };
+        assert!(
+            peak(&bursty) as f64 > 1.8 * peak(&poisson) as f64,
+            "bursty peak {} !>> poisson peak {}",
+            peak(&bursty),
+            peak(&poisson)
+        );
+    }
+
+    #[test]
+    fn closed_loop_throttles_on_completions() {
+        let mut a = Arrivals::closed_loop(4, 1.0, 100, 5);
+        // Only the 4 initial requests exist until completions arrive.
+        let mut got = Vec::new();
+        for _ in 0..4 {
+            got.push(a.pop().unwrap());
+        }
+        assert_eq!(a.peek(), None, "no 5th request before a completion");
+        a.on_complete(10.0);
+        let next = a.pop().unwrap();
+        assert!(next.arrival > 10.0, "re-arm happens after the response + think");
+        assert_eq!(next.id, 4);
+    }
+
+    #[test]
+    fn closed_loop_respects_limit() {
+        let mut a = Arrivals::closed_loop(8, 0.5, 10, 9);
+        let mut n = 0;
+        while let Some(r) = a.pop() {
+            n += 1;
+            a.on_complete(r.arrival + 0.1);
+        }
+        assert_eq!(n, 10);
+        a.on_complete(99.0);
+        assert_eq!(a.peek(), None, "limit reached: completions stop re-arming");
+    }
+
+    #[test]
+    fn ids_are_issue_ordered() {
+        let mut a = Arrivals::poisson(10.0, 50, 1);
+        for want in 0..50 {
+            assert_eq!(a.pop().unwrap().id, want);
+        }
+        assert!(a.pop().is_none());
+    }
+}

@@ -1,0 +1,511 @@
+//! Fleet serving: a front-door load balancer over
+//! [`crate::cluster::fleet`] servers.
+//!
+//! One global virtual-time loop interleaves the arrival stream with
+//! every server's [`ServeEngine`](super::engine::ServeEngine) — unlike
+//! the batch fleet (independent per-server runs joined by a barrier),
+//! serving requires a *joint* simulation because the balancer's
+//! decisions depend on live cross-server state (queue depths for JSQ)
+//! and responses contend on one shared rack downlink.
+//!
+//! Balancer policies:
+//!
+//! * **round-robin** — oblivious rotation; the baseline every LB paper
+//!   starts from. Suffers on heterogeneous fleets (an SSD server gets
+//!   the same share as a CSD server 2–3× its capacity).
+//! * **weighted-by-capacity** — smooth weighted round-robin over each
+//!   server's nominal service rate; the right *open-loop* split for
+//!   heterogeneous fleets.
+//! * **join-shortest-queue** — route to the server with the fewest
+//!   outstanding requests; adapts to bursts and heterogeneity without
+//!   knowing capacities.
+//!
+//! Responses from non-head servers ship over the top-of-rack
+//! [`RackLink`] (one message per completed batch, FIFO at the head's
+//! downlink), so a request's end-to-end latency includes the rack hop
+//! its placement implies.
+
+use crate::cluster::fleet::FleetConfig;
+use crate::interconnect::RackLink;
+use crate::metrics::Metrics;
+use crate::power::PowerModel;
+use crate::workloads::{App, AppModel};
+
+use super::engine::ServeEngine;
+use super::{
+    fleet_nominal_rate, LatencyStats, ServeReport, ServerServeStats, TrafficConfig,
+};
+
+/// Front-door load-balancer policy.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LbPolicy {
+    /// Oblivious rotation across servers.
+    RoundRobin,
+    /// Smooth weighted round-robin by nominal capacity.
+    WeightedCapacity,
+    /// Fewest outstanding requests wins (ties: lowest index).
+    #[default]
+    JoinShortestQueue,
+}
+
+impl LbPolicy {
+    /// Stable lowercase name used by the CLI, TOML configs and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            LbPolicy::RoundRobin => "rr",
+            LbPolicy::WeightedCapacity => "weighted",
+            LbPolicy::JoinShortestQueue => "jsq",
+        }
+    }
+
+    pub fn all() -> [LbPolicy; 3] {
+        [LbPolicy::RoundRobin, LbPolicy::WeightedCapacity, LbPolicy::JoinShortestQueue]
+    }
+}
+
+/// Deterministic balancer state.
+struct Balancer {
+    policy: LbPolicy,
+    rr_next: usize,
+    assigned: Vec<u64>,
+    outstanding: Vec<u64>,
+    weights: Vec<f64>,
+}
+
+impl Balancer {
+    fn new(policy: LbPolicy, weights: Vec<f64>) -> Balancer {
+        let n = weights.len();
+        Balancer { policy, rr_next: 0, assigned: vec![0; n], outstanding: vec![0; n], weights }
+    }
+
+    fn pick(&mut self) -> usize {
+        let n = self.weights.len();
+        let s = match self.policy {
+            LbPolicy::RoundRobin => {
+                let s = self.rr_next % n;
+                self.rr_next += 1;
+                s
+            }
+            LbPolicy::WeightedCapacity => {
+                // Smooth WRR: send the next request where the realized
+                // share lags the capacity share most — argmin of
+                // (assigned + 1) / weight, ties to the lowest index.
+                let mut best = 0;
+                let mut best_score = f64::INFINITY;
+                for i in 0..n {
+                    let score = (self.assigned[i] + 1) as f64 / self.weights[i].max(1e-12);
+                    if score < best_score {
+                        best_score = score;
+                        best = i;
+                    }
+                }
+                best
+            }
+            LbPolicy::JoinShortestQueue => {
+                let mut best = 0;
+                for i in 1..n {
+                    if self.outstanding[i] < self.outstanding[best] {
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        self.assigned[s] += 1;
+        self.outstanding[s] += 1;
+        s
+    }
+}
+
+/// Serve one app across the fleet; returns the rollup report.
+///
+/// The run is a single joint DES over all servers: global events
+/// (arrivals, per-server acks/wakes/flushes, rack deliveries) execute in
+/// nondecreasing virtual time, so cross-server interactions (JSQ
+/// routing, rack FIFO) are causally consistent and the whole run is a
+/// pure function of (config, seed).
+pub fn serve_fleet(
+    app: App,
+    fcfg: &FleetConfig,
+    tcfg: &TrafficConfig,
+    power: &PowerModel,
+    metrics: &mut Metrics,
+) -> anyhow::Result<ServeReport> {
+    anyhow::ensure!(fcfg.servers >= 1, "need at least one server in the fleet");
+    fcfg.validate_weights()?;
+    anyhow::ensure!(tcfg.requests >= 1, "need at least one request to serve");
+    anyhow::ensure!(tcfg.min_batch >= 1, "traffic.min_batch must be >= 1");
+    anyhow::ensure!(
+        tcfg.batch_timeout_s >= 0.0 && tcfg.batch_timeout_s.is_finite(),
+        "traffic.batch_timeout_s must be non-negative and finite"
+    );
+    anyhow::ensure!(
+        tcfg.load > 0.0 && tcfg.load.is_finite(),
+        "traffic.load must be positive and finite, got {}",
+        tcfg.load
+    );
+    if let Some(r) = tcfg.rate_rps {
+        anyhow::ensure!(r > 0.0 && r.is_finite(), "traffic.rate_rps must be positive, got {r}");
+        anyhow::ensure!(
+            tcfg.process != super::ArrivalProcess::ClosedLoop,
+            "rate_rps does not apply to the closed-loop process: its offered rate is \
+             clients/think_s ({} clients / {} s); drop --rate or use an open-loop process",
+            tcfg.clients,
+            tcfg.think_s
+        );
+    }
+    anyhow::ensure!(tcfg.clients >= 1, "traffic.clients must be >= 1");
+    anyhow::ensure!(
+        tcfg.think_s > 0.0 && tcfg.think_s.is_finite(),
+        "traffic.think_s must be positive"
+    );
+    anyhow::ensure!(
+        tcfg.burstiness >= 1.0 && tcfg.burstiness.is_finite(),
+        "traffic.burstiness must be >= 1 (peak/mean ratio)"
+    );
+    anyhow::ensure!(
+        tcfg.burst_on_s > 0.0 && tcfg.burst_on_s.is_finite(),
+        "traffic.burst_on_s must be positive"
+    );
+
+    let specs = fcfg.server_specs();
+    let model = AppModel::for_app(app, tcfg.requests);
+    let nominal = fleet_nominal_rate(&model, &specs);
+    let offered = tcfg.offered_rps(nominal);
+    anyhow::ensure!(
+        offered > 0.0 && offered.is_finite(),
+        "offered rate must be positive (load {} × nominal {nominal})",
+        tcfg.load
+    );
+
+    // ---- build the per-server engines -------------------------------
+    let mut engines: Vec<ServeEngine> = specs
+        .iter()
+        .map(|s| ServeEngine::new(&model, &s.sched, tcfg.formation()))
+        .collect::<anyhow::Result<_>>()?;
+    // Global serving clock starts when the slowest corpus is resident.
+    let t0 = engines.iter().map(|e| e.t0()).fold(0.0, f64::max);
+
+    // Balancer capacity weights: the explicit `[fleet] weights` /
+    // `--weights` override when present (heterogeneous fleets), else
+    // each server's nominal service rate.
+    let weights: Vec<f64> = match &fcfg.weights {
+        Some(w) => w.iter().map(|&x| x as f64).collect(),
+        None => specs.iter().map(|s| super::nominal_rate(&model, &s.sched)).collect(),
+    };
+    let mut balancer = Balancer::new(tcfg.policy, weights);
+    let mut gen = tcfg.arrivals(offered);
+    let mut rack = RackLink::new(fcfg.rack_bandwidth, fcfg.rack_msg_overhead);
+
+    let mut latencies: Vec<f64> = Vec::with_capacity(tcfg.requests as usize);
+    let mut served_per: Vec<u64> = vec![0; fcfg.servers];
+    let mut first_arrival = f64::INFINITY;
+    let mut last_done = t0;
+
+    // ---- the joint event loop ---------------------------------------
+    loop {
+        let ta = gen.peek().map(|t| t0 + t);
+        let te = engines
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| e.next_time().map(|t| (t, i)))
+            .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        match (ta, te) {
+            // Arrivals win global ties so same-instant dispatch sees the
+            // queued request.
+            (Some(a), Some((t, _))) if a <= t => {
+                let req = gen.pop().expect("peeked arrival");
+                let s = balancer.pick();
+                first_arrival = first_arrival.min(a);
+                engines[s].offer(a, req.id)?;
+            }
+            (Some(a), None) => {
+                let req = gen.pop().expect("peeked arrival");
+                let s = balancer.pick();
+                first_arrival = first_arrival.min(a);
+                engines[s].offer(a, req.id)?;
+            }
+            (_, Some((_, i))) => {
+                engines[i].step()?;
+                let comps = engines[i].take_completions();
+                if comps.is_empty() {
+                    continue;
+                }
+                // One ack event → one batch → one response block over
+                // the rack for non-head servers (64 B header + per-item
+                // outputs), serialized FIFO on the head's downlink.
+                let batch_done = comps[0].done;
+                let delivered = if i == 0 {
+                    batch_done
+                } else {
+                    let bytes = 64 + comps.len() as u64 * model.output_bytes_per_item;
+                    rack.send(batch_done, bytes)
+                };
+                for c in &comps {
+                    debug_assert_eq!(c.done.to_bits(), batch_done.to_bits());
+                    latencies.push(delivered - c.arrival);
+                    gen.on_complete(delivered - t0);
+                }
+                served_per[i] += comps.len() as u64;
+                balancer.outstanding[i] -= comps.len() as u64;
+                last_done = last_done.max(delivered);
+            }
+            (None, None) => break,
+        }
+    }
+
+    // ---- conservation -----------------------------------------------
+    let served: u64 = served_per.iter().sum();
+    anyhow::ensure!(
+        served == tcfg.requests,
+        "serving lost requests: {served} != {}",
+        tcfg.requests
+    );
+    let items: u64 = engines.iter().map(|e| e.state().host_items + e.state().csd_items).sum();
+    anyhow::ensure!(
+        items == tcfg.requests,
+        "scheduler item split ({items}) disagrees with request count ({})",
+        tcfg.requests
+    );
+
+    // ---- rollups -----------------------------------------------------
+    // Serving window per the report contract: first arrival → last
+    // response (requests ≥ 1 is ensured above, so an arrival exists).
+    let duration = (last_done - first_arrival.min(last_done)).max(1e-9);
+    let mut energy = 0.0;
+    for (spec, e) in specs.iter().zip(&engines) {
+        let st = e.state();
+        energy += power
+            .energy(duration, spec.sched.drives, st.host_busy_secs.min(duration), st.isp_busy_secs)
+            .energy_j;
+        metrics.merge(e.metrics());
+    }
+    let per_server: Vec<ServerServeStats> = specs
+        .iter()
+        .zip(&engines)
+        .zip(&served_per)
+        .map(|((spec, e), &served)| {
+            let st = e.state();
+            ServerServeStats {
+                index: spec.index,
+                is_csd: spec.is_csd(),
+                served,
+                host_items: st.host_items,
+                csd_items: st.csd_items,
+                host_busy_secs: st.host_busy_secs,
+                isp_busy_secs: st.isp_busy_secs,
+            }
+        })
+        .collect();
+
+    let latency = LatencyStats::of(&latencies);
+    metrics.inc("serve.requests", served as f64);
+    metrics.inc("serve.rack_bytes", rack.bytes_moved() as f64);
+    metrics.set_gauge("serve.p99_latency_s", latency.p99);
+
+    Ok(ServeReport {
+        app: model.app.name(),
+        shape: fcfg.shape.name(),
+        dispatch: fcfg.sched.dispatch.name(),
+        process: tcfg.process.name(),
+        policy: tcfg.policy.name(),
+        servers: fcfg.servers,
+        requests: tcfg.requests,
+        served,
+        offered_rps: offered,
+        achieved_rps: served as f64 / duration,
+        duration_secs: duration,
+        latency,
+        host_items: engines.iter().map(|e| e.state().host_items).sum(),
+        csd_items: engines.iter().map(|e| e.state().csd_items).sum(),
+        host_batches: engines.iter().map(|e| e.state().host_batches).sum(),
+        csd_batches: engines.iter().map(|e| e.state().csd_batches).sum(),
+        rack_bytes: rack.bytes_moved(),
+        rack_messages: rack.messages(),
+        energy_j: energy,
+        energy_per_req_j: if served > 0 { energy / served as f64 } else { 0.0 },
+        per_server,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::fleet::FleetShape;
+    use crate::sched::{DispatchMode, SchedConfig};
+    use crate::traffic::ArrivalProcess;
+
+    fn fleet_cfg(servers: usize, shape: FleetShape) -> FleetConfig {
+        FleetConfig {
+            servers,
+            shape,
+            sched: SchedConfig {
+                csd_batch: 500,
+                batch_ratio: 26.0,
+                drives: 8,
+                isp_drives: 8,
+                dispatch: DispatchMode::EventDriven,
+                ..SchedConfig::default()
+            },
+            ..FleetConfig::default()
+        }
+    }
+
+    fn run(servers: usize, shape: FleetShape, policy: LbPolicy, load: f64) -> ServeReport {
+        let tcfg = TrafficConfig {
+            load,
+            requests: 4_000,
+            policy,
+            ..TrafficConfig::default()
+        };
+        let mut m = Metrics::new();
+        serve_fleet(App::Sentiment, &fleet_cfg(servers, shape), &tcfg, &PowerModel::default(), &mut m)
+            .unwrap()
+    }
+
+    #[test]
+    fn fleet_serving_conserves_across_policies_and_shapes() {
+        for policy in LbPolicy::all() {
+            for shape in FleetShape::all() {
+                let r = run(3, shape, policy, 0.6);
+                assert_eq!(r.served, 4_000, "{policy:?}/{shape:?}");
+                assert_eq!(r.host_items + r.csd_items, 4_000);
+                assert_eq!(r.per_server.iter().map(|s| s.served).sum::<u64>(), 4_000);
+            }
+        }
+    }
+
+    #[test]
+    fn non_head_responses_pay_the_rack() {
+        let multi = run(3, FleetShape::AllCsd, LbPolicy::RoundRobin, 0.5);
+        assert!(multi.rack_messages > 0, "servers 1..n respond over the rack");
+        assert!(multi.rack_bytes > 64 * multi.rack_messages);
+        let single = run(1, FleetShape::AllCsd, LbPolicy::RoundRobin, 0.5);
+        assert_eq!(single.rack_messages, 0, "a 1-server fleet never touches the rack");
+        assert_eq!(single.rack_bytes, 0);
+    }
+
+    #[test]
+    fn round_robin_spreads_requests_evenly() {
+        let r = run(4, FleetShape::AllCsd, LbPolicy::RoundRobin, 0.5);
+        for s in &r.per_server {
+            assert_eq!(s.served, 1_000, "server {}", s.index);
+        }
+    }
+
+    #[test]
+    fn weighted_capacity_tracks_heterogeneous_fleets() {
+        // Mixed fleet: CSD servers (even indices) have ~1.3× the nominal
+        // capacity of SSD servers here, so weighted routing must give
+        // them a proportionally larger share; the realized split tracks
+        // the weight split within 2%.
+        let r = run(4, FleetShape::Mixed, LbPolicy::WeightedCapacity, 0.5);
+        let model = AppModel::for_app(App::Sentiment, 1);
+        let csd_w = model.host_rate() + 8.0 * model.csd_rate();
+        let ssd_w = model.host_rate();
+        let want_csd_share = 2.0 * csd_w / (2.0 * csd_w + 2.0 * ssd_w);
+        let got: u64 = r.per_server.iter().filter(|s| s.is_csd).map(|s| s.served).sum();
+        let got_share = got as f64 / r.served as f64;
+        assert!(
+            (got_share - want_csd_share).abs() < 0.02,
+            "csd share {got_share:.3}, capacity share {want_csd_share:.3}"
+        );
+    }
+
+    #[test]
+    fn explicit_weights_skew_the_weighted_balancer() {
+        // Regression: `--weights` used to be validated and then ignored
+        // by serving. With weights [3, 1] the weighted policy must
+        // realize a 75/25 split regardless of the servers' (equal)
+        // nominal rates.
+        let fcfg = FleetConfig {
+            weights: Some(vec![3, 1]),
+            ..fleet_cfg(2, FleetShape::AllCsd)
+        };
+        let tcfg = TrafficConfig {
+            load: 0.5,
+            requests: 4_000,
+            policy: LbPolicy::WeightedCapacity,
+            ..TrafficConfig::default()
+        };
+        let mut m = Metrics::new();
+        let r = serve_fleet(App::Sentiment, &fcfg, &tcfg, &PowerModel::default(), &mut m).unwrap();
+        assert_eq!(r.per_server[0].served, 3_000);
+        assert_eq!(r.per_server[1].served, 1_000);
+    }
+
+    #[test]
+    fn jsq_beats_round_robin_tail_on_a_mixed_fleet_under_load() {
+        // The scenario JSQ exists for: a mixed fleet where the CSD
+        // server's in-storage engines give it real extra capacity. An
+        // oblivious 50/50 rotation pushes the SSD server past its
+        // capacity (its backlog grows for the whole run) while JSQ
+        // steers the excess to the CSD server, so the rr tail must blow
+        // past the jsq tail. The run is long enough (30 k requests at
+        // ~fleet-nominal load) for the rr backlog to accumulate.
+        let mk = |policy| TrafficConfig { load: 1.0, requests: 30_000, policy, ..TrafficConfig::default() };
+        let mut m = Metrics::new();
+        let fleet = fleet_cfg(2, FleetShape::Mixed);
+        let rr = serve_fleet(App::Sentiment, &fleet, &mk(LbPolicy::RoundRobin), &PowerModel::default(), &mut m)
+            .unwrap();
+        let jsq = serve_fleet(
+            App::Sentiment,
+            &fleet,
+            &mk(LbPolicy::JoinShortestQueue),
+            &PowerModel::default(),
+            &mut m,
+        )
+        .unwrap();
+        assert_eq!(rr.served, jsq.served);
+        assert!(
+            jsq.latency.p99 < rr.latency.p99,
+            "jsq p99 {} should beat rr p99 {} on a skewed fleet",
+            jsq.latency.p99,
+            rr.latency.p99
+        );
+    }
+
+    #[test]
+    fn closed_loop_fleet_conserves() {
+        let tcfg = TrafficConfig {
+            process: ArrivalProcess::ClosedLoop,
+            clients: 32,
+            think_s: 0.05,
+            requests: 2_000,
+            ..TrafficConfig::default()
+        };
+        let mut m = Metrics::new();
+        let r = serve_fleet(
+            App::Sentiment,
+            &fleet_cfg(2, FleetShape::AllCsd),
+            &tcfg,
+            &PowerModel::default(),
+            &mut m,
+        )
+        .unwrap();
+        assert_eq!(r.served, 2_000);
+    }
+
+    #[test]
+    fn rejects_nonsense() {
+        let mut m = Metrics::new();
+        let tcfg = TrafficConfig::default();
+        let bad = FleetConfig { servers: 0, ..fleet_cfg(1, FleetShape::AllCsd) };
+        assert!(serve_fleet(App::Sentiment, &bad, &tcfg, &PowerModel::default(), &mut m).is_err());
+        let zero_req = TrafficConfig { requests: 0, ..TrafficConfig::default() };
+        let ok = fleet_cfg(1, FleetShape::AllCsd);
+        assert!(
+            serve_fleet(App::Sentiment, &ok, &zero_req, &PowerModel::default(), &mut m).is_err()
+        );
+        // rate_rps is meaningless for a closed loop: rejected, not
+        // silently ignored.
+        let closed_rate = TrafficConfig {
+            process: ArrivalProcess::ClosedLoop,
+            rate_rps: Some(100.0),
+            ..TrafficConfig::default()
+        };
+        assert!(
+            serve_fleet(App::Sentiment, &ok, &closed_rate, &PowerModel::default(), &mut m).is_err()
+        );
+    }
+}

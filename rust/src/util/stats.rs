@@ -1,8 +1,22 @@
 //! Summary statistics over sample sets — used by the metrics layer, the
 //! bench harness, and the experiment drivers to report mean / percentile
-//! rows the way the paper's figures do.
+//! rows the way the paper's figures do. The serving layer
+//! ([`crate::traffic`]) reports tail latency through the same code:
+//! exact percentiles over the full sorted sample set, no sketching.
+//!
+//! # NaN policy
+//!
+//! Samples are expected to be NaN-free — every producer in this crate
+//! records simulated durations, counts, or rates, none of which can be
+//! NaN without an upstream bug. [`percentile_sorted`] and [`Summary::of`]
+//! therefore `debug_assert!` NaN-freedom; in release builds they stay
+//! deterministic instead of panicking by ordering with [`f64::total_cmp`]
+//! (NaNs sort last, so low/mid percentiles of a lightly-polluted set are
+//! still meaningful and bit-stable).
 
-/// Aggregate summary of a set of f64 samples.
+/// Aggregate summary of a set of f64 samples, including the tail
+/// percentiles the serving experiments report (p95/p99/p99.9 — Fig 9's
+/// y-axes).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
     pub count: usize,
@@ -12,7 +26,9 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
+    pub p999: f64,
 }
 
 impl Summary {
@@ -21,43 +37,53 @@ impl Summary {
         if samples.is_empty() {
             return None;
         }
+        debug_assert!(samples.iter().all(|x| !x.is_nan()), "NaN sample");
         let mut sorted: Vec<f64> = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+        sorted.sort_by(f64::total_cmp);
         let count = sorted.len();
         let mean = sorted.iter().sum::<f64>() / count as f64;
         let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
             / count as f64;
+        let pct = |p: f64| percentile_sorted(&sorted, p).expect("non-empty");
         Some(Summary {
             count,
             mean,
             std: var.sqrt(),
             min: sorted[0],
             max: sorted[count - 1],
-            p50: percentile_sorted(&sorted, 50.0),
-            p90: percentile_sorted(&sorted, 90.0),
-            p99: percentile_sorted(&sorted, 99.0),
+            p50: pct(50.0),
+            p90: pct(90.0),
+            p95: pct(95.0),
+            p99: pct(99.0),
+            p999: pct(99.9),
         })
     }
 }
 
 /// Percentile over a pre-sorted slice using linear interpolation
 /// (the "exclusive" definition, matching numpy's default closely enough
-/// for reporting).
-pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
-    assert!(!sorted.is_empty());
-    assert!((0.0..=100.0).contains(&pct));
+/// for reporting). Returns `None` for an empty slice; `pct` outside
+/// `[0, 100]` is a caller bug (debug-asserted, clamped in release).
+/// See the module docs for the NaN policy.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> Option<f64> {
+    if sorted.is_empty() {
+        return None;
+    }
+    debug_assert!((0.0..=100.0).contains(&pct), "percentile {pct} out of range");
+    debug_assert!(sorted.iter().all(|x| !x.is_nan()), "NaN sample");
+    let pct = pct.clamp(0.0, 100.0);
     if sorted.len() == 1 {
-        return sorted[0];
+        return Some(sorted[0]);
     }
     let rank = pct / 100.0 * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
-    if lo == hi {
+    Some(if lo == hi {
         sorted[lo]
     } else {
         let w = rank - lo as f64;
         sorted[lo] * (1.0 - w) + sorted[hi] * w
-    }
+    })
 }
 
 /// Online mean/variance accumulator (Welford) for streaming metrics.
@@ -125,6 +151,7 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert!(s.p95 <= s.p99 && s.p99 <= s.p999 && s.p999 <= s.max);
     }
 
     #[test]
@@ -133,11 +160,55 @@ mod tests {
     }
 
     #[test]
+    fn summary_single_sample_is_every_percentile() {
+        let s = Summary::of(&[7.5]).unwrap();
+        assert_eq!(s.count, 1);
+        for v in [s.min, s.p50, s.p90, s.p95, s.p99, s.p999, s.max] {
+            assert_eq!(v, 7.5);
+        }
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
     fn percentile_interpolates() {
         let xs = [10.0, 20.0, 30.0, 40.0];
-        assert!((percentile_sorted(&xs, 0.0) - 10.0).abs() < 1e-12);
-        assert!((percentile_sorted(&xs, 100.0) - 40.0).abs() < 1e-12);
-        assert!((percentile_sorted(&xs, 50.0) - 25.0).abs() < 1e-12);
+        assert!((percentile_sorted(&xs, 0.0).unwrap() - 10.0).abs() < 1e-12);
+        assert!((percentile_sorted(&xs, 100.0).unwrap() - 40.0).abs() < 1e-12);
+        assert!((percentile_sorted(&xs, 50.0).unwrap() - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_empty_is_none() {
+        assert_eq!(percentile_sorted(&[], 50.0), None);
+    }
+
+    #[test]
+    fn percentile_single_sample() {
+        assert_eq!(percentile_sorted(&[3.25], 0.0), Some(3.25));
+        assert_eq!(percentile_sorted(&[3.25], 99.9), Some(3.25));
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn nan_samples_are_deterministic_in_release() {
+        // Release builds don't panic on NaN pollution: total_cmp sorts
+        // NaNs last, so low percentiles stay meaningful and bit-stable.
+        let xs = [1.0, 2.0, f64::NAN];
+        let s = Summary::of(&xs).unwrap();
+        assert_eq!(s.count, 3);
+        let p0 = percentile_sorted(&[1.0, 2.0, f64::NAN], 0.0).unwrap();
+        assert_eq!(p0, 1.0);
+    }
+
+    #[test]
+    fn tail_percentiles_on_skewed_set() {
+        // 1000 samples, one large outlier: p99.9 sees it, p95 does not.
+        let mut xs: Vec<f64> = (0..999).map(|i| i as f64 / 1000.0).collect();
+        xs.push(100.0);
+        let s = Summary::of(&xs).unwrap();
+        assert!(s.p95 < 1.0, "p95 {}", s.p95);
+        assert!(s.p999 > 1.0, "p99.9 {}", s.p999);
+        assert_eq!(s.max, 100.0);
     }
 
     #[test]
