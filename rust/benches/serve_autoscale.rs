@@ -1,0 +1,31 @@
+//! `cargo bench --bench serve_autoscale` — regenerates Fig 10: the
+//! autoscaling study (minimum servers meeting the p99 SLO as offered
+//! load grows, with goodput and per-request energy at the chosen
+//! operating point; the ISSUE-5 tentpole). Serving runs use the control
+//! plane as deployed — admission on, least-work balancing — so the
+//! reported operating points are the ones a production fleet would run
+//! at. See `traffic` for the control plane and `exp::fig10_autoscale`
+//! for the sweep definition.
+//!
+//! Scale with `SOLANA_BENCH_FAST=1` (5%) or default 25% of the paper's
+//! dataset sizes; the *shape* (all-CSD meeting the SLO with strictly
+//! fewer servers than all-SSD at every load past one SSD server's
+//! capacity) is scale-invariant.
+
+use solana_isp::bench_support::Bencher;
+use solana_isp::exp::{self, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::from_env();
+    let table = exp::fig10_autoscale(scale)?;
+    exp::emit(&table, "fig10")?;
+    // Wall-time of regenerating the artifact (simulator throughput):
+    let mut b = Bencher::new(0, if std::env::var("SOLANA_BENCH_FAST").is_ok() { 1 } else { 2 });
+    b.bench("fig10_serve_autoscale", || {
+        let t = exp::fig10_autoscale(scale).expect("rerun");
+        t.rows.len() as u64
+    });
+    print!("{}", b.report());
+    b.write_json("serve_autoscale")?;
+    Ok(())
+}

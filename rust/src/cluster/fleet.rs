@@ -163,9 +163,14 @@ impl FleetConfig {
     }
 
     /// Check an explicit weight vector against the fleet: exactly one
-    /// positive weight per server.
+    /// positive weight per server (and in particular never empty).
     pub fn validate_weights(&self) -> anyhow::Result<()> {
         if let Some(w) = &self.weights {
+            anyhow::ensure!(
+                !w.is_empty(),
+                "fleet.weights is empty: list one positive weight per server (or omit the key \
+                 for homogeneous capacity)"
+            );
             anyhow::ensure!(
                 w.len() == self.servers,
                 "fleet.weights has {} entries for {} servers",

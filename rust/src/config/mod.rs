@@ -36,8 +36,10 @@
 //! think_s = 1.0            # closed loop: mean think time
 //! burstiness = 4.0         # bursty: peak/mean rate ratio
 //! burst_on_s = 1.0         # bursty: mean ON-window length
-//! policy = "jsq"           # rr | weighted | jsq — front-door balancer
+//! policy = "jsq"           # rr | weighted | jsq | least-work — front-door balancer
 //! slo_p99_s = 2.5          # p99 SLO (default: 4x the CSD batch service time)
+//! admission = true         # SLO-aware admission control (shed past-deadline requests)
+//! skew = 1.0               # hot-shard placement skew (Zipf-like; 0 = uniform)
 //! ```
 
 use std::path::Path;
@@ -170,6 +172,11 @@ impl ExperimentConfig {
             let arr = v
                 .as_arr()
                 .ok_or_else(|| anyhow::anyhow!("fleet.weights must be an array of integers"))?;
+            anyhow::ensure!(
+                !arr.is_empty(),
+                "fleet.weights must not be empty: list one positive weight per server (or omit \
+                 the key for homogeneous capacity)"
+            );
             let mut weights = Vec::with_capacity(arr.len());
             for x in arr {
                 let w = x
@@ -226,6 +233,25 @@ impl ExperimentConfig {
         if let Some(v) = t.f64("traffic.slo_p99_s") {
             anyhow::ensure!(v > 0.0 && v.is_finite(), "traffic.slo_p99_s must be positive");
             cfg.traffic.slo_p99_s = Some(v);
+        }
+        if let Some(v) = t.get("traffic.admission") {
+            // Strict: a non-boolean here must not silently disable the
+            // admission gate the config asked for.
+            cfg.traffic.admission = v.as_bool().ok_or_else(|| {
+                anyhow::anyhow!("traffic.admission must be a boolean (true|false)")
+            })?;
+        }
+        if let Some(v) = t.get("traffic.skew") {
+            // Strict like `admission`: a non-numeric value must not
+            // silently run an unskewed experiment.
+            let skew = v.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("traffic.skew must be a non-negative number")
+            })?;
+            anyhow::ensure!(
+                skew >= 0.0 && skew.is_finite(),
+                "traffic.skew must be non-negative and finite"
+            );
+            cfg.traffic.skew = skew;
         }
         anyhow::ensure!(
             cfg.sched.isp_drives <= cfg.sched.drives,
@@ -387,6 +413,38 @@ mod tests {
         assert!(ExperimentConfig::from_toml("[traffic]\nmin_batch = 0").is_err());
         assert!(ExperimentConfig::from_toml("[traffic]\npolicy = \"chaos\"").is_err());
         assert!(ExperimentConfig::from_toml("[traffic]\nburstiness = 0.5").is_err());
+    }
+
+    #[test]
+    fn traffic_control_plane_section_parses_and_validates() {
+        use crate::traffic::LbPolicy;
+        // ISSUE-5: admission / skew / least-work through the TOML path.
+        let c = ExperimentConfig::from_toml(
+            "[traffic]\nadmission = true\nskew = 1.5\npolicy = \"least-work\"\n",
+        )
+        .unwrap();
+        assert!(c.traffic.admission);
+        assert_eq!(c.traffic.skew, 1.5);
+        assert_eq!(c.traffic.policy, LbPolicy::LeastWork);
+        // defaults: the PR-4 behavior
+        let d = ExperimentConfig::from_toml("").unwrap();
+        assert!(!d.traffic.admission);
+        assert_eq!(d.traffic.skew, 0.0);
+        // aliases and rejects
+        assert_eq!(
+            ExperimentConfig::from_toml("[traffic]\npolicy = \"lw\"\n")
+                .unwrap()
+                .traffic
+                .policy,
+            LbPolicy::LeastWork
+        );
+        assert!(ExperimentConfig::from_toml("[traffic]\nskew = -0.1").is_err());
+        assert!(ExperimentConfig::from_toml("[traffic]\nskew = \"1.5\"").is_err());
+        assert!(ExperimentConfig::from_toml("[traffic]\nadmission = \"sometimes\"").is_err());
+        // empty weight vectors are rejected at parse time with a clear
+        // message, not deferred to a later length check
+        let err = ExperimentConfig::from_toml("[fleet]\nservers = 2\nweights = []\n").unwrap_err();
+        assert!(err.to_string().contains("empty"), "unhelpful error: {err}");
     }
 
     #[test]

@@ -7,8 +7,9 @@
 //! solana fleet --servers 2 --weights 36,12     # heterogeneous capacity
 //! solana serve --app sentiment --load 0.7      # online serving, tail latency
 //! solana serve --process closed --clients 64   # closed-loop traffic
+//! solana serve --admission on --policy least-work --skew 1.0   # control plane
 //! solana fig5  --app speech [--scale 0.25] [--threads 8]
-//! solana fig6 | fig7 | fig8 | fig9 | table1 | power
+//! solana fig6 | fig7 | fig8 | fig9 | fig10 | table1 | power
 //! solana ablate --which ratio|datapath|wakeup|dispatch --app sentiment
 //! solana version | help
 //! ```
@@ -69,7 +70,10 @@ fn commands() -> Vec<Command> {
             .opt("requests", None, "total requests (default: scaled corpus / 4)")
             .opt("min-batch", None, "batch formation: dispatch at this many queued requests (default 1)")
             .opt("clients", None, "closed loop: concurrent clients (default 64)")
-            .opt("policy", None, "rr|weighted|jsq — front-door balancer (default jsq)")
+            .opt("policy", None, "rr|weighted|jsq|least-work — front-door balancer (default jsq)")
+            .opt("admission", None, "on|off — SLO-aware admission control: shed requests whose estimated wait blows the p99 deadline budget (default off)")
+            .opt("skew", None, "hot-shard placement skew exponent (Zipf-like per-drive weighting; 0 = uniform, default 0)")
+            .opt("slo", None, "p99 SLO in seconds (default: per-app, 4x the CSD batch service time)")
             .opt("scale", None, "dataset scale vs paper (0..1], default 0.25")
             .flag("baseline", "disable all ISP engines (storage-only)")
             .flag("json", "emit the serving report as JSON"),
@@ -87,6 +91,9 @@ fn commands() -> Vec<Command> {
             .opt("scale", None, "dataset scale")
             .opt("threads", None, "sweep worker threads"),
         Command::new("fig9", "regenerate Fig 9 (serving latency vs offered load)")
+            .opt("scale", None, "dataset scale")
+            .opt("threads", None, "sweep worker threads"),
+        Command::new("fig10", "regenerate Fig 10 (autoscaling: min servers vs offered load)")
             .opt("scale", None, "dataset scale")
             .opt("threads", None, "sweep worker threads"),
         Command::new("table1", "regenerate Table I (summary)")
@@ -263,6 +270,21 @@ pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
             if let Some(p) = args.str("policy") {
                 tcfg.policy = parse_policy(p)?;
             }
+            if let Some(a) = args.str("admission") {
+                tcfg.admission = crate::traffic::parse_on_off(a)
+                    .map_err(|e| anyhow::anyhow!("--admission: {e}"))?;
+            }
+            if let Some(s) = args.f64("skew")? {
+                anyhow::ensure!(
+                    s >= 0.0 && s.is_finite(),
+                    "--skew must be non-negative and finite"
+                );
+                tcfg.skew = s;
+            }
+            if let Some(s) = args.f64("slo")? {
+                anyhow::ensure!(s > 0.0 && s.is_finite(), "--slo must be positive");
+                tcfg.slo_p99_s = Some(s);
+            }
             // An explicit --load is meaningless for a closed loop
             // (offered rate = clients/think): rejected, not silently
             // ignored — mirroring serve_fleet's --rate guard.
@@ -272,24 +294,14 @@ pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
                 "--load does not apply to the closed-loop process: its offered rate is \
                  clients/think_s; drop --load or use an open-loop process"
             );
-            // p99 SLO: the `[traffic] slo_p99_s` override when present,
-            // else the per-app default (4× the CSD batch service time).
-            let slo = tcfg.slo_p99_s.unwrap_or_else(|| {
-                crate::traffic::default_slo_p99(&AppModel::for_app(app, 1), fcfg.sched.csd_batch)
-            });
             let mut metrics = Metrics::new();
+            // The report carries the resolved p99 SLO (the `--slo` /
+            // `[traffic] slo_p99_s` override or the per-app default).
             let r = serve_fleet(app, &fcfg, &tcfg, &cfg.power, &mut metrics)?;
             if args.flag("json") {
-                let mut j = serve_json(&r);
-                j.set("slo_p99_s", slo.into()).set("meets_slo", (r.latency.p99 <= slo).into());
-                println!("{}", j.to_pretty());
+                println!("{}", serve_json(&r).to_pretty());
             } else {
                 print_serve_report(&r);
-                println!(
-                    "p99 SLO             {:>14}  [{}]",
-                    crate::util::human_secs(slo),
-                    if r.latency.p99 <= slo { "met" } else { "violated" }
-                );
             }
         }
         "fig5" => {
@@ -305,6 +317,7 @@ pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
         "fig7" => exp::emit(&exp::fig7(scale)?, "fig7")?,
         "fig8" => exp::emit(&exp::fig8_scaleout(scale)?, "fig8")?,
         "fig9" => exp::emit(&exp::fig9_latency(scale)?, "fig9")?,
+        "fig10" => exp::emit(&exp::fig10_autoscale(scale)?, "fig10")?,
         "table1" => exp::emit(&exp::table1(scale)?, "table1")?,
         "power" => exp::emit(&exp::power_breakdown(), "power")?,
         "ablate" => {
@@ -388,9 +401,14 @@ fn print_serve_report(r: &ServeReport) {
     println!("policy              {:>14}", r.policy);
     println!("process             {:>14}", r.process);
     println!("dispatch            {:>14}", r.dispatch);
+    println!("admission           {:>14}", if r.admission { "on" } else { "off" });
     println!("requests            {:>14}", r.requests);
+    println!("served / shed       {:>7} / {}", r.served, r.shed);
+    if r.shed > 0 {
+        println!("goodput loss        {:>13.1}%", r.shed_fraction() * 100.0);
+    }
     println!("offered             {:>11.1} req/s", r.offered_rps);
-    println!("achieved            {:>11.1} req/s", r.achieved_rps);
+    println!("goodput             {:>11.1} req/s", r.achieved_rps);
     println!("duration            {:>14}", crate::util::human_secs(r.duration_secs));
     println!("latency mean        {:>14}", crate::util::human_secs(r.latency.mean));
     println!("        p50         {:>14}", crate::util::human_secs(r.latency.p50));
@@ -404,12 +422,18 @@ fn print_serve_report(r: &ServeReport) {
     println!("rack bytes          {:>14}", crate::util::human_bytes(r.rack_bytes));
     println!("rack messages       {:>14}", r.rack_messages);
     println!("energy              {:>11.1} J ({:.4} J/req)", r.energy_j, r.energy_per_req_j);
+    println!(
+        "p99 SLO             {:>14}  [{}]",
+        crate::util::human_secs(r.slo_p99_s),
+        if r.meets_slo() { "met" } else { "violated" }
+    );
     for s in &r.per_server {
         println!(
-            "  server {:<2} {:>5} {:>9} served  host {:>9}  csd {:>9}",
+            "  server {:<2} {:>5} {:>9} served  {:>7} shed  host {:>9}  csd {:>9}",
             s.index,
             if s.is_csd { "csd" } else { "ssd" },
             s.served,
+            s.shed,
             s.host_items,
             s.csd_items
         );
@@ -427,6 +451,11 @@ fn serve_json(r: &ServeReport) -> crate::codec::json::Json {
         .set("servers", (r.servers as u64).into())
         .set("requests", r.requests.into())
         .set("served", r.served.into())
+        .set("shed", r.shed.into())
+        .set("shed_fraction", r.shed_fraction().into())
+        .set("admission", r.admission.into())
+        .set("slo_p99_s", r.slo_p99_s.into())
+        .set("meets_slo", r.meets_slo().into())
         .set("offered_rps", r.offered_rps.into())
         .set("achieved_rps", r.achieved_rps.into())
         .set("duration_secs", r.duration_secs.into())
@@ -452,6 +481,7 @@ fn serve_json(r: &ServeReport) -> crate::codec::json::Json {
             o.set("index", (s.index as u64).into())
                 .set("is_csd", s.is_csd.into())
                 .set("served", s.served.into())
+                .set("shed", s.shed.into())
                 .set("host_items", s.host_items.into())
                 .set("csd_items", s.csd_items.into());
             o
@@ -648,6 +678,40 @@ mod tests {
             "serve", "--servers", "2", "--weights", "36", "--scale", "0.01"
         ]))
         .is_err());
+        // ISSUE-5 satellite: control-plane parameters are validated too.
+        assert!(dispatch(&sv(&["serve", "--admission", "maybe", "--scale", "0.01"])).is_err());
+        assert!(dispatch(&sv(&["serve", "--skew", "-1", "--scale", "0.01"])).is_err());
+        assert!(dispatch(&sv(&["serve", "--slo", "0", "--scale", "0.01"])).is_err());
+        // min_batch beyond one server's single-dispatch drain capacity
+        assert!(dispatch(&sv(&[
+            "serve", "--min-batch", "99999999", "--scale", "0.01", "--requests", "500"
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn serve_control_plane_smoke() {
+        // Admission + least-work + skew through the real CLI (the CI
+        // smoke invocation), overloaded enough that shedding is live.
+        let code = dispatch(&sv(&[
+            "serve", "--app", "speech", "--servers", "2", "--shape", "mixed",
+            "--policy", "least-work", "--admission", "on", "--skew", "1.0",
+            "--load", "1.3", "--requests", "1500", "--scale", "0.01", "--json",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        // and an explicit SLO override with admission off
+        let code = dispatch(&sv(&[
+            "serve", "--app", "speech", "--slo", "10", "--load", "0.4",
+            "--requests", "500", "--scale", "0.01",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn fig10_smoke() {
+        assert_eq!(dispatch(&sv(&["fig10", "--scale", "0.005"])).unwrap(), 0);
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! | [`ablate_dispatch`] | A4: polling vs event-driven dispatch |
 //! | [`fig8_scaleout`] | Fig 8 (ours): fleet scale-out, 1→8 servers × 3 shapes |
 //! | [`fig9_latency`] | Fig 9 (ours): serving latency vs offered load × 3 shapes |
+//! | [`fig10_autoscale`] | Fig 10 (ours): min servers to meet the p99 SLO vs offered load |
 //!
 //! Every sweep fans its independent cells out over the deterministic
 //! worker pool in [`pool`] (sized by `--threads` / `SOLANA_THREADS` /
@@ -30,7 +31,7 @@ use crate::cluster::fleet::{run_fleet, FleetConfig, FleetShape};
 use crate::metrics::{Metrics, Table};
 use crate::power::PowerModel;
 use crate::sched::{run, DispatchMode, RunReport, SchedConfig};
-use crate::traffic::{default_slo_p99, serve_fleet, ServeReport, TrafficConfig};
+use crate::traffic::{default_slo_p99, serve_fleet, LbPolicy, ServeReport, TrafficConfig};
 use crate::workloads::{App, AppModel};
 
 pub use cli::dispatch;
@@ -610,8 +611,11 @@ pub struct Fig9Cell {
 }
 
 impl Fig9Cell {
+    /// Delegates to [`ServeReport::meets_slo`] (`slo_p99_s` mirrors the
+    /// report's), inheriting its served-nothing guard: an all-shed cell
+    /// must never read as sustainable off its empty percentile set.
     pub fn meets_slo(&self) -> bool {
-        self.report.latency.p99 <= self.slo_p99_s
+        self.report.meets_slo()
     }
 }
 
@@ -653,12 +657,11 @@ pub fn fig9_cells(scale: Scale) -> anyhow::Result<Vec<Fig9Cell>> {
             requests: fig9_requests(app, scale),
             ..TrafficConfig::default()
         };
-        let model = AppModel::for_app(app, 1);
-        let slo_p99_s = tcfg
-            .slo_p99_s
-            .unwrap_or_else(|| default_slo_p99(&model, fcfg.sched.csd_batch));
         let mut m = Metrics::new();
         let report = serve_fleet(app, &fcfg, &tcfg, &PowerModel::default(), &mut m)?;
+        // The report carries the resolved per-app SLO (ISSUE-5 moved
+        // resolution into the serving layer).
+        let slo_p99_s = report.slo_p99_s;
         Ok(Fig9Cell { app, shape, load, slo_p99_s, report })
     });
     results.into_iter().collect()
@@ -747,6 +750,187 @@ pub fn fig9_latency(scale: Scale) -> anyhow::Result<Table> {
         }
     }
     Ok(t)
+}
+
+/// Fleet sizes the Fig 10 autoscaling search may use (1..=8 servers,
+/// searched in ascending order with early exit at the first fit).
+pub const FIG10_MAX_SERVERS: usize = 8;
+
+/// Offered-load sweep for Fig 10, in units of **one all-SSD server's
+/// nominal service rate** (the host-only rate — the natural "how many
+/// plain storage servers is this load worth?" yardstick). The sweep
+/// spans well below one SSD server to well past two, so the min-server
+/// curves for the three shapes separate.
+pub const FIG10_LOADS: [f64; 4] = [0.6, 1.2, 1.8, 2.4];
+
+/// Requests per Fig 10 serving cell: enough that the **arrival window
+/// spans ≥ 6 p99-SLOs**. A sustained overload needs `slo/(r−1)` seconds
+/// (overload ratio `r = offered/capacity`) to fill the admission bound
+/// and blow the SLO; a window shorter than the SLO makes every fleet
+/// size look compliant, no matter how overloaded (acute for sentiment,
+/// whose ~10⁴ rps rates make a fixed request count a sub-second window
+/// against a multi-second SLO). Six SLOs resolve any `r ≳ 1.17`;
+/// verdicts for marginal overloads inside that band truncate toward
+/// "meets", which biases all shapes equally and never flips the
+/// CSD-vs-SSD ordering the gate pins (the shapes' per-server capacities
+/// sit ≥ 2.3× apart). A floor keeps tail resolution at tiny scales, and
+/// the scale-linked term sharpens the tail at larger `--scale` like
+/// every other figure.
+pub fn fig10_requests(app: App, scale: Scale, offered_rps: f64, slo_p99_s: f64) -> u64 {
+    let window = (offered_rps * 6.0 * slo_p99_s).ceil() as u64;
+    window.max(scale.items(app) / 8).max(1_200)
+}
+
+/// SLO-compliance criterion for one Fig 10 operating point: the
+/// accepted-request p99 meets the SLO **and** goodput is at least 99%
+/// of offered (≤ 1% shed). Both halves matter: admission alone could
+/// keep p99 bounded at any fleet size by shedding the overload, so a
+/// "meets the SLO" verdict must also require that almost nothing was
+/// thrown away.
+pub fn fig10_meets(report: &ServeReport) -> bool {
+    report.meets_slo() && report.shed * 100 <= report.requests
+}
+
+/// One Fig 10 sweep point: its coordinates, the autoscaling verdict,
+/// and the serving report at the chosen operating point.
+#[derive(Clone, Debug)]
+pub struct Fig10Cell {
+    pub app: App,
+    pub shape: FleetShape,
+    /// Offered load in all-SSD-server units (see [`FIG10_LOADS`]).
+    pub load_units: f64,
+    /// Offered rate, requests/s.
+    pub offered_rps: f64,
+    pub slo_p99_s: f64,
+    /// Minimum servers meeting [`fig10_meets`]; `None` when even
+    /// [`FIG10_MAX_SERVERS`] fails.
+    pub servers: Option<usize>,
+    /// Report at the chosen operating point (the min-server fleet), or
+    /// at [`FIG10_MAX_SERVERS`] when nothing fit.
+    pub report: ServeReport,
+}
+
+/// Raw Fig 10 sweep: every (app × shape × load) autoscaling search, in
+/// sweep order, fanned out over the [`pool`] (the per-cell search over
+/// fleet sizes runs sequentially inside its cell so it can stop at the
+/// first fit). Serving runs use the control plane as deployed:
+/// admission on, least-work balancing, the Fig 9 serving template.
+pub fn fig10_cells(scale: Scale) -> anyhow::Result<Vec<Fig10Cell>> {
+    let mut specs: Vec<(App, FleetShape, f64)> = Vec::new();
+    for app in App::all() {
+        for shape in FleetShape::all() {
+            for &load in &FIG10_LOADS {
+                specs.push((app, shape, load));
+            }
+        }
+    }
+    let results = pool::map_cells(specs, move |(app, shape, load)| {
+        let model = AppModel::for_app(app, 1);
+        // One all-SSD server's nominal rate: the load unit.
+        let offered = load * model.host_rate();
+        let sched = fig9_sched(app);
+        let slo = default_slo_p99(&model, sched.csd_batch);
+        let requests = fig10_requests(app, scale, offered, slo);
+        let mut chosen: Option<(usize, ServeReport)> = None;
+        let mut fallback: Option<ServeReport> = None;
+        for servers in 1..=FIG10_MAX_SERVERS {
+            let fcfg = FleetConfig {
+                servers,
+                shape,
+                sched: sched.clone(),
+                ..FleetConfig::default()
+            };
+            let tcfg = TrafficConfig {
+                rate_rps: Some(offered),
+                requests,
+                admission: true,
+                policy: LbPolicy::LeastWork,
+                ..TrafficConfig::default()
+            };
+            let mut m = Metrics::new();
+            let report = serve_fleet(app, &fcfg, &tcfg, &PowerModel::default(), &mut m)?;
+            if fig10_meets(&report) {
+                chosen = Some((servers, report));
+                break;
+            }
+            fallback = Some(report);
+        }
+        let (servers, report) = match chosen {
+            Some((n, r)) => (Some(n), r),
+            None => (None, fallback.expect("at least one fleet size attempted")),
+        };
+        Ok(Fig10Cell {
+            app,
+            shape,
+            load_units: load,
+            offered_rps: offered,
+            slo_p99_s: report.slo_p99_s,
+            servers,
+            report,
+        })
+    });
+    results.into_iter().collect()
+}
+
+/// Fig 10 (ours): the autoscaling study — minimum servers each fleet
+/// shape needs to meet the p99 SLO as offered load grows, with goodput,
+/// shed fraction and per-request energy at the chosen operating point.
+/// This is the capacity-planning view of the paper's claim: if an
+/// all-CSD fleet meets the same SLO at the same load with fewer
+/// servers than the all-SSD baseline, in-storage processing buys
+/// datacenter capacity, not just single-box speedups. The acceptance
+/// gate pins exactly that, for every app.
+pub fn fig10_autoscale(scale: Scale) -> anyhow::Result<Table> {
+    Ok(fig10_table_from(&fig10_cells(scale)?))
+}
+
+/// Render the Fig 10 table from precomputed cells — split from
+/// [`fig10_autoscale`] so callers that already hold the cells (the gate
+/// test) don't pay for a second full sweep.
+pub fn fig10_table_from(cells: &[Fig10Cell]) -> Table {
+    let mut t = Table::new(
+        "Fig 10 — autoscaling: min servers meeting the p99 SLO vs offered load \
+         (admission on, least-work)",
+        &[
+            "app",
+            "shape",
+            "load xssd",
+            "offered rps",
+            "servers",
+            "p99 s",
+            "slo s",
+            "goodput rps",
+            "shed %",
+            "energy/req J",
+        ],
+    );
+    let mut it = cells.iter();
+    for app in App::all() {
+        for shape in FleetShape::all() {
+            for &load in &FIG10_LOADS {
+                let c = it.next().expect("one cell per sweep point");
+                assert_eq!(
+                    (c.app, c.shape, c.load_units),
+                    (app, shape, load),
+                    "sweep order drifted"
+                );
+                let r = &c.report;
+                t.row(vec![
+                    app.name().to_string(),
+                    shape.name().to_string(),
+                    format!("{load:.1}"),
+                    format!("{:.1}", c.offered_rps),
+                    c.servers.map(|n| n.to_string()).unwrap_or_else(|| "-".to_string()),
+                    format!("{:.4}", r.latency.p99),
+                    format!("{:.4}", c.slo_p99_s),
+                    format!("{:.1}", r.achieved_rps),
+                    format!("{:.2}", r.shed_fraction() * 100.0),
+                    format!("{:.4}", r.energy_per_req_j),
+                ]);
+            }
+        }
+    }
+    t
 }
 
 /// Write a table to `target/bench-results/<name>.{txt,csv}` and print it.
@@ -945,6 +1129,72 @@ mod tests {
                 assert!(row[11] == "yes" || row[11] == "no", "slo column: {row:?}");
                 assert_eq!(row[10], sust[10], "one SLO per (app, shape) block");
             }
+        }
+    }
+
+    #[test]
+    fn fig10_gate_csd_meets_slo_with_strictly_fewer_servers() {
+        // The ISSUE-5 acceptance gate, on raw cells (not the rounded
+        // table strings). For every app:
+        //  1. exact admission accounting at every operating point;
+        //  2. at the max offered load where the all-CSD fleet meets the
+        //     p99 SLO at all, it does so with strictly fewer servers
+        //     than the all-SSD baseline needs (a baseline that cannot
+        //     meet the SLO within FIG10_MAX_SERVERS counts as needing
+        //     more than any CSD answer).
+        // The table-shape checks ride on the same cells (one sweep —
+        // fig10's SLO-spanning windows make it the costliest figure).
+        let cells = fig10_cells(Scale(0.01)).unwrap();
+        for c in &cells {
+            assert_eq!(
+                c.report.served + c.report.shed,
+                c.report.requests,
+                "{:?}/{:?}/load {}: offered == accepted + shed",
+                c.app,
+                c.shape,
+                c.load_units
+            );
+            if let Some(n) = c.servers {
+                assert!((1..=FIG10_MAX_SERVERS).contains(&n));
+                assert!(fig10_meets(&c.report), "chosen point must meet its own criterion");
+            }
+        }
+        fn get(cells: &[Fig10Cell], app: App, shape: FleetShape, load: f64) -> &Fig10Cell {
+            cells
+                .iter()
+                .find(|c| c.app == app && c.shape == shape && c.load_units == load)
+                .expect("cell present")
+        }
+        for app in App::all() {
+            let best = FIG10_LOADS
+                .iter()
+                .rev()
+                .find(|&&l| get(&cells, app, FleetShape::AllCsd, l).servers.is_some())
+                .copied()
+                .unwrap_or_else(|| panic!("{app:?}: all-CSD never meets the SLO"));
+            let csd = get(&cells, app, FleetShape::AllCsd, best).servers.unwrap();
+            match get(&cells, app, FleetShape::AllSsd, best).servers {
+                Some(ssd) => assert!(
+                    csd < ssd,
+                    "{app:?} @ load {best}: all-CSD needs {csd} servers, all-SSD only {ssd}"
+                ),
+                // SSD can't meet the SLO at all within the server
+                // budget: trivially more than the CSD answer.
+                None => {}
+            }
+        }
+        // ---- table shape, from the same cells ------------------------
+        let t = fig10_table_from(&cells);
+        assert_eq!(t.headers.len(), 10);
+        assert_eq!(t.rows.len(), 3 * 3 * FIG10_LOADS.len(), "apps × shapes × loads");
+        for row in &t.rows {
+            // servers is a count in 1..=8 or the "-" none marker
+            if row[4] != "-" {
+                let n: usize = row[4].parse().unwrap();
+                assert!((1..=FIG10_MAX_SERVERS).contains(&n), "{row:?}");
+            }
+            let shed: f64 = row[8].parse().unwrap();
+            assert!((0.0..=100.0).contains(&shed), "{row:?}");
         }
     }
 

@@ -19,11 +19,27 @@
 //! * **join-shortest-queue** — route to the server with the fewest
 //!   outstanding requests; adapts to bursts and heterogeneity without
 //!   knowing capacities.
+//! * **least-work** — route to the server with the least outstanding
+//!   *estimated service time*: queued requests divided by the server's
+//!   nominal rate (the per-shape service estimate). On a heterogeneous
+//!   fleet a queued request is not a unit of work — an SSD server's
+//!   request costs ~2–3× a CSD server's — and counting requests (JSQ)
+//!   systematically overloads the slow shape. Worse, under admission
+//!   control a shedding server's queue *freezes* at its (lower)
+//!   admission bound, so JSQ pins on it and throws away headroom the
+//!   fast servers still have; least-work keeps routing by time and
+//!   fills every server to its own bound (the ISSUE-5 gate test).
 //!
 //! Responses from non-head servers ship over the top-of-rack
 //! [`RackLink`] (one message per completed batch, FIFO at the head's
 //! downlink), so a request's end-to-end latency includes the rack hop
 //! its placement implies.
+//!
+//! With admission control on (`[traffic] admission = true`), a request
+//! the target server sheds is answered immediately with a rejection:
+//! it contributes to `shed` (goodput loss), never to the latency
+//! percentiles, and a closed-loop client that receives a rejection
+//! re-arms just like one that got a real response.
 
 use crate::cluster::fleet::FleetConfig;
 use crate::interconnect::RackLink;
@@ -31,9 +47,10 @@ use crate::metrics::Metrics;
 use crate::power::PowerModel;
 use crate::workloads::{App, AppModel};
 
-use super::engine::ServeEngine;
+use super::engine::{EnginePolicy, Offer, ServeEngine};
 use super::{
-    fleet_nominal_rate, LatencyStats, ServeReport, ServerServeStats, TrafficConfig,
+    default_slo_p99, fleet_nominal_rate, LatencyStats, ServeReport, ServerServeStats,
+    TrafficConfig,
 };
 
 /// Front-door load-balancer policy.
@@ -46,6 +63,9 @@ pub enum LbPolicy {
     /// Fewest outstanding requests wins (ties: lowest index).
     #[default]
     JoinShortestQueue,
+    /// Least outstanding estimated service *time* wins (queued requests
+    /// ÷ nominal rate; ties: lowest index) — the latency-aware policy.
+    LeastWork,
 }
 
 impl LbPolicy {
@@ -55,11 +75,17 @@ impl LbPolicy {
             LbPolicy::RoundRobin => "rr",
             LbPolicy::WeightedCapacity => "weighted",
             LbPolicy::JoinShortestQueue => "jsq",
+            LbPolicy::LeastWork => "least-work",
         }
     }
 
-    pub fn all() -> [LbPolicy; 3] {
-        [LbPolicy::RoundRobin, LbPolicy::WeightedCapacity, LbPolicy::JoinShortestQueue]
+    pub fn all() -> [LbPolicy; 4] {
+        [
+            LbPolicy::RoundRobin,
+            LbPolicy::WeightedCapacity,
+            LbPolicy::JoinShortestQueue,
+            LbPolicy::LeastWork,
+        ]
     }
 }
 
@@ -70,12 +96,23 @@ struct Balancer {
     assigned: Vec<u64>,
     outstanding: Vec<u64>,
     weights: Vec<f64>,
+    /// Per-server nominal service rates (items/s) — the per-shape
+    /// service estimate `least-work` divides outstanding counts by.
+    rates: Vec<f64>,
 }
 
 impl Balancer {
-    fn new(policy: LbPolicy, weights: Vec<f64>) -> Balancer {
+    fn new(policy: LbPolicy, weights: Vec<f64>, rates: Vec<f64>) -> Balancer {
         let n = weights.len();
-        Balancer { policy, rr_next: 0, assigned: vec![0; n], outstanding: vec![0; n], weights }
+        debug_assert_eq!(rates.len(), n);
+        Balancer {
+            policy,
+            rr_next: 0,
+            assigned: vec![0; n],
+            outstanding: vec![0; n],
+            weights,
+            rates,
+        }
     }
 
     fn pick(&mut self) -> usize {
@@ -86,21 +123,9 @@ impl Balancer {
                 self.rr_next += 1;
                 s
             }
-            LbPolicy::WeightedCapacity => {
-                // Smooth WRR: send the next request where the realized
-                // share lags the capacity share most — argmin of
-                // (assigned + 1) / weight, ties to the lowest index.
-                let mut best = 0;
-                let mut best_score = f64::INFINITY;
-                for i in 0..n {
-                    let score = (self.assigned[i] + 1) as f64 / self.weights[i].max(1e-12);
-                    if score < best_score {
-                        best_score = score;
-                        best = i;
-                    }
-                }
-                best
-            }
+            // Smooth WRR: send the next request where the realized
+            // share lags the capacity share most.
+            LbPolicy::WeightedCapacity => super::smooth_pick(&self.assigned, &self.weights),
             LbPolicy::JoinShortestQueue => {
                 let mut best = 0;
                 for i in 1..n {
@@ -110,6 +135,10 @@ impl Balancer {
                 }
                 best
             }
+            // Outstanding *seconds* of backlog, not request count: the
+            // same queue length is 2–3× more work on an SSD server
+            // than on a CSD server.
+            LbPolicy::LeastWork => super::smooth_pick(&self.outstanding, &self.rates),
         };
         self.assigned[s] += 1;
         self.outstanding[s] += 1;
@@ -178,27 +207,47 @@ pub fn serve_fleet(
         tcfg.load
     );
 
+    // The SLO every run is judged against; with admission on it is also
+    // the per-request deadline budget the gate sheds by.
+    let slo = tcfg.slo_p99_s.unwrap_or_else(|| default_slo_p99(&model, fcfg.sched.csd_batch));
+    anyhow::ensure!(
+        slo > 0.0 && slo.is_finite(),
+        "traffic.slo_p99_s must be positive and finite, got {slo}"
+    );
+    let epolicy = EnginePolicy {
+        formation: tcfg.formation(),
+        skew: tcfg.skew,
+        admission_budget_s: tcfg.admission.then_some(slo),
+    };
+
     // ---- build the per-server engines -------------------------------
+    // (ServeEngine::new also validates the serving parameters a direct
+    // library caller could get wrong: min_batch vs dispatch capacity,
+    // skew, the admission budget.)
     let mut engines: Vec<ServeEngine> = specs
         .iter()
-        .map(|s| ServeEngine::new(&model, &s.sched, tcfg.formation()))
+        .map(|s| ServeEngine::new(&model, &s.sched, epolicy))
         .collect::<anyhow::Result<_>>()?;
     // Global serving clock starts when the slowest corpus is resident.
     let t0 = engines.iter().map(|e| e.t0()).fold(0.0, f64::max);
 
+    // Per-server nominal rates: the least-work policy's service
+    // estimate, and the default capacity weights.
+    let rates: Vec<f64> = specs.iter().map(|s| super::nominal_rate(&model, &s.sched)).collect();
     // Balancer capacity weights: the explicit `[fleet] weights` /
     // `--weights` override when present (heterogeneous fleets), else
     // each server's nominal service rate.
     let weights: Vec<f64> = match &fcfg.weights {
         Some(w) => w.iter().map(|&x| x as f64).collect(),
-        None => specs.iter().map(|s| super::nominal_rate(&model, &s.sched)).collect(),
+        None => rates.clone(),
     };
-    let mut balancer = Balancer::new(tcfg.policy, weights);
+    let mut balancer = Balancer::new(tcfg.policy, weights, rates);
     let mut gen = tcfg.arrivals(offered);
     let mut rack = RackLink::new(fcfg.rack_bandwidth, fcfg.rack_msg_overhead);
 
     let mut latencies: Vec<f64> = Vec::with_capacity(tcfg.requests as usize);
     let mut served_per: Vec<u64> = vec![0; fcfg.servers];
+    let mut shed_per: Vec<u64> = vec![0; fcfg.servers];
     let mut first_arrival = f64::INFINITY;
     let mut last_done = t0;
 
@@ -210,62 +259,78 @@ pub fn serve_fleet(
             .enumerate()
             .filter_map(|(i, e)| e.next_time().map(|t| (t, i)))
             .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-        match (ta, te) {
-            // Arrivals win global ties so same-instant dispatch sees the
-            // queued request.
-            (Some(a), Some((t, _))) if a <= t => {
-                let req = gen.pop().expect("peeked arrival");
-                let s = balancer.pick();
-                first_arrival = first_arrival.min(a);
-                engines[s].offer(a, req.id)?;
-            }
-            (Some(a), None) => {
-                let req = gen.pop().expect("peeked arrival");
-                let s = balancer.pick();
-                first_arrival = first_arrival.min(a);
-                engines[s].offer(a, req.id)?;
-            }
-            (_, Some((_, i))) => {
-                engines[i].step()?;
-                let comps = engines[i].take_completions();
-                if comps.is_empty() {
-                    continue;
-                }
-                // One ack event → one batch → one response block over
-                // the rack for non-head servers (64 B header + per-item
-                // outputs), serialized FIFO on the head's downlink.
-                let batch_done = comps[0].done;
-                let delivered = if i == 0 {
-                    batch_done
-                } else {
-                    let bytes = 64 + comps.len() as u64 * model.output_bytes_per_item;
-                    rack.send(batch_done, bytes)
-                };
-                for c in &comps {
-                    debug_assert_eq!(c.done.to_bits(), batch_done.to_bits());
-                    latencies.push(delivered - c.arrival);
-                    gen.on_complete(delivered - t0);
-                }
-                served_per[i] += comps.len() as u64;
-                balancer.outstanding[i] -= comps.len() as u64;
-                last_done = last_done.max(delivered);
-            }
+        // Arrivals win global ties so same-instant dispatch sees the
+        // queued request.
+        let take_arrival = match (ta, te) {
             (None, None) => break,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (Some(a), Some((t, _))) => a <= t,
+        };
+        if take_arrival {
+            let a = ta.expect("arrival peeked");
+            let req = gen.pop().expect("peeked arrival");
+            let s = balancer.pick();
+            first_arrival = first_arrival.min(a);
+            if engines[s].offer(a, req.id)? == Offer::Shed {
+                // Rejected at the door: an immediate response that
+                // never enters the percentiles. The rejection still
+                // re-arms a closed-loop client, and it closes the
+                // serving window like any other response.
+                shed_per[s] += 1;
+                balancer.outstanding[s] -= 1;
+                gen.on_complete(a - t0);
+                last_done = last_done.max(a);
+            }
+        } else {
+            let (_, i) = te.expect("engine event peeked");
+            engines[i].step()?;
+            let comps = engines[i].take_completions();
+            if comps.is_empty() {
+                continue;
+            }
+            // One ack event → one batch → one response block over
+            // the rack for non-head servers (64 B header + per-item
+            // outputs), serialized FIFO on the head's downlink.
+            let batch_done = comps[0].done;
+            let delivered = if i == 0 {
+                batch_done
+            } else {
+                let bytes = 64 + comps.len() as u64 * model.output_bytes_per_item;
+                rack.send(batch_done, bytes)
+            };
+            for c in &comps {
+                debug_assert_eq!(c.done.to_bits(), batch_done.to_bits());
+                latencies.push(delivered - c.arrival);
+                gen.on_complete(delivered - t0);
+            }
+            served_per[i] += comps.len() as u64;
+            balancer.outstanding[i] -= comps.len() as u64;
+            last_done = last_done.max(delivered);
         }
     }
 
     // ---- conservation -----------------------------------------------
+    // Exact admission accounting: every offered request was either
+    // served (accepted, completed once) or shed (rejected at the door).
     let served: u64 = served_per.iter().sum();
+    let shed: u64 = shed_per.iter().sum();
     anyhow::ensure!(
-        served == tcfg.requests,
-        "serving lost requests: {served} != {}",
+        served + shed == tcfg.requests,
+        "serving lost requests: served {served} + shed {shed} != offered {}",
         tcfg.requests
+    );
+    let engine_shed: u64 = engines.iter().map(|e| e.shed()).sum();
+    let engine_accepted: u64 = engines.iter().map(|e| e.accepted()).sum();
+    anyhow::ensure!(
+        engine_shed == shed && engine_accepted == served,
+        "engine admission counters disagree with the front door: \
+         {engine_accepted}+{engine_shed} vs {served}+{shed}"
     );
     let items: u64 = engines.iter().map(|e| e.state().host_items + e.state().csd_items).sum();
     anyhow::ensure!(
-        items == tcfg.requests,
-        "scheduler item split ({items}) disagrees with request count ({})",
-        tcfg.requests
+        items == served,
+        "scheduler item split ({items}) disagrees with accepted count ({served})"
     );
 
     // ---- rollups -----------------------------------------------------
@@ -275,6 +340,10 @@ pub fn serve_fleet(
     let mut energy = 0.0;
     for (spec, e) in specs.iter().zip(&engines) {
         let st = e.state();
+        // host_busy_secs is single-resource time (≤ duration up to the
+        // window clamp); isp_busy_secs is deliberately unclamped — it
+        // aggregates across all of the server's drives, so it
+        // legitimately exceeds the window on ISP-heavy runs.
         energy += power
             .energy(duration, spec.sched.drives, st.host_busy_secs.min(duration), st.isp_busy_secs)
             .energy_j;
@@ -283,13 +352,14 @@ pub fn serve_fleet(
     let per_server: Vec<ServerServeStats> = specs
         .iter()
         .zip(&engines)
-        .zip(&served_per)
-        .map(|((spec, e), &served)| {
+        .zip(served_per.iter().zip(&shed_per))
+        .map(|((spec, e), (&served, &shed))| {
             let st = e.state();
             ServerServeStats {
                 index: spec.index,
                 is_csd: spec.is_csd(),
                 served,
+                shed,
                 host_items: st.host_items,
                 csd_items: st.csd_items,
                 host_busy_secs: st.host_busy_secs,
@@ -300,6 +370,7 @@ pub fn serve_fleet(
 
     let latency = LatencyStats::of(&latencies);
     metrics.inc("serve.requests", served as f64);
+    metrics.inc("serve.shed", shed as f64);
     metrics.inc("serve.rack_bytes", rack.bytes_moved() as f64);
     metrics.set_gauge("serve.p99_latency_s", latency.p99);
 
@@ -312,6 +383,9 @@ pub fn serve_fleet(
         servers: fcfg.servers,
         requests: tcfg.requests,
         served,
+        shed,
+        admission: tcfg.admission,
+        slo_p99_s: slo,
         offered_rps: offered,
         achieved_rps: served as f64 / duration,
         duration_secs: duration,
@@ -465,6 +539,115 @@ mod tests {
         );
     }
 
+    /// A speech serving fleet: the app whose per-request service times
+    /// (hundreds of ms) make admission bounds small enough to exercise
+    /// with a few thousand requests. csd_batch = 2 is the speech
+    /// scale-out operating point, so the default SLO (4× the CSD batch
+    /// service time ≈ 26.8 s) is realistic.
+    fn speech_fleet(servers: usize, shape: FleetShape) -> FleetConfig {
+        FleetConfig {
+            servers,
+            shape,
+            sched: SchedConfig {
+                csd_batch: 2,
+                batch_ratio: 19.0,
+                drives: 8,
+                isp_drives: 8,
+                dispatch: DispatchMode::EventDriven,
+                ..SchedConfig::default()
+            },
+            ..FleetConfig::default()
+        }
+    }
+
+    #[test]
+    fn least_work_beats_jsq_goodput_on_skewed_mixed_fleet_under_overload() {
+        // The ISSUE-5 gate. Mixed fleet, hot-shard skew, sustained
+        // bursty overload, admission on. JSQ counts requests, so once
+        // the slow SSD server's queue freezes at its (lower) admission
+        // bound, JSQ pins on it as the "shortest" queue and sheds
+        // requests the CSD server still had deadline headroom for;
+        // least-work routes on estimated backlog *time*, fills every
+        // server to its own bound, and therefore accepts strictly more.
+        let mk = |policy| TrafficConfig {
+            process: ArrivalProcess::Bursty,
+            load: 1.3,
+            requests: 6_000,
+            admission: true,
+            skew: 1.0,
+            policy,
+            ..TrafficConfig::default()
+        };
+        let fleet = speech_fleet(2, FleetShape::Mixed);
+        let mut m = Metrics::new();
+        let jsq = serve_fleet(
+            App::SpeechToText,
+            &fleet,
+            &mk(LbPolicy::JoinShortestQueue),
+            &PowerModel::default(),
+            &mut m,
+        )
+        .unwrap();
+        let lw = serve_fleet(
+            App::SpeechToText,
+            &fleet,
+            &mk(LbPolicy::LeastWork),
+            &PowerModel::default(),
+            &mut m,
+        )
+        .unwrap();
+        for r in [&jsq, &lw] {
+            assert_eq!(r.served + r.shed, 6_000, "{}: exact admission accounting", r.policy);
+            assert!(r.shed > 0, "{}: sustained overload must shed", r.policy);
+        }
+        assert!(
+            lw.served > jsq.served,
+            "least-work goodput {} (shed {}) should beat jsq {} (shed {})",
+            lw.served,
+            lw.shed,
+            jsq.served,
+            jsq.shed
+        );
+    }
+
+    #[test]
+    fn admission_bounds_the_tail_the_open_loop_otherwise_blows() {
+        // Same overloaded open-loop run ± admission: without it the
+        // queue (and every percentile) grows with the run; with it the
+        // accepted requests' p99 stays near the deadline budget and the
+        // loss shows up as shed count instead.
+        let mk = |admission| TrafficConfig {
+            load: 1.4,
+            requests: 5_000,
+            admission,
+            ..TrafficConfig::default()
+        };
+        let fleet = speech_fleet(2, FleetShape::AllCsd);
+        let mut m = Metrics::new();
+        let open =
+            serve_fleet(App::SpeechToText, &fleet, &mk(false), &PowerModel::default(), &mut m)
+                .unwrap();
+        let gated =
+            serve_fleet(App::SpeechToText, &fleet, &mk(true), &PowerModel::default(), &mut m)
+                .unwrap();
+        assert_eq!(open.shed, 0, "admission off never sheds");
+        assert_eq!(open.served, 5_000);
+        assert!(gated.shed > 0, "overload under admission shows up as shed");
+        assert_eq!(gated.served + gated.shed, 5_000);
+        assert!(
+            gated.latency.p99 < open.latency.p99,
+            "admission p99 {} should be far below the open-loop blowup {}",
+            gated.latency.p99,
+            open.latency.p99
+        );
+        assert!(
+            gated.latency.p99 <= 2.0 * gated.slo_p99_s,
+            "accepted p99 {} should sit near the deadline budget {}",
+            gated.latency.p99,
+            gated.slo_p99_s
+        );
+    }
+
     #[test]
     fn closed_loop_fleet_conserves() {
         let tcfg = TrafficConfig {
@@ -507,5 +690,31 @@ mod tests {
         assert!(
             serve_fleet(App::Sentiment, &ok, &closed_rate, &PowerModel::default(), &mut m).is_err()
         );
+        // ISSUE-5 satellite: degenerate serving parameters fail loudly.
+        let neg_skew = TrafficConfig { skew: -1.0, ..TrafficConfig::default() };
+        assert!(
+            serve_fleet(App::Sentiment, &ok, &neg_skew, &PowerModel::default(), &mut m).is_err()
+        );
+        // min_batch beyond one server's single-dispatch drain capacity
+        // (host 500×26 + 8×500 = 17_000 for this fleet template).
+        let big_min = TrafficConfig { min_batch: 17_001, ..TrafficConfig::default() };
+        assert!(
+            serve_fleet(App::Sentiment, &ok, &big_min, &PowerModel::default(), &mut m).is_err()
+        );
+        let bad_slo = TrafficConfig { slo_p99_s: Some(0.0), ..TrafficConfig::default() };
+        assert!(
+            serve_fleet(App::Sentiment, &ok, &bad_slo, &PowerModel::default(), &mut m).is_err()
+        );
+        // empty weight vectors are rejected with a clear error
+        let empty_w = FleetConfig { weights: Some(vec![]), ..fleet_cfg(1, FleetShape::AllCsd) };
+        let err = serve_fleet(
+            App::Sentiment,
+            &empty_w,
+            &TrafficConfig::default(),
+            &PowerModel::default(),
+            &mut m,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("empty"), "unhelpful error: {err}");
     }
 }

@@ -31,6 +31,30 @@
 //! ingested with a circular window of the dataset sized to cover the
 //! largest possible single-dispatch read, and read offsets wrap so a
 //! serving run of any length reads only resident bytes.
+//!
+//! # Admission control (the ISSUE-5 tentpole)
+//!
+//! With [`EnginePolicy::admission_budget_s`] set, the engine becomes
+//! SLO-aware: every offered request carries an implicit deadline budget
+//! (arrival + the p99 SLO), and a request whose *estimated* completion
+//! would blow that budget is **shed** at the door instead of queued.
+//! The estimate is deliberately cheap and deterministic — outstanding
+//! work (queued + in-flight requests) divided by the engine's nominal
+//! service rate, plus the one-item service floor — so admission is a
+//! queue-depth/estimated-wait gate, not an oracle. Shed requests are
+//! answered immediately (a rejection is a response), excluded from the
+//! latency percentiles, and accounted exactly:
+//! `offered == accepted + shed` at every engine, every seed.
+//!
+//! # Hot-shard placement skew
+//!
+//! [`EnginePolicy::skew`] warps data placement from uniform round-robin
+//! to a Zipf-like per-drive weighting (`w_d ∝ 1/(d+1)^skew`, realized
+//! by a deterministic smooth weighted rotation). `skew = 0` is
+//! bit-identical to the PR-4 round-robin; positive skew concentrates
+//! requests on low-index drives — the hot-shard scenario that stresses
+//! the wait estimate (a hot drive's backlog drains at one drive's rate,
+//! not the engine's) and the fleet balancer above it.
 
 use std::collections::VecDeque;
 
@@ -39,7 +63,7 @@ use crate::csd::CsdConfig;
 use crate::metrics::Metrics;
 use crate::sched::{DispatchMode, Ev, SchedConfig, SchedState, SHARD};
 use crate::sim::EventQueue;
-use crate::workloads::AppModel;
+use crate::workloads::{AppModel, HOST_THREADS, ISP_CORES};
 
 /// One served request: issue id, frontend arrival instant, and the
 /// instant its batch's result reached the frontend (all on the engine's
@@ -76,6 +100,39 @@ impl Default for FormationPolicy {
     }
 }
 
+/// Everything the serving frontend layers on top of the scheduler for
+/// one engine: batch formation, data-placement skew, and the admission
+/// gate. Resolved from [`super::TrafficConfig`] by the fleet driver.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct EnginePolicy {
+    pub formation: FormationPolicy,
+    /// Zipf-like placement skew exponent (0 = uniform round-robin).
+    pub skew: f64,
+    /// SLO-derived deadline budget (s). `None` admits everything — the
+    /// PR-4 behavior and the default.
+    pub admission_budget_s: Option<f64>,
+}
+
+impl Default for EnginePolicy {
+    fn default() -> Self {
+        EnginePolicy {
+            formation: FormationPolicy::default(),
+            skew: 0.0,
+            admission_budget_s: None,
+        }
+    }
+}
+
+/// Outcome of offering one request to the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Offer {
+    /// Queued for dispatch; a [`Completion`] will eventually follow.
+    Accepted,
+    /// Shed by admission control: answered immediately with a
+    /// rejection, never queued, never completed.
+    Shed,
+}
+
 pub(crate) struct ServeEngine<'a> {
     st: SchedState<'a>,
     q: EventQueue<Ev>,
@@ -100,8 +157,25 @@ pub(crate) struct ServeEngine<'a> {
     flush_at: Option<f64>,
     /// Scratch: shard occupancy before a dispatch call, for the diff.
     prev_remaining: Vec<u64>,
-    /// Round-robin data-placement cursor.
-    route_next: usize,
+    /// Per-drive placement counters for the smooth weighted rotation
+    /// (one slot per routable drive).
+    placed: Vec<u64>,
+    /// Per-drive placement weights: all 1.0 at `skew = 0` (uniform
+    /// round-robin), Zipf-like `1/(d+1)^skew` otherwise.
+    place_weight: Vec<f64>,
+    /// Admission gate: deadline budget (s), `None` admits everything.
+    admission_budget: Option<f64>,
+    /// Nominal service rate of this engine (items/s) — the
+    /// per-shape service estimate the admission gate divides by.
+    svc_rate: f64,
+    /// One-item service floor on the engine's fastest unit (s).
+    min_svc_s: f64,
+    /// Requests accepted (queued or beyond) and shed, for exact
+    /// `offered == accepted + shed` accounting.
+    accepted: u64,
+    shed: u64,
+    /// Requests inside an in-flight batch (accepted − queued − done).
+    inflight: u64,
     /// Bytes of resident corpus per drive; read offsets wrap below it.
     corpus_bytes: u64,
     /// Largest single-dispatch read; offsets wrap once they pass
@@ -114,8 +188,9 @@ impl<'a> ServeEngine<'a> {
     pub(crate) fn new(
         model: &'a AppModel,
         cfg: &'a SchedConfig,
-        formation: FormationPolicy,
+        policy: EnginePolicy,
     ) -> anyhow::Result<ServeEngine<'a>> {
+        let formation = policy.formation;
         anyhow::ensure!(cfg.drives > 0, "need at least one drive for data");
         anyhow::ensure!(cfg.isp_drives <= cfg.drives, "isp_drives exceeds drives");
         anyhow::ensure!(cfg.use_host || cfg.use_isp(), "no compute nodes enabled");
@@ -125,11 +200,37 @@ impl<'a> ServeEngine<'a> {
             cfg.wakeup_secs
         );
         anyhow::ensure!(formation.min_batch >= 1, "min_batch must be >= 1");
+        // A formation gate larger than what one dispatch can drain is a
+        // degenerate config: the queue sits above min_batch forever and
+        // every batch waits out the timeout instead (ISSUE-5 satellite).
+        let dispatch_cap = (if cfg.use_host { cfg.host_batch() } else { 0 })
+            + cfg.isp_drives as u64 * cfg.csd_batch;
+        anyhow::ensure!(
+            formation.min_batch <= dispatch_cap,
+            "traffic.min_batch ({}) exceeds what this server can drain in one dispatch \
+             (host batch {} + {} ISP drives x csd batch {} = {dispatch_cap}); lower min_batch \
+             or raise the batch sizes",
+            formation.min_batch,
+            if cfg.use_host { cfg.host_batch() } else { 0 },
+            cfg.isp_drives,
+            cfg.csd_batch
+        );
         anyhow::ensure!(
             formation.timeout_s >= 0.0 && formation.timeout_s.is_finite(),
             "batch timeout must be non-negative and finite, got {}",
             formation.timeout_s
         );
+        anyhow::ensure!(
+            policy.skew >= 0.0 && policy.skew.is_finite(),
+            "traffic.skew must be non-negative and finite, got {}",
+            policy.skew
+        );
+        if let Some(b) = policy.admission_budget_s {
+            anyhow::ensure!(
+                b > 0.0 && b.is_finite(),
+                "admission deadline budget must be positive and finite, got {b}"
+            );
+        }
         let mut server = StorageServer::new(cfg.drives, CsdConfig::default());
 
         // Resident corpus: a circular per-drive window twice the largest
@@ -145,6 +246,18 @@ impl<'a> ServeEngine<'a> {
 
         let mut metrics = Metrics::new();
         let st = SchedState::new(model, cfg, server, vec![0; cfg.drives], t0, &mut metrics);
+        // Requests may land only on drives something can serve: every
+        // drive when the host computes, else just the ISP drives.
+        let routable = if cfg.use_host { cfg.drives } else { cfg.isp_drives };
+        let place_weight: Vec<f64> =
+            (0..routable).map(|d| 1.0 / ((d + 1) as f64).powf(policy.skew)).collect();
+        // Fastest single-item service this engine can deliver: the floor
+        // of the admission gate's completion estimate.
+        let min_svc_s = if cfg.use_host {
+            model.host_batch_overhead + model.host_item_secs / HOST_THREADS
+        } else {
+            model.csd_batch_overhead + model.csd_item_secs / ISP_CORES
+        };
         Ok(ServeEngine {
             event_driven: cfg.dispatch == DispatchMode::EventDriven,
             q: EventQueue::new(),
@@ -158,7 +271,14 @@ impl<'a> ServeEngine<'a> {
             next_wake: t0,
             flush_at: None,
             prev_remaining: vec![0; cfg.drives],
-            route_next: 0,
+            placed: vec![0; routable],
+            place_weight,
+            admission_budget: policy.admission_budget_s,
+            svc_rate: super::nominal_rate(model, cfg),
+            min_svc_s,
+            accepted: 0,
+            shed: 0,
+            inflight: 0,
             corpus_bytes,
             max_read_bytes,
             completions: Vec::new(),
@@ -203,20 +323,50 @@ impl<'a> ServeEngine<'a> {
         t.is_finite().then_some(t)
     }
 
-    /// Accept one request at absolute time `now` (must be ≥ every
+    /// Requests shed by the admission gate so far.
+    pub(crate) fn shed(&self) -> u64 {
+        self.shed
+    }
+
+    /// Requests accepted (queued, in flight, or completed) so far.
+    pub(crate) fn accepted(&self) -> u64 {
+        self.accepted
+    }
+
+    /// The admission gate's completion estimate for a request offered
+    /// now: outstanding work drained at the engine's nominal rate, plus
+    /// the one-item service floor. Deliberately cheap — a queue-depth
+    /// proxy, not a simulation — and deterministic.
+    fn estimated_completion_s(&self) -> f64 {
+        (self.queued + self.inflight + 1) as f64 / self.svc_rate + self.min_svc_s
+    }
+
+    /// Pick the next request's home drive: [`super::smooth_pick`] over
+    /// the routable drives. Uniform weights (skew 0) reproduce
+    /// round-robin `0,1,…,n-1,0,…` exactly; skewed weights converge to
+    /// the Zipf-like share deterministically.
+    fn place(&mut self) -> usize {
+        let best = super::smooth_pick(&self.placed, &self.place_weight);
+        self.placed[best] += 1;
+        best
+    }
+
+    /// Offer one request at absolute time `now` (must be ≥ every
     /// previously processed instant — the driver advances global time
-    /// monotonically).
-    pub(crate) fn offer(&mut self, now: f64, id: u64) -> anyhow::Result<()> {
+    /// monotonically). Returns whether the request was accepted or shed
+    /// by the admission gate.
+    pub(crate) fn offer(&mut self, now: f64, id: u64) -> anyhow::Result<Offer> {
+        if let Some(budget) = self.admission_budget {
+            if self.estimated_completion_s() > budget {
+                self.shed += 1;
+                return Ok(Offer::Shed);
+            }
+        }
+        self.accepted += 1;
         // With the host disabled only ISP drives can serve, so requests
         // are placed only on them (a request on a host-less non-ISP
         // drive could never be dispatched).
-        let routable = if self.st.cfg.use_host {
-            self.st.cfg.drives
-        } else {
-            self.st.cfg.isp_drives
-        };
-        let d = self.route_next % routable;
-        self.route_next += 1;
+        let d = self.place();
         self.pending[d].push_back(Queued { id, arrival: now });
         self.st.shard_remaining[d] += 1;
         self.st.total_remaining += 1;
@@ -236,7 +386,7 @@ impl<'a> ServeEngine<'a> {
                 self.next_wake += self.st.cfg.wakeup_secs;
             }
         }
-        Ok(())
+        Ok(Offer::Accepted)
     }
 
     /// Process exactly one internal event (the one at
@@ -257,6 +407,7 @@ impl<'a> ServeEngine<'a> {
                 Ev::HostDone { items, dispatched } => {
                     self.st.host_done(now, items, dispatched, &mut self.metrics);
                     debug_assert_eq!(self.host_inflight.len() as u64, items);
+                    self.inflight -= items;
                     for r in std::mem::take(&mut self.host_inflight) {
                         self.completions.push(Completion { id: r.id, arrival: r.arrival, done: now });
                     }
@@ -267,6 +418,7 @@ impl<'a> ServeEngine<'a> {
                 Ev::CsdAck { drive, items, dispatched } => {
                     self.st.csd_ack(now, drive, items, dispatched, &mut self.metrics);
                     debug_assert_eq!(self.csd_inflight[drive].len() as u64, items);
+                    self.inflight -= items;
                     for r in std::mem::take(&mut self.csd_inflight[drive]) {
                         self.completions.push(Completion { id: r.id, arrival: r.arrival, done: now });
                     }
@@ -326,7 +478,14 @@ impl<'a> ServeEngine<'a> {
     /// runner's wake order), map consumed shard items back to queued
     /// requests, and re-arm the formation flush if work stays queued.
     fn try_dispatch(&mut self, now: f64, force: bool) -> anyhow::Result<()> {
-        if force || self.gate_open(now) {
+        // Fast path for the saturated case (every offer retries the
+        // gate): when the host is busy and no ISP drive is idle, both
+        // dispatch bodies are guaranteed no-ops, so skip the O(drives)
+        // occupancy snapshots entirely. Offsets cannot have moved since
+        // the last dispatch, so skipping `wrap_offsets` is a no-op too.
+        let host_ready = self.st.cfg.use_host && self.st.host_idle;
+        let csd_ready = self.st.cfg.use_isp() && !self.st.idle_isp.is_empty();
+        if (host_ready || csd_ready) && (force || self.gate_open(now)) {
             self.prev_remaining.copy_from_slice(&self.st.shard_remaining);
             self.st.dispatch_host(now, &mut self.q)?;
             self.collect_taken(true);
@@ -361,6 +520,7 @@ impl<'a> ServeEngine<'a> {
                 }
             }
             self.queued -= taken;
+            self.inflight += taken;
         }
     }
 
@@ -399,7 +559,7 @@ mod tests {
         for dispatch in [DispatchMode::Polling, DispatchMode::EventDriven] {
             let model = AppModel::for_app(App::Sentiment, 1_000);
             let cfg = engine_cfg(dispatch);
-            let mut e = ServeEngine::new(&model, &cfg, FormationPolicy::default()).unwrap();
+            let mut e = ServeEngine::new(&model, &cfg, EnginePolicy::default()).unwrap();
             let t0 = e.t0();
             let n: u64 = 1_000;
             let mut next_arrival = 0u64;
@@ -444,7 +604,7 @@ mod tests {
             dispatch: DispatchMode::EventDriven,
             ..SchedConfig::default()
         };
-        let mut e = ServeEngine::new(&model, &cfg, FormationPolicy::default()).unwrap();
+        let mut e = ServeEngine::new(&model, &cfg, EnginePolicy::default()).unwrap();
         let t0 = e.t0();
         for i in 0..200u64 {
             e.offer(t0 + i as f64 * 1e-3, i).unwrap();
@@ -470,7 +630,9 @@ mod tests {
         let model = AppModel::for_app(App::Sentiment, 100);
         let cfg = engine_cfg(DispatchMode::EventDriven);
         let formation = FormationPolicy { min_batch: 50, timeout_s: 0.5 };
-        let mut e = ServeEngine::new(&model, &cfg, formation).unwrap();
+        let mut e =
+            ServeEngine::new(&model, &cfg, EnginePolicy { formation, ..Default::default() })
+                .unwrap();
         let t0 = e.t0();
         e.offer(t0, 0).unwrap();
         // Below min_batch: nothing dispatched, a flush is armed instead.
@@ -490,7 +652,7 @@ mod tests {
     fn polling_engine_quantizes_dispatch_to_the_grid() {
         let model = AppModel::for_app(App::Sentiment, 100);
         let cfg = engine_cfg(DispatchMode::Polling);
-        let mut e = ServeEngine::new(&model, &cfg, FormationPolicy::default()).unwrap();
+        let mut e = ServeEngine::new(&model, &cfg, EnginePolicy::default()).unwrap();
         let t0 = e.t0();
         // Arrive just after a grid point: the request waits ~one period.
         e.offer(t0 + 0.01, 0).unwrap();
@@ -504,5 +666,128 @@ mod tests {
         assert_eq!(comps.len(), 1);
         // Latency includes the grid wait the event-driven engine avoids.
         assert!(comps[0].done - comps[0].arrival >= cfg.wakeup_secs - 0.01 - 1e-12);
+    }
+
+    #[test]
+    fn admission_sheds_when_estimated_wait_blows_the_budget() {
+        // A tight budget over a saturated engine: the first requests fit
+        // under the deadline, a same-instant stampede behind them must
+        // shed, and the accounting is exact (offered == accepted + shed).
+        let model = AppModel::for_app(App::Sentiment, 1_000);
+        let cfg = engine_cfg(DispatchMode::EventDriven);
+        let budget = 0.5; // ≈ 0.5 s of backlog at the engine's rate
+        let policy = EnginePolicy { admission_budget_s: Some(budget), ..Default::default() };
+        let mut e = ServeEngine::new(&model, &cfg, policy).unwrap();
+        let t0 = e.t0();
+        let offered: u64 = 50_000; // far beyond budget × svc_rate
+        let mut accepted = 0u64;
+        let mut shed = 0u64;
+        for i in 0..offered {
+            match e.offer(t0, i).unwrap() {
+                Offer::Accepted => accepted += 1,
+                Offer::Shed => shed += 1,
+            }
+        }
+        assert!(shed > 0, "a same-instant stampede must shed");
+        assert!(accepted > 0, "the head of the stampede fits the budget");
+        assert_eq!(accepted + shed, offered, "exact admission accounting");
+        assert_eq!((e.accepted(), e.shed()), (accepted, shed));
+        // Every *accepted* request still completes exactly once.
+        let mut done = 0u64;
+        while e.next_time().is_some() {
+            e.step().unwrap();
+            done += e.take_completions().len() as u64;
+        }
+        assert_eq!(done, accepted, "accepted requests are served exactly once");
+    }
+
+    #[test]
+    fn admission_never_sheds_an_idle_engine() {
+        // The deadline budget is generous relative to a lone request's
+        // service time, so a trickle through an idle engine admits 100%.
+        let model = AppModel::for_app(App::Sentiment, 100);
+        let cfg = engine_cfg(DispatchMode::EventDriven);
+        let policy = EnginePolicy { admission_budget_s: Some(1.0), ..Default::default() };
+        let mut e = ServeEngine::new(&model, &cfg, policy).unwrap();
+        let t0 = e.t0();
+        for i in 0..100u64 {
+            // Drain fully between arrivals: the engine is idle each time.
+            assert_eq!(e.offer(t0 + i as f64, i).unwrap(), Offer::Accepted, "request {i}");
+            while e.next_time().is_some() {
+                e.step().unwrap();
+            }
+        }
+        assert_eq!(e.shed(), 0);
+        assert_eq!(e.take_completions().len(), 100);
+    }
+
+    #[test]
+    fn zero_skew_placement_is_plain_round_robin() {
+        // skew = 0 must reproduce the PR-4 `id % drives` rotation
+        // exactly: drive d gets requests d, d+4, d+8, … in order.
+        let model = AppModel::for_app(App::Sentiment, 100);
+        let cfg = engine_cfg(DispatchMode::Polling); // polling: offer only queues
+        let mut e = ServeEngine::new(&model, &cfg, EnginePolicy::default()).unwrap();
+        let t0 = e.t0();
+        for i in 0..16u64 {
+            e.offer(t0, i).unwrap();
+        }
+        for d in 0..4usize {
+            let ids: Vec<u64> = e.pending[d].iter().map(|r| r.id).collect();
+            let want: Vec<u64> = (0..4).map(|k| d as u64 + 4 * k).collect();
+            assert_eq!(ids, want, "drive {d}");
+        }
+    }
+
+    #[test]
+    fn positive_skew_concentrates_placement_on_low_drives() {
+        // skew = 1 over 4 drives is the Zipf weighting 1 : 1/2 : 1/3 :
+        // 1/4 — drive 0 takes ~48% of placements (vs 25% uniform), and
+        // the per-drive counts are strictly decreasing.
+        let model = AppModel::for_app(App::Sentiment, 100);
+        let cfg = engine_cfg(DispatchMode::Polling);
+        let policy = EnginePolicy { skew: 1.0, ..Default::default() };
+        let mut e = ServeEngine::new(&model, &cfg, policy).unwrap();
+        let t0 = e.t0();
+        let n = 1_000u64;
+        for i in 0..n {
+            e.offer(t0, i).unwrap();
+        }
+        let counts: Vec<usize> = e.pending.iter().map(|q| q.len()).collect();
+        assert_eq!(counts.iter().sum::<usize>() as u64, n);
+        for w in counts.windows(2) {
+            assert!(w[0] > w[1], "hot drives come first: {counts:?}");
+        }
+        let share0 = counts[0] as f64 / n as f64;
+        assert!(
+            (share0 - 0.48).abs() < 0.02,
+            "drive 0 share {share0:.3} should track its 1/H4 Zipf share"
+        );
+    }
+
+    #[test]
+    fn degenerate_engine_policies_rejected() {
+        let model = AppModel::for_app(App::Sentiment, 100);
+        let cfg = engine_cfg(DispatchMode::EventDriven);
+        // min_batch beyond the single-dispatch drain capacity
+        // (host 500×26 + 4×500 = 15_000 for this config).
+        let big = EnginePolicy {
+            formation: FormationPolicy { min_batch: 15_001, timeout_s: 0.05 },
+            ..Default::default()
+        };
+        assert!(ServeEngine::new(&model, &cfg, big).is_err());
+        let at_cap = EnginePolicy {
+            formation: FormationPolicy { min_batch: 15_000, timeout_s: 0.05 },
+            ..Default::default()
+        };
+        assert!(ServeEngine::new(&model, &cfg, at_cap).is_ok(), "the cap itself is fine");
+        // negative / non-finite skew
+        let neg = EnginePolicy { skew: -0.5, ..Default::default() };
+        assert!(ServeEngine::new(&model, &cfg, neg).is_err());
+        let nan = EnginePolicy { skew: f64::NAN, ..Default::default() };
+        assert!(ServeEngine::new(&model, &cfg, nan).is_err());
+        // non-positive admission budget
+        let bad_budget = EnginePolicy { admission_budget_s: Some(0.0), ..Default::default() };
+        assert!(ServeEngine::new(&model, &cfg, bad_budget).is_err());
     }
 }

@@ -35,6 +35,28 @@
 //! `cargo bench --bench serve_latency`) sweeps offered load × fleet
 //! shape × app and reports the **max sustainable throughput**: the
 //! highest offered load whose p99 stays under the SLO.
+//!
+//! On top of the PR-4 data plane sits the serving **control plane**
+//! (the ISSUE-5 tentpole):
+//!
+//! * **SLO-aware admission control** — `[traffic] admission = true` /
+//!   `solana serve --admission on` sheds requests whose estimated wait
+//!   would blow the p99-SLO deadline budget, with exact accounting
+//!   (`offered == accepted + shed`; shed requests are excluded from the
+//!   percentiles and reported as goodput loss). See [`engine`].
+//! * **latency-aware balancing** — the `least-work` front-door policy
+//!   routes on outstanding *service time* (queued requests × per-shape
+//!   service estimate) instead of request count, which is what saves a
+//!   heterogeneous fleet when count-based JSQ pins on a slow, shedding
+//!   server. See [`balancer`].
+//! * **hot-shard skew** — `[traffic] skew` / `--skew` warps per-drive
+//!   data placement toward a Zipf-like distribution to stress both of
+//!   the above. See [`engine`].
+//! * **autoscaling** — Fig 10 ([`crate::exp::fig10_autoscale`],
+//!   `solana fig10`, `cargo bench --bench serve_autoscale`) reports the
+//!   minimum servers each fleet shape needs to meet the p99 SLO as the
+//!   offered load grows, plus goodput and per-request energy at that
+//!   operating point.
 
 pub mod arrivals;
 pub mod balancer;
@@ -83,6 +105,14 @@ pub struct TrafficConfig {
     /// p99 SLO override (s); `None` derives a per-app default from the
     /// CSD batch service time (see [`default_slo_p99`]).
     pub slo_p99_s: Option<f64>,
+    /// SLO-aware admission control (the ISSUE-5 tentpole): shed
+    /// requests whose estimated wait would blow the p99-SLO deadline
+    /// budget instead of queuing them. Off by default — the PR-4
+    /// serve-everything behavior.
+    pub admission: bool,
+    /// Hot-shard placement skew: Zipf-like per-drive weighting exponent
+    /// (`w_d ∝ 1/(d+1)^skew`). 0 = uniform round-robin (default).
+    pub skew: f64,
     /// Deterministic seed for the arrival generators.
     pub seed: u64,
 }
@@ -102,6 +132,8 @@ impl Default for TrafficConfig {
             burst_on_s: 1.0,
             policy: LbPolicy::JoinShortestQueue,
             slo_p99_s: None,
+            admission: false,
+            skew: 0.0,
             seed: 42,
         }
     }
@@ -135,6 +167,26 @@ impl TrafficConfig {
             }
         }
     }
+}
+
+/// Deterministic smooth weighted rotation: pick the index whose
+/// realized share lags its weight share most — argmin of
+/// `(count + 1) / weight`, ties to the lowest index. Uniform weights
+/// reproduce plain round-robin `0,1,…,n-1,0,…` exactly. Shared by the
+/// engine's skewed data placement and the balancer's weighted /
+/// least-work policies (same scoring, different counts and weights).
+pub(crate) fn smooth_pick(counts: &[u64], weights: &[f64]) -> usize {
+    debug_assert_eq!(counts.len(), weights.len());
+    let mut best = 0usize;
+    let mut best_score = f64::INFINITY;
+    for (i, (&n, &w)) in counts.iter().zip(weights).enumerate() {
+        let score = (n + 1) as f64 / w.max(1e-12);
+        if score < best_score {
+            best_score = score;
+            best = i;
+        }
+    }
+    best
 }
 
 /// Steady-state service capacity of one server (items/s), ignoring
@@ -196,6 +248,8 @@ pub struct ServerServeStats {
     pub is_csd: bool,
     /// Requests this server completed.
     pub served: u64,
+    /// Requests this server's admission gate shed.
+    pub shed: u64,
     pub host_items: u64,
     pub csd_items: u64,
     pub host_busy_secs: f64,
@@ -212,11 +266,22 @@ pub struct ServeReport {
     pub policy: &'static str,
     pub servers: usize,
     pub requests: u64,
+    /// Requests accepted and completed (`requests − shed`).
     pub served: u64,
+    /// Requests shed by admission control (0 with admission off).
+    /// Exact accounting: `requests == served + shed`, always.
+    pub shed: u64,
+    /// Whether SLO-aware admission control was active.
+    pub admission: bool,
+    /// The p99 SLO the run was judged (and, with admission on,
+    /// controlled) against — the `[traffic] slo_p99_s` override or the
+    /// per-app default ([`default_slo_p99`]).
+    pub slo_p99_s: f64,
     /// Configured offered rate (closed loop: the `clients/think`
     /// upper bound).
     pub offered_rps: f64,
-    /// Completions per second of serving wall-clock.
+    /// Completions per second of serving wall-clock. With admission on
+    /// this is the *goodput*: shed requests never count.
     pub achieved_rps: f64,
     /// First arrival → last response (serving clock).
     pub duration_secs: f64,
@@ -240,6 +305,23 @@ impl ServeReport {
             return 0.0;
         }
         self.csd_items as f64 / self.served as f64
+    }
+
+    /// Fraction of offered requests shed by admission control — the
+    /// goodput loss the control plane traded for the bounded tail.
+    pub fn shed_fraction(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.shed as f64 / self.requests as f64
+    }
+
+    /// Whether the accepted-request p99 met the run's SLO. A run that
+    /// served nothing never "meets" it — an all-shed run has an empty
+    /// accepted set whose percentiles collapse to zero, and admission
+    /// must not be able to fake compliance by shedding everything.
+    pub fn meets_slo(&self) -> bool {
+        self.served > 0 && self.latency.p99 <= self.slo_p99_s
     }
 
     /// Field-by-field bit-identity (floats on bit patterns) — the
@@ -267,6 +349,9 @@ impl ServeReport {
         eq("servers", self.servers, other.servers)?;
         eq("requests", self.requests, other.requests)?;
         eq("served", self.served, other.served)?;
+        eq("shed", self.shed, other.shed)?;
+        eq("admission", self.admission, other.admission)?;
+        f64_eq("slo_p99_s", self.slo_p99_s, other.slo_p99_s)?;
         f64_eq("offered_rps", self.offered_rps, other.offered_rps)?;
         f64_eq("achieved_rps", self.achieved_rps, other.achieved_rps)?;
         f64_eq("duration_secs", self.duration_secs, other.duration_secs)?;
@@ -283,6 +368,22 @@ impl ServeReport {
         eq("rack_bytes", self.rack_bytes, other.rack_bytes)?;
         eq("rack_messages", self.rack_messages, other.rack_messages)?;
         f64_eq("energy_j", self.energy_j, other.energy_j)?;
+        f64_eq("energy_per_req_j", self.energy_per_req_j, other.energy_per_req_j)?;
+        // Per-server slices too: a nondeterminism that only permutes
+        // which server handled which requests conserves every fleet-wide
+        // sum above but diverges here.
+        eq("per_server.len", self.per_server.len(), other.per_server.len())?;
+        for (a, b) in self.per_server.iter().zip(&other.per_server) {
+            let i = a.index;
+            eq("per_server.index", a.index, b.index)?;
+            eq("per_server.is_csd", a.is_csd, b.is_csd)?;
+            eq(&format!("per_server[{i}].served"), a.served, b.served)?;
+            eq(&format!("per_server[{i}].shed"), a.shed, b.shed)?;
+            eq(&format!("per_server[{i}].host_items"), a.host_items, b.host_items)?;
+            eq(&format!("per_server[{i}].csd_items"), a.csd_items, b.csd_items)?;
+            f64_eq(&format!("per_server[{i}].host_busy_secs"), a.host_busy_secs, b.host_busy_secs)?;
+            f64_eq(&format!("per_server[{i}].isp_busy_secs"), a.isp_busy_secs, b.isp_busy_secs)?;
+        }
         Ok(())
     }
 }
@@ -323,7 +424,19 @@ pub fn parse_policy(name: &str) -> anyhow::Result<LbPolicy> {
             Ok(LbPolicy::WeightedCapacity)
         }
         "jsq" | "join-shortest-queue" | "join_shortest_queue" => Ok(LbPolicy::JoinShortestQueue),
-        other => anyhow::bail!("unknown balancer policy '{other}' (expected rr|weighted|jsq)"),
+        "least-work" | "least_work" | "lw" => Ok(LbPolicy::LeastWork),
+        other => anyhow::bail!(
+            "unknown balancer policy '{other}' (expected rr|weighted|jsq|least-work)"
+        ),
+    }
+}
+
+/// Parse an on/off switch (the `solana serve --admission` flag value).
+pub fn parse_on_off(name: &str) -> anyhow::Result<bool> {
+    match name {
+        "on" | "true" | "1" | "yes" => Ok(true),
+        "off" | "false" | "0" | "no" => Ok(false),
+        other => anyhow::bail!("expected on|off, got '{other}'"),
     }
 }
 
@@ -482,6 +595,125 @@ mod tests {
         assert!(slo >= 2.0 * one_batch);
     }
 
+    /// Single speech server: per-request service times of hundreds of
+    /// ms make admission bounds small enough that a few thousand
+    /// requests exercise real shedding.
+    fn speech_sched(dispatch: DispatchMode) -> SchedConfig {
+        SchedConfig {
+            csd_batch: 2,
+            batch_ratio: 19.0,
+            drives: 8,
+            isp_drives: 8,
+            dispatch,
+            ..SchedConfig::default()
+        }
+    }
+
+    #[test]
+    fn admission_conservation_across_seed_process_and_dispatch() {
+        // ISSUE-5 satellite: `offered == accepted + shed`, exactly, for
+        // every seed × arrival process × dispatch mode — against an
+        // overloaded server so the open-loop processes actually shed.
+        for dispatch in [DispatchMode::Polling, DispatchMode::EventDriven] {
+            let sched = speech_sched(dispatch);
+            for process in ArrivalProcess::all() {
+                for seed in [7, 42, 1234] {
+                    let tcfg = TrafficConfig {
+                        process,
+                        load: 1.5,
+                        requests: 2_500,
+                        admission: true,
+                        clients: 16,
+                        think_s: 0.05,
+                        seed,
+                        ..TrafficConfig::default()
+                    };
+                    let mut m = Metrics::new();
+                    let r = serve(
+                        App::SpeechToText,
+                        &sched,
+                        &tcfg,
+                        &PowerModel::default(),
+                        &mut m,
+                    )
+                    .unwrap();
+                    let ctx = format!("{dispatch:?}/{process:?}/seed {seed}");
+                    assert_eq!(r.served + r.shed, 2_500, "{ctx}: offered == accepted + shed");
+                    assert_eq!(
+                        r.host_items + r.csd_items,
+                        r.served,
+                        "{ctx}: only accepted requests reach the scheduler"
+                    );
+                    if process != ArrivalProcess::ClosedLoop {
+                        assert!(r.shed > 0, "{ctx}: open-loop overload must shed");
+                        assert!(r.served > 0, "{ctx}: admission is not a drop-everything gate");
+                    } else {
+                        // A closed loop self-throttles below the bound.
+                        assert_eq!(r.shed, 0, "{ctx}: closed loops never blow the budget");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shedding_never_worsens_p99_of_accepted() {
+        // ISSUE-5 satellite: admission only removes work, so the
+        // accepted requests' p99 never rises. Below the knee the gate
+        // never fires and the runs are identical; past it the bounded
+        // tail replaces the open-loop blowup.
+        for dispatch in [DispatchMode::Polling, DispatchMode::EventDriven] {
+            let sched = speech_sched(dispatch);
+            for process in [ArrivalProcess::Poisson, ArrivalProcess::Bursty] {
+                for &load in &[0.6, 1.4] {
+                    let mk = |admission| TrafficConfig {
+                        process,
+                        load,
+                        requests: 2_500,
+                        admission,
+                        ..TrafficConfig::default()
+                    };
+                    let mut m = Metrics::new();
+                    let off = serve(
+                        App::SpeechToText,
+                        &sched,
+                        &mk(false),
+                        &PowerModel::default(),
+                        &mut m,
+                    )
+                    .unwrap();
+                    let on = serve(
+                        App::SpeechToText,
+                        &sched,
+                        &mk(true),
+                        &PowerModel::default(),
+                        &mut m,
+                    )
+                    .unwrap();
+                    let ctx = format!("{dispatch:?}/{process:?}/load {load}");
+                    assert!(
+                        on.latency.p99 <= off.latency.p99 * 1.02,
+                        "{ctx}: shedding worsened p99 of accepted: {} > {}",
+                        on.latency.p99,
+                        off.latency.p99
+                    );
+                    if load < 1.0 {
+                        // The gate never fires below the knee: the runs
+                        // are the same run.
+                        assert_eq!(on.shed, 0, "{ctx}");
+                        assert_eq!(
+                            on.latency.p99.to_bits(),
+                            off.latency.p99.to_bits(),
+                            "{ctx}: an idle gate must not perturb the run"
+                        );
+                    } else {
+                        assert!(on.shed > 0, "{ctx}: overload must shed");
+                    }
+                }
+            }
+        }
+    }
+
     #[test]
     fn bad_traffic_configs_rejected() {
         let sched = sched_cfg(DispatchMode::EventDriven);
@@ -491,6 +723,12 @@ mod tests {
         tcfg = TrafficConfig { batch_timeout_s: -1.0, ..TrafficConfig::default() };
         assert!(serve(App::Sentiment, &sched, &tcfg, &PowerModel::default(), &mut m).is_err());
         tcfg = TrafficConfig { rate_rps: Some(0.0), ..TrafficConfig::default() };
+        assert!(serve(App::Sentiment, &sched, &tcfg, &PowerModel::default(), &mut m).is_err());
+        tcfg = TrafficConfig { skew: -0.5, ..TrafficConfig::default() };
+        assert!(serve(App::Sentiment, &sched, &tcfg, &PowerModel::default(), &mut m).is_err());
+        tcfg = TrafficConfig { skew: f64::INFINITY, ..TrafficConfig::default() };
+        assert!(serve(App::Sentiment, &sched, &tcfg, &PowerModel::default(), &mut m).is_err());
+        tcfg = TrafficConfig { slo_p99_s: Some(-2.0), ..TrafficConfig::default() };
         assert!(serve(App::Sentiment, &sched, &tcfg, &PowerModel::default(), &mut m).is_err());
     }
 }
