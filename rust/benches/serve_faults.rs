@@ -1,0 +1,29 @@
+//! `cargo bench --bench serve_faults` — regenerates Fig 11: availability
+//! under deterministic fault injection (lost acks, drive stalls, a
+//! permanent server crash) across front-door resilience policies
+//! (timeouts+retries, hedging, shard failover) for the all-CSD build and
+//! the all-SSD baseline — the ISSUE-6 tentpole. See `faults` for the
+//! fault plan, `traffic::balancer` for the failure plane, and `exp` for
+//! the sweep definition.
+//!
+//! Scale with `SOLANA_BENCH_FAST=1` (5%) or default 25% of the paper's
+//! dataset sizes; the *shape* (fire-and-forget collapses under a crash,
+//! retry+hedge+replica holds ≥ 99% availability) is scale-invariant.
+
+use solana_isp::bench_support::Bencher;
+use solana_isp::exp::{self, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::from_env();
+    let table = exp::fig11_availability(scale)?;
+    exp::emit(&table, "fig11")?;
+    // Wall-time of regenerating the artifact (simulator throughput):
+    let mut b = Bencher::new(0, if std::env::var("SOLANA_BENCH_FAST").is_ok() { 1 } else { 2 });
+    b.bench("fig11_serve_faults", || {
+        let t = exp::fig11_availability(scale).expect("rerun");
+        t.rows.len() as u64
+    });
+    print!("{}", b.report());
+    b.write_json("serve_faults")?;
+    Ok(())
+}

@@ -106,6 +106,13 @@ pub struct FleetConfig {
     /// weighs every server by its drive census, today's homogeneous
     /// behavior. Must have exactly `servers` positive entries.
     pub weights: Option<Vec<u64>>,
+    /// Shard replication factor for serving failover (`[fleet]
+    /// replicas` / `solana serve --replicas`, ISSUE-6): with
+    /// `replicas >= 1`, each shard's data is also resident on the next
+    /// server(s) in ring order, so the front door can fail a
+    /// believed-dead server's traffic over to its neighbor. 0 (default)
+    /// disables failover routing. Must be < `servers`.
+    pub replicas: usize,
 }
 
 impl Default for FleetConfig {
@@ -117,6 +124,7 @@ impl Default for FleetConfig {
             rack_bandwidth: crate::interconnect::RACK_BANDWIDTH,
             rack_msg_overhead: crate::interconnect::RACK_MSG_OVERHEAD,
             weights: None,
+            replicas: 0,
         }
     }
 }

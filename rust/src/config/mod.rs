@@ -40,7 +40,24 @@
 //! slo_p99_s = 2.5          # p99 SLO (default: 4x the CSD batch service time)
 //! admission = true         # SLO-aware admission control (shed past-deadline requests)
 //! skew = 1.0               # hot-shard placement skew (Zipf-like; 0 = uniform)
+//! retries = 3              # per-request retry budget (0 = no timeout/retry layer)
+//! retry_timeout_s = 1.0    # first-attempt timeout (default: deadline-aware estimate)
+//! hedge = true             # duplicate stragglers, first response wins
+//!
+//! [faults]                 # deterministic fault injection — see crate::faults
+//! seed = 7                 # fault RNG stream (independent of the traffic seed)
+//! ack_loss = 0.05          # P(CSD batch ack lost)
+//! stall = 0.1              # P(CSD batch ack stalls stall_s)
+//! stall_s = 1.0
+//! drive_crash = 0.01       # P(ISP dies at a batch ack, permanent)
+//! server_crash_at = 0.3    # crash crash_server at this fraction of the arrival window
+//! crash_server = 0
+//! rejoin_s = 5.0           # omit for a permanent crash
+//! link_drop = 0.02         # P(rack response message dropped)
+//! link_dup = 0.02          # P(rack response message duplicated)
 //! ```
+//!
+//! `[fleet] replicas = 1` enables shard failover routing (ISSUE-6).
 
 use std::path::Path;
 
@@ -161,8 +178,18 @@ impl ExperimentConfig {
             cfg.fleet.shape = parse_shape(v)?;
         }
         if let Some(v) = t.f64("fleet.rack_bandwidth") {
-            anyhow::ensure!(v > 0.0, "fleet.rack_bandwidth must be positive");
+            // is_finite too (ISSUE-6 satellite): `inf` parses as a
+            // float and would silently zero every rack transfer time.
+            anyhow::ensure!(
+                v > 0.0 && v.is_finite(),
+                "fleet.rack_bandwidth must be positive and finite"
+            );
             cfg.fleet.rack_bandwidth = v;
+        }
+        if let Some(v) = t.u64("fleet.replicas") {
+            // The replicas < servers invariant is enforced by
+            // serve_fleet, where the final server count is known.
+            cfg.fleet.replicas = v as usize;
         }
         if let Some(v) = t.f64("fleet.rack_msg_overhead_s") {
             anyhow::ensure!(v >= 0.0, "fleet.rack_msg_overhead_s must be non-negative");
@@ -252,6 +279,76 @@ impl ExperimentConfig {
                 "traffic.skew must be non-negative and finite"
             );
             cfg.traffic.skew = skew;
+        }
+        if let Some(v) = t.u64("traffic.retries") {
+            cfg.traffic.retries = v as u32;
+        }
+        if let Some(v) = t.f64("traffic.retry_timeout_s") {
+            anyhow::ensure!(
+                v > 0.0 && v.is_finite(),
+                "traffic.retry_timeout_s must be positive and finite"
+            );
+            cfg.traffic.retry_timeout_s = Some(v);
+        }
+        if let Some(v) = t.get("traffic.hedge") {
+            // Strict like `admission`: a non-boolean must not silently
+            // disable the hedging the config asked for.
+            cfg.traffic.hedge = v
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("traffic.hedge must be a boolean (true|false)"))?;
+        }
+        // ---- [faults]: deterministic fault injection (ISSUE-6) ------
+        {
+            use crate::faults::FaultsConfig;
+            let mut fc = FaultsConfig::default();
+            let mut present = false;
+            if let Some(v) = t.u64("faults.seed") {
+                fc.seed = v;
+                present = true;
+            }
+            if let Some(v) = t.f64("faults.ack_loss") {
+                fc.ack_loss = v;
+                present = true;
+            }
+            if let Some(v) = t.f64("faults.stall") {
+                fc.stall = v;
+                present = true;
+            }
+            if let Some(v) = t.f64("faults.stall_s") {
+                fc.stall_s = v;
+                present = true;
+            }
+            if let Some(v) = t.f64("faults.drive_crash") {
+                fc.drive_crash = v;
+                present = true;
+            }
+            if let Some(v) = t.f64("faults.server_crash_at") {
+                fc.server_crash_at = Some(v);
+                present = true;
+            }
+            if let Some(v) = t.u64("faults.crash_server") {
+                fc.crash_server = v as usize;
+                present = true;
+            }
+            if let Some(v) = t.f64("faults.rejoin_s") {
+                fc.rejoin_s = Some(v);
+                present = true;
+            }
+            if let Some(v) = t.f64("faults.link_drop") {
+                fc.link_drop = v;
+                present = true;
+            }
+            if let Some(v) = t.f64("faults.link_dup") {
+                fc.link_dup = v;
+                present = true;
+            }
+            if present {
+                // Probability ranges etc. are checkable now; the
+                // crash_server-vs-servers bound is re-checked by
+                // serve_fleet against the final fleet size.
+                fc.validate(cfg.fleet.servers.max(fc.crash_server + 1))?;
+                cfg.traffic.faults = Some(fc);
+            }
         }
         anyhow::ensure!(
             cfg.sched.isp_drives <= cfg.sched.drives,
@@ -463,6 +560,46 @@ mod tests {
         let mismatch = ExperimentConfig::from_toml("[fleet]\nservers = 2\nweights = [1, 2, 3]\n")
             .unwrap();
         assert!(mismatch.fleet.validate_weights().is_err());
+    }
+
+    #[test]
+    fn faults_section_parses_and_validates() {
+        // ISSUE-6: the [faults] section and the resilience knobs.
+        let c = ExperimentConfig::from_toml(
+            "[fleet]\nservers = 4\nreplicas = 1\n\
+             [traffic]\nretries = 3\nretry_timeout_s = 1.5\nhedge = true\n\
+             [faults]\nseed = 99\nack_loss = 0.05\nstall = 0.1\nstall_s = 0.5\n\
+             server_crash_at = 0.3\ncrash_server = 2\nrejoin_s = 4.0\nlink_drop = 0.02\n",
+        )
+        .unwrap();
+        assert_eq!(c.fleet.replicas, 1);
+        assert_eq!(c.traffic.retries, 3);
+        assert_eq!(c.traffic.retry_timeout_s, Some(1.5));
+        assert!(c.traffic.hedge);
+        let fc = c.traffic.faults.expect("[faults] section present");
+        assert_eq!(fc.seed, 99);
+        assert_eq!(fc.ack_loss, 0.05);
+        assert_eq!(fc.stall, 0.1);
+        assert_eq!(fc.stall_s, 0.5);
+        assert_eq!(fc.server_crash_at, Some(0.3));
+        assert_eq!(fc.crash_server, 2);
+        assert_eq!(fc.rejoin_s, Some(4.0));
+        assert_eq!(fc.link_drop, 0.02);
+        // no [faults] section → no fault plan at all
+        let d = ExperimentConfig::from_toml("").unwrap();
+        assert!(d.traffic.faults.is_none());
+        assert_eq!(d.traffic.retries, 0);
+        assert_eq!(d.traffic.retry_timeout_s, None);
+        assert!(!d.traffic.hedge);
+        assert_eq!(d.fleet.replicas, 0);
+        // validation at parse time
+        assert!(ExperimentConfig::from_toml("[faults]\nack_loss = 1.5").is_err());
+        assert!(ExperimentConfig::from_toml("[faults]\nstall_s = -1.0").is_err());
+        assert!(ExperimentConfig::from_toml("[faults]\nserver_crash_at = 2.0").is_err());
+        assert!(ExperimentConfig::from_toml("[traffic]\nretry_timeout_s = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml("[traffic]\nhedge = \"maybe\"").is_err());
+        // the finite-bandwidth regression (ISSUE-6 satellite)
+        assert!(ExperimentConfig::from_toml("[fleet]\nrack_bandwidth = inf").is_err());
     }
 
     #[test]

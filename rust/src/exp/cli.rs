@@ -8,8 +8,10 @@
 //! solana serve --app sentiment --load 0.7      # online serving, tail latency
 //! solana serve --process closed --clients 64   # closed-loop traffic
 //! solana serve --admission on --policy least-work --skew 1.0   # control plane
+//! solana serve --faults server-crash@0.3,crash-server=0 \
+//!              --retries 3 --hedge --replicas 1          # chaos + resilience
 //! solana fig5  --app speech [--scale 0.25] [--threads 8]
-//! solana fig6 | fig7 | fig8 | fig9 | fig10 | table1 | power
+//! solana fig6 | fig7 | fig8 | fig9 | fig10 | fig11 | table1 | power
 //! solana ablate --which ratio|datapath|wakeup|dispatch --app sentiment
 //! solana version | help
 //! ```
@@ -74,6 +76,12 @@ fn commands() -> Vec<Command> {
             .opt("admission", None, "on|off — SLO-aware admission control: shed requests whose estimated wait blows the p99 deadline budget (default off)")
             .opt("skew", None, "hot-shard placement skew exponent (Zipf-like per-drive weighting; 0 = uniform, default 0)")
             .opt("slo", None, "p99 SLO in seconds (default: per-app, 4x the CSD batch service time)")
+            .opt("retries", None, "per-request retry budget after a timeout (default 0 = fire-and-forget)")
+            .opt("retry-timeout", None, "per-request timeout in seconds before a retry (default: 4x the estimated completion time)")
+            .opt("replicas", None, "shard replicas per server for crash failover (default 0; must be < servers)")
+            .opt("faults", None, "fault plan: comma-separated name@rate / key=value clauses, e.g. 'ack-loss@0.05,stall@0.1,stall-s=0.2' or 'server-crash@0.3,crash-server=0'")
+            .opt("fault-seed", None, "fault-plan RNG seed (independent of the traffic stream; requires --faults)")
+            .flag("hedge", "hedge slow requests: duplicate at 75% of the timeout, first response wins")
             .opt("scale", None, "dataset scale vs paper (0..1], default 0.25")
             .flag("baseline", "disable all ISP engines (storage-only)")
             .flag("json", "emit the serving report as JSON"),
@@ -94,6 +102,9 @@ fn commands() -> Vec<Command> {
             .opt("scale", None, "dataset scale")
             .opt("threads", None, "sweep worker threads"),
         Command::new("fig10", "regenerate Fig 10 (autoscaling: min servers vs offered load)")
+            .opt("scale", None, "dataset scale")
+            .opt("threads", None, "sweep worker threads"),
+        Command::new("fig11", "regenerate Fig 11 (availability under faults × resilience policy)")
             .opt("scale", None, "dataset scale")
             .opt("threads", None, "sweep worker threads"),
         Command::new("table1", "regenerate Table I (summary)")
@@ -285,6 +296,37 @@ pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
                 anyhow::ensure!(s > 0.0 && s.is_finite(), "--slo must be positive");
                 tcfg.slo_p99_s = Some(s);
             }
+            if let Some(n) = args.u64("retries")? {
+                tcfg.retries = n as u32;
+            }
+            if let Some(s) = args.f64("retry-timeout")? {
+                anyhow::ensure!(s > 0.0 && s.is_finite(), "--retry-timeout must be positive");
+                tcfg.retry_timeout_s = Some(s);
+            }
+            if args.flag("hedge") {
+                tcfg.hedge = true;
+            }
+            if let Some(n) = args.u64("replicas")? {
+                // Range (replicas < servers) is validated by serve_fleet,
+                // which sees the final server count.
+                fcfg.replicas = n as usize;
+            }
+            if let Some(spec) = args.str("faults") {
+                let seed = match args.u64("fault-seed")? {
+                    Some(s) => s,
+                    None => crate::faults::FaultsConfig::default().seed,
+                };
+                // Rates/targets are validated by serve_fleet against the
+                // final fleet; parse only checks the clause grammar.
+                tcfg.faults = Some(crate::faults::FaultsConfig::parse(spec, seed)?);
+            } else if let Some(seed) = args.u64("fault-seed")? {
+                match tcfg.faults.as_mut() {
+                    Some(fc) => fc.seed = seed,
+                    None => anyhow::bail!(
+                        "--fault-seed requires --faults or a [faults] config section"
+                    ),
+                }
+            }
             // An explicit --load is meaningless for a closed loop
             // (offered rate = clients/think): rejected, not silently
             // ignored — mirroring serve_fleet's --rate guard.
@@ -318,6 +360,7 @@ pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
         "fig8" => exp::emit(&exp::fig8_scaleout(scale)?, "fig8")?,
         "fig9" => exp::emit(&exp::fig9_latency(scale)?, "fig9")?,
         "fig10" => exp::emit(&exp::fig10_autoscale(scale)?, "fig10")?,
+        "fig11" => exp::emit(&exp::fig11_availability(scale)?, "fig11")?,
         "table1" => exp::emit(&exp::table1(scale)?, "table1")?,
         "power" => exp::emit(&exp::power_breakdown(), "power")?,
         "ablate" => {
@@ -407,6 +450,12 @@ fn print_serve_report(r: &ServeReport) {
     if r.shed > 0 {
         println!("goodput loss        {:>13.1}%", r.shed_fraction() * 100.0);
     }
+    if r.failed > 0 || r.retried > 0 || r.hedged > 0 {
+        println!("failed              {:>14}", r.failed);
+        println!("retried / hedged    {:>7} / {}", r.retried, r.hedged);
+        println!("dup suppressed      {:>14}", r.duplicate_suppressed);
+    }
+    println!("availability        {:>13.2}%", r.availability * 100.0);
     println!("offered             {:>11.1} req/s", r.offered_rps);
     println!("goodput             {:>11.1} req/s", r.achieved_rps);
     println!("duration            {:>14}", crate::util::human_secs(r.duration_secs));
@@ -453,6 +502,12 @@ fn serve_json(r: &ServeReport) -> crate::codec::json::Json {
         .set("served", r.served.into())
         .set("shed", r.shed.into())
         .set("shed_fraction", r.shed_fraction().into())
+        .set("failed", r.failed.into())
+        .set("retried", r.retried.into())
+        .set("hedged", r.hedged.into())
+        .set("duplicate_suppressed", r.duplicate_suppressed.into())
+        .set("completed_in_slo", r.completed_in_slo.into())
+        .set("availability", r.availability.into())
         .set("admission", r.admission.into())
         .set("slo_p99_s", r.slo_p99_s.into())
         .set("meets_slo", r.meets_slo().into())
@@ -712,6 +767,52 @@ mod tests {
     #[test]
     fn fig10_smoke() {
         assert_eq!(dispatch(&sv(&["fig10", "--scale", "0.005"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn fig11_smoke() {
+        assert_eq!(dispatch(&sv(&["fig11", "--scale", "0.005"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn serve_chaos_smoke() {
+        // The CI chaos smoke invocation: crash one server out of four
+        // and ride it out with the full resilience stack.
+        let code = dispatch(&sv(&[
+            "serve", "--app", "speech", "--servers", "4", "--policy", "rr",
+            "--faults", "server-crash@0.3,crash-server=0", "--fault-seed", "11",
+            "--retries", "3", "--hedge", "--replicas", "1",
+            "--load", "0.6", "--requests", "1200", "--scale", "0.01", "--json",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        // Drive-level chaos with a modest retry budget, human report.
+        let code = dispatch(&sv(&[
+            "serve", "--faults", "ack-loss@0.05,stall@0.1,stall-s=0.05",
+            "--retries", "2", "--requests", "800", "--scale", "0.01",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn serve_rejects_bad_fault_and_resilience_specs() {
+        // unknown clause name: rejected at parse time
+        assert!(dispatch(&sv(&["serve", "--faults", "gremlins@0.5", "--scale", "0.01"])).is_err());
+        // rate outside [0,1]: rejected by serve_fleet's validation
+        assert!(dispatch(&sv(&["serve", "--faults", "ack-loss@1.5", "--scale", "0.01"])).is_err());
+        // crash target outside the fleet
+        assert!(dispatch(&sv(&[
+            "serve", "--servers", "2", "--faults", "server-crash@0.5,crash-server=7",
+            "--scale", "0.01"
+        ]))
+        .is_err());
+        // resilience knobs are validated too
+        assert!(dispatch(&sv(&["serve", "--retry-timeout", "0", "--scale", "0.01"])).is_err());
+        // replicas must be < servers (1 replica on a 1-server fleet)
+        assert!(dispatch(&sv(&["serve", "--replicas", "1", "--scale", "0.01"])).is_err());
+        // --fault-seed without a fault plan is meaningless
+        assert!(dispatch(&sv(&["serve", "--fault-seed", "3", "--scale", "0.01"])).is_err());
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! | [`fig8_scaleout`] | Fig 8 (ours): fleet scale-out, 1→8 servers × 3 shapes |
 //! | [`fig9_latency`] | Fig 9 (ours): serving latency vs offered load × 3 shapes |
 //! | [`fig10_autoscale`] | Fig 10 (ours): min servers to meet the p99 SLO vs offered load |
+//! | [`fig11_availability`] | Fig 11 (ours): availability under faults × resilience policy |
 //!
 //! Every sweep fans its independent cells out over the deterministic
 //! worker pool in [`pool`] (sized by `--threads` / `SOLANA_THREADS` /
@@ -28,6 +29,7 @@ pub mod cli;
 pub mod pool;
 
 use crate::cluster::fleet::{run_fleet, FleetConfig, FleetShape};
+use crate::faults::FaultsConfig;
 use crate::metrics::{Metrics, Table};
 use crate::power::PowerModel;
 use crate::sched::{run, DispatchMode, RunReport, SchedConfig};
@@ -933,6 +935,273 @@ pub fn fig10_table_from(cells: &[Fig10Cell]) -> Table {
     t
 }
 
+/// Fleet size for the Fig 11 availability cells. Four servers is the
+/// smallest fleet where one crash removes a quarter of capacity — large
+/// enough that the survivors can absorb a failover at [`FIG11_LOAD`],
+/// small enough that an unhandled crash is catastrophic for the gate.
+pub const FIG11_SERVERS: usize = 4;
+
+/// Offered load for every Fig 11 cell, as a fraction of nominal fleet
+/// capacity. 0.6 leaves the three surviving servers at ~0.8 effective
+/// load after a crash, so availability under failover measures the
+/// resilience machinery, not raw capacity headroom.
+pub const FIG11_LOAD: f64 = 0.6;
+
+/// The app Fig 11 studies. Speech-to-text sits between sentiment's
+/// firehose and the recommender's trickle: rates high enough to resolve
+/// the 99.9th percentile at golden scale, per-request SLOs long enough
+/// that one deadline-aware retry (timeout at half the SLO) can still
+/// land inside the SLO.
+pub const FIG11_APP: App = App::SpeechToText;
+
+/// Fleet shapes Fig 11 sweeps: the paper's all-CSD build against the
+/// plain-SSD baseline. (Mixed adds nothing to the availability story —
+/// faults are injected per drive/server/link, not per medium.)
+pub const FIG11_SHAPES: [FleetShape; 2] = [FleetShape::AllCsd, FleetShape::AllSsd];
+
+/// Fault scenarios swept by Fig 11, from a perfectly healthy fleet to a
+/// permanent single-server crash.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultScenario {
+    /// No fault plan at all (`faults: None`): the clean baseline that
+    /// every resilience policy must leave bit-identical
+    /// (`tests/chaos.rs` pins the stronger quiet-plan property).
+    Healthy,
+    /// Light drive-level trouble: 2% lost acks + 2% transient stalls.
+    DriveLight,
+    /// Heavy drive-level trouble: 10% lost acks + 10% transient stalls.
+    DriveHeavy,
+    /// Server 0 crashes permanently a quarter of the way into the
+    /// arrival window — the single-failure case the acceptance gate
+    /// pins.
+    ServerCrash,
+}
+
+impl FaultScenario {
+    pub fn all() -> [FaultScenario; 4] {
+        [
+            FaultScenario::Healthy,
+            FaultScenario::DriveLight,
+            FaultScenario::DriveHeavy,
+            FaultScenario::ServerCrash,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultScenario::Healthy => "healthy",
+            FaultScenario::DriveLight => "drive-2%",
+            FaultScenario::DriveHeavy => "drive-10%",
+            FaultScenario::ServerCrash => "crash",
+        }
+    }
+
+    /// The fault plan for this scenario. Stalls park a drive for ~a
+    /// third of the SLO: long enough to hurt the tail, short enough
+    /// that a stalled ack usually still beats the retry timeout — the
+    /// regime where hedging (not just retrying) earns its keep.
+    pub fn faults(&self, slo_p99_s: f64) -> Option<FaultsConfig> {
+        let drive = |rate: f64| FaultsConfig {
+            ack_loss: rate,
+            stall: rate,
+            stall_s: 0.3 * slo_p99_s,
+            ..FaultsConfig::default()
+        };
+        match self {
+            FaultScenario::Healthy => None,
+            FaultScenario::DriveLight => Some(drive(0.02)),
+            FaultScenario::DriveHeavy => Some(drive(0.10)),
+            FaultScenario::ServerCrash => Some(FaultsConfig {
+                server_crash_at: Some(0.25),
+                crash_server: 0,
+                ..FaultsConfig::default()
+            }),
+        }
+    }
+}
+
+/// Front-door resilience policies swept by Fig 11, in increasing order
+/// of machinery. Each maps onto the `[traffic]`/`[fleet]` knobs the
+/// CLI exposes (`--retries`, `--hedge`, `--replicas`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResiliencePolicy {
+    /// Fire-and-forget: no timeouts, no retries, no replicas. What the
+    /// serving plane did before the failure plane existed.
+    Off,
+    /// Per-request timeout with up to 3 capped-exponential-backoff
+    /// retries.
+    Retry,
+    /// Retries plus one hedged duplicate at 75% of the timeout
+    /// (first response wins).
+    RetryHedge,
+    /// Retries + hedging + one shard replica, so a dead server's
+    /// requests have somewhere to fail over to.
+    RetryHedgeReplica,
+}
+
+impl ResiliencePolicy {
+    pub fn all() -> [ResiliencePolicy; 4] {
+        [
+            ResiliencePolicy::Off,
+            ResiliencePolicy::Retry,
+            ResiliencePolicy::RetryHedge,
+            ResiliencePolicy::RetryHedgeReplica,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ResiliencePolicy::Off => "off",
+            ResiliencePolicy::Retry => "retry",
+            ResiliencePolicy::RetryHedge => "retry+hedge",
+            ResiliencePolicy::RetryHedgeReplica => "retry+hedge+replica",
+        }
+    }
+
+    pub fn retries(&self) -> u32 {
+        match self {
+            ResiliencePolicy::Off => 0,
+            _ => 3,
+        }
+    }
+
+    pub fn hedge(&self) -> bool {
+        matches!(self, ResiliencePolicy::RetryHedge | ResiliencePolicy::RetryHedgeReplica)
+    }
+
+    pub fn replicas(&self) -> usize {
+        match self {
+            ResiliencePolicy::RetryHedgeReplica => 1,
+            _ => 0,
+        }
+    }
+}
+
+/// One Fig 11 availability cell: its sweep coordinates and the full
+/// serving report (availability, goodput, tail latencies, fault/retry
+/// counters).
+#[derive(Clone, Debug)]
+pub struct Fig11Cell {
+    pub scenario: FaultScenario,
+    pub policy: ResiliencePolicy,
+    pub shape: FleetShape,
+    pub slo_p99_s: f64,
+    pub report: ServeReport,
+}
+
+/// Raw Fig 11 sweep: every (scenario × policy × shape) availability
+/// cell on a 4-server round-robin fleet at 0.6 load, in sweep order,
+/// fanned out over the [`pool`]. Round-robin (not least-work) is
+/// deliberate: it keeps routing to a crashed server until the dead-peer
+/// belief trips, so the sweep isolates what the *resilience* machinery
+/// recovers rather than letting queue-depth routing hide the failure.
+/// The retry timeout is pinned to half the p99 SLO — deadline-aware in
+/// the sense that a timed-out first attempt plus one retry can still
+/// complete inside the SLO.
+pub fn fig11_cells(scale: Scale) -> anyhow::Result<Vec<Fig11Cell>> {
+    let mut specs: Vec<(FaultScenario, ResiliencePolicy, FleetShape)> = Vec::new();
+    for scenario in FaultScenario::all() {
+        for policy in ResiliencePolicy::all() {
+            for shape in FIG11_SHAPES {
+                specs.push((scenario, policy, shape));
+            }
+        }
+    }
+    let results = pool::map_cells(specs, move |(scenario, policy, shape)| {
+        let app = FIG11_APP;
+        let sched = fig9_sched(app);
+        let slo = default_slo_p99(&AppModel::for_app(app, 1), sched.csd_batch);
+        let fcfg = FleetConfig {
+            servers: FIG11_SERVERS,
+            shape,
+            sched,
+            replicas: policy.replicas(),
+            ..FleetConfig::default()
+        };
+        let tcfg = TrafficConfig {
+            load: FIG11_LOAD,
+            requests: fig9_requests(app, scale),
+            policy: LbPolicy::RoundRobin,
+            retries: policy.retries(),
+            hedge: policy.hedge(),
+            retry_timeout_s: Some(0.5 * slo),
+            faults: scenario.faults(slo),
+            ..TrafficConfig::default()
+        };
+        let mut m = Metrics::new();
+        let report = serve_fleet(app, &fcfg, &tcfg, &PowerModel::default(), &mut m)?;
+        let slo_p99_s = report.slo_p99_s;
+        Ok(Fig11Cell { scenario, policy, shape, slo_p99_s, report })
+    });
+    results.into_iter().collect()
+}
+
+/// Fig 11 (ours): the availability study — what fraction of offered
+/// requests complete within the p99 SLO as deterministic faults (lost
+/// acks, drive stalls, a permanent server crash) meet increasingly
+/// capable front-door resilience (timeouts+retries, hedging, shard
+/// failover), for the all-CSD build and the all-SSD baseline. The
+/// acceptance gate pins the headline: with retry+hedge+replica, a
+/// 4-server fleet rides out a single-server crash at 0.6 load with
+/// ≥ 99% availability, while the fire-and-forget baseline provably
+/// cannot.
+pub fn fig11_availability(scale: Scale) -> anyhow::Result<Table> {
+    Ok(fig11_table_from(&fig11_cells(scale)?))
+}
+
+/// Render the Fig 11 table from precomputed cells — split from
+/// [`fig11_availability`] so callers that already hold the cells (the
+/// gate test) don't pay for a second full sweep.
+pub fn fig11_table_from(cells: &[Fig11Cell]) -> Table {
+    let mut t = Table::new(
+        "Fig 11 — availability under faults: scenario × resilience policy \
+         (4 servers, round-robin, load 0.6)",
+        &[
+            "scenario",
+            "policy",
+            "shape",
+            "avail %",
+            "goodput rps",
+            "p99 s",
+            "p99.9 s",
+            "slo s",
+            "failed",
+            "retried",
+            "hedged",
+            "energy/req J",
+        ],
+    );
+    let mut it = cells.iter();
+    for scenario in FaultScenario::all() {
+        for policy in ResiliencePolicy::all() {
+            for shape in FIG11_SHAPES {
+                let c = it.next().expect("one cell per sweep point");
+                assert_eq!(
+                    (c.scenario, c.policy, c.shape),
+                    (scenario, policy, shape),
+                    "sweep order drifted"
+                );
+                let r = &c.report;
+                t.row(vec![
+                    scenario.name().to_string(),
+                    policy.name().to_string(),
+                    shape.name().to_string(),
+                    format!("{:.2}", r.availability * 100.0),
+                    format!("{:.1}", r.achieved_rps),
+                    format!("{:.4}", r.latency.p99),
+                    format!("{:.4}", r.latency.p999),
+                    format!("{:.4}", c.slo_p99_s),
+                    r.failed.to_string(),
+                    r.retried.to_string(),
+                    r.hedged.to_string(),
+                    format!("{:.4}", r.energy_per_req_j),
+                ]);
+            }
+        }
+    }
+    t
+}
+
 /// Write a table to `target/bench-results/<name>.{txt,csv}` and print it.
 pub fn emit(table: &Table, name: &str) -> anyhow::Result<()> {
     print!("{}", table.render());
@@ -1195,6 +1464,80 @@ mod tests {
             }
             let shed: f64 = row[8].parse().unwrap();
             assert!((0.0..=100.0).contains(&shed), "{row:?}");
+        }
+    }
+
+    #[test]
+    fn fig11_gate_failover_rides_out_a_server_crash() {
+        // The ISSUE-6 acceptance gate, on raw cells (not the rounded
+        // table strings):
+        //  1. exact request conservation at every cell, faults or not:
+        //     served + failed + shed == requests;
+        //  2. under the single-server crash at 0.6 load, the full
+        //     resilience stack (retry+hedge+replica) keeps the all-CSD
+        //     fleet at >= 99% availability;
+        //  3. the fire-and-forget baseline provably cannot: round-robin
+        //     keeps feeding the dead server, so its availability lands
+        //     well under 99%.
+        // The table-shape checks ride on the same cells (one sweep).
+        let cells = fig11_cells(Scale(0.01)).unwrap();
+        for c in &cells {
+            let r = &c.report;
+            assert_eq!(
+                r.served + r.failed + r.shed,
+                r.requests,
+                "{:?}/{:?}/{:?}: conservation",
+                c.scenario,
+                c.policy,
+                c.shape
+            );
+            assert!(
+                (0.0..=1.0).contains(&r.availability),
+                "availability out of range: {}",
+                r.availability
+            );
+            if c.policy == ResiliencePolicy::Off {
+                assert_eq!(r.retried, 0, "no retries without a retry budget");
+                assert_eq!(r.hedged, 0, "no hedges without hedging");
+            }
+            if c.scenario == FaultScenario::Healthy {
+                assert_eq!(r.failed, 0, "{:?}/{:?}: failures on a healthy fleet", c.policy, c.shape);
+            }
+        }
+        let get = |scenario: FaultScenario, policy: ResiliencePolicy, shape: FleetShape| {
+            cells
+                .iter()
+                .find(|c| c.scenario == scenario && c.policy == policy && c.shape == shape)
+                .expect("cell present")
+        };
+        let off = get(FaultScenario::ServerCrash, ResiliencePolicy::Off, FleetShape::AllCsd);
+        let full =
+            get(FaultScenario::ServerCrash, ResiliencePolicy::RetryHedgeReplica, FleetShape::AllCsd);
+        assert!(
+            off.report.availability < 0.99,
+            "fire-and-forget should not survive a crash: availability {}",
+            off.report.availability
+        );
+        assert!(
+            off.report.failed > 0,
+            "a crashed server must strand fire-and-forget requests"
+        );
+        assert!(
+            full.report.availability >= 0.99,
+            "retry+hedge+replica must ride out the crash: availability {}",
+            full.report.availability
+        );
+        assert!(
+            full.report.retried > 0,
+            "riding out a crash requires actual retries"
+        );
+        // ---- table shape, from the same cells ------------------------
+        let t = fig11_table_from(&cells);
+        assert_eq!(t.headers.len(), 12);
+        assert_eq!(t.rows.len(), 4 * 4 * 2, "scenarios × policies × shapes");
+        for row in &t.rows {
+            let avail: f64 = row[3].parse().unwrap();
+            assert!((0.0..=100.0).contains(&avail), "{row:?}");
         }
     }
 

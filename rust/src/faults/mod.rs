@@ -1,0 +1,537 @@
+//! Deterministic fault injection for the serving stack (ISSUE-6).
+//!
+//! The paper evaluates Solana clusters on the happy path only; the CSD
+//! survey (arXiv 2112.09691) calls out fault handling as a chief open
+//! problem for CSD adoption, and the data-integrity revisit (arXiv
+//! 2504.15293) measures in-storage compute paths silently losing results
+//! under faults. This module makes failure a first-class, reproducible
+//! scenario axis: a seeded [`FaultPlan`] perturbs a serving run with
+//! drive-level faults (ISP engine crash → the drive falls back to
+//! plain-SSD service for new work, transient stalls, ack loss),
+//! server-level faults (crash at a deterministic virtual time, optional
+//! rejoin), and rack-link faults (message drop / duplication on the
+//! [`crate::interconnect::RackLink`]).
+//!
+//! # Determinism contract
+//!
+//! Every fault draw comes from **one seeded root stream**
+//! (`Rng::new(seed).fork("faults")`), forked once per component with a
+//! stable label — `server0..serverN` for the per-server drive fault
+//! streams, `rack` for the link stream — before the run starts. Faults
+//! are then *scheduled in virtual time*: a component draws from its own
+//! stream only at its own events (a CSD batch ack, a rack message), so
+//! the draw sequence each component sees is independent of how events
+//! from different components interleave. Two runs with the same
+//! `(config, seed, fault seed)` are bit-identical, and a plan whose
+//! rates are all zero ([`FaultsConfig::is_quiet`]) draws **nothing** —
+//! every rate is guarded by `rate > 0.0` before touching the RNG — so
+//! the chaos layer provably costs nothing when quiet (property-tested
+//! in `tests/chaos.rs`).
+//!
+//! Server crashes are fully deterministic (no RNG): the crash instant
+//! is `t0 + server_crash_at × arrival_window`, a fraction of the
+//! offered-arrival window, so the same spec crashes the same server at
+//! the same virtual time at any scale.
+//!
+//! # Spec grammar (CLI `--faults`, e.g. `server-crash@0.3,ack-loss@0.05`)
+//!
+//! ```text
+//! spec      := clause (',' clause)*
+//! clause    := 'ack-loss@' PROB        # P(CSD batch ack lost)
+//!            | 'stall@' PROB           # P(CSD batch ack stalls stall-s)
+//!            | 'drive-crash@' PROB     # P(ISP dies at a batch ack, permanent)
+//!            | 'link-drop@' PROB       # P(rack response message dropped)
+//!            | 'link-dup@' PROB        # P(rack response message duplicated)
+//!            | 'server-crash@' FRAC    # crash at FRAC of the arrival window
+//!            | 'stall-s=' SECONDS      # stall duration (default 1.0)
+//!            | 'rejoin-s=' SECONDS     # server rejoins after this downtime
+//!            | 'crash-server=' INDEX   # which server crashes (default 0)
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Fault scenario configuration: the `[faults]` TOML section /
+/// `solana serve --faults <spec>`. All probabilities are per-event
+/// (per CSD batch ack, per rack message); the server crash is a
+/// deterministic point in virtual time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultsConfig {
+    /// Seed for the fault RNG root stream (`--fault-seed`,
+    /// `[faults] seed`). Independent of the traffic/scheduler seed so
+    /// the same workload can be replayed under different fault draws.
+    pub seed: u64,
+    /// P(a CSD batch ack is lost): the drive did the work but the
+    /// result never reaches the scheduler (arXiv 2504.15293's silent
+    /// result-loss class).
+    pub ack_loss: f64,
+    /// P(a CSD batch ack stalls): the ack is delivered [`stall_s`]
+    /// late and the drive is stuck for the duration.
+    pub stall: f64,
+    /// Transient stall duration in seconds.
+    pub stall_s: f64,
+    /// P(the drive's ISP engine crashes at a batch ack, permanently):
+    /// the in-flight batch is lost and the drive serves no further
+    /// in-storage work — new requests fall back to the plain-SSD path
+    /// (host or surviving ISP drives).
+    pub drive_crash: f64,
+    /// Crash one server at this fraction of the offered-arrival window
+    /// (`None` = no server crash).
+    pub server_crash_at: Option<f64>,
+    /// Which server crashes.
+    pub crash_server: usize,
+    /// Rejoin after this much downtime (`None` = the crash is
+    /// permanent).
+    pub rejoin_s: Option<f64>,
+    /// P(a rack response message is dropped).
+    pub link_drop: f64,
+    /// P(a rack response message is duplicated).
+    pub link_dup: f64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            seed: 7,
+            ack_loss: 0.0,
+            stall: 0.0,
+            stall_s: 1.0,
+            drive_crash: 0.0,
+            server_crash_at: None,
+            crash_server: 0,
+            rejoin_s: None,
+            link_drop: 0.0,
+            link_dup: 0.0,
+        }
+    }
+}
+
+fn prob(name: &str, v: f64) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&v) && v.is_finite(),
+        "faults.{name} must be a probability in [0, 1], got {v}"
+    );
+    Ok(())
+}
+
+impl FaultsConfig {
+    /// A plan with every rate zero: the chaos machinery runs but no
+    /// fault ever fires (and no RNG draw ever happens).
+    pub fn quiet() -> FaultsConfig {
+        FaultsConfig::default()
+    }
+
+    /// Whether this plan can never perturb a run.
+    pub fn is_quiet(&self) -> bool {
+        self.ack_loss == 0.0
+            && self.stall == 0.0
+            && self.drive_crash == 0.0
+            && self.link_drop == 0.0
+            && self.link_dup == 0.0
+            && self.server_crash_at.is_none()
+    }
+
+    /// Validate against a fleet of `servers` servers.
+    pub fn validate(&self, servers: usize) -> anyhow::Result<()> {
+        prob("ack_loss", self.ack_loss)?;
+        prob("stall", self.stall)?;
+        prob("drive_crash", self.drive_crash)?;
+        prob("link_drop", self.link_drop)?;
+        prob("link_dup", self.link_dup)?;
+        anyhow::ensure!(
+            self.stall_s >= 0.0 && self.stall_s.is_finite(),
+            "faults.stall_s must be non-negative and finite, got {}",
+            self.stall_s
+        );
+        if let Some(frac) = self.server_crash_at {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&frac) && frac.is_finite(),
+                "faults.server_crash_at must be a fraction of the arrival window in [0, 1], got {frac}"
+            );
+            anyhow::ensure!(
+                self.crash_server < servers,
+                "faults.crash_server {} out of range for a {servers}-server fleet",
+                self.crash_server
+            );
+        }
+        if let Some(d) = self.rejoin_s {
+            anyhow::ensure!(
+                d > 0.0 && d.is_finite(),
+                "faults.rejoin_s must be positive and finite, got {d}"
+            );
+        }
+        Ok(())
+    }
+
+    /// Parse the CLI spec grammar (module docs); `seed` seeds the plan
+    /// (the `--fault-seed` flag). An empty spec is the quiet plan.
+    pub fn parse(spec: &str, seed: u64) -> anyhow::Result<FaultsConfig> {
+        let mut cfg = FaultsConfig { seed, ..FaultsConfig::default() };
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            if let Some((name, val)) = clause.split_once('@') {
+                let v: f64 = val
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad fault rate '{val}' in clause '{clause}'"))?;
+                match name.trim() {
+                    "ack-loss" => cfg.ack_loss = v,
+                    "stall" | "drive-stall" => cfg.stall = v,
+                    "drive-crash" => cfg.drive_crash = v,
+                    "link-drop" => cfg.link_drop = v,
+                    "link-dup" => cfg.link_dup = v,
+                    "server-crash" => cfg.server_crash_at = Some(v),
+                    other => anyhow::bail!(
+                        "unknown fault clause '{other}@' (expected ack-loss|stall|drive-crash|link-drop|link-dup|server-crash)"
+                    ),
+                }
+            } else if let Some((key, val)) = clause.split_once('=') {
+                match key.trim() {
+                    "stall-s" => {
+                        cfg.stall_s = val
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("bad stall-s '{val}'"))?;
+                    }
+                    "rejoin-s" => {
+                        cfg.rejoin_s = Some(
+                            val.parse().map_err(|_| anyhow::anyhow!("bad rejoin-s '{val}'"))?,
+                        );
+                    }
+                    "crash-server" => {
+                        cfg.crash_server = val
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("bad crash-server '{val}'"))?;
+                    }
+                    other => anyhow::bail!(
+                        "unknown fault parameter '{other}=' (expected stall-s|rejoin-s|crash-server)"
+                    ),
+                }
+            } else {
+                anyhow::bail!(
+                    "bad fault clause '{clause}': expected name@rate or key=value (see --help)"
+                );
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// What happens to one CSD batch ack under the fault plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AckOutcome {
+    /// The ack arrives normally.
+    Deliver,
+    /// The drive is stuck for `stall_s`; the ack arrives late.
+    Stall,
+    /// The ack (and the batch's results) never arrive.
+    Lost,
+}
+
+/// Per-server drive fault stream: owned by one `ServeEngine`, drawn
+/// only at that engine's CSD batch acks (virtual-time scheduling — see
+/// the module docs' determinism contract).
+#[derive(Clone, Debug)]
+pub struct DriveFaults {
+    ack_loss: f64,
+    stall: f64,
+    /// Stall duration, read by the engine when re-scheduling the ack.
+    pub stall_s: f64,
+    crash: f64,
+    rng: Rng,
+    crashed: Vec<bool>,
+}
+
+impl DriveFaults {
+    pub fn new(cfg: &FaultsConfig, rng: Rng, drives: usize) -> DriveFaults {
+        DriveFaults {
+            ack_loss: cfg.ack_loss,
+            stall: cfg.stall,
+            stall_s: cfg.stall_s,
+            crash: cfg.drive_crash,
+            rng,
+            crashed: vec![false; drives],
+        }
+    }
+
+    /// Whether `drive`'s ISP engine has crashed.
+    pub fn crashed(&self, drive: usize) -> bool {
+        self.crashed[drive]
+    }
+
+    /// Number of crashed ISP engines on this server.
+    pub fn crashed_count(&self) -> usize {
+        self.crashed.iter().filter(|&&c| c).count()
+    }
+
+    /// Draw the fate of one CSD batch ack on `drive`. Zero-rate checks
+    /// guard every draw, so a quiet plan never touches the RNG.
+    pub fn ack_outcome(&mut self, drive: usize) -> AckOutcome {
+        if self.crashed[drive] {
+            // A dead ISP completes nothing: batches already queued on
+            // the drive drain as lost acks.
+            return AckOutcome::Lost;
+        }
+        if self.crash > 0.0 && self.rng.chance(self.crash) {
+            self.crashed[drive] = true;
+            return AckOutcome::Lost;
+        }
+        if self.stall > 0.0 && self.rng.chance(self.stall) {
+            return AckOutcome::Stall;
+        }
+        if self.ack_loss > 0.0 && self.rng.chance(self.ack_loss) {
+            return AckOutcome::Lost;
+        }
+        AckOutcome::Deliver
+    }
+}
+
+/// What happens to one rack response message under the fault plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkOutcome {
+    Deliver,
+    /// The message is lost; its completions never reach the front door.
+    Drop,
+    /// The message arrives twice (the duplicate is suppressed by the
+    /// front door's first-response-wins bookkeeping, but both copies
+    /// pay rack bandwidth).
+    Duplicate,
+}
+
+/// Rack-link fault stream, drawn once per non-head response message.
+#[derive(Clone, Debug)]
+pub struct LinkFaults {
+    drop: f64,
+    dup: f64,
+    rng: Rng,
+}
+
+impl LinkFaults {
+    pub fn new(cfg: &FaultsConfig, rng: Rng) -> LinkFaults {
+        LinkFaults { drop: cfg.link_drop, dup: cfg.link_dup, rng }
+    }
+
+    /// Draw the fate of one rack message (zero-rate draws are free).
+    pub fn outcome(&mut self) -> LinkOutcome {
+        if self.drop > 0.0 && self.rng.chance(self.drop) {
+            return LinkOutcome::Drop;
+        }
+        if self.dup > 0.0 && self.rng.chance(self.dup) {
+            return LinkOutcome::Duplicate;
+        }
+        LinkOutcome::Deliver
+    }
+}
+
+/// A deterministic server crash: `server` is down in `[at, until)`
+/// (or forever when `until` is `None`).
+#[derive(Clone, Copy, Debug)]
+pub struct ServerCrash {
+    pub server: usize,
+    pub at: f64,
+    pub until: Option<f64>,
+}
+
+impl ServerCrash {
+    /// Ground truth: is `server` down at virtual time `now`? (The front
+    /// door never reads this directly for routing — it detects death by
+    /// missed acks, honestly.)
+    pub fn down(&self, server: usize, now: f64) -> bool {
+        server == self.server && now >= self.at && self.until.map_or(true, |u| now < u)
+    }
+}
+
+/// The resolved, seeded fault plan for one fleet serving run: one
+/// drive-fault stream per server, one rack-link stream, and the
+/// (deterministic) server crash schedule.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Per-server drive fault streams, in server order. `serve_fleet`
+    /// drains these into the engines at startup.
+    pub drive: Vec<DriveFaults>,
+    pub link: LinkFaults,
+    pub crash: Option<ServerCrash>,
+}
+
+impl FaultPlan {
+    /// Build the plan: fork the root stream per component (stable
+    /// labels, fixed order), resolve the crash schedule against the
+    /// run's start time `t0` and offered-arrival window `window_s`.
+    pub fn new(
+        cfg: &FaultsConfig,
+        drives_per_server: &[usize],
+        t0: f64,
+        window_s: f64,
+    ) -> FaultPlan {
+        let mut root = Rng::new(cfg.seed).fork("faults");
+        let drive = drives_per_server
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| DriveFaults::new(cfg, root.fork(&format!("server{i}")), d))
+            .collect();
+        let link = LinkFaults::new(cfg, root.fork("rack"));
+        let crash = cfg.server_crash_at.map(|frac| {
+            let at = t0 + frac * window_s;
+            ServerCrash { server: cfg.crash_server, at, until: cfg.rejoin_s.map(|d| at + d) }
+        });
+        FaultPlan { drive, link, crash }
+    }
+
+    /// Ground-truth down check (see [`ServerCrash::down`]).
+    pub fn down(&self, server: usize, now: f64) -> bool {
+        self.crash.map_or(false, |c| c.down(server, now))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let c = FaultsConfig::parse(
+            "server-crash@0.3,ack-loss@0.05,stall@0.1,stall-s=2.5,drive-crash@0.01,\
+             link-drop@0.02,link-dup@0.03,rejoin-s=4,crash-server=1",
+            99,
+        )
+        .unwrap();
+        assert_eq!(c.seed, 99);
+        assert_eq!(c.server_crash_at, Some(0.3));
+        assert_eq!(c.ack_loss, 0.05);
+        assert_eq!(c.stall, 0.1);
+        assert_eq!(c.stall_s, 2.5);
+        assert_eq!(c.drive_crash, 0.01);
+        assert_eq!(c.link_drop, 0.02);
+        assert_eq!(c.link_dup, 0.03);
+        assert_eq!(c.rejoin_s, Some(4.0));
+        assert_eq!(c.crash_server, 1);
+        assert!(c.validate(2).is_ok());
+        assert!(!c.is_quiet());
+    }
+
+    #[test]
+    fn parse_empty_spec_is_quiet() {
+        let c = FaultsConfig::parse("", 7).unwrap();
+        assert!(c.is_quiet());
+        assert_eq!(c, FaultsConfig::quiet());
+    }
+
+    #[test]
+    fn parse_rejects_nonsense() {
+        assert!(FaultsConfig::parse("psychic@0.5", 7).is_err());
+        assert!(FaultsConfig::parse("ack-loss@lots", 7).is_err());
+        assert!(FaultsConfig::parse("warp=9", 7).is_err());
+        assert!(FaultsConfig::parse("just-words", 7).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range() {
+        assert!(FaultsConfig { ack_loss: 1.5, ..FaultsConfig::default() }.validate(4).is_err());
+        assert!(FaultsConfig { stall: -0.1, ..FaultsConfig::default() }.validate(4).is_err());
+        assert!(FaultsConfig { stall_s: f64::NAN, ..FaultsConfig::default() }.validate(4).is_err());
+        assert!(FaultsConfig { server_crash_at: Some(2.0), ..FaultsConfig::default() }
+            .validate(4)
+            .is_err());
+        assert!(FaultsConfig {
+            server_crash_at: Some(0.5),
+            crash_server: 4,
+            ..FaultsConfig::default()
+        }
+        .validate(4)
+        .is_err());
+        assert!(FaultsConfig { rejoin_s: Some(0.0), ..FaultsConfig::default() }
+            .validate(4)
+            .is_err());
+        assert!(FaultsConfig::default().validate(1).is_ok());
+    }
+
+    #[test]
+    fn quiet_plan_never_fires() {
+        let cfg = FaultsConfig::quiet();
+        let mut d = DriveFaults::new(&cfg, Rng::new(1), 4);
+        for i in 0..1_000 {
+            assert_eq!(d.ack_outcome(i % 4), AckOutcome::Deliver);
+        }
+        assert_eq!(d.crashed_count(), 0);
+        let mut l = LinkFaults::new(&cfg, Rng::new(2));
+        for _ in 0..1_000 {
+            assert_eq!(l.outcome(), LinkOutcome::Deliver);
+        }
+    }
+
+    #[test]
+    fn same_seed_same_outcome_sequence() {
+        let cfg = FaultsConfig {
+            ack_loss: 0.2,
+            stall: 0.2,
+            drive_crash: 0.05,
+            ..FaultsConfig::default()
+        };
+        let mut a = DriveFaults::new(&cfg, Rng::new(33), 8);
+        let mut b = DriveFaults::new(&cfg, Rng::new(33), 8);
+        for i in 0..500 {
+            assert_eq!(a.ack_outcome(i % 8), b.ack_outcome(i % 8), "draw {i}");
+        }
+    }
+
+    #[test]
+    fn crashed_drive_loses_everything_after() {
+        let cfg = FaultsConfig { drive_crash: 1.0, ..FaultsConfig::default() };
+        let mut d = DriveFaults::new(&cfg, Rng::new(5), 2);
+        assert_eq!(d.ack_outcome(0), AckOutcome::Lost);
+        assert!(d.crashed(0));
+        assert!(!d.crashed(1));
+        for _ in 0..10 {
+            assert_eq!(d.ack_outcome(0), AckOutcome::Lost);
+        }
+        assert_eq!(d.crashed_count(), 1);
+    }
+
+    #[test]
+    fn server_crash_window() {
+        let plan = FaultPlan::new(
+            &FaultsConfig {
+                server_crash_at: Some(0.5),
+                crash_server: 1,
+                rejoin_s: Some(3.0),
+                ..FaultsConfig::default()
+            },
+            &[4, 4],
+            10.0,
+            20.0,
+        );
+        let c = plan.crash.unwrap();
+        assert_eq!(c.server, 1);
+        assert!((c.at - 20.0).abs() < 1e-12);
+        assert_eq!(c.until, Some(23.0));
+        assert!(!plan.down(1, 19.9));
+        assert!(plan.down(1, 20.0));
+        assert!(plan.down(1, 22.9));
+        assert!(!plan.down(1, 23.0), "rejoined");
+        assert!(!plan.down(0, 21.0), "only the named server crashes");
+        // permanent crash
+        let forever = FaultPlan::new(
+            &FaultsConfig { server_crash_at: Some(0.0), ..FaultsConfig::default() },
+            &[4],
+            0.0,
+            10.0,
+        );
+        assert!(forever.down(0, 1e9));
+    }
+
+    #[test]
+    fn fault_plan_streams_are_independent_of_each_other() {
+        // Forked per-component streams: server0's draws do not shift
+        // when server1 draws more or less — the virtual-time contract.
+        let cfg = FaultsConfig { ack_loss: 0.3, ..FaultsConfig::default() };
+        let mut p1 = FaultPlan::new(&cfg, &[2, 2], 0.0, 1.0);
+        let mut p2 = FaultPlan::new(&cfg, &[2, 2], 0.0, 1.0);
+        // p2's server1 draws heavily first; server0 must be unaffected.
+        for _ in 0..100 {
+            p2.drive[1].ack_outcome(0);
+        }
+        for i in 0..200 {
+            assert_eq!(
+                p1.drive[0].ack_outcome(i % 2),
+                p2.drive[0].ack_outcome(i % 2),
+                "server0 stream shifted by server1 activity"
+            );
+        }
+    }
+}

@@ -11,6 +11,22 @@ pub mod tunnel_proto;
 
 use crate::sim::{Pipe, SimTime, Transfer};
 
+/// Constructor guard shared by every link type (ISSUE-6 satellite): a
+/// non-positive or non-finite bandwidth / negative or non-finite
+/// overhead silently produces NaN or infinite transfer times that
+/// poison every downstream latency figure, so reject loudly at the
+/// construction site instead.
+fn validate_link(kind: &str, bandwidth: f64, overhead: SimTime) {
+    assert!(
+        bandwidth > 0.0 && bandwidth.is_finite(),
+        "{kind}: bandwidth must be positive and finite, got {bandwidth}"
+    );
+    assert!(
+        overhead >= 0.0 && overhead.is_finite(),
+        "{kind}: per-message overhead must be non-negative and finite, got {overhead}"
+    );
+}
+
 /// NVMe over 4-lane PCIe Gen3: ~3.2 GB/s usable per drive after 128b/130b
 /// and protocol overhead; ~10 µs command round-trip.
 #[derive(Debug, Clone)]
@@ -28,6 +44,7 @@ impl Default for PcieLink {
 
 impl PcieLink {
     pub fn new(bandwidth: f64, cmd_overhead: SimTime) -> PcieLink {
+        validate_link("PcieLink", bandwidth, cmd_overhead);
         PcieLink { pipe: Pipe::new(bandwidth, 0.0), cmd_overhead }
     }
 
@@ -76,6 +93,7 @@ impl Default for TcpTunnel {
 
 impl TcpTunnel {
     pub fn new(bandwidth: f64, msg_overhead: SimTime) -> TcpTunnel {
+        validate_link("TcpTunnel", bandwidth, msg_overhead);
         TcpTunnel { pipe: Pipe::new(bandwidth, 0.0), msg_overhead, messages: 0, async_bytes: 0 }
     }
 
@@ -153,6 +171,9 @@ impl Default for RackLink {
 
 impl RackLink {
     pub fn new(bandwidth: f64, msg_overhead: SimTime) -> RackLink {
+        // TcpTunnel::new validates, but assert here too so the panic
+        // message names the type the caller actually constructed.
+        validate_link("RackLink", bandwidth, msg_overhead);
         RackLink { link: TcpTunnel::new(bandwidth, msg_overhead) }
     }
 
@@ -220,6 +241,53 @@ mod tests {
         let mut rack = RackLink::default();
         let t = rack.send(0.0, 64);
         assert!((t - (50e-6 + 64.0 / 1.25e9)).abs() < 1e-12, "{t}");
+    }
+
+    // ---- ISSUE-6 satellite: constructors reject nonsense params -----
+
+    #[test]
+    #[should_panic(expected = "bandwidth must be positive")]
+    fn pcie_rejects_zero_bandwidth() {
+        let _ = PcieLink::new(0.0, 10e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "bandwidth must be positive")]
+    fn tunnel_rejects_negative_bandwidth() {
+        let _ = TcpTunnel::new(-1.0, 150e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "bandwidth must be positive")]
+    fn rack_rejects_nan_bandwidth() {
+        let _ = RackLink::new(f64::NAN, 50e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "overhead must be non-negative")]
+    fn pcie_rejects_negative_overhead() {
+        let _ = PcieLink::new(3.2e9, -1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "overhead must be non-negative")]
+    fn tunnel_rejects_infinite_overhead() {
+        let _ = TcpTunnel::new(120e6, f64::INFINITY);
+    }
+
+    #[test]
+    #[should_panic(expected = "overhead must be non-negative")]
+    fn rack_rejects_nan_overhead() {
+        let _ = RackLink::new(1.25e9, f64::NAN);
+    }
+
+    #[test]
+    fn zero_overhead_remains_valid() {
+        // Tests and analytic callers use overhead-free links; the guard
+        // must not outlaw them.
+        let _ = PcieLink::new(1e9, 0.0);
+        let _ = TcpTunnel::new(1e9, 0.0);
+        let _ = RackLink::new(1e9, 0.0);
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub mod codec;
 pub mod config;
 pub mod csd;
 pub mod exp;
+pub mod faults;
 pub mod fs;
 pub mod interconnect;
 pub mod metrics;

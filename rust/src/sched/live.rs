@@ -52,6 +52,12 @@ pub struct LiveConfig {
     /// Polling grid (the paper) vs re-arm-on-RESULT (see [`DispatchMode`]).
     pub dispatch: DispatchMode,
     pub seed: u64,
+    /// Stuck-worker watchdog: consecutive empty wake periods the
+    /// coordinator tolerates once every batch is handed out (nothing
+    /// left to serve locally, so only worker RESULTs can make progress)
+    /// before declaring a worker stuck and bailing. Measured in
+    /// `wakeup` periods; the 600 × 0.2 s default ≈ 2 minutes.
+    pub worker_deadline: usize,
 }
 
 impl Default for LiveConfig {
@@ -65,6 +71,7 @@ impl Default for LiveConfig {
             train_items: 2_048,
             dispatch: DispatchMode::Polling,
             seed: 11,
+            worker_deadline: 600,
         }
     }
 }
@@ -338,6 +345,11 @@ pub fn run_live_with(
         cfg.batch >= 1,
         "batch must be >= 1 (a zero batch ping-pongs empty BATCH/RESULT messages forever)"
     );
+    anyhow::ensure!(
+        cfg.worker_deadline >= 1,
+        "worker_deadline must be >= 1 wake period (0 would trip the watchdog on the first \
+         straggler wait)"
+    );
     anyhow::ensure!(serve.len() == cfg.items, "serving corpus size != cfg.items");
 
     // Spawn workers. A worker that errors reports back over the tunnel
@@ -389,6 +401,11 @@ pub fn run_live_with(
     // through to the shutdown/join sequence below instead of leaving
     // worker threads parked on a dead channel.
     let mut protocol = || -> anyhow::Result<()> {
+    // Stuck-worker watchdog state: consecutive empty wake periods seen
+    // while every remaining item is outstanding at a worker. Any
+    // progress (a processed packet, or batches left for the host to
+    // serve itself) resets it.
+    let mut idle_wakes = 0usize;
     while completed < cfg.items {
         if event_driven {
             // Event-driven dispatch: drain every RESULT already queued
@@ -410,20 +427,30 @@ pub fn run_live_with(
                 // Nothing left to hand out or process locally: block for
                 // the next straggler RESULT instead of spinning.
                 let res = c0.recv_timeout(cfg.wakeup);
-                pump_coordinator(
+                let got = pump_coordinator(
                     res, &mut c0, &mut next, cfg, &serve, &mut done, &mut completed,
                     &mut worker_items, &mut correct,
                 )?;
+                idle_wakes = if got { 0 } else { idle_wakes + 1 };
             }
         } else {
             // The paper's polling loop: drain worker messages for up to
             // one wakeup period (at most one message per wake).
             let res = c0.recv_timeout(cfg.wakeup);
-            pump_coordinator(
+            let got = pump_coordinator(
                 res, &mut c0, &mut next, cfg, &serve, &mut done, &mut completed,
                 &mut worker_items, &mut correct,
             )?;
+            idle_wakes = if got || next < cfg.items { 0 } else { idle_wakes + 1 };
         }
+        anyhow::ensure!(
+            idle_wakes < cfg.worker_deadline,
+            "watchdog: no worker RESULT for {} consecutive wake periods with {} of {} \
+             items outstanding — a worker looks stuck",
+            idle_wakes,
+            cfg.items - completed,
+            cfg.items
+        );
         // Host processes its own (ratio-sized) batch between polls.
         if next < cfg.items {
             let hi = (next + cfg.batch * cfg.ratio).min(cfg.items);
@@ -585,6 +612,7 @@ mod tests {
             wakeup: Duration::from_millis(50),
             dispatch: DispatchMode::Polling,
             seed: 3,
+            worker_deadline: 600,
         };
         let r = run_live(&cfg).unwrap();
         assert_eq!(r.items, 1_024);
@@ -613,6 +641,7 @@ mod tests {
             wakeup: Duration::from_millis(50),
             dispatch: DispatchMode::EventDriven,
             seed: 3,
+            worker_deadline: 600,
         };
         let r = run_live(&cfg).unwrap();
         let worker_total: usize = r.worker_items.iter().sum();

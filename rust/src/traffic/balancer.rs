@@ -41,7 +41,11 @@
 //! percentiles, and a closed-loop client that receives a rejection
 //! re-arms just like one that got a real response.
 
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
 use crate::cluster::fleet::FleetConfig;
+use crate::faults::{FaultPlan, LinkOutcome};
 use crate::interconnect::RackLink;
 use crate::metrics::Metrics;
 use crate::power::PowerModel;
@@ -99,6 +103,10 @@ struct Balancer {
     /// Per-server nominal service rates (items/s) — the per-shape
     /// service estimate `least-work` divides outstanding counts by.
     rates: Vec<f64>,
+    /// Dead-server *belief* (ISSUE-6): set after consecutive missed
+    /// acks, cleared by any delivered response. All-false on a healthy
+    /// run, in which every policy below takes its exact pre-chaos path.
+    dead: Vec<bool>,
 }
 
 impl Balancer {
@@ -112,37 +120,175 @@ impl Balancer {
             outstanding: vec![0; n],
             weights,
             rates,
+            dead: vec![false; n],
         }
     }
 
     fn pick(&mut self) -> usize {
         let n = self.weights.len();
+        let any_dead = self.dead.iter().any(|&d| d);
         let s = match self.policy {
             LbPolicy::RoundRobin => {
-                let s = self.rr_next % n;
+                let mut s = self.rr_next % n;
                 self.rr_next += 1;
+                if any_dead {
+                    // Skip believed-dead servers, advancing the
+                    // rotation; all-dead falls back to the raw slot.
+                    let mut hops = 0;
+                    while self.dead[s] && hops < n {
+                        s = self.rr_next % n;
+                        self.rr_next += 1;
+                        hops += 1;
+                    }
+                }
                 s
             }
             // Smooth WRR: send the next request where the realized
-            // share lags the capacity share most.
-            LbPolicy::WeightedCapacity => super::smooth_pick(&self.assigned, &self.weights),
+            // share lags the capacity share most. A believed-dead
+            // server's weight is masked to 0 (never picked while an
+            // alternative exists — same convention as the engine's
+            // crashed-drive fallback).
+            LbPolicy::WeightedCapacity => {
+                if any_dead {
+                    let w: Vec<f64> = self
+                        .weights
+                        .iter()
+                        .zip(&self.dead)
+                        .map(|(&w, &d)| if d { 0.0 } else { w })
+                        .collect();
+                    super::smooth_pick(&self.assigned, &w)
+                } else {
+                    super::smooth_pick(&self.assigned, &self.weights)
+                }
+            }
             LbPolicy::JoinShortestQueue => {
-                let mut best = 0;
-                for i in 1..n {
-                    if self.outstanding[i] < self.outstanding[best] {
+                let mut best = usize::MAX;
+                for i in 0..n {
+                    if any_dead && self.dead[i] {
+                        continue;
+                    }
+                    if best == usize::MAX || self.outstanding[i] < self.outstanding[best] {
                         best = i;
                     }
                 }
-                best
+                if best == usize::MAX {
+                    0
+                } else {
+                    best
+                }
             }
             // Outstanding *seconds* of backlog, not request count: the
             // same queue length is 2–3× more work on an SSD server
             // than on a CSD server.
-            LbPolicy::LeastWork => super::smooth_pick(&self.outstanding, &self.rates),
+            LbPolicy::LeastWork => {
+                if any_dead {
+                    let r: Vec<f64> = self
+                        .rates
+                        .iter()
+                        .zip(&self.dead)
+                        .map(|(&r, &d)| if d { 0.0 } else { r })
+                        .collect();
+                    super::smooth_pick(&self.outstanding, &r)
+                } else {
+                    super::smooth_pick(&self.outstanding, &self.rates)
+                }
+            }
         };
         self.assigned[s] += 1;
         self.outstanding[s] += 1;
         s
+    }
+}
+
+// ---- the failure plane (ISSUE-6) ------------------------------------
+
+/// Consecutive missed acks (fired timeouts) against one server before
+/// the front door believes it dead and fails its shards over.
+const MISSED_ACKS_DEAD: u32 = 3;
+/// Hedge delay as a fraction of the first-attempt timeout: late enough
+/// to be rare on a healthy tail, early enough to rescue a straggler
+/// before its deadline.
+const HEDGE_FRACTION: f64 = 0.75;
+/// Deadline-aware automatic timeout: this × (completion estimate +
+/// wake/formation floor). Generous enough that it never fires on a
+/// healthy fleet at sane loads.
+const AUTO_TIMEOUT_MARGIN: f64 = 4.0;
+
+/// Capped exponential backoff multiplier for attempt `k` (1-based).
+fn backoff(attempt: u32) -> f64 {
+    match attempt {
+        0 | 1 => 1.0,
+        2 => 2.0,
+        3 => 4.0,
+        _ => 8.0,
+    }
+}
+
+/// First believed-live server scanning from `home`'s neighbor — the
+/// replica chain a shard fails over along. All-dead returns `home`.
+fn failover_target(home: usize, dead: &[bool]) -> usize {
+    let n = dead.len();
+    for k in 1..n {
+        let c = (home + k) % n;
+        if !dead[c] {
+            return c;
+        }
+    }
+    home
+}
+
+/// Front-door bookkeeping for one request's whole lifetime (across
+/// retries and hedges). Stored per request id; aggregation is always
+/// order-free, so the map's iteration order can never leak into the
+/// report.
+struct Track {
+    arrival: f64,
+    /// The server the balancer originally picked (shard home).
+    home: usize,
+    /// Submissions so far (first offer = 1); retries increment.
+    attempts: u32,
+    /// Timeout base frozen at first submission.
+    base: f64,
+    hedged: bool,
+    /// Resolved: completed (first response) or declared failed. Late
+    /// responses for a done request are duplicate-suppressed.
+    done: bool,
+}
+
+const KIND_HEDGE: u8 = 0;
+const KIND_TIMEOUT: u8 = 1;
+const KIND_SUBMIT: u8 = 2;
+
+/// A front-door timer-wheel entry: hedge fire, retry timeout, or a
+/// delayed (rack-redirected) submission.
+#[derive(Clone, Copy, Debug)]
+struct Deadline {
+    t: f64,
+    id: u64,
+    kind: u8,
+    tgt: usize,
+}
+
+impl PartialEq for Deadline {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Deadline {}
+impl PartialOrd for Deadline {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Deadline {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Total, deterministic order: time, then id, then kind — the
+        // wheel's pop order is part of the bit-identity contract.
+        self.t
+            .total_cmp(&other.t)
+            .then(self.id.cmp(&other.id))
+            .then(self.kind.cmp(&other.kind))
+            .then(self.tgt.cmp(&other.tgt))
     }
 }
 
@@ -196,6 +342,21 @@ pub fn serve_fleet(
         tcfg.burst_on_s > 0.0 && tcfg.burst_on_s.is_finite(),
         "traffic.burst_on_s must be positive"
     );
+    anyhow::ensure!(
+        fcfg.replicas == 0 || fcfg.replicas < fcfg.servers,
+        "fleet.replicas ({}) needs a distinct neighbor per shard: must be < servers ({})",
+        fcfg.replicas,
+        fcfg.servers
+    );
+    if let Some(to) = tcfg.retry_timeout_s {
+        anyhow::ensure!(
+            to > 0.0 && to.is_finite(),
+            "traffic.retry_timeout_s must be positive and finite, got {to}"
+        );
+    }
+    if let Some(fc) = &tcfg.faults {
+        fc.validate(fcfg.servers)?;
+    }
 
     let specs = fcfg.server_specs();
     let model = AppModel::for_app(app, tcfg.requests);
@@ -251,7 +412,55 @@ pub fn serve_fleet(
     let mut first_arrival = f64::INFINITY;
     let mut last_done = t0;
 
+    // ---- the failure plane (ISSUE-6) --------------------------------
+    // `resilient` arms the front-door timer wheel (timeouts, hedges);
+    // `tracking` maintains per-request lifetime state. Both off is the
+    // exact pre-chaos fast path; a *quiet* fault plan draws nothing
+    // from its RNG streams, so quiet-plan runs are bit-identical to
+    // fault-free runs (the `tests/chaos.rs` property).
+    let resilient = tcfg.resilient();
+    let tracking = resilient || tcfg.faults.is_some();
+    // Expected arrival window: the crash schedule's time base.
+    let window = tcfg.requests as f64 / offered;
+    let drives_per_server: Vec<usize> = specs.iter().map(|s| s.sched.drives).collect();
+    let mut plan = tcfg
+        .faults
+        .as_ref()
+        .map(|fc| FaultPlan::new(fc, &drives_per_server, t0, window));
+    if let Some(p) = plan.as_mut() {
+        for (e, d) in engines.iter_mut().zip(p.drive.drain(..)) {
+            e.set_faults(d);
+        }
+    }
+    // Per-server latency floor a healthy request can legitimately spend
+    // before service starts (wake grid + batch formation): part of the
+    // deadline-aware automatic timeout base.
+    let floors: Vec<f64> =
+        specs.iter().map(|s| s.sched.wakeup_secs + tcfg.batch_timeout_s).collect();
+    let mut tracker: HashMap<u64, Track> = HashMap::new();
+    let mut wheel: BinaryHeap<Reverse<Deadline>> = BinaryHeap::new();
+    let mut missed_acks: Vec<u32> = vec![0; fcfg.servers];
+    let mut failed = 0u64;
+    let mut retried = 0u64;
+    let mut hedged = 0u64;
+    let mut duplicate_suppressed = 0u64;
+    let mut completed_in_slo = 0u64;
+    // Attempt-level (not request-level) accounting, for the engine
+    // conservation checks below.
+    let mut extra_shed = 0u64;
+    let mut engine_emitted = 0u64;
+    let mut crash_suppressed = 0u64;
+    let mut link_dropped = 0u64;
+    let mut arrived = 0u64;
+
     // ---- the joint event loop ---------------------------------------
+    // Three event sources in nondecreasing virtual time: arrivals, the
+    // per-server engines, and the front-door timer wheel. Arrivals win
+    // global ties so same-instant dispatch sees the queued request;
+    // engine events beat same-instant deadlines so a response that
+    // lands exactly at its timeout counts as delivered. With the wheel
+    // empty (any non-resilient run) the selection reduces exactly to
+    // the pre-chaos two-way race.
     loop {
         let ta = gen.peek().map(|t| t0 + t);
         let te = engines
@@ -259,20 +468,54 @@ pub fn serve_fleet(
             .enumerate()
             .filter_map(|(i, e)| e.next_time().map(|t| (t, i)))
             .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-        // Arrivals win global ties so same-instant dispatch sees the
-        // queued request.
-        let take_arrival = match (ta, te) {
-            (None, None) => break,
-            (Some(_), None) => true,
-            (None, Some(_)) => false,
-            (Some(a), Some((t, _))) => a <= t,
-        };
-        if take_arrival {
-            let a = ta.expect("arrival peeked");
+        let a = ta.unwrap_or(f64::INFINITY);
+        let e = te.map(|(t, _)| t).unwrap_or(f64::INFINITY);
+        let w = wheel.peek().map(|d| d.0.t).unwrap_or(f64::INFINITY);
+        if a.is_infinite() && e.is_infinite() && w.is_infinite() {
+            break;
+        }
+        if a <= e && a <= w {
             let req = gen.pop().expect("peeked arrival");
+            arrived += 1;
             let s = balancer.pick();
             first_arrival = first_arrival.min(a);
-            if engines[s].offer(a, req.id)? == Offer::Shed {
+            // Timeout base frozen at first submission: explicit when
+            // configured, else deadline-aware — a margin over the
+            // target's own completion estimate plus its wake floor, so
+            // it never fires on a healthy fleet.
+            let base = if resilient {
+                tcfg.retry_timeout_s.unwrap_or_else(|| {
+                    AUTO_TIMEOUT_MARGIN * (engines[s].estimated_completion_s() + floors[s])
+                })
+            } else {
+                0.0
+            };
+            let down_now = plan.as_ref().map_or(false, |p| p.down(s, a));
+            if down_now {
+                // The dead server swallows the request whole: no ack,
+                // no rejection. Only the timer wheel (or the end-of-run
+                // sweep, without resilience) can resolve it now.
+                tracker.insert(
+                    req.id,
+                    Track { arrival: a, home: s, attempts: 1, base, hedged: false, done: false },
+                );
+                if resilient {
+                    wheel.push(Reverse(Deadline {
+                        t: a + base,
+                        id: req.id,
+                        kind: KIND_TIMEOUT,
+                        tgt: s,
+                    }));
+                    if tcfg.hedge {
+                        wheel.push(Reverse(Deadline {
+                            t: a + HEDGE_FRACTION * base,
+                            id: req.id,
+                            kind: KIND_HEDGE,
+                            tgt: s,
+                        }));
+                    }
+                }
+            } else if engines[s].offer(a, req.id)? == Offer::Shed {
                 // Rejected at the door: an immediate response that
                 // never enters the percentiles. The rejection still
                 // re-arms a closed-loop client, and it closes the
@@ -281,56 +524,276 @@ pub fn serve_fleet(
                 balancer.outstanding[s] -= 1;
                 gen.on_complete(a - t0);
                 last_done = last_done.max(a);
+            } else if tracking {
+                tracker.insert(
+                    req.id,
+                    Track { arrival: a, home: s, attempts: 1, base, hedged: false, done: false },
+                );
+                if resilient {
+                    wheel.push(Reverse(Deadline {
+                        t: a + base,
+                        id: req.id,
+                        kind: KIND_TIMEOUT,
+                        tgt: s,
+                    }));
+                    if tcfg.hedge {
+                        wheel.push(Reverse(Deadline {
+                            t: a + HEDGE_FRACTION * base,
+                            id: req.id,
+                            kind: KIND_HEDGE,
+                            tgt: s,
+                        }));
+                    }
+                }
             }
-        } else {
+        } else if e <= w {
             let (_, i) = te.expect("engine event peeked");
             engines[i].step()?;
             let comps = engines[i].take_completions();
             if comps.is_empty() {
                 continue;
             }
+            engine_emitted += comps.len() as u64;
             // One ack event → one batch → one response block over
             // the rack for non-head servers (64 B header + per-item
             // outputs), serialized FIFO on the head's downlink.
             let batch_done = comps[0].done;
+            // A crashed server produces no responses: everything it
+            // completes during downtime is suppressed, and the front
+            // door recovers via timeouts, not mercy.
+            if plan.as_ref().map_or(false, |p| p.down(i, batch_done)) {
+                crash_suppressed += comps.len() as u64;
+                continue;
+            }
+            let mut dup_copies = false;
             let delivered = if i == 0 {
                 batch_done
             } else {
                 let bytes = 64 + comps.len() as u64 * model.output_bytes_per_item;
-                rack.send(batch_done, bytes)
+                match plan.as_mut().map_or(LinkOutcome::Deliver, |p| p.link.outcome()) {
+                    LinkOutcome::Drop => {
+                        // The message transits (bandwidth is spent)
+                        // and dies at the head's downlink.
+                        let _ = rack.send(batch_done, bytes);
+                        link_dropped += comps.len() as u64;
+                        continue;
+                    }
+                    LinkOutcome::Duplicate => {
+                        let d = rack.send(batch_done, bytes);
+                        // The spurious copy pays the rack again and
+                        // arrives strictly later, so every completion
+                        // it carries is a duplicate by construction.
+                        let _second = rack.send(batch_done, bytes);
+                        dup_copies = true;
+                        d
+                    }
+                    LinkOutcome::Deliver => rack.send(batch_done, bytes),
+                }
             };
             for c in &comps {
                 debug_assert_eq!(c.done.to_bits(), batch_done.to_bits());
-                latencies.push(delivered - c.arrival);
-                gen.on_complete(delivered - t0);
+                if tracking {
+                    let tr = tracker.get_mut(&c.id).expect("completion for untracked request");
+                    if tr.done {
+                        // First response won already (hedge/retry
+                        // race, or a post-failure straggler).
+                        duplicate_suppressed += 1;
+                        continue;
+                    }
+                    tr.done = true;
+                    let lat = delivered - tr.arrival;
+                    latencies.push(lat);
+                    if lat <= slo {
+                        completed_in_slo += 1;
+                    }
+                    gen.on_complete(delivered - t0);
+                    served_per[i] += 1;
+                } else {
+                    let lat = delivered - c.arrival;
+                    latencies.push(lat);
+                    if lat <= slo {
+                        completed_in_slo += 1;
+                    }
+                    gen.on_complete(delivered - t0);
+                    served_per[i] += 1;
+                }
             }
-            served_per[i] += comps.len() as u64;
-            balancer.outstanding[i] -= comps.len() as u64;
+            if dup_copies {
+                duplicate_suppressed += comps.len() as u64;
+            }
+            balancer.outstanding[i] = balancer.outstanding[i].saturating_sub(comps.len() as u64);
+            if tracking {
+                // A delivered response is a liveness proof: reset the
+                // missed-ack belief (post-rejoin resurrection).
+                missed_acks[i] = 0;
+                balancer.dead[i] = false;
+            }
             last_done = last_done.max(delivered);
+        } else {
+            let Reverse(dl) = wheel.pop().expect("peeked deadline");
+            let now = dl.t;
+            let tr = tracker.get_mut(&dl.id).expect("deadline for untracked request");
+            if tr.done {
+                // Stale deadline for a resolved request: ignored with
+                // zero side effects — the property that keeps healthy
+                // resilient runs identical to non-resilient ones.
+                continue;
+            }
+            match dl.kind {
+                KIND_HEDGE => {
+                    if tr.hedged {
+                        continue;
+                    }
+                    tr.hedged = true;
+                    hedged += 1;
+                    let h = if fcfg.replicas > 0 {
+                        failover_target(tr.home, &balancer.dead)
+                    } else {
+                        tr.home
+                    };
+                    let home = tr.home;
+                    if h == home {
+                        // Same-server hedge: a fresh copy through the
+                        // front door (rescues a faulted ack).
+                        if !plan.as_ref().map_or(false, |p| p.down(h, now)) {
+                            match engines[h].offer(now, dl.id)? {
+                                Offer::Accepted => balancer.outstanding[h] += 1,
+                                Offer::Shed => extra_shed += 1,
+                            }
+                        }
+                    } else {
+                        // Cross-server hedge: the redirect rides (and
+                        // pays) the rack, landing as a delayed submit.
+                        let at = rack.send(now, 64 + model.bytes_per_item);
+                        wheel.push(Reverse(Deadline {
+                            t: at,
+                            id: dl.id,
+                            kind: KIND_SUBMIT,
+                            tgt: h,
+                        }));
+                    }
+                }
+                KIND_TIMEOUT => {
+                    // The attempt aimed at dl.tgt missed its deadline:
+                    // one missed ack against that server, and the
+                    // straggler is written off the queue-depth books.
+                    missed_acks[dl.tgt] += 1;
+                    if missed_acks[dl.tgt] >= MISSED_ACKS_DEAD {
+                        balancer.dead[dl.tgt] = true;
+                    }
+                    balancer.outstanding[dl.tgt] =
+                        balancer.outstanding[dl.tgt].saturating_sub(1);
+                    if tr.attempts > tcfg.retries {
+                        // Retry budget exhausted: the front door
+                        // answers the client with a failure. That IS a
+                        // response — it re-arms a closed-loop client
+                        // and extends the serving window.
+                        tr.done = true;
+                        failed += 1;
+                        gen.on_complete(now - t0);
+                        last_done = last_done.max(now);
+                    } else {
+                        tr.attempts += 1;
+                        retried += 1;
+                        let nt = if balancer.dead[tr.home] && fcfg.replicas > 0 {
+                            failover_target(tr.home, &balancer.dead)
+                        } else {
+                            tr.home
+                        };
+                        wheel.push(Reverse(Deadline {
+                            t: now + tr.base * backoff(tr.attempts),
+                            id: dl.id,
+                            kind: KIND_TIMEOUT,
+                            tgt: nt,
+                        }));
+                        if nt == tr.home {
+                            if !plan.as_ref().map_or(false, |p| p.down(nt, now)) {
+                                match engines[nt].offer(now, dl.id)? {
+                                    Offer::Accepted => balancer.outstanding[nt] += 1,
+                                    Offer::Shed => extra_shed += 1,
+                                }
+                            }
+                        } else {
+                            let at = rack.send(now, 64 + model.bytes_per_item);
+                            wheel.push(Reverse(Deadline {
+                                t: at,
+                                id: dl.id,
+                                kind: KIND_SUBMIT,
+                                tgt: nt,
+                            }));
+                        }
+                    }
+                }
+                _ => {
+                    // KIND_SUBMIT: a redirected copy lands at its
+                    // failover target. A dead target swallows it (the
+                    // armed timeout recovers); a shed just dies — the
+                    // timeout covers that path too.
+                    if !plan.as_ref().map_or(false, |p| p.down(dl.tgt, now)) {
+                        match engines[dl.tgt].offer(now, dl.id)? {
+                            Offer::Accepted => balancer.outstanding[dl.tgt] += 1,
+                            Offer::Shed => extra_shed += 1,
+                        }
+                    }
+                }
+            }
         }
     }
 
     // ---- conservation -----------------------------------------------
-    // Exact admission accounting: every offered request was either
-    // served (accepted, completed once) or shed (rejected at the door).
+    // Exact accounting at two levels. Requests: every offered request
+    // was served (completed once), declared failed, or shed at the
+    // door. Attempts: every engine-accepted attempt either emitted a
+    // completion or was destroyed by a fault, and every emitted
+    // completion was delivered once, duplicate-suppressed, or eaten by
+    // a crash/link fault. On a fault-free run every fault term is zero
+    // and the checks collapse to the strict pre-chaos invariants.
     let served: u64 = served_per.iter().sum();
     let shed: u64 = shed_per.iter().sum();
+    if tracking {
+        // Requests with no event left to resolve them (swallowed by a
+        // dead server or destroyed with no retry budget) are failures.
+        // Counting is order-free, so the map's iteration order cannot
+        // leak into the report.
+        failed += tracker.values().filter(|t| !t.done).count() as u64;
+    }
     anyhow::ensure!(
-        served + shed == tcfg.requests,
-        "serving lost requests: served {served} + shed {shed} != offered {}",
+        served + failed + shed == arrived,
+        "serving lost requests: served {served} + failed {failed} + shed {shed} != arrived {arrived}"
+    );
+    // Open-loop generators always emit every request; a closed loop
+    // falls short only when a fault swallowed a request with no
+    // resilience armed — the stuck client's request never re-entered
+    // circulation. That shortfall is itself a failure to serve.
+    anyhow::ensure!(
+        arrived == tcfg.requests || tcfg.faults.is_some(),
+        "arrival stream ended early without faults: {arrived} of {} requests",
         tcfg.requests
     );
+    failed += tcfg.requests - arrived;
     let engine_shed: u64 = engines.iter().map(|e| e.shed()).sum();
-    let engine_accepted: u64 = engines.iter().map(|e| e.accepted()).sum();
     anyhow::ensure!(
-        engine_shed == shed && engine_accepted == served,
+        engine_shed == shed + extra_shed,
         "engine admission counters disagree with the front door: \
-         {engine_accepted}+{engine_shed} vs {served}+{shed}"
+         {engine_shed} vs {shed} first-offer + {extra_shed} retry/hedge"
+    );
+    let engine_accepted: u64 = engines.iter().map(|e| e.accepted()).sum();
+    let engine_lost: u64 = engines.iter().map(|e| e.lost()).sum();
+    anyhow::ensure!(
+        engine_accepted == engine_emitted + engine_lost,
+        "attempt accounting leak: accepted {engine_accepted} != \
+         emitted {engine_emitted} + fault-lost {engine_lost}"
+    );
+    anyhow::ensure!(
+        engine_emitted == served + duplicate_suppressed + crash_suppressed + link_dropped,
+        "response accounting leak: emitted {engine_emitted} != served {served} + \
+         dup {duplicate_suppressed} + crash-suppressed {crash_suppressed} + \
+         link-dropped {link_dropped}"
     );
     let items: u64 = engines.iter().map(|e| e.state().host_items + e.state().csd_items).sum();
     anyhow::ensure!(
-        items == served,
-        "scheduler item split ({items}) disagrees with accepted count ({served})"
+        items == engine_accepted,
+        "scheduler item split ({items}) disagrees with accepted attempts ({engine_accepted})"
     );
 
     // ---- rollups -----------------------------------------------------
@@ -371,6 +834,8 @@ pub fn serve_fleet(
     let latency = LatencyStats::of(&latencies);
     metrics.inc("serve.requests", served as f64);
     metrics.inc("serve.shed", shed as f64);
+    metrics.inc("serve.failed", failed as f64);
+    metrics.inc("serve.retried", retried as f64);
     metrics.inc("serve.rack_bytes", rack.bytes_moved() as f64);
     metrics.set_gauge("serve.p99_latency_s", latency.p99);
 
@@ -384,6 +849,12 @@ pub fn serve_fleet(
         requests: tcfg.requests,
         served,
         shed,
+        failed,
+        retried,
+        hedged,
+        duplicate_suppressed,
+        completed_in_slo,
+        availability: completed_in_slo as f64 / tcfg.requests as f64,
         admission: tcfg.admission,
         slo_p99_s: slo,
         offered_rps: offered,
@@ -716,5 +1187,226 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("empty"), "unhelpful error: {err}");
+    }
+
+    // ---- ISSUE-6: chaos / resilience --------------------------------
+
+    use crate::faults::FaultsConfig;
+
+    /// A single-server crash at 25% of the arrival window.
+    fn crash_faults() -> FaultsConfig {
+        FaultsConfig { server_crash_at: Some(0.25), crash_server: 0, ..FaultsConfig::default() }
+    }
+
+    #[test]
+    fn server_crash_without_resilience_loses_requests() {
+        // No retries, no hedging, no replicas: everything routed to the
+        // crashed server after its crash instant (and everything it had
+        // in flight) is simply lost — conservation must still hold, as
+        // `failed`, never as a hang or a leak.
+        let tcfg = TrafficConfig {
+            load: 0.6,
+            requests: 4_000,
+            policy: LbPolicy::RoundRobin,
+            faults: Some(crash_faults()),
+            ..TrafficConfig::default()
+        };
+        let mut m = Metrics::new();
+        let r = serve_fleet(
+            App::Sentiment,
+            &fleet_cfg(4, FleetShape::AllCsd),
+            &tcfg,
+            &PowerModel::default(),
+            &mut m,
+        )
+        .unwrap();
+        assert_eq!(r.served + r.failed + r.shed, 4_000, "conservation under crash");
+        assert!(r.failed > 0, "a dead server with no resilience must lose requests");
+        assert!(
+            r.availability < 0.99,
+            "no-resilience availability {} should be visibly degraded",
+            r.availability
+        );
+        assert_eq!(r.retried, 0);
+        assert_eq!(r.hedged, 0);
+    }
+
+    #[test]
+    fn retry_failover_recovers_a_crashed_server() {
+        // The full resilience stack: deadline-aware retries, hedging,
+        // and one replica per shard. The front door detects the dead
+        // server by missed acks, fails its shards over to the neighbor,
+        // and steers new arrivals away — availability recovers past the
+        // fig11 gate's 99% bar.
+        let fcfg = FleetConfig { replicas: 1, ..fleet_cfg(4, FleetShape::AllCsd) };
+        let tcfg = TrafficConfig {
+            load: 0.6,
+            requests: 4_000,
+            policy: LbPolicy::RoundRobin,
+            retries: 3,
+            hedge: true,
+            faults: Some(crash_faults()),
+            ..TrafficConfig::default()
+        };
+        let mut m = Metrics::new();
+        let r = serve_fleet(App::Sentiment, &fcfg, &tcfg, &PowerModel::default(), &mut m).unwrap();
+        assert_eq!(r.served + r.failed + r.shed, 4_000);
+        assert!(r.retried > 0, "recovery must go through retries");
+        assert!(
+            r.availability >= 0.99,
+            "resilient availability {} (served {}, failed {}) should clear 99%",
+            r.availability,
+            r.served,
+            r.failed
+        );
+        assert!(r.per_server[0].served < r.per_server[1].served, "traffic left the dead server");
+    }
+
+    #[test]
+    fn ack_loss_is_absorbed_by_retries() {
+        // Lossy drive acks on a single server: every lost batch times
+        // out at the front door and the retry budget replays it — no
+        // request may be lost, and the loss shows up in `retried`.
+        let tcfg = TrafficConfig {
+            load: 0.5,
+            requests: 2_000,
+            retries: 5,
+            faults: Some(FaultsConfig { ack_loss: 0.05, ..FaultsConfig::default() }),
+            ..TrafficConfig::default()
+        };
+        let mut m = Metrics::new();
+        let r = serve_fleet(
+            App::Sentiment,
+            &fleet_cfg(1, FleetShape::AllCsd),
+            &tcfg,
+            &PowerModel::default(),
+            &mut m,
+        )
+        .unwrap();
+        assert_eq!(r.served, 2_000, "retries must recover every lost ack (failed {})", r.failed);
+        assert_eq!(r.failed, 0);
+        assert!(r.retried > 0, "a 5% ack-loss run must actually retry");
+    }
+
+    #[test]
+    fn duplicated_rack_messages_are_suppressed() {
+        // Heavy link duplication: every response still counts exactly
+        // once (first copy wins), the spurious copies are tallied, and
+        // both copies pay rack bandwidth.
+        let mk = |dup| TrafficConfig {
+            load: 0.5,
+            requests: 2_000,
+            policy: LbPolicy::RoundRobin,
+            faults: Some(FaultsConfig { link_dup: dup, ..FaultsConfig::default() }),
+            ..TrafficConfig::default()
+        };
+        let mut m = Metrics::new();
+        let fleet = fleet_cfg(2, FleetShape::AllCsd);
+        let clean =
+            serve_fleet(App::Sentiment, &fleet, &mk(0.0), &PowerModel::default(), &mut m).unwrap();
+        let dup =
+            serve_fleet(App::Sentiment, &fleet, &mk(0.5), &PowerModel::default(), &mut m).unwrap();
+        for r in [&clean, &dup] {
+            assert_eq!(r.served, 2_000);
+            assert_eq!(r.failed, 0);
+        }
+        assert_eq!(clean.duplicate_suppressed, 0);
+        assert!(dup.duplicate_suppressed > 0, "duplicates must be counted, not double-served");
+        assert!(dup.rack_bytes > clean.rack_bytes, "the spurious copy pays the rack");
+    }
+
+    #[test]
+    fn drive_stalls_delay_but_never_lose() {
+        // Transient drive stalls: acks arrive late, nothing is lost,
+        // no resilience machinery required.
+        let tcfg = TrafficConfig {
+            load: 0.5,
+            requests: 2_000,
+            faults: Some(FaultsConfig { stall: 0.2, stall_s: 0.05, ..FaultsConfig::default() }),
+            ..TrafficConfig::default()
+        };
+        let mut m = Metrics::new();
+        let fleet = fleet_cfg(1, FleetShape::AllCsd);
+        let r =
+            serve_fleet(App::Sentiment, &fleet, &tcfg, &PowerModel::default(), &mut m).unwrap();
+        assert_eq!(r.served, 2_000);
+        assert_eq!(r.failed, 0);
+        let clean = serve_fleet(
+            App::Sentiment,
+            &fleet,
+            &TrafficConfig { faults: None, ..tcfg },
+            &PowerModel::default(),
+            &mut m,
+        )
+        .unwrap();
+        assert!(
+            r.latency.p99 > clean.latency.p99,
+            "stalls must show up in the tail: {} vs {}",
+            r.latency.p99,
+            clean.latency.p99
+        );
+    }
+
+    #[test]
+    fn faulted_runs_are_deterministic() {
+        // Same (config, fault seed) twice → bit-identical reports, even
+        // under heavy mixed faults.
+        let fcfg = FleetConfig { replicas: 1, ..fleet_cfg(3, FleetShape::AllCsd) };
+        let tcfg = TrafficConfig {
+            load: 0.6,
+            requests: 2_000,
+            retries: 2,
+            hedge: true,
+            faults: Some(FaultsConfig {
+                ack_loss: 0.05,
+                stall: 0.05,
+                stall_s: 0.02,
+                link_drop: 0.02,
+                link_dup: 0.02,
+                server_crash_at: Some(0.5),
+                rejoin_s: Some(2.0),
+                ..FaultsConfig::default()
+            }),
+            ..TrafficConfig::default()
+        };
+        let mut m = Metrics::new();
+        let a = serve_fleet(App::Sentiment, &fcfg, &tcfg, &PowerModel::default(), &mut m).unwrap();
+        let b = serve_fleet(App::Sentiment, &fcfg, &tcfg, &PowerModel::default(), &mut m).unwrap();
+        a.check_bit_identical(&b).unwrap();
+        assert_eq!(a.served + a.failed + a.shed, 2_000);
+    }
+
+    #[test]
+    fn rejects_nonsense_resilience_params() {
+        let mut m = Metrics::new();
+        let ok = fleet_cfg(2, FleetShape::AllCsd);
+        // replicas must leave a distinct neighbor
+        let bad_rep = FleetConfig { replicas: 2, ..fleet_cfg(2, FleetShape::AllCsd) };
+        assert!(serve_fleet(
+            App::Sentiment,
+            &bad_rep,
+            &TrafficConfig::default(),
+            &PowerModel::default(),
+            &mut m
+        )
+        .is_err());
+        // retry timeout must be positive and finite
+        let bad_to =
+            TrafficConfig { retry_timeout_s: Some(0.0), retries: 1, ..TrafficConfig::default() };
+        assert!(
+            serve_fleet(App::Sentiment, &ok, &bad_to, &PowerModel::default(), &mut m).is_err()
+        );
+        // fault plans are validated against the fleet
+        let bad_faults = TrafficConfig {
+            faults: Some(FaultsConfig {
+                server_crash_at: Some(0.5),
+                crash_server: 7,
+                ..FaultsConfig::default()
+            }),
+            ..TrafficConfig::default()
+        };
+        assert!(
+            serve_fleet(App::Sentiment, &ok, &bad_faults, &PowerModel::default(), &mut m).is_err()
+        );
     }
 }

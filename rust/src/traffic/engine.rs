@@ -60,6 +60,7 @@ use std::collections::VecDeque;
 
 use crate::cluster::StorageServer;
 use crate::csd::CsdConfig;
+use crate::faults::{AckOutcome, DriveFaults};
 use crate::metrics::Metrics;
 use crate::sched::{DispatchMode, Ev, SchedConfig, SchedState, SHARD};
 use crate::sim::EventQueue;
@@ -176,6 +177,18 @@ pub(crate) struct ServeEngine<'a> {
     shed: u64,
     /// Requests inside an in-flight batch (accepted − queued − done).
     inflight: u64,
+    /// Drive-level fault stream (ISSUE-6). `None` — the default and the
+    /// only state every pre-chaos caller sees — takes the exact
+    /// fault-free code path: no draw, no branch beyond one `is_some`.
+    faults: Option<DriveFaults>,
+    /// Per-drive marker: the drive's outstanding CSD ack has already
+    /// drawn `Stall` and been re-scheduled; deliver it on the next pop
+    /// instead of drawing again.
+    stall_armed: Vec<bool>,
+    /// Requests whose results were destroyed by a drive fault (lost or
+    /// corrupted ack, ISP crash). They are *not* completions and *not*
+    /// shed — the front door's timeout/retry layer resolves them.
+    lost: u64,
     /// Bytes of resident corpus per drive; read offsets wrap below it.
     corpus_bytes: u64,
     /// Largest single-dispatch read; offsets wrap once they pass
@@ -279,6 +292,9 @@ impl<'a> ServeEngine<'a> {
             accepted: 0,
             shed: 0,
             inflight: 0,
+            faults: None,
+            stall_armed: vec![false; cfg.drives],
+            lost: 0,
             corpus_bytes,
             max_read_bytes,
             completions: Vec::new(),
@@ -333,11 +349,24 @@ impl<'a> ServeEngine<'a> {
         self.accepted
     }
 
+    /// Arm this engine's drive-fault stream (ISSUE-6). Called once by
+    /// the fleet driver before serving starts; engines without a stream
+    /// run the exact fault-free path.
+    pub(crate) fn set_faults(&mut self, f: DriveFaults) {
+        self.faults = Some(f);
+    }
+
+    /// Requests destroyed by drive faults so far (never completions).
+    pub(crate) fn lost(&self) -> u64 {
+        self.lost
+    }
+
     /// The admission gate's completion estimate for a request offered
     /// now: outstanding work drained at the engine's nominal rate, plus
     /// the one-item service floor. Deliberately cheap — a queue-depth
-    /// proxy, not a simulation — and deterministic.
-    fn estimated_completion_s(&self) -> f64 {
+    /// proxy, not a simulation — and deterministic. Also the base the
+    /// front door's deadline-aware retry timeout scales from.
+    pub(crate) fn estimated_completion_s(&self) -> f64 {
         (self.queued + self.inflight + 1) as f64 / self.svc_rate + self.min_svc_s
     }
 
@@ -416,6 +445,54 @@ impl<'a> ServeEngine<'a> {
                     }
                 }
                 Ev::CsdAck { drive, items, dispatched } => {
+                    // Drive-fault hook (ISSUE-6): the fate of this batch
+                    // ack is drawn from the engine's own seeded stream at
+                    // this virtual-time event — see the faults module's
+                    // determinism contract. Fault-free engines skip
+                    // straight to delivery.
+                    if let Some(f) = self.faults.as_mut() {
+                        if self.stall_armed[drive] {
+                            // Rescheduled stalled ack: deliver, no redraw.
+                            self.stall_armed[drive] = false;
+                        } else {
+                            match f.ack_outcome(drive) {
+                                AckOutcome::Deliver => {}
+                                AckOutcome::Stall => {
+                                    // The drive is stuck for stall_s: the
+                                    // ack (and the drive's idle event) are
+                                    // pushed into the future as one late
+                                    // delivery of the same batch.
+                                    self.stall_armed[drive] = true;
+                                    let at = now + f.stall_s;
+                                    self.q.schedule_at(at, Ev::CsdAck { drive, items, dispatched });
+                                    return Ok(());
+                                }
+                                AckOutcome::Lost => {
+                                    // The drive worked (or died trying);
+                                    // the results never arrive. Free the
+                                    // drive in the sched state exactly as
+                                    // a delivery would, but emit no
+                                    // completions — the front door's
+                                    // timeout layer owns recovery. A
+                                    // crashed ISP additionally leaves the
+                                    // placement rotation (weight 0 →
+                                    // plain-SSD fallback for new work).
+                                    self.st.csd_ack(now, drive, items, dispatched, &mut self.metrics);
+                                    debug_assert_eq!(self.csd_inflight[drive].len() as u64, items);
+                                    self.inflight -= items;
+                                    self.lost += self.csd_inflight[drive].len() as u64;
+                                    self.csd_inflight[drive].clear();
+                                    if f.crashed(drive) && drive < self.place_weight.len() {
+                                        self.place_weight[drive] = 0.0;
+                                    }
+                                    if self.event_driven {
+                                        self.try_dispatch(now, false)?;
+                                    }
+                                    return Ok(());
+                                }
+                            }
+                        }
+                    }
                     self.st.csd_ack(now, drive, items, dispatched, &mut self.metrics);
                     debug_assert_eq!(self.csd_inflight[drive].len() as u64, items);
                     self.inflight -= items;

@@ -57,6 +57,19 @@
 //!   minimum servers each fleet shape needs to meet the p99 SLO as the
 //!   offered load grows, plus goodput and per-request energy at that
 //!   operating point.
+//!
+//! And on top of the control plane sits the **failure plane** (the
+//! ISSUE-6 tentpole): deterministic fault injection ([`crate::faults`])
+//! answered by a front-door resilience layer — per-request
+//! deadline-aware timeouts with a capped exponential-backoff retry
+//! budget (`[traffic] retries`), hedged requests with
+//! first-response-wins duplicate suppression (`[traffic] hedge`), and
+//! missed-ack dead-server detection with shard failover to a neighbor
+//! replica over the rack link (`[fleet] replicas`). Fig 11
+//! ([`crate::exp::fig11_availability`], `solana fig11`,
+//! `cargo bench --bench serve_faults`) measures availability (fraction
+//! of offered requests completed within the SLO) across fault scenario
+//! × resilience policy × fleet shape.
 
 pub mod arrivals;
 pub mod balancer;
@@ -67,6 +80,7 @@ pub use balancer::{serve_fleet, LbPolicy};
 pub use engine::FormationPolicy;
 
 use crate::cluster::fleet::{FleetConfig, FleetShape, ServerSpec};
+use crate::faults::FaultsConfig;
 use crate::metrics::Metrics;
 use crate::power::PowerModel;
 use crate::sched::SchedConfig;
@@ -115,6 +129,24 @@ pub struct TrafficConfig {
     pub skew: f64,
     /// Deterministic seed for the arrival generators.
     pub seed: u64,
+    /// Retry budget per request (ISSUE-6): after a deadline-aware
+    /// timeout the front door re-submits, with capped exponential
+    /// backoff, up to this many times before declaring the request
+    /// failed. 0 (default) disables the timeout/retry layer entirely.
+    pub retries: u32,
+    /// Base retry timeout (s). `None` (default) derives a deadline-aware
+    /// base from the target engine's completion estimate — generous
+    /// enough that it never fires on a healthy fleet. Set explicitly for
+    /// tight recovery (fig11 uses `0.5 × SLO`).
+    pub retry_timeout_s: Option<f64>,
+    /// Hedged requests (ISSUE-6): after a fraction of the first-timeout
+    /// base the front door speculatively duplicates a straggler to a
+    /// second server; first response wins, the loser is suppressed.
+    pub hedge: bool,
+    /// Fault-injection plan (ISSUE-6). `None` (default) is the exact
+    /// fault-free path; `Some` with all-zero rates is bit-identical to
+    /// it (property-tested in `tests/chaos.rs`).
+    pub faults: Option<FaultsConfig>,
 }
 
 impl Default for TrafficConfig {
@@ -135,6 +167,10 @@ impl Default for TrafficConfig {
             admission: false,
             skew: 0.0,
             seed: 42,
+            retries: 0,
+            retry_timeout_s: None,
+            hedge: false,
+            faults: None,
         }
     }
 }
@@ -142,6 +178,11 @@ impl Default for TrafficConfig {
 impl TrafficConfig {
     pub fn formation(&self) -> FormationPolicy {
         FormationPolicy { min_batch: self.min_batch, timeout_s: self.batch_timeout_s }
+    }
+
+    /// Whether the timeout/retry/hedge resilience layer is armed.
+    pub fn resilient(&self) -> bool {
+        self.retries > 0 || self.hedge
     }
 
     /// Resolve the offered rate against a fleet's nominal capacity.
@@ -266,11 +307,31 @@ pub struct ServeReport {
     pub policy: &'static str,
     pub servers: usize,
     pub requests: u64,
-    /// Requests accepted and completed (`requests − shed`).
+    /// Requests accepted and completed (`requests − shed` on a healthy
+    /// fleet; under faults `requests == served + failed + shed`).
     pub served: u64,
     /// Requests shed by admission control (0 with admission off).
-    /// Exact accounting: `requests == served + shed`, always.
+    /// Exact accounting: `requests == served + failed + shed`, always.
     pub shed: u64,
+    /// Requests that exhausted their retry budget (or had none) after a
+    /// fault destroyed every attempt. 0 on a fault-free run.
+    pub failed: u64,
+    /// Retry re-submissions issued by the front door. Excluded from the
+    /// exactly-once accounting above: a retry is another attempt at the
+    /// same request, never a new request.
+    pub retried: u64,
+    /// Hedged duplicates issued by the front door (first response wins).
+    pub hedged: u64,
+    /// Extra responses discarded by first-response-wins bookkeeping
+    /// (late hedge losers, rack-link duplicates, post-retry stragglers).
+    pub duplicate_suppressed: u64,
+    /// Requests completed within the p99 SLO — the availability
+    /// numerator.
+    pub completed_in_slo: u64,
+    /// Fraction of *offered* requests completed within the SLO — the
+    /// fig11 availability metric. Shed, failed, and SLO-late requests
+    /// all count against it.
+    pub availability: f64,
     /// Whether SLO-aware admission control was active.
     pub admission: bool,
     /// The p99 SLO the run was judged (and, with admission on,
@@ -350,6 +411,12 @@ impl ServeReport {
         eq("requests", self.requests, other.requests)?;
         eq("served", self.served, other.served)?;
         eq("shed", self.shed, other.shed)?;
+        eq("failed", self.failed, other.failed)?;
+        eq("retried", self.retried, other.retried)?;
+        eq("hedged", self.hedged, other.hedged)?;
+        eq("duplicate_suppressed", self.duplicate_suppressed, other.duplicate_suppressed)?;
+        eq("completed_in_slo", self.completed_in_slo, other.completed_in_slo)?;
+        f64_eq("availability", self.availability, other.availability)?;
         eq("admission", self.admission, other.admission)?;
         f64_eq("slo_p99_s", self.slo_p99_s, other.slo_p99_s)?;
         f64_eq("offered_rps", self.offered_rps, other.offered_rps)?;

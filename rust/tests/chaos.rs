@@ -1,0 +1,147 @@
+//! Chaos-plane integration tests (ISSUE-6): the determinism contract of
+//! the fault-injection layer, checked end-to-end through `serve_fleet`.
+//!
+//! Three properties:
+//! 1. **Quiet plans are free** — a fault plan with every rate zero must
+//!    produce a report bit-identical to `faults: None`, whatever the
+//!    resilience knobs, fleet shape, or balancer policy. The chaos
+//!    machinery may not perturb a single float on a healthy fleet.
+//! 2. **Faulted runs are reproducible** — the same fault seed over the
+//!    same config yields a bit-identical report, heavy mixed faults and
+//!    all.
+//! 3. **Conservation survives chaos** — under any random fault plan,
+//!    every offered request is accounted for exactly once:
+//!    `served + failed + shed == requests`.
+
+use solana_isp::cluster::fleet::{FleetConfig, FleetShape};
+use solana_isp::faults::FaultsConfig;
+use solana_isp::metrics::Metrics;
+use solana_isp::power::PowerModel;
+use solana_isp::prop::{check, forall};
+use solana_isp::traffic::{serve_fleet, LbPolicy, ServeReport, TrafficConfig};
+use solana_isp::workloads::App;
+
+fn serve(app: App, fcfg: &FleetConfig, tcfg: &TrafficConfig) -> ServeReport {
+    let mut m = Metrics::new();
+    serve_fleet(app, fcfg, tcfg, &PowerModel::default(), &mut m).expect("serve_fleet")
+}
+
+const APPS: [App; 3] = [App::SpeechToText, App::Recommender, App::Sentiment];
+const SHAPES: [FleetShape; 3] = [FleetShape::AllCsd, FleetShape::AllSsd, FleetShape::Mixed];
+const POLICIES: [LbPolicy; 4] = [
+    LbPolicy::RoundRobin,
+    LbPolicy::WeightedCapacity,
+    LbPolicy::JoinShortestQueue,
+    LbPolicy::LeastWork,
+];
+
+#[test]
+fn quiet_fault_plan_is_bit_identical_to_no_plan() {
+    // Randomized configs: app × shape × policy × resilience knobs. The
+    // zero-rate plan arms the whole chaos path (plan construction,
+    // fault stream forks, the tracking loop when resilience is on) yet
+    // must never draw from the fault RNG or change a single event.
+    forall("quiet faults == no faults", 10, |g| {
+        let app = APPS[g.usize(0..=2)];
+        let servers = g.usize(1..=3);
+        let shape = SHAPES[g.usize(0..=2)];
+        let policy = POLICIES[g.usize(0..=3)];
+        let replicas = if servers > 1 && g.bool() { 1 } else { 0 };
+        let fcfg = FleetConfig { servers, shape, replicas, ..FleetConfig::default() };
+        let tcfg = TrafficConfig {
+            load: g.f64(0.2, 0.8),
+            requests: 400,
+            policy,
+            retries: g.u64(0..=3) as u32,
+            hedge: g.bool(),
+            ..TrafficConfig::default()
+        };
+        let clean = serve(app, &fcfg, &tcfg);
+        let quiet =
+            TrafficConfig { faults: Some(FaultsConfig::quiet()), ..tcfg.clone() };
+        let faulted = serve(app, &fcfg, &quiet);
+        clean.check_bit_identical(&faulted)
+    });
+}
+
+#[test]
+fn faulted_runs_with_same_seed_are_bit_identical() {
+    // Heavy mixed fault plan — drive, server, and link faults all live
+    // at once — run twice with the same seed: the virtual-time DES plus
+    // per-component forked fault streams must reproduce every bit.
+    for app in [App::SpeechToText, App::Sentiment] {
+        let fcfg = FleetConfig {
+            servers: 3,
+            shape: FleetShape::Mixed,
+            replicas: 1,
+            ..FleetConfig::default()
+        };
+        let faults = FaultsConfig {
+            seed: 42,
+            ack_loss: 0.1,
+            stall: 0.1,
+            stall_s: 0.02,
+            link_drop: 0.05,
+            link_dup: 0.05,
+            server_crash_at: Some(0.4),
+            crash_server: 1,
+            ..FaultsConfig::default()
+        };
+        let tcfg = TrafficConfig {
+            load: 0.6,
+            requests: 600,
+            policy: LbPolicy::RoundRobin,
+            retries: 3,
+            hedge: true,
+            faults: Some(faults),
+            ..TrafficConfig::default()
+        };
+        let a = serve(app, &fcfg, &tcfg);
+        let b = serve(app, &fcfg, &tcfg);
+        a.check_bit_identical(&b).unwrap_or_else(|e| panic!("{app:?}: {e}"));
+        assert_eq!(a.served + a.failed + a.shed, a.requests, "{app:?}: conservation");
+    }
+}
+
+#[test]
+fn conservation_holds_under_random_fault_plans() {
+    forall("served + failed + shed == requests under chaos", 8, |g| {
+        let app = APPS[g.usize(0..=2)];
+        let servers = g.usize(1..=4);
+        let shape = SHAPES[g.usize(0..=2)];
+        let replicas = if servers > 1 && g.bool() { 1 } else { 0 };
+        let faults = FaultsConfig {
+            seed: g.u64(0..=u64::MAX / 2),
+            ack_loss: g.f64(0.0, 0.15),
+            stall: g.f64(0.0, 0.15),
+            stall_s: g.f64(0.005, 0.05),
+            link_drop: g.f64(0.0, 0.1),
+            link_dup: g.f64(0.0, 0.1),
+            server_crash_at: if g.bool() { Some(g.f64(0.1, 0.9)) } else { None },
+            crash_server: g.usize(0..=servers - 1),
+            ..FaultsConfig::default()
+        };
+        let fcfg = FleetConfig { servers, shape, replicas, ..FleetConfig::default() };
+        let tcfg = TrafficConfig {
+            load: g.f64(0.3, 0.9),
+            requests: 400,
+            policy: POLICIES[g.usize(0..=3)],
+            retries: g.u64(0..=3) as u32,
+            hedge: g.bool(),
+            faults: Some(faults),
+            ..TrafficConfig::default()
+        };
+        let r = serve(app, &fcfg, &tcfg);
+        check(
+            r.served + r.failed + r.shed == r.requests,
+            format!(
+                "served {} + failed {} + shed {} != requests {}",
+                r.served, r.failed, r.shed, r.requests
+            ),
+        )?;
+        check(
+            (0.0..=1.0).contains(&r.availability),
+            format!("availability out of range: {}", r.availability),
+        )
+    });
+}

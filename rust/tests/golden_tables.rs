@@ -1,7 +1,8 @@
 //! Golden-table regression net (ISSUE-3 satellite): every experiment
 //! table the repo emits — Fig 5 × 3 apps, Fig 6, Fig 7, Table I, the
 //! power breakdown, ablations A1–A4, the Fig 8 fleet sweep, the Fig 9
-//! serving-latency sweep, and the Fig 10 autoscaling study — is
+//! serving-latency sweep, the Fig 10 autoscaling study, and the Fig 11
+//! availability-under-faults study — is
 //! serialized at `--scale 0.01` and diffed **cell-by-cell** against a
 //! committed snapshot under `tests/golden/`. The comparison is an exact
 //! string match on the tables' fixed-precision formatting, so any
@@ -203,6 +204,11 @@ fn golden_fig9_latency() {
 #[test]
 fn golden_fig10_autoscale() {
     check_table("fig10", &exp::fig10_autoscale(SCALE).unwrap());
+}
+
+#[test]
+fn golden_fig11_availability() {
+    check_table("fig11", &exp::fig11_availability(SCALE).unwrap());
 }
 
 // ---- the net itself is tested: a single-cell change must trip --------

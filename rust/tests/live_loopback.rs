@@ -52,6 +52,7 @@ fn run_mode(dispatch: DispatchMode) -> LiveReport {
         train_items: 0, // unused: run_live_with takes the corpus directly
         dispatch,
         seed: SEED,
+        worker_deadline: 600,
     };
     let host = Box::new(OracleClassifier { labels: Arc::clone(&labels) });
     let factory: WorkerFactory = Arc::new(move |_rank, _weights: &[f32]| {
@@ -88,6 +89,90 @@ fn check_conservation(mode: &str, r: &LiveReport) {
     assert!(r.accuracy > 0.99, "{mode}: accuracy {} (payload misrouting?)", r.accuracy);
     assert!(r.messages > 0, "{mode}: tunnel carried protocol traffic");
     assert!(r.wall_secs > 0.0 && r.items_per_sec > 0.0, "{mode}: sane wall-clock report");
+}
+
+/// A classifier that answers instantly on the coordinator but parks
+/// (bounded) on worker ranks, so the batches those workers hold never
+/// come back within the watchdog budget.
+struct StuckClassifier {
+    labels: Arc<HashMap<String, bool>>,
+    stall: Option<Duration>,
+}
+
+impl LiveClassifier for StuckClassifier {
+    fn classify(&mut self, texts: &[&str]) -> anyhow::Result<Vec<bool>> {
+        if let Some(d) = self.stall {
+            // Bounded, so the test always terminates: the watchdog must
+            // fire long before this sleep returns.
+            std::thread::sleep(d);
+        }
+        texts
+            .iter()
+            .map(|t| {
+                self.labels
+                    .get(*t)
+                    .copied()
+                    .ok_or_else(|| anyhow::anyhow!("classifier saw a text outside the corpus"))
+            })
+            .collect()
+    }
+}
+
+#[test]
+fn watchdog_bails_on_a_stuck_worker() {
+    // ISSUE-6 satellite: a worker that accepts a batch and never
+    // answers must trip the coordinator's watchdog (10 × 20 ms here),
+    // not hang the run. The stall is bounded at 4 s so the shutdown
+    // join below always completes.
+    let serve: Arc<Vec<Tweet>> = Arc::new(TweetCorpus::new(SEED).take(ITEMS));
+    let labels: Arc<HashMap<String, bool>> =
+        Arc::new(serve.iter().map(|t| (t.text.clone(), t.positive)).collect());
+    let cfg = LiveConfig {
+        workers: 3,
+        batch: 16,
+        ratio: 4,
+        items: ITEMS,
+        wakeup: Duration::from_millis(20),
+        train_items: 0,
+        dispatch: DispatchMode::Polling,
+        seed: SEED,
+        worker_deadline: 10,
+    };
+    let host = Box::new(StuckClassifier { labels: Arc::clone(&labels), stall: None });
+    let factory: WorkerFactory = Arc::new(move |_rank, _weights: &[f32]| {
+        Ok(Box::new(StuckClassifier {
+            labels: Arc::clone(&labels),
+            stall: Some(Duration::from_secs(4)),
+        }) as Box<dyn LiveClassifier>)
+    });
+    let err = run_live_with(&cfg, serve, vec![0.0; 8], host, factory)
+        .expect_err("a stuck worker must not hang the coordinator");
+    assert!(err.to_string().contains("watchdog"), "unexpected error: {err}");
+}
+
+#[test]
+fn watchdog_zero_deadline_is_rejected() {
+    let serve: Arc<Vec<Tweet>> = Arc::new(TweetCorpus::new(SEED).take(16));
+    let labels: Arc<HashMap<String, bool>> =
+        Arc::new(serve.iter().map(|t| (t.text.clone(), t.positive)).collect());
+    let cfg = LiveConfig {
+        workers: 1,
+        batch: 16,
+        ratio: 1,
+        items: 16,
+        wakeup: Duration::from_millis(20),
+        train_items: 0,
+        dispatch: DispatchMode::Polling,
+        seed: SEED,
+        worker_deadline: 0,
+    };
+    let host = Box::new(OracleClassifier { labels: Arc::clone(&labels) });
+    let factory: WorkerFactory = Arc::new(move |_rank, _weights: &[f32]| {
+        Ok(Box::new(OracleClassifier { labels: Arc::clone(&labels) }) as Box<dyn LiveClassifier>)
+    });
+    let err = run_live_with(&cfg, serve, vec![0.0; 8], host, factory)
+        .expect_err("worker_deadline = 0 must be rejected");
+    assert!(err.to_string().contains("worker_deadline"), "unexpected error: {err}");
 }
 
 #[test]
