@@ -75,11 +75,13 @@ impl Bencher {
         let mut samples = Vec::with_capacity(self.iters);
         let mut items_total: u64 = 0;
         for _ in 0..self.iters {
+            // solana-lint: allow(wall-clock, reason = "bench_support measures real elapsed time by definition; it never runs inside the simulator")
             let t0 = Instant::now();
             let items = std::hint::black_box(f());
             samples.push(t0.elapsed().as_secs_f64());
             items_total += items;
         }
+        // solana-lint: allow(no-unwrap, reason = "iters is a non-zero construction constant, so samples is never empty")
         let summary = Summary::of(&samples).expect("at least one iteration");
         let throughput = if items_total > 0 {
             Some(items_total as f64 / self.iters as f64 / summary.mean)
@@ -92,6 +94,7 @@ impl Bencher {
             secs_per_iter: summary,
             throughput,
         });
+        // solana-lint: allow(no-unwrap, reason = "a result was pushed on the line above")
         self.results.last().unwrap()
     }
 
@@ -154,6 +157,7 @@ impl Bencher {
             }
             n += 1;
         };
+        // solana-lint: allow(wall-clock, reason = "the bench-trajectory point records when the benchmark ran on the host; simulated time is meaningless here")
         let unix_time = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
             .map(|d| d.as_secs())

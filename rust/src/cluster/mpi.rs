@@ -171,6 +171,7 @@ pub fn decode_f32s(buf: &[u8]) -> Result<Vec<f32>, MpiError> {
     }
     Ok(buf
         .chunks_exact(4)
+        // solana-lint: allow(no-unwrap, reason = "chunks_exact(4) yields exactly 4-byte slices; the length check above rejects ragged input")
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
         .collect())
 }
@@ -190,6 +191,7 @@ pub fn decode_u32s(buf: &[u8]) -> Result<Vec<u32>, MpiError> {
     }
     Ok(buf
         .chunks_exact(4)
+        // solana-lint: allow(no-unwrap, reason = "chunks_exact(4) yields exactly 4-byte slices; the length check above rejects ragged input")
         .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
         .collect())
 }

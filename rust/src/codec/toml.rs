@@ -227,10 +227,10 @@ fn parse_value(v: &str) -> Result<TomlValue, &'static str> {
         return Ok(TomlValue::Arr(items));
     }
     let clean = v.replace('_', "");
-    if clean.chars().all(|c| c.is_ascii_digit() || c == '-' || c == '+')
-        && clean.parse::<i64>().is_ok()
-    {
-        return Ok(TomlValue::Int(clean.parse().unwrap()));
+    if clean.chars().all(|c| c.is_ascii_digit() || c == '-' || c == '+') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
     }
     if let Ok(f) = clean.parse::<f64>() {
         return Ok(TomlValue::Float(f));

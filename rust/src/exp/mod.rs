@@ -213,6 +213,7 @@ pub fn fig7(scale: Scale) -> anyhow::Result<Table> {
     for &csds in &CSD_COUNTS {
         let mut cells = vec![csds.to_string()];
         for (i, app) in App::all().iter().enumerate() {
+            // solana-lint: allow(no-unwrap, reason = "sweep-cell pairing invariant: the assert_eq on the next lines pins producer and consumer to the same statically-built spec list")
             let ((spec_csds, spec_app), r) = it.next().expect("one report per sweep cell");
             assert_eq!((spec_csds, spec_app), (csds, *app), "sweep order drifted");
             let r = r?;
@@ -264,7 +265,9 @@ pub fn table1(scale: Scale) -> anyhow::Result<Table> {
     let mut it = ordered.into_iter().zip(reports);
     for app in App::all() {
         let items = scale.items(app);
+        // solana-lint: allow(no-unwrap, reason = "sweep-cell pairing invariant: the assert_eq on the next lines pins producer and consumer to the same statically-built spec list")
         let (base_spec, base) = it.next().expect("baseline cell");
+        // solana-lint: allow(no-unwrap, reason = "sweep-cell pairing invariant: the assert_eq on the next lines pins producer and consumer to the same statically-built spec list")
         let (isp_spec, isp) = it.next().expect("isp cell");
         assert_eq!(base_spec, (app, 0), "sweep order drifted");
         assert_eq!(isp_spec, (app, 36), "sweep order drifted");
@@ -558,6 +561,7 @@ pub fn fig8_scaleout(scale: Scale) -> anyhow::Result<Table> {
             let mut base_rate = 0.0f64;
             for &servers in &SERVER_COUNTS {
                 let ((spec_app, spec_shape, spec_servers), r) =
+                    // solana-lint: allow(no-unwrap, reason = "sweep-cell pairing invariant: the assert_eq on the next lines pins producer and consumer to the same statically-built spec list")
                     it.next().expect("one report per sweep cell");
                 assert_eq!(
                     (spec_app, spec_shape, spec_servers),
@@ -709,6 +713,7 @@ pub fn fig9_latency(scale: Scale) -> anyhow::Result<Table> {
         for shape in FleetShape::all() {
             let mut block: Vec<&Fig9Cell> = Vec::with_capacity(FIG9_LOADS.len());
             for &load in &FIG9_LOADS {
+                // solana-lint: allow(no-unwrap, reason = "sweep-cell pairing invariant: the assert_eq on the next lines pins producer and consumer to the same statically-built spec list")
                 let c = it.next().expect("one cell per sweep point");
                 assert_eq!(
                     (c.app, c.shape, c.load),
@@ -859,6 +864,7 @@ pub fn fig10_cells(scale: Scale) -> anyhow::Result<Vec<Fig10Cell>> {
         }
         let (servers, report) = match chosen {
             Some((n, r)) => (Some(n), r),
+            // solana-lint: allow(no-unwrap, reason = "SERVER_CANDIDATES is a non-empty constant, so the search loop always records a fallback before reaching here")
             None => (None, fallback.expect("at least one fleet size attempted")),
         };
         Ok(Fig10Cell {
@@ -910,6 +916,7 @@ pub fn fig10_table_from(cells: &[Fig10Cell]) -> Table {
     for app in App::all() {
         for shape in FleetShape::all() {
             for &load in &FIG10_LOADS {
+                // solana-lint: allow(no-unwrap, reason = "sweep-cell pairing invariant: the assert_eq on the next lines pins producer and consumer to the same statically-built spec list")
                 let c = it.next().expect("one cell per sweep point");
                 assert_eq!(
                     (c.app, c.shape, c.load_units),
@@ -1175,6 +1182,7 @@ pub fn fig11_table_from(cells: &[Fig11Cell]) -> Table {
     for scenario in FaultScenario::all() {
         for policy in ResiliencePolicy::all() {
             for shape in FIG11_SHAPES {
+                // solana-lint: allow(no-unwrap, reason = "sweep-cell pairing invariant: the assert_eq on the next lines pins producer and consumer to the same statically-built spec list")
                 let c = it.next().expect("one cell per sweep point");
                 assert_eq!(
                     (c.scenario, c.policy, c.shape),

@@ -80,10 +80,13 @@ where
                 }
                 let input = jobs[i]
                     .lock()
+                    // solana-lint: allow(no-unwrap, reason = "a poisoned mutex means a worker already panicked; the pool cannot recover and propagating the panic is the correct behavior")
                     .expect("job mutex")
                     .take()
+                    // solana-lint: allow(no-unwrap, reason = "the SeqCst cursor hands index i to exactly one worker, so the job is still present")
                     .expect("each job is taken exactly once");
                 let out = f(input);
+                // solana-lint: allow(no-unwrap, reason = "a poisoned mutex means a worker already panicked; the pool cannot recover and propagating the panic is the correct behavior")
                 *slots[i].lock().expect("slot mutex") = Some(out);
             });
         }
@@ -92,7 +95,9 @@ where
         .into_iter()
         .map(|m| {
             m.into_inner()
+                // solana-lint: allow(no-unwrap, reason = "a poisoned mutex means a worker already panicked; the pool cannot recover and propagating the panic is the correct behavior")
                 .expect("slot mutex")
+                // solana-lint: allow(no-unwrap, reason = "scope() joined every worker, and each claimed index filled its slot before exiting")
                 .expect("every claimed slot was filled")
         })
         .collect()

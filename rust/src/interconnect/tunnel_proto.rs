@@ -88,6 +88,8 @@ impl Frame {
         out.extend_from_slice(&MAGIC.to_le_bytes());
         out.extend_from_slice(&self.seq.to_le_bytes());
         out.extend_from_slice(&self.ack.to_le_bytes());
+        assert!(self.payload.len() <= MTU, "frame payload exceeds MTU");
+        // solana-lint: allow(lossy-cast, reason = "payload length is asserted <= MTU (16 KiB) on the previous line, so the u32 wire field cannot truncate")
         out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
         out.extend_from_slice(&crc32(&self.payload).to_le_bytes());
         out.extend_from_slice(&self.payload);
@@ -98,6 +100,7 @@ impl Frame {
         if buf.len() < HEADER_BYTES {
             return Err(FrameError::Short(buf.len()));
         }
+        // solana-lint: allow(no-unwrap, reason = "rd is only called with offsets 0..16 after the buf.len() >= HEADER_BYTES (20) check above, so the 4-byte slice always exists")
         let rd = |i: usize| u32::from_le_bytes(buf[i..i + 4].try_into().unwrap());
         let magic = rd(0);
         if magic != MAGIC {

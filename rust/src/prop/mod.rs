@@ -117,6 +117,7 @@ where
             size: (i as f64 + 1.0) / cases as f64,
         };
         if let Err(msg) = prop(&mut g) {
+            // solana-lint: allow(no-unwrap, reason = "the property-test harness must abort the #[test] with the failing seed in the message; there is no Result channel out of a test body")
             panic!(
                 "property '{name}' failed at case {i} (seed {case_seed:#x}): {msg}"
             );

@@ -13,7 +13,7 @@
 
 pub mod tensor;
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -147,7 +147,10 @@ pub struct Engine {
     client: xla::PjRtClient,
     dir: PathBuf,
     pub manifest: Manifest,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    // BTreeMap for determinism hygiene (lint rule D1): the cache is
+    // keyed-lookup-only today, but nothing downstream should ever be
+    // able to observe hasher-dependent order if that changes.
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
     executions: u64,
 }
 
@@ -158,7 +161,7 @@ impl Engine {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Engine { client, dir, manifest, executables: HashMap::new(), executions: 0 })
+        Ok(Engine { client, dir, manifest, executables: BTreeMap::new(), executions: 0 })
     }
 
     /// Engine for tests/examples: looks for artifacts relative to the

@@ -360,6 +360,7 @@ pub fn run_live_with(
     for mut comm in comms.drain(1..) {
         let corpus = Arc::clone(&serve);
         let factory = Arc::clone(&factory);
+        // solana-lint: allow(join-reduce, reason = "live-mode workers return integer item counts over the tunnel; no cross-thread float accumulation happens at this join")
         handles.push(std::thread::spawn(move || {
             // Catch panics too: an unreported worker death would leave
             // the coordinator polling forever (rank 0 can never see a
@@ -382,6 +383,7 @@ pub fn run_live_with(
             res
         }));
     }
+    // solana-lint: allow(no-unwrap, reason = "mpi::group(workers + 1) returned exactly workers + 1 comms and drain(1..) left rank 0")
     let mut c0 = comms.pop().unwrap();
 
     c0.bcast(tag::WEIGHTS, &mpi::encode_f32s(&weights))
@@ -389,6 +391,7 @@ pub fn run_live_with(
 
     // Pull/ack dispatch loop.
     let event_driven = cfg.dispatch == DispatchMode::EventDriven;
+    // solana-lint: allow(wall-clock, reason = "live mode runs on real threads against the host clock; this is the sanctioned non-simulated path")
     let t0 = Instant::now();
     let mut next = 0usize;
     let mut done = vec![false; cfg.items];
@@ -480,8 +483,11 @@ pub fn run_live_with(
     for dst in 1..=cfg.workers {
         let _ = c0.send(dst, tag::SHUTDOWN, Vec::new());
     }
-    let worker_results: Vec<anyhow::Result<usize>> =
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
+    let worker_results: Vec<anyhow::Result<usize>> = handles
+        .into_iter()
+        // solana-lint: allow(no-unwrap, reason = "worker bodies catch_unwind their own panics into Err results; a panicking join here means the catch itself is broken")
+        .map(|h| h.join().expect("worker panicked"))
+        .collect();
     // The coordinator's own error wins (it names the failing rank when a
     // worker reported in); otherwise surface the first worker error.
     protocol_result?;

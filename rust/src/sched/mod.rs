@@ -326,6 +326,7 @@ impl AckGroups {
     fn schedule(self, q: &mut EventQueue<Ev>, dispatched: f64) {
         for (t, mut g) in self.groups {
             if g.len() == 1 {
+                // solana-lint: allow(no-unwrap, reason = "guarded by the g.len() == 1 check on the previous line")
                 let (drive, items) = g.pop().expect("non-empty group");
                 q.schedule_at(t, Ev::CsdAck { drive, items, dispatched });
             } else {

@@ -42,7 +42,7 @@
 //! re-arms just like one that got a real response.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BTreeMap, BinaryHeap};
 
 use crate::cluster::fleet::FleetConfig;
 use crate::faults::{FaultPlan, LinkOutcome};
@@ -437,7 +437,10 @@ pub fn serve_fleet(
     // deadline-aware automatic timeout base.
     let floors: Vec<f64> =
         specs.iter().map(|s| s.sched.wakeup_secs + tcfg.batch_timeout_s).collect();
-    let mut tracker: HashMap<u64, Track> = HashMap::new();
+    // BTreeMap, not HashMap: the end-of-run sweep iterates this map,
+    // and a failed-request *set* must resolve in request-id order so
+    // no hasher state can ever reach the report (lint rule D1).
+    let mut tracker: BTreeMap<u64, Track> = BTreeMap::new();
     let mut wheel: BinaryHeap<Reverse<Deadline>> = BinaryHeap::new();
     let mut missed_acks: Vec<u32> = vec![0; fcfg.servers];
     let mut failed = 0u64;
@@ -475,7 +478,9 @@ pub fn serve_fleet(
             break;
         }
         if a <= e && a <= w {
-            let req = gen.pop().expect("peeked arrival");
+            let Some(req) = gen.pop() else {
+                anyhow::bail!("arrival stream drained between peek and pop");
+            };
             arrived += 1;
             let s = balancer.pick();
             first_arrival = first_arrival.min(a);
@@ -547,7 +552,9 @@ pub fn serve_fleet(
                 }
             }
         } else if e <= w {
-            let (_, i) = te.expect("engine event peeked");
+            let Some((_, i)) = te else {
+                anyhow::bail!("engine event vanished between peek and step");
+            };
             engines[i].step()?;
             let comps = engines[i].take_completions();
             if comps.is_empty() {
@@ -593,7 +600,9 @@ pub fn serve_fleet(
             for c in &comps {
                 debug_assert_eq!(c.done.to_bits(), batch_done.to_bits());
                 if tracking {
-                    let tr = tracker.get_mut(&c.id).expect("completion for untracked request");
+                    let tr = tracker
+                        .get_mut(&c.id)
+                        .ok_or_else(|| anyhow::anyhow!("completion for untracked request {}", c.id))?;
                     if tr.done {
                         // First response won already (hedge/retry
                         // race, or a post-failure straggler).
@@ -630,9 +639,13 @@ pub fn serve_fleet(
             }
             last_done = last_done.max(delivered);
         } else {
-            let Reverse(dl) = wheel.pop().expect("peeked deadline");
+            let Some(Reverse(dl)) = wheel.pop() else {
+                anyhow::bail!("timer wheel drained between peek and pop");
+            };
             let now = dl.t;
-            let tr = tracker.get_mut(&dl.id).expect("deadline for untracked request");
+            let tr = tracker
+                .get_mut(&dl.id)
+                .ok_or_else(|| anyhow::anyhow!("deadline for untracked request {}", dl.id))?;
             if tr.done {
                 // Stale deadline for a resolved request: ignored with
                 // zero side effects — the property that keeps healthy

@@ -431,7 +431,9 @@ impl<'a> ServeEngine<'a> {
         };
         let tf = self.flush_at.unwrap_or(f64::INFINITY);
         if tq <= tw && tq <= tf {
-            let (now, ev) = self.q.pop().expect("peeked event");
+            let Some((now, ev)) = self.q.pop() else {
+                anyhow::bail!("event queue drained between peek and pop");
+            };
             match ev {
                 Ev::HostDone { items, dispatched } => {
                     self.st.host_done(now, items, dispatched, &mut self.metrics);
@@ -518,7 +520,10 @@ impl<'a> ServeEngine<'a> {
         } else {
             // Formation timeout (event-driven): the oldest queued
             // request has waited long enough — force the batch out.
-            let now = self.flush_at.take().expect("flush deadline");
+            let now = self
+                .flush_at
+                .take()
+                .ok_or_else(|| anyhow::anyhow!("flush fired with no armed deadline"))?;
             self.try_dispatch(now, true)?;
         }
         Ok(())
@@ -565,12 +570,12 @@ impl<'a> ServeEngine<'a> {
         if (host_ready || csd_ready) && (force || self.gate_open(now)) {
             self.prev_remaining.copy_from_slice(&self.st.shard_remaining);
             self.st.dispatch_host(now, &mut self.q)?;
-            self.collect_taken(true);
+            self.collect_taken(true)?;
             self.wrap_offsets();
 
             self.prev_remaining.copy_from_slice(&self.st.shard_remaining);
             self.st.dispatch_csds(now, &mut self.q, false)?;
-            self.collect_taken(false);
+            self.collect_taken(false)?;
             self.wrap_offsets();
         }
         // Re-arm the formation timeout: in event-driven mode a closed
@@ -585,11 +590,13 @@ impl<'a> ServeEngine<'a> {
 
     /// Diff shard occupancy around a dispatch call and move the consumed
     /// requests (FIFO per drive) into the matching in-flight set.
-    fn collect_taken(&mut self, host: bool) {
+    fn collect_taken(&mut self, host: bool) -> anyhow::Result<()> {
         for d in 0..self.st.cfg.drives {
             let taken = self.prev_remaining[d] - self.st.shard_remaining[d];
             for _ in 0..taken {
-                let r = self.pending[d].pop_front().expect("dispatch consumed a queued request");
+                let r = self.pending[d].pop_front().ok_or_else(|| {
+                    anyhow::anyhow!("dispatch consumed {taken} from shard {d} but its FIFO ran dry")
+                })?;
                 if host {
                     self.host_inflight.push(r);
                 } else {
@@ -599,6 +606,7 @@ impl<'a> ServeEngine<'a> {
             self.queued -= taken;
             self.inflight += taken;
         }
+        Ok(())
     }
 
     /// Wrap read cursors so the next dispatch's largest possible read

@@ -53,6 +53,20 @@ impl std::hash::Hasher for FastHasher {
 pub type FastMap<K, V> =
     std::collections::HashMap<K, V, std::hash::BuildHasherDefault<FastHasher>>;
 
+/// Deterministic-iteration escape hatch for hash maps (lint rule D1
+/// `hash-iter`): collect the entries and sort by key before anything
+/// order-sensitive can observe them. Generic over the hasher, so it
+/// serves both std `HashMap` and [`FastMap`]. Keyed lookup on a hash
+/// map stays free; *iteration* goes through here (or a `BTreeMap`).
+pub fn sorted_pairs<'a, K: Ord, V, S: std::hash::BuildHasher>(
+    m: &'a std::collections::HashMap<K, V, S>,
+) -> Vec<(&'a K, &'a V)> {
+    // solana-lint: allow(hash-iter, reason = "the one sanctioned hash-map iteration: entries are sorted by key before any order-sensitive code can observe them")
+    let mut v: Vec<(&'a K, &'a V)> = m.iter().collect();
+    v.sort_by(|a, b| a.0.cmp(b.0));
+    v
+}
+
 /// Format a byte count as a human-readable string (binary units).
 pub fn human_bytes(bytes: u64) -> String {
     const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
@@ -117,6 +131,20 @@ mod tests {
         assert!(human_secs(0.002).ends_with("ms"));
         assert!(human_secs(3.0).ends_with("s"));
         assert!(human_secs(600.0).ends_with("min"));
+    }
+
+    #[test]
+    fn sorted_pairs_is_key_ordered_for_any_hasher() {
+        let mut std_map = std::collections::HashMap::new();
+        let mut fast_map: FastMap<u64, &str> = FastMap::default();
+        for (k, v) in [(9u64, "i"), (2, "b"), (7, "g"), (4, "d")] {
+            std_map.insert(k, v);
+            fast_map.insert(k, v);
+        }
+        let keys: Vec<u64> = sorted_pairs(&std_map).iter().map(|(k, _)| **k).collect();
+        assert_eq!(keys, [2, 4, 7, 9]);
+        let fast_keys: Vec<u64> = sorted_pairs(&fast_map).iter().map(|(k, _)| **k).collect();
+        assert_eq!(fast_keys, keys);
     }
 
     #[test]

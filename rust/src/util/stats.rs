@@ -44,6 +44,7 @@ impl Summary {
         let mean = sorted.iter().sum::<f64>() / count as f64;
         let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
             / count as f64;
+        // solana-lint: allow(no-unwrap, reason = "Summary::of returned None on empty input above, so sorted has at least one sample")
         let pct = |p: f64| percentile_sorted(&sorted, p).expect("non-empty");
         Some(Summary {
             count,

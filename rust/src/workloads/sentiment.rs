@@ -67,9 +67,16 @@ impl SentimentApp {
                     &[x.clone(), y.clone(), w, b, lr.clone()],
                 )?;
                 let mut it = out.into_iter();
-                w = it.next().unwrap();
-                b = it.next().unwrap();
-                losses.push(it.next().unwrap().data[0]);
+                match (it.next(), it.next(), it.next()) {
+                    (Some(new_w), Some(new_b), Some(loss)) => {
+                        w = new_w;
+                        b = new_b;
+                        losses.push(loss.data[0]);
+                    }
+                    _ => anyhow::bail!(
+                        "sentiment_train_step returned fewer than 3 outputs (w, b, loss)"
+                    ),
+                }
             }
         }
         Ok((

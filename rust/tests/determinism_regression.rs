@@ -1,0 +1,101 @@
+//! Bit-identity regression tests for the ISSUE-7 hash-iteration fixes.
+//!
+//! The D1 (`hash-iter`) burn-down replaced hash-map iteration on hot
+//! determinism-sensitive paths with key-ordered structures:
+//!
+//! * the fleet balancer's in-flight request `tracker` (hedge candidate
+//!   scans iterate it) is now a `BTreeMap`,
+//! * `Ftl::check_invariants` walks `sorted_pairs` of its maps,
+//! * the runtime's executable cache is a `BTreeMap`.
+//!
+//! These tests pin the property those changes protect: a resilient,
+//! faulted fleet serve — retries, hedging, crash/rejoin, link chaos,
+//! i.e. every path that iterates the tracker — is bit-identical across
+//! back-to-back runs, and conserves every offered request. They are
+//! deliberately free of pinned absolute values: bit-identity is
+//! *within* a binary, so the assertions survive toolchain bumps.
+
+use solana_isp::cluster::fleet::{FleetConfig, FleetShape};
+use solana_isp::faults::FaultsConfig;
+use solana_isp::metrics::Metrics;
+use solana_isp::power::PowerModel;
+use solana_isp::traffic::{serve_fleet, LbPolicy, ServeReport, TrafficConfig};
+use solana_isp::workloads::App;
+
+fn serve(app: App, fcfg: &FleetConfig, tcfg: &TrafficConfig) -> ServeReport {
+    let mut m = Metrics::new();
+    serve_fleet(app, fcfg, tcfg, &PowerModel::default(), &mut m).expect("serve_fleet")
+}
+
+/// The tracker-heavy configuration: hedging scans every tracked
+/// request, retries re-enter the tracker, and a crash/rejoin forces
+/// failover re-dispatch — all while drive and link faults reorder
+/// completions.
+fn resilient_config(servers: usize) -> (FleetConfig, TrafficConfig) {
+    let fcfg = FleetConfig {
+        servers,
+        shape: FleetShape::Mixed,
+        replicas: 1,
+        ..FleetConfig::default()
+    };
+    let faults = FaultsConfig {
+        seed: 0xD15EA5E,
+        ack_loss: 0.08,
+        stall: 0.08,
+        stall_s: 0.02,
+        link_drop: 0.05,
+        link_dup: 0.05,
+        server_crash_at: Some(0.35),
+        crash_server: 1,
+        rejoin_s: Some(0.5),
+        ..FaultsConfig::default()
+    };
+    let tcfg = TrafficConfig {
+        load: 0.7,
+        requests: 500,
+        policy: LbPolicy::LeastWork,
+        retries: 2,
+        hedge: true,
+        faults: Some(faults),
+        ..TrafficConfig::default()
+    };
+    (fcfg, tcfg)
+}
+
+#[test]
+fn resilient_faulted_serve_is_bit_identical_across_runs() {
+    for app in [App::SpeechToText, App::Sentiment] {
+        let (fcfg, tcfg) = resilient_config(3);
+        let a = serve(app, &fcfg, &tcfg);
+        let b = serve(app, &fcfg, &tcfg);
+        a.check_bit_identical(&b)
+            .unwrap_or_else(|e| panic!("{app:?}: tracker iteration leaked nondeterminism: {e}"));
+        assert_eq!(
+            a.served + a.failed + a.shed,
+            a.requests,
+            "{app:?}: offered == accepted + shed conservation"
+        );
+    }
+}
+
+#[test]
+fn hedge_scan_order_is_stable_across_policies() {
+    // The hedge candidate scan is the one site that *iterates* the
+    // tracker; run it under every balancer policy so a future
+    // policy-specific iteration shortcut can't silently reintroduce
+    // hash-order dependence.
+    for policy in [
+        LbPolicy::RoundRobin,
+        LbPolicy::WeightedCapacity,
+        LbPolicy::JoinShortestQueue,
+        LbPolicy::LeastWork,
+    ] {
+        let (fcfg, mut tcfg) = resilient_config(3);
+        tcfg.policy = policy;
+        tcfg.requests = 300;
+        let a = serve(App::Recommender, &fcfg, &tcfg);
+        let b = serve(App::Recommender, &fcfg, &tcfg);
+        a.check_bit_identical(&b)
+            .unwrap_or_else(|e| panic!("{policy:?}: {e}"));
+    }
+}

@@ -1,0 +1,340 @@
+//! A deliberately small Rust lexer: just enough token structure for the
+//! D1–D6 rules (identifiers, literals, punctuation, comments with line
+//! numbers). Not a parser — rules pattern-match token sequences.
+
+/// Token kind. Strings/chars/lifetimes are kept distinct so rules can
+/// skip literal content without re-scanning it.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kind {
+    Ident,
+    Num,
+    Str,
+    Chr,
+    Life,
+    Punct,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// A comment (line or block), with the line its first character is on.
+/// Comments never enter the token stream; markers are parsed from here.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+struct Cursor {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Cursor {
+    fn starts(&self, pat: &str) -> bool {
+        let mut j = self.i;
+        for p in pat.chars() {
+            if j >= self.chars.len() || self.chars[j] != p {
+                return false;
+            }
+            j += 1;
+        }
+        true
+    }
+
+    fn at(&self, off: usize) -> Option<char> {
+        self.chars.get(self.i + off).copied()
+    }
+
+    fn text(&self, from: usize, to: usize) -> String {
+        self.chars[from..to.min(self.chars.len())].iter().collect()
+    }
+
+    /// Advance `k` characters, tracking line/col.
+    fn adv(&mut self, k: usize) {
+        for _ in 0..k {
+            if self.i < self.chars.len() && self.chars[self.i] == '\n' {
+                self.line += 1;
+                self.col = 1;
+            } else {
+                self.col += 1;
+            }
+            self.i += 1;
+        }
+    }
+}
+
+/// Tokenize `src`, returning `(tokens, comments)`.
+pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut cur = Cursor {
+        chars: src.chars().collect(),
+        i: 0,
+        line: 1,
+        col: 1,
+    };
+    let n = cur.chars.len();
+
+    while cur.i < n {
+        let c = cur.chars[cur.i];
+        if c == ' ' || c == '\t' || c == '\r' || c == '\n' {
+            cur.adv(1);
+            continue;
+        }
+        // Line comment.
+        if cur.starts("//") {
+            let mut j = cur.i;
+            while j < n && cur.chars[j] != '\n' {
+                j += 1;
+            }
+            comments.push(Comment {
+                line: cur.line,
+                text: cur.text(cur.i, j),
+            });
+            let k = j - cur.i;
+            cur.adv(k);
+            continue;
+        }
+        // Block comment (nested).
+        if cur.starts("/*") {
+            let mut depth = 1usize;
+            let mut j = cur.i + 2;
+            while j < n && depth > 0 {
+                if cur.chars[j] == '/' && j + 1 < n && cur.chars[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if cur.chars[j] == '*' && j + 1 < n && cur.chars[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            comments.push(Comment {
+                line: cur.line,
+                text: cur.text(cur.i, j),
+            });
+            let k = j - cur.i;
+            cur.adv(k);
+            continue;
+        }
+        // Raw strings r"..." / r#"..."# / br#"..."#.
+        if let Some(len) = raw_string_len(&cur) {
+            let (line, col) = (cur.line, cur.col);
+            let text = cur.text(cur.i, cur.i + len);
+            toks.push(Tok {
+                kind: Kind::Str,
+                text,
+                line,
+                col,
+            });
+            cur.adv(len);
+            continue;
+        }
+        // Plain / byte strings.
+        if c == '"' || cur.starts("b\"") {
+            let start = cur.i;
+            let mut j = cur.i + if cur.starts("b\"") { 2 } else { 1 };
+            while j < n {
+                if cur.chars[j] == '\\' {
+                    j += 2;
+                } else if cur.chars[j] == '"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            let (line, col) = (cur.line, cur.col);
+            let text = cur.text(start, j);
+            toks.push(Tok {
+                kind: Kind::Str,
+                text,
+                line,
+                col,
+            });
+            cur.adv(j - start);
+            continue;
+        }
+        // Lifetime or char literal.
+        if c == '\'' {
+            if let Some((kind, len)) = tick_token(&cur) {
+                let (line, col) = (cur.line, cur.col);
+                let text = cur.text(cur.i, cur.i + len);
+                toks.push(Tok {
+                    kind,
+                    text,
+                    line,
+                    col,
+                });
+                cur.adv(len);
+            } else {
+                cur.adv(1);
+            }
+            continue;
+        }
+        // Identifier / keyword.
+        if is_ident_start(c) {
+            let mut j = cur.i + 1;
+            while j < n && is_ident_cont(cur.chars[j]) {
+                j += 1;
+            }
+            let (line, col) = (cur.line, cur.col);
+            let text = cur.text(cur.i, j);
+            let k = j - cur.i;
+            toks.push(Tok {
+                kind: Kind::Ident,
+                text,
+                line,
+                col,
+            });
+            cur.adv(k);
+            continue;
+        }
+        // Number (loose: digits then [0-9A-Za-z_.]*, trailing dots trimmed
+        // so `0..n` ranges don't swallow the second bound).
+        if c.is_ascii_digit() {
+            let mut j = cur.i + 1;
+            while j < n
+                && (cur.chars[j].is_ascii_alphanumeric()
+                    || cur.chars[j] == '_'
+                    || cur.chars[j] == '.')
+            {
+                j += 1;
+            }
+            let mut text = cur.text(cur.i, j);
+            while text.ends_with('.') {
+                text.pop();
+            }
+            let k = text.chars().count();
+            let (line, col) = (cur.line, cur.col);
+            toks.push(Tok {
+                kind: Kind::Num,
+                text,
+                line,
+                col,
+            });
+            cur.adv(k);
+            continue;
+        }
+        // Anything else: single-char punctuation.
+        let (line, col) = (cur.line, cur.col);
+        toks.push(Tok {
+            kind: Kind::Punct,
+            text: c.to_string(),
+            line,
+            col,
+        });
+        cur.adv(1);
+    }
+    (toks, comments)
+}
+
+/// Length of a raw/byte-raw string starting at the cursor, if any.
+fn raw_string_len(cur: &Cursor) -> Option<usize> {
+    let n = cur.chars.len();
+    let mut j = cur.i;
+    if cur.at(j - cur.i) == Some('b') {
+        j += 1;
+    }
+    if cur.chars.get(j).copied() != Some('r') {
+        return None;
+    }
+    j += 1;
+    let hash_start = j;
+    while j < n && cur.chars[j] == '#' {
+        j += 1;
+    }
+    let hashes = j - hash_start;
+    if cur.chars.get(j).copied() != Some('"') {
+        return None;
+    }
+    j += 1;
+    // Find closing `"` followed by the same number of hashes.
+    while j < n {
+        if cur.chars[j] == '"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while k < n && seen < hashes && cur.chars[k] == '#' {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return Some(k - cur.i);
+            }
+        }
+        j += 1;
+    }
+    Some(n - cur.i)
+}
+
+/// Classify a `'`-led token as a lifetime or a char literal.
+fn tick_token(cur: &Cursor) -> Option<(Kind, usize)> {
+    let n = cur.chars.len();
+    let next = cur.at(1)?;
+    if is_ident_start(next) {
+        let mut j = cur.i + 2;
+        while j < n && is_ident_cont(cur.chars[j]) {
+            j += 1;
+        }
+        if cur.chars.get(j).copied() != Some('\'') {
+            // `'a` in `&'a T` — a lifetime.
+            return Some((Kind::Life, j - cur.i));
+        }
+        if j == cur.i + 2 {
+            // `'a'` — a one-char literal.
+            return Some((Kind::Chr, 3));
+        }
+        return None;
+    }
+    if next == '\\' {
+        // `'\n'`, `'\u{7f}'`, ... : escape then anything up to the quote.
+        let mut j = cur.i + 3;
+        while j < n && cur.chars[j] != '\'' {
+            j += 1;
+        }
+        if j < n {
+            return Some((Kind::Chr, j + 1 - cur.i));
+        }
+        return None;
+    }
+    if next != '\'' && cur.at(2) == Some('\'') {
+        return Some((Kind::Chr, 3));
+    }
+    None
+}
+
+/// Match a fixed `(kind, optional text)` sequence starting at `i`.
+pub fn match_seq(toks: &[Tok], i: usize, seq: &[(Kind, Option<&str>)]) -> bool {
+    if i + seq.len() > toks.len() {
+        return false;
+    }
+    for (k, (kind, text)) in seq.iter().enumerate() {
+        let t = &toks[i + k];
+        if t.kind != *kind {
+            return false;
+        }
+        if let Some(want) = text {
+            if t.text != *want {
+                return false;
+            }
+        }
+    }
+    true
+}

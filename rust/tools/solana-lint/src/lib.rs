@@ -1,0 +1,164 @@
+//! solana-lint: the determinism & invariant static-analysis gate for
+//! the solana-isp workspace (ISSUE-7).
+//!
+//! Every headline claim of this reproduction — bit-identity of reports,
+//! `offered == accepted + shed` conservation, quiet-fault-plan ≡
+//! no-plan — depends on conventions this tool mechanizes:
+//!
+//! * D1 `hash-iter`   — no HashMap/HashSet iteration (order reaches reports)
+//! * D2 `wall-clock`  — no `Instant::now`/`SystemTime::now` in simulator paths
+//! * D3 `rng-gate`    — RNG draws in faults/ and traffic/ gated on `rate > 0.0`
+//! * D4 `no-unwrap`   — no `unwrap()`/`expect()`/`panic!` in library code
+//! * D5 `lossy-cast`  — no lossy `as` narrowing on item/byte counters
+//! * D6 `join-reduce` — threads only via the deterministic `exp::pool`
+//!
+//! Suppress a finding with a mandatory-reason marker on the line above
+//! (or the same line):
+//!
+//! ```text
+//! // solana-lint: allow(no-unwrap, reason = "mutex poisoning is unrecoverable here")
+//! // solana-lint: allow-file(rng-gate, reason = "an arrivals stream is never quiet")
+//! ```
+//!
+//! The scanner is a hand-rolled lexer + token-pattern rules: no syn, no
+//! regex, no dependencies — consistent with the vendored-offline build.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{Finding, RULES};
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Result of scanning one file or tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub suppressed: usize,
+}
+
+/// Scan one source string as if it were the file `rel` (path-scoped
+/// rules key off `rel`'s components).
+pub fn scan_source(rel: &str, src: &str) -> Report {
+    let (toks, comments) = lexer::lex(src);
+    let regions = rules::test_regions(&toks);
+    let markers = rules::parse_markers(&comments);
+
+    let mut raw = Vec::new();
+    rules::rule_hash_iter(rel, &toks, &mut raw);
+    rules::rule_wall_clock(rel, &toks, &mut raw);
+    rules::rule_rng_gate(rel, &toks, &mut raw);
+    rules::rule_no_unwrap(rel, &toks, &regions, &mut raw);
+    rules::rule_lossy_cast(rel, &toks, &regions, &mut raw);
+    rules::rule_join_reduce(rel, &toks, &regions, &mut raw);
+
+    let mut report = Report::default();
+    for mut f in raw {
+        if markers.allows(f.rule, f.line) {
+            report.suppressed += 1;
+            continue;
+        }
+        f.file = rel.to_string();
+        report.findings.push(f);
+    }
+    for (line, msg) in markers.bad {
+        report.findings.push(Finding {
+            rule: "bad-marker",
+            file: rel.to_string(),
+            line,
+            col: 1,
+            msg,
+        });
+    }
+    report
+}
+
+/// Scan one file on disk, reporting it under the path `rel`.
+pub fn scan_file(path: &Path, rel: &str) -> io::Result<Report> {
+    let src = fs::read_to_string(path)?;
+    Ok(scan_source(rel, &src))
+}
+
+/// Scan every `.rs` file under `root` (recursively, in sorted order);
+/// findings carry paths relative to `root`.
+pub fn scan_tree(root: &Path) -> io::Result<Report> {
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    let mut report = Report::default();
+    for p in files {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let r = scan_file(&p, &rel)?;
+        report.findings.extend(r.findings);
+        report.suppressed += r.suppressed;
+    }
+    report
+        .findings
+        .sort_by(|a, b| (&a.file, a.line, a.col).cmp(&(&b.file, b.line, b.col)));
+    Ok(report)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Minimal JSON string escaping (the output schema needs nothing more).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a report as the machine-readable JSON document emitted by
+/// `solana-lint --json`.
+pub fn to_json(report: &Report) -> String {
+    let mut out = String::from("{\n  \"findings\": [");
+    for (i, f) in report.findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"col\": {}, \
+             \"message\": \"{}\"}}",
+            json_escape(f.rule),
+            json_escape(&f.file),
+            f.line,
+            f.col,
+            json_escape(&f.msg)
+        ));
+    }
+    if !report.findings.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str(&format!(
+        "],\n  \"suppressed\": {},\n  \"total\": {}\n}}\n",
+        report.suppressed,
+        report.findings.len()
+    ));
+    out
+}

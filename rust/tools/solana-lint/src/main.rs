@@ -1,0 +1,133 @@
+//! CLI for solana-lint. From the workspace root:
+//!
+//!     cargo run --release -p solana-lint -- --deny all
+//!
+//! Exit codes: 0 = no denied findings, 1 = denied findings present,
+//! 2 = usage or I/O error. Without `--deny`, findings are printed but
+//! advisory (exit 0) — except `bad-marker`, which is always denied: a
+//! broken suppression must never pass.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use solana_lint::{scan_file, scan_tree, to_json, Report, RULES};
+
+struct Opts {
+    json: bool,
+    deny_all: bool,
+    deny: Vec<String>,
+    paths: Vec<PathBuf>,
+}
+
+const USAGE: &str = "usage: solana-lint [--root DIR] [--json] [--deny all|rule,...] [PATH...]\n\
+                     rules: hash-iter wall-clock rng-gate no-unwrap lossy-cast join-reduce\n\
+                     default PATH is rust/src (run from the workspace root)";
+
+fn parse_args(args: &[String]) -> Result<Opts, String> {
+    let mut opts = Opts {
+        json: false,
+        deny_all: false,
+        deny: Vec::new(),
+        paths: Vec::new(),
+    };
+    let mut root: Option<PathBuf> = None;
+    let mut i = 0usize;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--json" => opts.json = true,
+            "--deny" => {
+                i += 1;
+                let spec = args.get(i).ok_or("--deny needs an argument")?;
+                if spec == "all" {
+                    opts.deny_all = true;
+                } else {
+                    for r in spec.split(',') {
+                        let r = r.trim();
+                        if r.is_empty() {
+                            continue;
+                        }
+                        if !RULES.contains(&r) && r != "bad-marker" {
+                            return Err(format!("unknown rule '{r}' in --deny"));
+                        }
+                        opts.deny.push(r.to_string());
+                    }
+                }
+            }
+            "--root" => {
+                i += 1;
+                root = Some(PathBuf::from(
+                    args.get(i).ok_or("--root needs an argument")?,
+                ));
+            }
+            "--help" | "-h" => return Err(String::new()),
+            p if p.starts_with('-') => return Err(format!("unknown flag '{p}'")),
+            p => opts.paths.push(PathBuf::from(p)),
+        }
+        i += 1;
+    }
+    if opts.paths.is_empty() {
+        opts.paths.push(PathBuf::from("rust/src"));
+    }
+    if let Some(root) = root {
+        opts.paths = opts.paths.iter().map(|p| root.join(p)).collect();
+    }
+    Ok(opts)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = match parse_args(&args) {
+        Ok(o) => o,
+        Err(e) => {
+            if !e.is_empty() {
+                eprintln!("solana-lint: {e}");
+            }
+            eprintln!("{USAGE}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let mut report = Report::default();
+    for p in &opts.paths {
+        let scanned = if p.is_dir() {
+            scan_tree(p)
+        } else {
+            scan_file(p, &p.to_string_lossy())
+        };
+        match scanned {
+            Ok(r) => {
+                report.findings.extend(r.findings);
+                report.suppressed += r.suppressed;
+            }
+            Err(e) => {
+                eprintln!("solana-lint: {}: {e}", p.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+    report
+        .findings
+        .sort_by(|a, b| (&a.file, a.line, a.col).cmp(&(&b.file, b.line, b.col)));
+
+    if opts.json {
+        print!("{}", to_json(&report));
+    } else {
+        for f in &report.findings {
+            println!("{}:{}:{}: [{}] {}", f.file, f.line, f.col, f.rule, f.msg);
+        }
+        eprintln!(
+            "solana-lint: {} finding(s), {} suppressed",
+            report.findings.len(),
+            report.suppressed
+        );
+    }
+
+    let denied = report.findings.iter().any(|f| {
+        f.rule == "bad-marker" || opts.deny_all || opts.deny.iter().any(|r| r == f.rule)
+    });
+    if denied {
+        ExitCode::from(1)
+    } else {
+        ExitCode::SUCCESS
+    }
+}

@@ -1,0 +1,635 @@
+//! The D1–D6 determinism rules, plus the always-on `bad-marker`
+//! meta-rule. Each rule is a token-pattern matcher; see the README
+//! "Static analysis" section for the invariant each one protects.
+
+use crate::lexer::{match_seq, Comment, Kind, Tok};
+
+/// Rule identifiers, in D1..D6 order. `bad-marker` is reported by the
+/// marker parser itself and cannot be suppressed.
+pub const RULES: [&str; 6] = [
+    "hash-iter",
+    "wall-clock",
+    "rng-gate",
+    "no-unwrap",
+    "lossy-cast",
+    "join-reduce",
+];
+
+const HASH_TYPES: [&str; 4] = ["HashMap", "HashSet", "FastMap", "FastSet"];
+const ITER_METHODS: [&str; 10] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "drain",
+    "retain",
+];
+/// The draw methods of `util::rng::Rng` (forks/constructors excluded:
+/// building a generator is fine, consuming entropy is what must be
+/// gated).
+const DRAW_METHODS: [&str; 12] = [
+    "next_u64",
+    "f64",
+    "range_f64",
+    "below",
+    "range_u64",
+    "chance",
+    "gaussian",
+    "gaussian_trunc",
+    "exponential",
+    "zipf",
+    "shuffle",
+    "choose",
+];
+/// Identifier names that mean "this is an item/byte counter" (the PR-2
+/// u64-overflow bug class rode exactly these).
+const COUNTER_WORDS: [&str; 11] = [
+    "items",
+    "bytes",
+    "len",
+    "count",
+    "counts",
+    "requests",
+    "total",
+    "remaining",
+    "offered",
+    "accepted",
+    "shed",
+];
+const NARROW_TYPES: [&str; 6] = ["u8", "u16", "u32", "i8", "i16", "i32"];
+
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub msg: String,
+}
+
+fn is_punct(t: &Tok, text: &str) -> bool {
+    t.kind == Kind::Punct && t.text == text
+}
+
+fn is_ident(t: &Tok, text: &str) -> bool {
+    t.kind == Kind::Ident && t.text == text
+}
+
+/// Line ranges `(start, end)` covered by `#[cfg(test)]` items or
+/// `#[test]` functions. D4/D5/D6 skip these; test code may unwrap.
+pub fn test_regions(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let mut regions = Vec::new();
+    let n = toks.len();
+    let mut i = 0usize;
+    let cfg_test: [(Kind, Option<&str>); 7] = [
+        (Kind::Punct, Some("#")),
+        (Kind::Punct, Some("[")),
+        (Kind::Ident, Some("cfg")),
+        (Kind::Punct, Some("(")),
+        (Kind::Ident, Some("test")),
+        (Kind::Punct, Some(")")),
+        (Kind::Punct, Some("]")),
+    ];
+    let test_attr: [(Kind, Option<&str>); 4] = [
+        (Kind::Punct, Some("#")),
+        (Kind::Punct, Some("[")),
+        (Kind::Ident, Some("test")),
+        (Kind::Punct, Some("]")),
+    ];
+    while i < n {
+        let is_cfg_test = match_seq(toks, i, &cfg_test);
+        let is_test_attr = !is_cfg_test && match_seq(toks, i, &test_attr);
+        if !(is_cfg_test || is_test_attr) {
+            i += 1;
+            continue;
+        }
+        let start_line = toks[i].line;
+        let mut j = i + if is_cfg_test { 7 } else { 4 };
+        // Skip any further attributes on the same item.
+        while j < n && is_punct(&toks[j], "#") {
+            j += 1;
+            if j < n && is_punct(&toks[j], "[") {
+                let mut depth = 1usize;
+                j += 1;
+                while j < n && depth > 0 {
+                    if is_punct(&toks[j], "[") {
+                        depth += 1;
+                    } else if is_punct(&toks[j], "]") {
+                        depth -= 1;
+                    }
+                    j += 1;
+                }
+            }
+        }
+        // Find the item's opening brace; a `;` first means no body.
+        while j < n && !(is_punct(&toks[j], "{") || is_punct(&toks[j], ";")) {
+            j += 1;
+        }
+        if j >= n || is_punct(&toks[j], ";") {
+            i = j + 1;
+            continue;
+        }
+        let mut depth = 1usize;
+        j += 1;
+        while j < n && depth > 0 {
+            if is_punct(&toks[j], "{") {
+                depth += 1;
+            } else if is_punct(&toks[j], "}") {
+                depth -= 1;
+            }
+            j += 1;
+        }
+        let end_line = if j > 0 { toks[j - 1].line } else { start_line };
+        regions.push((start_line, end_line));
+        i = j;
+    }
+    regions
+}
+
+fn in_regions(regions: &[(u32, u32)], line: u32) -> bool {
+    regions.iter().any(|&(a, b)| a <= line && line <= b)
+}
+
+/// Parsed suppression state for one file.
+pub struct Markers {
+    /// rule -> lines it is allowed on (the marker's line and the next).
+    line_allows: Vec<(&'static str, u32)>,
+    /// rules allowed file-wide via `allow-file`.
+    file_allows: Vec<&'static str>,
+    /// malformed markers: (line, message).
+    pub bad: Vec<(u32, String)>,
+}
+
+impl Markers {
+    pub fn allows(&self, rule: &str, line: u32) -> bool {
+        self.file_allows.iter().any(|r| *r == rule)
+            || self
+                .line_allows
+                .iter()
+                .any(|(r, l)| *r == rule && (*l == line || *l + 1 == line))
+    }
+}
+
+/// Parse `// solana-lint: allow(<rule>, reason = "...")` markers out of
+/// the comment list. Anything that mentions `solana-lint:` but does not
+/// parse — or names an unknown rule, or omits the reason — is reported
+/// as `bad-marker` (unsuppressable: a broken suppression must never
+/// silently widen the net).
+pub fn parse_markers(comments: &[Comment]) -> Markers {
+    let mut m = Markers {
+        line_allows: Vec::new(),
+        file_allows: Vec::new(),
+        bad: Vec::new(),
+    };
+    for c in comments {
+        if !c.text.contains("solana-lint:") {
+            continue;
+        }
+        match parse_marker_text(&c.text) {
+            None => m
+                .bad
+                .push((c.line, "unparseable solana-lint marker".to_string())),
+            Some((file_wide, rule, reason)) => {
+                let Some(known) = RULES.iter().find(|r| **r == rule) else {
+                    m.bad
+                        .push((c.line, format!("marker names unknown rule '{rule}'")));
+                    continue;
+                };
+                match reason {
+                    Some(r) if !r.trim().is_empty() => {
+                        if file_wide {
+                            m.file_allows.push(known);
+                        } else {
+                            m.line_allows.push((known, c.line));
+                        }
+                    }
+                    _ => m
+                        .bad
+                        .push((c.line, format!("marker for '{rule}' is missing a reason"))),
+                }
+            }
+        }
+    }
+    m
+}
+
+/// Try to parse a marker anywhere in `text`. Returns
+/// `(is_allow_file, rule, reason)` for the first occurrence of
+/// `solana-lint:` that parses; `None` if none does.
+fn parse_marker_text(text: &str) -> Option<(bool, String, Option<String>)> {
+    let needle = "solana-lint:";
+    let mut from = 0usize;
+    while let Some(pos) = text[from..].find(needle) {
+        let start = from + pos + needle.len();
+        if let Some(parsed) = parse_marker_at(&text[start..]) {
+            return Some(parsed);
+        }
+        from = start;
+    }
+    None
+}
+
+fn parse_marker_at(s: &str) -> Option<(bool, String, Option<String>)> {
+    let mut rest = s.trim_start();
+    let file_wide = if let Some(r) = rest.strip_prefix("allow-file") {
+        rest = r;
+        true
+    } else if let Some(r) = rest.strip_prefix("allow") {
+        rest = r;
+        false
+    } else {
+        return None;
+    };
+    rest = rest.strip_prefix('(')?.trim_start();
+    let rule_len = rest
+        .find(|c: char| !(c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-'))
+        .unwrap_or(rest.len());
+    if rule_len == 0 {
+        return None;
+    }
+    let rule = rest[..rule_len].to_string();
+    rest = rest[rule_len..].trim_start();
+    let mut reason = None;
+    if let Some(r) = rest.strip_prefix(',') {
+        rest = r.trim_start().strip_prefix("reason")?.trim_start();
+        rest = rest.strip_prefix('=')?.trim_start();
+        rest = rest.strip_prefix('"')?;
+        let end = rest.find('"')?;
+        reason = Some(rest[..end].to_string());
+        rest = rest[end + 1..].trim_start();
+    }
+    rest.strip_prefix(')')?;
+    Some((file_wide, rule, reason))
+}
+
+/// Names declared (by `name: HashType<..>` or `name = HashType::..`)
+/// as hash-backed collections in this file.
+fn hash_names(toks: &[Tok]) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    let n = toks.len();
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Ident || !HASH_TYPES.contains(&t.text.as_str()) {
+            continue;
+        }
+        // Scan back for `name :` or `name =` within the statement.
+        let mut j = i.saturating_sub(1);
+        let mut guard = 0usize;
+        while j > 0 && guard < 64 {
+            guard += 1;
+            let tj = &toks[j];
+            if tj.kind == Kind::Punct && (tj.text == ";" || tj.text == "{" || tj.text == "}") {
+                break;
+            }
+            if tj.kind == Kind::Punct
+                && (tj.text == ":" || tj.text == "=")
+                && toks[j - 1].kind == Kind::Ident
+            {
+                // Skip `::` path segments like std::collections::HashMap.
+                if tj.text == ":" && j + 1 < n && is_punct(&toks[j + 1], ":") {
+                    j -= 1;
+                    continue;
+                }
+                let name = toks[j - 1].text.clone();
+                if !names.contains(&name) {
+                    names.push(name);
+                }
+                break;
+            }
+            j -= 1;
+        }
+    }
+    names
+}
+
+/// The identifier a method call is invoked on: the token before the
+/// `.` at `dot_i`, skipping one `(...)`-closed call group.
+fn receiver_name(toks: &[Tok], dot_i: usize) -> Option<String> {
+    let mut j = dot_i.checked_sub(1)?;
+    if is_punct(&toks[j], ")") {
+        let mut depth = 1usize;
+        loop {
+            j = j.checked_sub(1)?;
+            if is_punct(&toks[j], ")") {
+                depth += 1;
+            } else if is_punct(&toks[j], "(") {
+                depth -= 1;
+                if depth == 0 {
+                    j = j.checked_sub(1)?;
+                    break;
+                }
+            }
+        }
+    }
+    if toks[j].kind == Kind::Ident {
+        Some(toks[j].text.clone())
+    } else {
+        None
+    }
+}
+
+fn path_components(path: &str) -> Vec<&str> {
+    path.split(['/', '\\']).collect()
+}
+
+/// D1: no iteration over hash-backed collections. Keyed lookup is
+/// fine; iteration order is nondeterministic and reaches reports.
+pub fn rule_hash_iter(_path: &str, toks: &[Tok], findings: &mut Vec<Finding>) {
+    let names = hash_names(toks);
+    let n = toks.len();
+    for i in 0..n {
+        let t = &toks[i];
+        if is_punct(t, ".") && i + 1 < n {
+            let m = &toks[i + 1];
+            if m.kind == Kind::Ident && ITER_METHODS.contains(&m.text.as_str()) {
+                if let Some(recv) = receiver_name(toks, i) {
+                    if names.contains(&recv) {
+                        findings.push(Finding {
+                            rule: "hash-iter",
+                            file: String::new(),
+                            line: m.line,
+                            col: m.col,
+                            msg: format!(
+                                "iteration over hash collection `{recv}.{}()` — order is \
+                                 nondeterministic; use BTreeMap/BTreeSet or util::sorted_* \
+                                 (keyed lookup is fine)",
+                                m.text
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        if is_ident(t, "for") {
+            // `for PAT in [&][mut][self.]NAME {`
+            let mut j = i + 1;
+            let mut depth = 0i32;
+            let mut guard = 0usize;
+            let mut found_in = false;
+            while j < n && guard < 64 {
+                guard += 1;
+                if is_ident(&toks[j], "in") && depth == 0 {
+                    found_in = true;
+                    break;
+                }
+                if toks[j].kind == Kind::Punct {
+                    if toks[j].text == "(" || toks[j].text == "[" {
+                        depth += 1;
+                    } else if toks[j].text == ")" || toks[j].text == "]" {
+                        depth -= 1;
+                    }
+                }
+                j += 1;
+            }
+            if !found_in {
+                continue;
+            }
+            let mut k = j + 1;
+            while k < n
+                && (is_punct(&toks[k], "&")
+                    || is_ident(&toks[k], "mut")
+                    || is_ident(&toks[k], "self")
+                    || is_punct(&toks[k], "."))
+            {
+                k += 1;
+            }
+            if k + 1 < n
+                && toks[k].kind == Kind::Ident
+                && names.contains(&toks[k].text)
+                && is_punct(&toks[k + 1], "{")
+            {
+                findings.push(Finding {
+                    rule: "hash-iter",
+                    file: String::new(),
+                    line: toks[k].line,
+                    col: toks[k].col,
+                    msg: format!(
+                        "for-loop over hash collection `{}` — order is nondeterministic; \
+                         use BTreeMap/BTreeSet or util::sorted_* (keyed lookup is fine)",
+                        toks[k].text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// D2: no wall-clock reads. The simulator runs on virtual time;
+/// sanctioned real-time sites (`sched::live`, `bench_support`) carry
+/// explicit allow markers instead of a path exemption, so every
+/// wall-clock read in the tree is visibly justified.
+pub fn rule_wall_clock(_path: &str, toks: &[Tok], findings: &mut Vec<Finding>) {
+    let now_seq: [(Kind, Option<&str>); 3] = [
+        (Kind::Punct, Some(":")),
+        (Kind::Punct, Some(":")),
+        (Kind::Ident, Some("now")),
+    ];
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind == Kind::Ident
+            && (t.text == "Instant" || t.text == "SystemTime")
+            && match_seq(toks, i + 1, &now_seq)
+        {
+            findings.push(Finding {
+                rule: "wall-clock",
+                file: String::new(),
+                line: t.line,
+                col: t.col,
+                msg: format!(
+                    "wall-clock read `{}::now()` — virtual time only in simulator paths; \
+                     real-time call sites need an allow marker",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+/// D3: inside `faults/` and `traffic/`, every RNG draw must be
+/// dominated by a `rate > 0.0`-style guard (a quiet plan must never
+/// touch the RNG — PR 6's quiet-plan ≡ no-plan bit-identity contract).
+pub fn rule_rng_gate(path: &str, toks: &[Tok], findings: &mut Vec<Finding>) {
+    let parts = path_components(path);
+    if !parts.contains(&"faults") && !parts.contains(&"traffic") {
+        return;
+    }
+    let n = toks.len();
+    // Each `{` pushes whether its opening condition carried a `> <num>`
+    // comparison; a draw is guarded if any enclosing block (or the
+    // condition currently being scanned) did.
+    let mut stack: Vec<bool> = Vec::new();
+    let mut pending: Option<bool> = None;
+    let mut i = 0usize;
+    while i < n {
+        let t = &toks[i];
+        if (is_ident(t, "if") || is_ident(t, "while")) && pending.is_none() {
+            pending = Some(false);
+        } else if is_punct(t, "{") {
+            stack.push(pending.take().unwrap_or(false));
+        } else if is_punct(t, "}") {
+            stack.pop();
+        } else if pending.is_some() && is_punct(t, ">") {
+            if i + 1 < n && toks[i + 1].kind == Kind::Num {
+                pending = Some(true);
+            }
+        }
+        if is_punct(t, ".") && i + 2 < n {
+            let m = &toks[i + 1];
+            if m.kind == Kind::Ident
+                && DRAW_METHODS.contains(&m.text.as_str())
+                && is_punct(&toks[i + 2], "(")
+            {
+                if let Some(recv) = receiver_name(toks, i) {
+                    if recv.to_ascii_lowercase().contains("rng") {
+                        let guarded =
+                            stack.iter().any(|g| *g) || matches!(pending, Some(true));
+                        if !guarded {
+                            findings.push(Finding {
+                                rule: "rng-gate",
+                                file: String::new(),
+                                line: m.line,
+                                col: m.col,
+                                msg: format!(
+                                    "RNG draw `{recv}.{}()` not dominated by a `rate > 0.0`-style \
+                                     guard — quiet fault/traffic plans must never touch the RNG",
+                                    m.text
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+/// D4: no `unwrap()`/`expect()`/`panic!` in non-test library code.
+pub fn rule_no_unwrap(
+    _path: &str,
+    toks: &[Tok],
+    regions: &[(u32, u32)],
+    findings: &mut Vec<Finding>,
+) {
+    let n = toks.len();
+    for i in 0..n {
+        let t = &toks[i];
+        if in_regions(regions, t.line) {
+            continue;
+        }
+        if is_punct(t, ".") && i + 2 < n {
+            let m = &toks[i + 1];
+            if m.kind == Kind::Ident
+                && (m.text == "unwrap" || m.text == "expect")
+                && toks[i + 2].text == "("
+            {
+                findings.push(Finding {
+                    rule: "no-unwrap",
+                    file: String::new(),
+                    line: m.line,
+                    col: m.col,
+                    msg: format!(
+                        "`.{}()` in non-test library code — return anyhow::Error (or mark \
+                         genuinely-infallible sites with an allow marker and a reason)",
+                        m.text
+                    ),
+                });
+            }
+        }
+        if is_ident(t, "panic") && i + 1 < n && is_punct(&toks[i + 1], "!") {
+            findings.push(Finding {
+                rule: "no-unwrap",
+                file: String::new(),
+                line: t.line,
+                col: t.col,
+                msg: "`panic!` in non-test library code — return anyhow::Error".to_string(),
+            });
+        }
+    }
+}
+
+/// D5: no lossy `as` narrowing casts on item/byte counters (the PR-2
+/// u64-overflow class: `items as u32` truncates past ~2^32 items).
+pub fn rule_lossy_cast(
+    _path: &str,
+    toks: &[Tok],
+    regions: &[(u32, u32)],
+    findings: &mut Vec<Finding>,
+) {
+    let n = toks.len();
+    for i in 0..n {
+        let t = &toks[i];
+        if !is_ident(t, "as") || i + 1 >= n {
+            continue;
+        }
+        if in_regions(regions, t.line) {
+            continue;
+        }
+        let ty = &toks[i + 1];
+        if ty.kind != Kind::Ident || !NARROW_TYPES.contains(&ty.text.as_str()) {
+            continue;
+        }
+        if let Some(recv) = receiver_name(toks, i) {
+            if COUNTER_WORDS.contains(&recv.as_str()) {
+                findings.push(Finding {
+                    rule: "lossy-cast",
+                    file: String::new(),
+                    line: t.line,
+                    col: t.col,
+                    msg: format!(
+                        "lossy narrowing `{recv} as {}` on an item/byte counter — the PR-2 \
+                         u64-overflow class; widen or bounds-check first",
+                        ty.text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// D6: threads may only be spawned by the deterministic `exp::pool`
+/// reduction (float accumulation order across joins must be fixed).
+pub fn rule_join_reduce(
+    path: &str,
+    toks: &[Tok],
+    regions: &[(u32, u32)],
+    findings: &mut Vec<Finding>,
+) {
+    let parts = path_components(path);
+    if parts.len() >= 2 && parts[parts.len() - 2] == "exp" && parts[parts.len() - 1] == "pool.rs" {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if in_regions(regions, t.line) {
+            continue;
+        }
+        if is_ident(t, "thread")
+            && match_seq(
+                toks,
+                i + 1,
+                &[
+                    (Kind::Punct, Some(":")),
+                    (Kind::Punct, Some(":")),
+                    (Kind::Ident, None),
+                ],
+            )
+        {
+            let what = &toks[i + 3].text;
+            if what == "spawn" || what == "scope" || what == "Builder" {
+                findings.push(Finding {
+                    rule: "join-reduce",
+                    file: String::new(),
+                    line: t.line,
+                    col: t.col,
+                    msg: format!(
+                        "`thread::{what}` outside exp::pool — cross-thread float accumulation \
+                         must go through the deterministic exp::pool reduction (mark sanctioned \
+                         sites with a reason)"
+                    ),
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,7 @@
+// Positive fixture for the bad-marker meta-rule: a marker without a
+// reason is itself a (unsuppressable) finding, and the underlying
+// no-unwrap finding still fires.
+pub fn f(v: &[u64]) -> u64 {
+    // solana-lint: allow(no-unwrap)
+    *v.first().unwrap()
+}

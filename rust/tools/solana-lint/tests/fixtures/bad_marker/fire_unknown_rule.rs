@@ -1,0 +1,3 @@
+// Positive fixture for the bad-marker meta-rule: unknown rule name.
+// solana-lint: allow(made-up-rule, reason = "this rule does not exist")
+pub fn f() {}

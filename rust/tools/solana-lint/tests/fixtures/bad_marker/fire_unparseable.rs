@@ -1,0 +1,4 @@
+// Positive fixture for the bad-marker meta-rule: the comment below
+// mentions the tool by name but does not parse as a marker.
+// solana-lint: allow no-unwrap -- missing parens
+pub fn f() {}

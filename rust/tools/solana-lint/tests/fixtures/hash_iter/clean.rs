@@ -1,0 +1,13 @@
+// Negative fixture for D1 hash-iter: keyed lookup on a hash map is
+// fine, and BTreeMap iteration is the sanctioned replacement.
+use std::collections::{BTreeMap, HashMap};
+
+pub fn lookup(m: &HashMap<u64, u32>, key: u64) -> Option<u32> {
+    m.get(&key).copied()
+}
+
+pub fn ordered() -> Vec<u32> {
+    let mut sorted: BTreeMap<u64, u32> = BTreeMap::new();
+    sorted.insert(1, 2);
+    sorted.values().copied().collect()
+}

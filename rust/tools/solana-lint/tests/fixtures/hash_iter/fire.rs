@@ -1,0 +1,15 @@
+// Positive fixture for D1 hash-iter: both iteration forms must fire.
+use std::collections::HashMap;
+
+pub fn report_counts() -> Vec<u32> {
+    let mut counts: HashMap<u64, u32> = HashMap::new();
+    counts.insert(1, 2);
+    let mut out = Vec::new();
+    for v in counts.values() {
+        out.push(*v);
+    }
+    for (k, v) in &counts {
+        out.push((*k % 7) as u32 + *v);
+    }
+    out
+}

@@ -1,0 +1,11 @@
+// Negative fixture for D6 join-reduce: test code may spawn threads
+// (loopback integration tests do).
+#[cfg(test)]
+mod tests {
+    use std::thread;
+
+    #[test]
+    fn spawn_in_tests_is_fine() {
+        thread::spawn(|| ()).join().unwrap();
+    }
+}

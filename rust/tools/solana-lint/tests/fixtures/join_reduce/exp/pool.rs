@@ -1,0 +1,7 @@
+// Negative fixture for D6 join-reduce: `exp/pool.rs` is the sanctioned
+// home of thread spawning (the deterministic reduction itself).
+use std::thread;
+
+pub fn pooled() {
+    thread::scope(|_s| {});
+}

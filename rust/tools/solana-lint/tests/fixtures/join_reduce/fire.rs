@@ -1,0 +1,8 @@
+// Positive fixture for D6 join-reduce: spawning a thread outside
+// exp::pool in non-test code must fire.
+use std::thread;
+
+pub fn fan_out() -> f64 {
+    let h = thread::spawn(|| 1.0f64);
+    h.join().unwrap_or(0.0)
+}

@@ -1,0 +1,9 @@
+// Negative fixture for D5 lossy-cast: widening a counter is fine, and
+// narrowing a non-counter identifier is out of scope.
+pub fn widen(items: u32) -> u64 {
+    items as u64
+}
+
+pub fn index(idx: u64) -> u32 {
+    idx as u32
+}

@@ -1,0 +1,11 @@
+// Positive fixture for D5 lossy-cast: narrowing casts on item/byte
+// counters (including `.len()` results) must fire.
+pub fn pack(items: u64, bytes: u64) -> (u32, u32) {
+    let a = items as u32;
+    let b = bytes as u32;
+    (a, b)
+}
+
+pub fn frame_len(payload: &[u8]) -> u32 {
+    payload.len() as u32
+}

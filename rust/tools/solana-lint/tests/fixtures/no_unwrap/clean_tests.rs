@@ -1,0 +1,20 @@
+// Negative fixture for D4 no-unwrap: test code may unwrap freely —
+// both `#[cfg(test)]` modules and bare `#[test]` functions.
+pub fn helper() -> u64 {
+    7
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        let v: u64 = "7".parse().unwrap();
+        assert_eq!(v, 7);
+    }
+}
+
+#[test]
+fn probe() {
+    let v: u64 = "7".parse().unwrap();
+    assert_eq!(v, helper());
+}

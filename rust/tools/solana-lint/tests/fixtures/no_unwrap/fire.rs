@@ -1,0 +1,10 @@
+// Positive fixture for D4 no-unwrap: unwrap, expect and panic! in
+// non-test library code must all fire.
+pub fn parse(s: &str) -> u64 {
+    let v: u64 = s.parse().unwrap();
+    let w: u64 = s.parse().expect("bad number");
+    if v != w {
+        panic!("mismatch");
+    }
+    v
+}

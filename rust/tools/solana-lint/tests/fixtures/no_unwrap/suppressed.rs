@@ -1,0 +1,6 @@
+// Negative fixture for D4 no-unwrap: a reasoned marker suppresses a
+// genuinely-infallible site.
+pub fn first(v: &[u64]) -> u64 {
+    // solana-lint: allow(no-unwrap, reason = "fixture: caller guarantees non-empty")
+    *v.first().unwrap()
+}

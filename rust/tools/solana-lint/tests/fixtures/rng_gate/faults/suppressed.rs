@@ -1,0 +1,7 @@
+// Negative fixture for D3 rng-gate: a file-wide suppression with a
+// reason covers every draw in the file.
+// solana-lint: allow-file(rng-gate, reason = "fixture: whole-file suppression")
+
+pub fn draw(rng: &mut Rng) -> f64 {
+    rng.exponential(1.0)
+}

@@ -1,0 +1,6 @@
+// Negative fixture for D3 rng-gate path scoping: the rule applies only
+// to files under a `faults` or `traffic` path component. This file
+// lives under `sim/`, so its ungated draw is out of scope.
+pub fn draw(rng: &mut Rng) -> f64 {
+    rng.f64()
+}

@@ -1,0 +1,24 @@
+// Negative fixture for D3 rng-gate: draws dominated by `> 0`-style
+// guards (if-block, while-block, or inside the condition itself).
+impl Gen {
+    pub fn maybe(&mut self) -> bool {
+        if self.rate > 0.0 {
+            return self.rng.chance(self.rate);
+        }
+        false
+    }
+
+    pub fn gap_if_live(&mut self) -> f64 {
+        while self.budget > 0 {
+            return self.rng.exponential(self.rate);
+        }
+        0.0
+    }
+
+    pub fn guarded_in_condition(&mut self) -> bool {
+        if self.rate > 0.0 && self.rng.chance(self.rate) {
+            return true;
+        }
+        false
+    }
+}

@@ -1,0 +1,12 @@
+// Positive fixture for D3 rng-gate: an ungated draw in a traffic/
+// path component must fire.
+pub struct Gen {
+    rng: Rng,
+    rate: f64,
+}
+
+impl Gen {
+    pub fn next_gap(&mut self) -> f64 {
+        self.rng.exponential(self.rate)
+    }
+}

@@ -1,0 +1,9 @@
+// Positive fixture for D2 wall-clock: both clock types must fire.
+use std::time::{Instant, SystemTime};
+
+pub fn stamp() -> u64 {
+    let t0 = Instant::now();
+    let wall = SystemTime::now();
+    let _ = (t0, wall);
+    0
+}

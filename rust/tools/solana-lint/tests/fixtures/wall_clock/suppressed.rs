@@ -1,0 +1,8 @@
+// Negative fixture for D2 wall-clock: a marker with a reason on the
+// preceding line suppresses the finding.
+use std::time::Instant;
+
+pub fn bench_clock() -> Instant {
+    // solana-lint: allow(wall-clock, reason = "fixture: sanctioned real-time site")
+    Instant::now()
+}

@@ -1,0 +1,222 @@
+//! Self-tests for solana-lint (ISSUE-7 satellite): every rule has
+//! positive and negative fixtures, a meta-test asserts each rule has at
+//! least one firing fixture, and a tree-wide run asserts the real
+//! source tree has zero unsuppressed findings at HEAD.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use solana_lint::{scan_file, scan_tree, Report, RULES};
+
+fn fixture_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+/// Scan a single fixture, preserving the fixture-relative path so the
+/// path-scoped rules (rng-gate, join-reduce) see the right components.
+fn scan_fixture(rel: &str) -> Report {
+    scan_file(&fixture_root().join(rel), rel).expect("fixture readable")
+}
+
+fn rules_of(report: &Report) -> Vec<&'static str> {
+    report.findings.iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn hash_iter_fires_on_both_iteration_forms() {
+    let r = scan_fixture("hash_iter/fire.rs");
+    assert_eq!(rules_of(&r), ["hash-iter", "hash-iter"], "{:?}", r.findings);
+    assert!(r.findings[0].msg.contains("counts.values()"));
+    assert!(r.findings[1].msg.contains("`counts`"));
+}
+
+#[test]
+fn hash_iter_allows_keyed_lookup_and_btreemap() {
+    let r = scan_fixture("hash_iter/clean.rs");
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+}
+
+#[test]
+fn wall_clock_fires_on_both_clock_types() {
+    let r = scan_fixture("wall_clock/fire.rs");
+    assert_eq!(rules_of(&r), ["wall-clock", "wall-clock"], "{:?}", r.findings);
+}
+
+#[test]
+fn wall_clock_marker_suppresses() {
+    let r = scan_fixture("wall_clock/suppressed.rs");
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+    assert_eq!(r.suppressed, 1);
+}
+
+#[test]
+fn rng_gate_fires_on_ungated_draw_in_traffic() {
+    let r = scan_fixture("rng_gate/traffic/fire.rs");
+    assert_eq!(rules_of(&r), ["rng-gate"], "{:?}", r.findings);
+}
+
+#[test]
+fn rng_gate_accepts_guarded_draws() {
+    let r = scan_fixture("rng_gate/traffic/clean.rs");
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+}
+
+#[test]
+fn rng_gate_is_path_scoped() {
+    let r = scan_fixture("rng_gate/sim/out_of_scope.rs");
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+}
+
+#[test]
+fn rng_gate_allow_file_suppresses() {
+    let r = scan_fixture("rng_gate/faults/suppressed.rs");
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+    assert_eq!(r.suppressed, 1);
+}
+
+#[test]
+fn no_unwrap_fires_on_unwrap_expect_and_panic() {
+    let r = scan_fixture("no_unwrap/fire.rs");
+    assert_eq!(
+        rules_of(&r),
+        ["no-unwrap", "no-unwrap", "no-unwrap"],
+        "{:?}",
+        r.findings
+    );
+}
+
+#[test]
+fn no_unwrap_skips_test_code() {
+    let r = scan_fixture("no_unwrap/clean_tests.rs");
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+}
+
+#[test]
+fn no_unwrap_marker_suppresses() {
+    let r = scan_fixture("no_unwrap/suppressed.rs");
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+    assert_eq!(r.suppressed, 1);
+}
+
+#[test]
+fn lossy_cast_fires_on_counter_narrowing() {
+    let r = scan_fixture("lossy_cast/fire.rs");
+    assert_eq!(
+        rules_of(&r),
+        ["lossy-cast", "lossy-cast", "lossy-cast"],
+        "{:?}",
+        r.findings
+    );
+}
+
+#[test]
+fn lossy_cast_allows_widening_and_non_counters() {
+    let r = scan_fixture("lossy_cast/clean.rs");
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+}
+
+#[test]
+fn join_reduce_fires_on_spawn_outside_pool() {
+    let r = scan_fixture("join_reduce/fire.rs");
+    assert_eq!(rules_of(&r), ["join-reduce"], "{:?}", r.findings);
+}
+
+#[test]
+fn join_reduce_exempts_exp_pool_and_tests() {
+    let pool = scan_fixture("join_reduce/exp/pool.rs");
+    assert!(pool.findings.is_empty(), "{:?}", pool.findings);
+    let tests = scan_fixture("join_reduce/clean_tests.rs");
+    assert!(tests.findings.is_empty(), "{:?}", tests.findings);
+}
+
+#[test]
+fn bad_markers_are_findings() {
+    let missing = scan_fixture("bad_marker/fire_missing_reason.rs");
+    assert_eq!(
+        rules_of(&missing),
+        ["no-unwrap", "bad-marker"],
+        "{:?}",
+        missing.findings
+    );
+    let unknown = scan_fixture("bad_marker/fire_unknown_rule.rs");
+    assert_eq!(rules_of(&unknown), ["bad-marker"], "{:?}", unknown.findings);
+    let unparseable = scan_fixture("bad_marker/fire_unparseable.rs");
+    assert_eq!(
+        rules_of(&unparseable),
+        ["bad-marker"],
+        "{:?}",
+        unparseable.findings
+    );
+}
+
+/// Meta-test: every rule (and the bad-marker meta-rule) has at least
+/// one firing fixture in the corpus — a rule whose positive case stops
+/// firing has silently died.
+#[test]
+fn every_rule_has_a_firing_fixture() {
+    let all = scan_tree(&fixture_root()).expect("fixture tree readable");
+    for rule in RULES.iter().chain(["bad-marker"].iter()) {
+        assert!(
+            all.findings.iter().any(|f| f.rule == *rule),
+            "no firing fixture for rule '{rule}'"
+        );
+    }
+}
+
+/// The acceptance gate: the real source tree is clean at HEAD — zero
+/// unsuppressed findings — and the suppressions that keep it clean are
+/// actually being parsed (suppressed > 0).
+#[test]
+fn source_tree_has_zero_unsuppressed_findings() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../src");
+    let report = scan_tree(&src).expect("rust/src readable");
+    let rendered: Vec<String> = report
+        .findings
+        .iter()
+        .map(|f| format!("{}:{}:{}: [{}] {}", f.file, f.line, f.col, f.rule, f.msg))
+        .collect();
+    assert!(
+        report.findings.is_empty(),
+        "rust/src has unsuppressed lint findings:\n{}",
+        rendered.join("\n")
+    );
+    assert!(
+        report.suppressed > 0,
+        "expected at least one reasoned suppression in rust/src"
+    );
+}
+
+/// The CLI contract CI relies on: non-zero exit on a positive fixture
+/// under --deny all, zero exit on a clean one, and JSON output carries
+/// the rule names.
+#[test]
+fn binary_exit_codes_and_json() {
+    let bin = env!("CARGO_BIN_EXE_solana-lint");
+    let fire = fixture_root().join("no_unwrap/fire.rs");
+    let clean = fixture_root().join("hash_iter/clean.rs");
+
+    let out = Command::new(bin)
+        .args(["--deny", "all"])
+        .arg(&fire)
+        .output()
+        .expect("run solana-lint");
+    assert_eq!(out.status.code(), Some(1), "positive fixture must deny");
+
+    let out = Command::new(bin)
+        .args(["--deny", "all"])
+        .arg(&clean)
+        .output()
+        .expect("run solana-lint");
+    assert_eq!(out.status.code(), Some(0), "clean fixture must pass");
+
+    let out = Command::new(bin)
+        .args(["--json"])
+        .arg(&fire)
+        .output()
+        .expect("run solana-lint");
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    assert!(stdout.contains("\"rule\": \"no-unwrap\""), "{stdout}");
+    assert!(stdout.contains("\"suppressed\": 0"), "{stdout}");
+    // --json without --deny is advisory: findings reported, exit 0.
+    assert_eq!(out.status.code(), Some(0));
+}
