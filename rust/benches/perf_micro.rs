@@ -53,17 +53,31 @@ fn main() -> anyhow::Result<()> {
         100_000
     });
 
-    // FTL + flash write path (tiny geometry forces GC).
-    b.bench("ftl.write_page 20k (with GC)", || {
-        let cfg = CsdConfig::tiny();
-        let mut fcu = Fcu::new(&cfg);
-        let mut now = 0.0;
-        for i in 0..20_000u64 {
-            now = fcu.write(now, (i % 200) * 4096, 4096, IoRequester::Host);
-        }
-        std::hint::black_box(now);
-        20_000
-    });
+    // FTL + flash write path (tiny geometry forces GC). Three flash
+    // management modes over the same overwrite churn (ISSUE-8): the
+    // foreground collector stalls writes at the low-water mark, the
+    // background collector relocates ahead of it on idle dies, and ZNS
+    // sidesteps device GC entirely (WAF pinned at 1.0).
+    for (label, bg, zns) in [
+        ("ftl.write_page 20k (foreground GC)", false, false),
+        ("ftl.write_page 20k (background GC)", true, false),
+        ("ftl.write_page 20k (zns)", false, true),
+    ] {
+        b.bench(label, move || {
+            let mut cfg = CsdConfig::tiny();
+            cfg.flash.background_gc = bg;
+            cfg.flash.zns = zns;
+            let mut fcu = Fcu::new(&cfg);
+            let mut now = 0.0;
+            for i in 0..20_000u64 {
+                now = fcu.write(now, (i % 200) * 4096, 4096, IoRequester::Host);
+            }
+            let stats = fcu.ftl_stats();
+            assert!(stats.waf() >= 1.0);
+            std::hint::black_box((now, stats.waf()));
+            20_000
+        });
+    }
 
     // FCU read path on the full-size drive.
     b.bench("fcu.read 2k x 64KiB", || {

@@ -1,0 +1,30 @@
+//! `cargo bench --bench serve_gc` — regenerates Fig 13: write + GC
+//! interference under a background ingest/update stream across fleet
+//! shapes (all-CSD vs all-SSD) and flash-management modes (foreground
+//! GC, background GC, ZNS append-only) — the ISSUE-8 tentpole. See
+//! `csd::ftl` for the page-mapped FTL and garbage collector,
+//! `traffic::engine` for the seeded ingest interleave, and `exp` for
+//! the sweep definition.
+//!
+//! Scale with `SOLANA_BENCH_FAST=1` (5%) or default 25% of the paper's
+//! dataset sizes; the *shape* (GC tail inflation hits the host-read
+//! baseline harder than the ISP build, ZNS holds WAF at 1.0) is
+//! scale-invariant.
+
+use solana_isp::bench_support::Bencher;
+use solana_isp::exp::{self, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::from_env();
+    let table = exp::fig13_gc(scale)?;
+    exp::emit(&table, "fig13")?;
+    // Wall-time of regenerating the artifact (simulator throughput):
+    let mut b = Bencher::new(0, if std::env::var("SOLANA_BENCH_FAST").is_ok() { 1 } else { 2 });
+    b.bench("fig13_serve_gc", || {
+        let t = exp::fig13_gc(scale).expect("rerun");
+        t.rows.len() as u64
+    });
+    print!("{}", b.report());
+    b.write_json("serve_gc")?;
+    Ok(())
+}

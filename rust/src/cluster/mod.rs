@@ -152,6 +152,30 @@ impl StorageServer {
         Ok(done)
     }
 
+    /// In-place update of an already-ingested file on drive `d` (the
+    /// fig13 ingest/update stream): DLM write lock, PCIe DMA, flash
+    /// program through the FTL — so foreground GC stalls land in the
+    /// returned completion time. Unlike [`StorageServer::ingest`] the
+    /// file must already exist; `offset`/`len` select the extent.
+    pub fn update(
+        &mut self,
+        now: SimTime,
+        d: usize,
+        name: &str,
+        offset: u64,
+        len: u64,
+    ) -> anyhow::Result<SimTime> {
+        let bay = &mut self.bays[d];
+        let t_lock = bay.fs.lock(now, &mut bay.tunnel, name, Mount::Host, LockMode::Write)?;
+        let runs = bay.fs.map_range(name, offset, len)?;
+        let mut done = t_lock;
+        for (dev_off, run_len) in runs {
+            let dma = bay.pcie.dma(t_lock, run_len);
+            done = done.max(bay.csd.write(dma.end, dev_off, run_len, IoRequester::Host));
+        }
+        Ok(done)
+    }
+
     /// Host reads `len` bytes of `name` on drive `d` (path "a"):
     /// DLM read lock, flash→DRAM staging, PCIe DMA to host memory.
     pub fn host_read(
@@ -218,6 +242,19 @@ impl StorageServer {
     /// Total tunnel messages (scheduler + DLM traffic).
     pub fn total_tunnel_messages(&self) -> u64 {
         self.bays.iter().map(|b| b.tunnel.messages()).sum()
+    }
+
+    /// FTL statistics rolled up across all drive bays: summed counters
+    /// plus the worst per-drive wear spread. Feeds `RunReport` /
+    /// `ServeReport` (WAF, gc_runs, wear_spread).
+    pub fn ftl_rollup(&self) -> (crate::csd::ftl::FtlStats, u32) {
+        let mut total = crate::csd::ftl::FtlStats::default();
+        let mut wear = 0u32;
+        for b in &self.bays {
+            total.absorb(&b.csd.fcu.ftl_stats());
+            wear = wear.max(b.csd.fcu.ftl.wear_spread());
+        }
+        (total, wear)
     }
 }
 

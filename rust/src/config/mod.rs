@@ -43,6 +43,16 @@
 //! retries = 3              # per-request retry budget (0 = no timeout/retry layer)
 //! retry_timeout_s = 1.0    # first-attempt timeout (default: deadline-aware estimate)
 //! hedge = true             # duplicate stragglers, first response wins
+//! ingest_rate = 2000.0     # background update writes/s per server (0 = read-only)
+//!
+//! [flash]                  # per-drive flash geometry + management (ISSUE-8)
+//! zns = false              # ZCSD-style zoned namespaces (host resets, no device GC)
+//! background_gc = true     # opportunistic GC on idle dies ahead of the low-water mark
+//! channels = 16            # geometry overrides (defaults: the 12-TB prototype);
+//! dies_per_channel = 8     # fig13 shrinks these so GC fires within a serving run
+//! blocks_per_die = 2500
+//! pages_per_block = 2304
+//! page_bytes = 16384
 //!
 //! [faults]                 # deterministic fault injection — see crate::faults
 //! seed = 7                 # fault RNG stream (independent of the traffic seed)
@@ -296,6 +306,62 @@ impl ExperimentConfig {
             cfg.traffic.hedge = v
                 .as_bool()
                 .ok_or_else(|| anyhow::anyhow!("traffic.hedge must be a boolean (true|false)"))?;
+        }
+        if let Some(v) = t.f64("traffic.ingest_rate") {
+            anyhow::ensure!(
+                v >= 0.0 && v.is_finite(),
+                "traffic.ingest_rate must be non-negative and finite"
+            );
+            cfg.traffic.ingest_rate = v;
+        }
+        // ---- [flash]: per-drive geometry + management (ISSUE-8) -----
+        {
+            let fl = &mut cfg.sched.csd.flash;
+            if let Some(v) = t.get("flash.zns") {
+                fl.zns = v
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("flash.zns must be a boolean (true|false)"))?;
+            }
+            if let Some(v) = t.get("flash.background_gc") {
+                fl.background_gc = v.as_bool().ok_or_else(|| {
+                    anyhow::anyhow!("flash.background_gc must be a boolean (true|false)")
+                })?;
+            }
+            if let Some(v) = t.u64("flash.channels") {
+                anyhow::ensure!((1..=u16::MAX as u64).contains(&v), "flash.channels out of range");
+                fl.channels = v as u16;
+            }
+            if let Some(v) = t.u64("flash.dies_per_channel") {
+                anyhow::ensure!(
+                    (1..=u16::MAX as u64).contains(&v),
+                    "flash.dies_per_channel out of range"
+                );
+                fl.dies_per_channel = v as u16;
+            }
+            if let Some(v) = t.u64("flash.blocks_per_die") {
+                // ≥ 2: one open block plus at least one headroom block.
+                anyhow::ensure!(
+                    (2..=u32::MAX as u64).contains(&v),
+                    "flash.blocks_per_die must be >= 2"
+                );
+                fl.blocks_per_die = v as u32;
+            }
+            if let Some(v) = t.u64("flash.pages_per_block") {
+                anyhow::ensure!(
+                    (1..=u32::MAX as u64).contains(&v),
+                    "flash.pages_per_block out of range"
+                );
+                fl.pages_per_block = v as u32;
+            }
+            if let Some(v) = t.u64("flash.page_bytes") {
+                anyhow::ensure!(v >= 512, "flash.page_bytes must be >= 512");
+                fl.page_bytes = v;
+            }
+            anyhow::ensure!(
+                !(fl.zns && fl.background_gc),
+                "flash.zns and flash.background_gc are mutually exclusive: a zoned drive \
+                 has no device-side GC to run in the background"
+            );
         }
         // ---- [faults]: deterministic fault injection (ISSUE-6) ------
         {
@@ -600,6 +666,48 @@ mod tests {
         assert!(ExperimentConfig::from_toml("[traffic]\nhedge = \"maybe\"").is_err());
         // the finite-bandwidth regression (ISSUE-6 satellite)
         assert!(ExperimentConfig::from_toml("[fleet]\nrack_bandwidth = inf").is_err());
+    }
+
+    #[test]
+    fn flash_section_and_ingest_rate_parse_and_validate() {
+        // ISSUE-8: the [flash] section and the ingest stream knob.
+        let c = ExperimentConfig::from_toml(
+            "[traffic]\ningest_rate = 2500.0\n\
+             [flash]\nbackground_gc = true\nchannels = 2\ndies_per_channel = 2\n\
+             blocks_per_die = 64\npages_per_block = 32\npage_bytes = 4096\n",
+        )
+        .unwrap();
+        assert_eq!(c.traffic.ingest_rate, 2500.0);
+        let fl = &c.sched.csd.flash;
+        assert!(fl.background_gc);
+        assert!(!fl.zns);
+        assert_eq!(fl.channels, 2);
+        assert_eq!(fl.dies_per_channel, 2);
+        assert_eq!(fl.blocks_per_die, 64);
+        assert_eq!(fl.pages_per_block, 32);
+        assert_eq!(fl.page_bytes, 4096);
+        // the [sched] template (and so the fleet) carries the geometry
+        assert_eq!(c.fleet.sched.csd.flash.blocks_per_die, 64);
+        // zns parses too
+        let z = ExperimentConfig::from_toml("[flash]\nzns = true\n").unwrap();
+        assert!(z.sched.csd.flash.zns);
+        // defaults: the 12-TB prototype geometry, everything off
+        let d = ExperimentConfig::from_toml("").unwrap();
+        assert!(!d.sched.csd.flash.zns);
+        assert!(!d.sched.csd.flash.background_gc);
+        assert_eq!(d.sched.csd.flash.channels, 16);
+        assert_eq!(d.traffic.ingest_rate, 0.0);
+        // rejects
+        assert!(ExperimentConfig::from_toml("[traffic]\ningest_rate = -1.0").is_err());
+        assert!(ExperimentConfig::from_toml("[flash]\nzns = \"maybe\"").is_err());
+        assert!(ExperimentConfig::from_toml("[flash]\nbackground_gc = 1").is_err());
+        assert!(ExperimentConfig::from_toml("[flash]\nblocks_per_die = 1").is_err());
+        assert!(ExperimentConfig::from_toml("[flash]\npage_bytes = 100").is_err());
+        assert!(ExperimentConfig::from_toml("[flash]\nchannels = 0").is_err());
+        assert!(
+            ExperimentConfig::from_toml("[flash]\nzns = true\nbackground_gc = true").is_err(),
+            "zoned drives have no device GC to background"
+        );
     }
 
     #[test]

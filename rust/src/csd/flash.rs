@@ -38,6 +38,11 @@ pub struct FlashConfig {
     pub channel_bw: f64,
     /// Per-operation channel command overhead (s).
     pub channel_cmd_secs: f64,
+    /// Zoned-namespace mode (ZCSD-style): append-only placement per
+    /// zone, reclamation via host-visible zone resets, no device GC.
+    pub zns: bool,
+    /// Opportunistic GC on idle dies ahead of the low-water mark.
+    pub background_gc: bool,
 }
 
 impl Default for FlashConfig {
@@ -53,6 +58,8 @@ impl Default for FlashConfig {
             erase_secs: 3.5e-3,
             channel_bw: 800e6,
             channel_cmd_secs: 1e-6,
+            zns: false,
+            background_gc: false,
         }
     }
 }
@@ -138,6 +145,12 @@ impl FlashArray {
 
     pub fn counts(&self) -> (u64, u64, u64) {
         (self.reads, self.programs, self.erases)
+    }
+
+    /// Whether a die has drained all scheduled work by `now` — the
+    /// background-GC eligibility test.
+    pub fn die_idle(&self, die_idx: usize, now: SimTime) -> bool {
+        self.dies[die_idx].drain_time() <= now
     }
 
     /// Total busy seconds across dies (for power/utilization accounting).

@@ -11,6 +11,28 @@
 //! block pool drops below a threshold. All timed flash operations go
 //! through the [`FlashArray`] so GC traffic contends with foreground IO
 //! exactly like on real hardware.
+//!
+//! Three operating regimes:
+//!
+//! * **Foreground GC** (always on): a write that finds its die below the
+//!   low-water mark stalls behind victim relocation — the GC latency
+//!   lands in that request's tail.
+//! * **Background GC** (`FlashConfig::background_gc`): idle dies
+//!   relocate ahead of the low-water mark, so GC steals die/channel
+//!   bandwidth from *future* IO instead of only stalling the triggering
+//!   write. Driven by the FCU on the write path.
+//! * **ZNS** (`FlashConfig::zns`, after ZCSD): placement is a fixed
+//!   append-only zone mapping (zone = one block), the device never
+//!   relocates, and reclamation is a host-visible **zone reset** that
+//!   unmaps every page in the zone. WAF is 1.0 by construction.
+//!
+//! **Headroom invariant:** each die reserves `headroom` over-provisioned
+//! blocks (≈1% of blocks, min 1) that host allocation may never consume.
+//! Only GC relocation may dip into them, and a single victim pass pops at
+//! most one block before its erase returns one, so the free pool can
+//! never be exhausted mid-relocation (the bug family this guards against:
+//! a valid-heavy victim plus a nearly-full open block used to pop the
+//! last free block and panic even though space was reclaimable).
 
 use std::collections::VecDeque;
 
@@ -23,6 +45,10 @@ use crate::sim::SimTime;
 #[derive(Clone, Debug)]
 struct DieState {
     free_blocks: VecDeque<u32>,
+    /// O(1) free-membership mirror of `free_blocks` (the GC victim scan
+    /// used `VecDeque::contains` per candidate — O(blocks²) per pass at
+    /// the 2500-blocks-per-die default).
+    free: Vec<bool>,
     open_block: u32,
     next_page: u32,
     /// valid page count per block
@@ -36,12 +62,28 @@ struct DieState {
 pub struct FtlStats {
     pub host_pages_written: u64,
     pub flash_pages_written: u64,
+    /// Victim passes, foreground + background.
     pub gc_runs: u64,
+    /// Subset of `gc_runs` initiated opportunistically on idle dies.
+    pub background_gc_runs: u64,
     pub gc_pages_moved: u64,
     pub blocks_erased: u64,
+    /// Host-visible zone resets (ZNS mode only).
+    pub zone_resets: u64,
 }
 
 impl FtlStats {
+    /// Accumulate another drive's counters (fleet/server rollups).
+    pub fn absorb(&mut self, o: &FtlStats) {
+        self.host_pages_written += o.host_pages_written;
+        self.flash_pages_written += o.flash_pages_written;
+        self.gc_runs += o.gc_runs;
+        self.background_gc_runs += o.background_gc_runs;
+        self.gc_pages_moved += o.gc_pages_moved;
+        self.blocks_erased += o.blocks_erased;
+        self.zone_resets += o.zone_resets;
+    }
+
     /// Write amplification factor.
     pub fn waf(&self) -> f64 {
         if self.host_pages_written == 0 {
@@ -59,18 +101,29 @@ pub struct Ftl {
     dies: Vec<DieState>,
     next_die: usize,
     /// GC kicks in when a die's free pool drops below this many blocks.
+    /// The effective trigger is `low_water()`, which never drops below
+    /// `headroom + 1` so GC always starts with relocation room.
     pub gc_low_water: usize,
+    /// Over-provisioned blocks per die reserved for GC relocation; host
+    /// allocation refuses to consume them.
+    headroom: usize,
     stats: FtlStats,
 }
 
 impl Ftl {
     pub fn new(cfg: FlashConfig) -> Ftl {
+        let headroom = 1usize
+            .max(cfg.blocks_per_die as usize / 100)
+            .min(cfg.blocks_per_die.saturating_sub(1) as usize);
         let dies: Vec<DieState> = (0..cfg.dies())
             .map(|_| {
                 // Block 0 opens first; the rest are free.
                 let free: VecDeque<u32> = (1..cfg.blocks_per_die).collect();
+                let mut free_bitmap = vec![true; cfg.blocks_per_die as usize];
+                free_bitmap[0] = false;
                 DieState {
                     free_blocks: free,
+                    free: free_bitmap,
                     open_block: 0,
                     next_page: 0,
                     valid: vec![0; cfg.blocks_per_die as usize],
@@ -80,6 +133,7 @@ impl Ftl {
             .collect();
         Ftl {
             gc_low_water: 2usize.max(cfg.blocks_per_die as usize / 50),
+            headroom,
             cfg,
             l2p: FastMap::default(),
             p2l: FastMap::default(),
@@ -97,6 +151,17 @@ impl Ftl {
         self.l2p.len()
     }
 
+    /// Over-provisioned blocks per die excluded from host allocation.
+    pub fn headroom(&self) -> usize {
+        self.headroom
+    }
+
+    /// Effective GC trigger: the configured low-water mark, floored so
+    /// GC always enters with at least one block beyond the headroom.
+    fn low_water(&self) -> usize {
+        self.gc_low_water.max(self.headroom + 1)
+    }
+
     /// Physical address of a logical page, if written.
     pub fn lookup(&self, lpn: u64) -> Option<PhysAddr> {
         self.l2p.get(&lpn).copied()
@@ -111,17 +176,35 @@ impl Ftl {
         }
     }
 
+    /// Decrement a block's valid-page counter. A zero counter here means
+    /// the maps and the counters disagree (the bug family: double
+    /// accounting between trim/overwrite/GC); debug builds fail loudly,
+    /// release builds saturate instead of wrapping to four billion.
+    fn dec_valid(&mut self, die: usize, block: u32) {
+        let v = &mut self.dies[die].valid[block as usize];
+        debug_assert!(*v > 0, "valid-page underflow on die {die} block {block}");
+        *v = v.saturating_sub(1);
+    }
+
     /// Allocate the next physical page on a die (advancing the open
-    /// block), assuming capacity checks already passed.
-    fn alloc_on_die(&mut self, die_idx: usize) -> PhysAddr {
+    /// block). Host allocation (`for_gc = false`) never consumes the
+    /// reserved headroom blocks; GC relocation may.
+    fn alloc_on_die(&mut self, die_idx: usize, for_gc: bool) -> PhysAddr {
         let pages_per_block = self.cfg.pages_per_block;
+        let headroom = self.headroom;
         let d = &mut self.dies[die_idx];
         if d.next_page >= pages_per_block {
+            assert!(
+                for_gc || d.free_blocks.len() > headroom,
+                "die {die_idx} over-full: logical data exceeds usable capacity \
+                 (headroom blocks are reserved for GC relocation)"
+            );
             let nb = d
                 .free_blocks
                 .pop_front()
-                // solana-lint: allow(no-unwrap, reason = "maybe_gc runs before every alloc and asserts reclaimability; an empty pool here is a simulator bug, not a recoverable state")
+                // solana-lint: allow(no-unwrap, reason = "host allocation keeps free > headroom >= 1 and a GC pass pops at most one block before its erase pushes one back, so the pool cannot be empty here; an empty pool is a simulator bug, not a recoverable state")
                 .expect("alloc_on_die called with empty free pool (GC failed?)");
+            d.free[nb as usize] = false;
             d.open_block = nb;
             d.next_page = 0;
         }
@@ -132,25 +215,80 @@ impl Ftl {
 
     /// Write one logical page at `now`; returns program completion time.
     pub fn write_page(&mut self, now: SimTime, flash: &mut FlashArray, lpn: u64) -> SimTime {
+        if self.cfg.zns {
+            return self.write_page_zns(now, flash, lpn);
+        }
         self.stats.host_pages_written += 1;
         let mut t = now;
         // Invalidate the previous version.
         if let Some(old) = self.l2p.remove(&lpn) {
             self.p2l.remove(&old);
             let die = self.cfg.die_index(&old);
-            let d = &mut self.dies[die];
-            debug_assert!(d.valid[old.block as usize] > 0);
-            d.valid[old.block as usize] -= 1;
+            self.dec_valid(die, old.block);
         }
         let die_idx = self.next_die;
         self.next_die = (self.next_die + 1) % self.dies.len();
         t = self.maybe_gc(t, flash, die_idx);
-        let addr = self.alloc_on_die(die_idx);
+        let addr = self.alloc_on_die(die_idx, false);
         self.dies[die_idx].valid[addr.block as usize] += 1;
         self.l2p.insert(lpn, addr);
         self.p2l.insert(addr, lpn);
         self.stats.flash_pages_written += 1;
         flash.program_page(t, addr)
+    }
+
+    /// ZNS write path (ZCSD-style): every logical page has a fixed slot
+    /// in a fixed zone (zone = one block, striped across dies), writes
+    /// append within the zone, and rewriting a mapped page first resets
+    /// the whole zone — a host-visible erase that unmaps every sibling
+    /// page. The device never relocates, so WAF is exactly 1.
+    fn write_page_zns(&mut self, now: SimTime, flash: &mut FlashArray, lpn: u64) -> SimTime {
+        assert!(
+            lpn < self.cfg.total_pages(),
+            "zns write beyond capacity: lpn {lpn} of {}",
+            self.cfg.total_pages()
+        );
+        self.stats.host_pages_written += 1;
+        let mut t = now;
+        let ppb = self.cfg.pages_per_block as u64;
+        let zone = lpn / ppb;
+        let dies = self.dies.len() as u64;
+        let die_idx = (zone % dies) as usize;
+        let block = ((zone / dies) % self.cfg.blocks_per_die as u64) as u32;
+        let slot = (lpn % ppb) as u32;
+        if self.l2p.contains_key(&lpn) {
+            t = self.zone_reset(t, flash, die_idx, block);
+        }
+        let addr = self.die_addr(die_idx, block, slot);
+        self.dies[die_idx].valid[block as usize] += 1;
+        self.l2p.insert(lpn, addr);
+        self.p2l.insert(addr, lpn);
+        self.stats.flash_pages_written += 1;
+        flash.program_page(t, addr)
+    }
+
+    /// Host-visible zone reset: unmap every page in the zone and erase
+    /// the backing block. Charged to the caller's time cursor like any
+    /// other flash operation.
+    fn zone_reset(
+        &mut self,
+        now: SimTime,
+        flash: &mut FlashArray,
+        die_idx: usize,
+        block: u32,
+    ) -> SimTime {
+        for p in 0..self.cfg.pages_per_block {
+            let a = self.die_addr(die_idx, block, p);
+            if let Some(l) = self.p2l.remove(&a) {
+                self.l2p.remove(&l);
+                self.dec_valid(die_idx, block);
+            }
+        }
+        self.stats.zone_resets += 1;
+        self.stats.blocks_erased += 1;
+        self.dies[die_idx].erases[block as usize] += 1;
+        let a = self.die_addr(die_idx, block, 0);
+        flash.erase_block(now, a.channel, a.die)
     }
 
     /// Read one logical page; unmapped pages return a deterministic
@@ -168,70 +306,122 @@ impl Ftl {
         if let Some(old) = self.l2p.remove(&lpn) {
             self.p2l.remove(&old);
             let die = self.cfg.die_index(&old);
-            self.dies[die].valid[old.block as usize] -= 1;
+            self.dec_valid(die, old.block);
         }
+    }
+
+    /// Greedy min-valid victim on a die: skips the open block, free
+    /// blocks (O(1) via the bitmap), and fully-valid blocks (relocating
+    /// one reclaims nothing — the old scan would grind through them and
+    /// livelock the reclaim loop on a packed die).
+    fn pick_victim(&self, die_idx: usize) -> Option<u32> {
+        let d = &self.dies[die_idx];
+        let open = d.open_block;
+        let mut best: Option<(u32, u32)> = None; // (valid, block)
+        for b in 0..self.cfg.blocks_per_die {
+            if b == open || d.free[b as usize] {
+                continue;
+            }
+            debug_assert_eq!(
+                d.free[b as usize],
+                d.free_blocks.contains(&b),
+                "free bitmap out of sync with free pool on die {die_idx} block {b}"
+            );
+            let v = d.valid[b as usize];
+            if v >= self.cfg.pages_per_block {
+                continue; // fully valid: no space to reclaim
+            }
+            if best.map(|(bv, _)| v < bv).unwrap_or(true) {
+                best = Some((v, b));
+            }
+        }
+        best.map(|(_, b)| b)
+    }
+
+    /// Relocate one victim block's valid pages and erase it. Returns the
+    /// advanced time cursor. Pops at most one free block (a victim has
+    /// at most `pages_per_block − 1` valid pages) before the erase
+    /// pushes one back, so the free pool never drains below
+    /// `headroom − 1` transiently and never ends a pass below where it
+    /// started.
+    fn collect_victim(
+        &mut self,
+        now: SimTime,
+        flash: &mut FlashArray,
+        die_idx: usize,
+        victim: u32,
+    ) -> SimTime {
+        let mut t = now;
+        self.stats.gc_runs += 1;
+        let pages: Vec<(PhysAddr, u64)> = (0..self.cfg.pages_per_block)
+            .filter_map(|p| {
+                let a = self.die_addr(die_idx, victim, p);
+                self.p2l.get(&a).map(|&l| (a, l))
+            })
+            .collect();
+        for (old_addr, lpn) in pages {
+            t = flash.read_page(t, old_addr);
+            self.p2l.remove(&old_addr);
+            self.dec_valid(die_idx, victim);
+            let new_addr = self.alloc_on_die(die_idx, true);
+            self.dies[die_idx].valid[new_addr.block as usize] += 1;
+            self.l2p.insert(lpn, new_addr);
+            self.p2l.insert(new_addr, lpn);
+            self.stats.flash_pages_written += 1;
+            self.stats.gc_pages_moved += 1;
+            t = flash.program_page(t, new_addr);
+        }
+        debug_assert_eq!(self.dies[die_idx].valid[victim as usize], 0);
+        // Erase and return to the pool.
+        let a = self.die_addr(die_idx, victim, 0);
+        t = flash.erase_block(t, a.channel, a.die);
+        self.dies[die_idx].erases[victim as usize] += 1;
+        self.stats.blocks_erased += 1;
+        self.dies[die_idx].free_blocks.push_back(victim);
+        self.dies[die_idx].free[victim as usize] = true;
+        t
     }
 
     /// Run GC on a die if its free pool is low. Returns the (possibly
     /// advanced) time cursor — foreground writes stall behind GC exactly
-    /// as they would in the device.
+    /// as they would in the device. Terminates: every pass converts at
+    /// least one invalid page to free space (fully-valid victims are
+    /// skipped), and breaks when nothing is reclaimable.
     fn maybe_gc(&mut self, now: SimTime, flash: &mut FlashArray, die_idx: usize) -> SimTime {
         let mut t = now;
-        let mut guard = 0;
-        while self.dies[die_idx].free_blocks.len() < self.gc_low_water {
-            guard += 1;
-            assert!(
-                guard <= self.cfg.blocks_per_die,
-                "GC cannot reclaim space: drive over-full on die {die_idx}"
-            );
-            // Victim: min-valid block that isn't the open block.
-            let open = self.dies[die_idx].open_block;
-            let victim = {
-                let d = &self.dies[die_idx];
-                let mut best: Option<(u32, u32)> = None; // (valid, block)
-                for b in 0..self.cfg.blocks_per_die {
-                    if b == open || d.free_blocks.contains(&b) {
-                        continue;
-                    }
-                    let v = d.valid[b as usize];
-                    if best.map(|(bv, _)| v < bv).unwrap_or(true) {
-                        best = Some((v, b));
-                    }
-                }
-                match best {
-                    Some((_, b)) => b,
-                    None => break, // nothing reclaimable
-                }
+        while self.dies[die_idx].free_blocks.len() < self.low_water() {
+            let victim = match self.pick_victim(die_idx) {
+                Some(v) => v,
+                None => break, // nothing reclaimable
             };
-            self.stats.gc_runs += 1;
-            // Relocate valid pages.
-            let pages: Vec<(PhysAddr, u64)> = (0..self.cfg.pages_per_block)
-                .filter_map(|p| {
-                    let a = self.die_addr(die_idx, victim, p);
-                    self.p2l.get(&a).map(|&l| (a, l))
-                })
-                .collect();
-            for (old_addr, lpn) in pages {
-                t = flash.read_page(t, old_addr);
-                self.p2l.remove(&old_addr);
-                self.dies[die_idx].valid[victim as usize] -= 1;
-                let new_addr = self.alloc_on_die(die_idx);
-                self.dies[die_idx].valid[new_addr.block as usize] += 1;
-                self.l2p.insert(lpn, new_addr);
-                self.p2l.insert(new_addr, lpn);
-                self.stats.flash_pages_written += 1;
-                self.stats.gc_pages_moved += 1;
-                t = flash.program_page(t, new_addr);
-            }
-            debug_assert_eq!(self.dies[die_idx].valid[victim as usize], 0);
-            // Erase and return to the pool.
-            let a = self.die_addr(die_idx, victim, 0);
-            t = flash.erase_block(t, a.channel, a.die);
-            self.dies[die_idx].erases[victim as usize] += 1;
-            self.stats.blocks_erased += 1;
-            self.dies[die_idx].free_blocks.push_back(victim);
+            t = self.collect_victim(t, flash, die_idx, victim);
         }
         t
+    }
+
+    /// Opportunistic background GC: for every die that is idle at `now`
+    /// and below twice the low-water mark, relocate one victim. The
+    /// relocation occupies the die and its channel starting at `now`, so
+    /// it steals bandwidth from *future* foreground IO instead of
+    /// stalling the write that tripped the threshold. No-op in ZNS mode
+    /// (reclamation is host-driven there).
+    pub fn background_collect(&mut self, now: SimTime, flash: &mut FlashArray) {
+        if self.cfg.zns {
+            return;
+        }
+        let bg_water = 2 * self.low_water();
+        for die_idx in 0..self.dies.len() {
+            if self.dies[die_idx].free_blocks.len() >= bg_water {
+                continue;
+            }
+            if !flash.die_idle(die_idx, now) {
+                continue;
+            }
+            if let Some(victim) = self.pick_victim(die_idx) {
+                self.stats.background_gc_runs += 1;
+                self.collect_victim(now, flash, die_idx, victim);
+            }
+        }
     }
 
     /// Max-min erase-count spread across all blocks (wear-leveling
@@ -252,8 +442,10 @@ impl Ftl {
         }
     }
 
-    /// Check internal consistency (tests): l2p and p2l are inverse maps
-    /// and per-block valid counters match the reverse map.
+    /// Check internal consistency (tests): l2p and p2l are inverse maps,
+    /// per-block valid counters match the reverse map, the free bitmap
+    /// mirrors the free pool, and (outside ZNS) no die has eaten into
+    /// its reserved headroom.
     pub fn check_invariants(&self) -> Result<(), String> {
         if self.l2p.len() != self.p2l.len() {
             return Err(format!("l2p {} != p2l {}", self.l2p.len(), self.p2l.len()));
@@ -281,6 +473,35 @@ impl Ftl {
                     ));
                 }
             }
+            // The free pool is only meaningful outside ZNS (zones map
+            // straight to blocks; the pool is never consulted there).
+            if !self.cfg.zns {
+                let set_bits = d.free.iter().filter(|&&f| f).count();
+                if set_bits != d.free_blocks.len() {
+                    return Err(format!(
+                        "die {di}: free bitmap has {set_bits} bits but pool holds {}",
+                        d.free_blocks.len()
+                    ));
+                }
+                for &b in &d.free_blocks {
+                    if !d.free[b as usize] {
+                        return Err(format!("die {di}: pooled block {b} not set in bitmap"));
+                    }
+                    if d.valid[b as usize] != 0 {
+                        return Err(format!(
+                            "die {di}: free block {b} has {} valid pages",
+                            d.valid[b as usize]
+                        ));
+                    }
+                }
+                if d.free_blocks.len() < self.headroom {
+                    return Err(format!(
+                        "die {di}: free pool {} below reserved headroom {}",
+                        d.free_blocks.len(),
+                        self.headroom
+                    ));
+                }
+            }
         }
         Ok(())
     }
@@ -293,6 +514,20 @@ mod tests {
 
     fn tiny() -> (Ftl, FlashArray) {
         let cfg = FlashConfig::tiny();
+        (Ftl::new(cfg.clone()), FlashArray::new(cfg))
+    }
+
+    /// One die, 8 blocks × 4 pages: the smallest geometry where the
+    /// historical free-pool exhaustion was reachable.
+    fn one_die() -> (Ftl, FlashArray) {
+        let cfg = FlashConfig {
+            channels: 1,
+            dies_per_channel: 1,
+            blocks_per_die: 8,
+            pages_per_block: 4,
+            page_bytes: 4096,
+            ..FlashConfig::default()
+        };
         (Ftl::new(cfg.clone()), FlashArray::new(cfg))
     }
 
@@ -367,6 +602,91 @@ mod tests {
         ftl.check_invariants().unwrap();
     }
 
+    /// Regression (ISSUE-8): packing a die with cold, never-overwritten
+    /// data used to send GC into a relocation livelock (every victim
+    /// fully valid, nothing reclaimed, pool popped mid-pass) that ended
+    /// in a panic. With the headroom reserve and fully-valid victims
+    /// skipped, the same fill runs clean up to usable capacity.
+    #[test]
+    fn packed_die_does_not_exhaust_free_pool() {
+        let (mut ftl, mut flash) = one_die();
+        assert_eq!(ftl.headroom(), 1);
+        // Usable capacity = (blocks − headroom) × pages = (8−1)×4 = 28.
+        let mut t = 0.0;
+        for lpn in 0..26u64 {
+            t = ftl.write_page(t, &mut flash, lpn);
+            assert!(
+                ftl.dies[0].free_blocks.len() >= ftl.headroom(),
+                "host write consumed the reserved headroom"
+            );
+        }
+        assert_eq!(ftl.stats().gc_runs, 0, "nothing reclaimable: GC must not spin");
+        assert_eq!(ftl.mapped_pages(), 26);
+        ftl.check_invariants().unwrap();
+    }
+
+    /// Writing past usable capacity (all blocks valid, only headroom
+    /// left) fails loudly instead of corrupting GC state.
+    #[test]
+    #[should_panic(expected = "over-full")]
+    fn over_full_die_panics_cleanly() {
+        let (mut ftl, mut flash) = one_die();
+        let mut t = 0.0;
+        for lpn in 0..29u64 {
+            t = ftl.write_page(t, &mut flash, lpn);
+        }
+    }
+
+    /// Churn right at the headroom boundary with the most aggressive
+    /// (smallest) legal low-water setting: GC must keep reclaiming
+    /// without ever draining the pool below the reserve.
+    #[test]
+    fn churn_at_minimum_low_water_respects_headroom() {
+        let (mut ftl, mut flash) = one_die();
+        ftl.gc_low_water = 1; // low_water() floors this to headroom + 1
+        let mut t = 0.0;
+        // 24 live pages = 86% of the 28 usable; 8 rounds of overwrites.
+        for round in 0..8u64 {
+            for lpn in 0..24u64 {
+                t = ftl.write_page(t, &mut flash, lpn.wrapping_add(round) % 24);
+            }
+            assert!(ftl.dies[0].free_blocks.len() >= ftl.headroom());
+            ftl.check_invariants().unwrap();
+        }
+        let s = ftl.stats();
+        assert!(s.gc_runs > 0, "churn at 86% fill must trigger GC: {s:?}");
+        assert!(s.blocks_erased > 0, "GC must have erased victims: {s:?}");
+        assert!(s.waf() >= 1.0);
+    }
+
+    /// Regression (ISSUE-8): trimming twice is a no-op, not an
+    /// underflow.
+    #[test]
+    fn double_trim_is_idempotent() {
+        let (mut ftl, mut flash) = tiny();
+        ftl.write_page(0.0, &mut flash, 3);
+        ftl.trim(3);
+        ftl.trim(3);
+        assert!(ftl.lookup(3).is_none());
+        ftl.check_invariants().unwrap();
+    }
+
+    /// Regression (ISSUE-8): a trim that hits a corrupted (already-zero)
+    /// valid counter must fail with the FTL's own diagnostic, not a raw
+    /// arithmetic overflow — and must saturate rather than wrap in
+    /// release builds.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "valid-page underflow")]
+    fn trim_after_counter_corruption_is_caught() {
+        let (mut ftl, mut flash) = tiny();
+        ftl.write_page(0.0, &mut flash, 5);
+        let a = ftl.lookup(5).unwrap();
+        let die = ftl.cfg.die_index(&a);
+        ftl.dies[die].valid[a.block as usize] = 0; // simulated corruption
+        ftl.trim(5);
+    }
+
     #[test]
     fn property_l2p_bijective_under_random_ops() {
         forall("ftl mapping stays bijective", 60, |g| {
@@ -385,6 +705,58 @@ mod tests {
                         t = ftl.write_page(t, &mut flash, lpn);
                     }
                 }
+            }
+            ftl.check_invariants()?;
+            check(ftl.stats().waf() >= 1.0, "WAF below 1")?;
+            Ok(())
+        });
+    }
+
+    /// ISSUE-8 coverage: random write/trim/read churn at ≥90% of usable
+    /// capacity across random geometries. The pool must never dip into
+    /// the headroom, invariants must hold throughout, and WAF stays ≥ 1.
+    /// (Geometry floor `blocks_per_die ≥ 12` guarantees a 90% fill is
+    /// below the packed-die bound `(blocks − 1 − headroom) × pages`.)
+    #[test]
+    fn property_near_full_churn_respects_headroom() {
+        forall("near-full ftl churn across geometries", 30, |g| {
+            let cfg = FlashConfig {
+                channels: g.u64(1..=2) as u16,
+                dies_per_channel: g.u64(1..=2) as u16,
+                blocks_per_die: g.u64(12..=20) as u32,
+                pages_per_block: g.u64(4..=10) as u32,
+                page_bytes: 4096,
+                ..FlashConfig::default()
+            };
+            let mut ftl = Ftl::new(cfg.clone());
+            let mut flash = FlashArray::new(cfg.clone());
+            let usable = cfg.dies() as u64
+                * (cfg.blocks_per_die as u64 - ftl.headroom() as u64)
+                * cfg.pages_per_block as u64;
+            let working = (usable * 9) / 10;
+            let mut t = 0.0;
+            // Fill to 90% of usable, then churn inside the working set.
+            for lpn in 0..working {
+                t = ftl.write_page(t, &mut flash, lpn);
+            }
+            let ops = g.usize(50..=400);
+            for _ in 0..ops {
+                let lpn = g.u64(0..=working - 1);
+                match g.u64(0..=9) {
+                    0 => ftl.trim(lpn),
+                    1..=2 => {
+                        t = ftl.read_page(t, &mut flash, lpn);
+                    }
+                    _ => {
+                        t = ftl.write_page(t, &mut flash, lpn);
+                    }
+                }
+            }
+            for (di, d) in ftl.dies.iter().enumerate() {
+                check(
+                    d.free_blocks.len() >= ftl.headroom(),
+                    &format!("die {di} dipped into headroom"),
+                )?;
             }
             ftl.check_invariants()?;
             check(ftl.stats().waf() >= 1.0, "WAF below 1")?;
@@ -434,5 +806,76 @@ mod tests {
         if s.blocks_erased > 0 {
             assert!(ftl.wear_spread() <= s.blocks_erased as u32);
         }
+    }
+
+    #[test]
+    fn background_collect_reclaims_on_idle_dies() {
+        let (mut ftl, mut flash) = tiny();
+        // Drive free pools below 2 × low_water with overwrite churn.
+        let hot = FlashConfig::tiny().total_pages() / 3;
+        let mut t = 0.0;
+        for round in 0..4u64 {
+            for lpn in 0..hot {
+                t = ftl.write_page(t, &mut flash, lpn + (round % 2));
+            }
+        }
+        let before = ftl.stats();
+        // Far in the future every die is idle: background GC may run.
+        ftl.background_collect(t + 100.0, &mut flash);
+        let after = ftl.stats();
+        assert!(
+            after.background_gc_runs > before.background_gc_runs,
+            "idle dies below the bg watermark must collect: {after:?}"
+        );
+        assert_eq!(after.host_pages_written, before.host_pages_written);
+        ftl.check_invariants().unwrap();
+        // While a die is busy (time cursor in the past), nothing runs.
+        let busy = ftl.stats();
+        ftl.background_collect(0.0, &mut flash);
+        assert_eq!(ftl.stats().background_gc_runs, busy.background_gc_runs);
+    }
+
+    fn zns_tiny() -> (Ftl, FlashArray) {
+        let cfg = FlashConfig { zns: true, ..FlashConfig::tiny() };
+        (Ftl::new(cfg.clone()), FlashArray::new(cfg))
+    }
+
+    #[test]
+    fn zns_write_read_roundtrip_waf_is_one() {
+        let (mut ftl, mut flash) = zns_tiny();
+        let mut t = 0.0;
+        let pages = 3 * FlashConfig::tiny().pages_per_block as u64;
+        // Two sequential passes over three zones: pass 2 resets each.
+        for pass in 0..2u64 {
+            for lpn in 0..pages {
+                t = ftl.write_page(t, &mut flash, lpn);
+            }
+            let _ = pass;
+        }
+        let r = ftl.read_page(t, &mut flash, 1);
+        assert!(r > t);
+        let s = ftl.stats();
+        assert_eq!(s.waf(), 1.0, "zns never relocates: {s:?}");
+        assert_eq!(s.gc_runs, 0);
+        assert_eq!(s.zone_resets, 3, "one reset per rewritten zone");
+        ftl.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn zns_overwrite_resets_whole_zone() {
+        let (mut ftl, mut flash) = zns_tiny();
+        let ppb = FlashConfig::tiny().pages_per_block as u64;
+        let mut t = 0.0;
+        for lpn in 0..ppb {
+            t = ftl.write_page(t, &mut flash, lpn);
+        }
+        // Rewriting page 0 resets zone 0: siblings become unmapped.
+        ftl.write_page(t, &mut flash, 0);
+        assert!(ftl.lookup(0).is_some());
+        for lpn in 1..ppb {
+            assert!(ftl.lookup(lpn).is_none(), "zone reset must unmap lpn {lpn}");
+        }
+        assert_eq!(ftl.stats().zone_resets, 1);
+        ftl.check_invariants().unwrap();
     }
 }

@@ -18,6 +18,17 @@
 //!
 //! Path (c), the TCP/IP tunnel, lives in [`crate::interconnect`] because
 //! it spans host and device.
+//!
+//! **Flash management under mutation (ISSUE-8):** every die reserves a
+//! small headroom of over-provisioned blocks that host allocation may
+//! never consume — only GC relocation can dip into them, which is what
+//! makes mid-relocation free-pool exhaustion impossible by construction.
+//! Foreground GC stalls the triggering write; with
+//! `FlashConfig::background_gc` idle dies also relocate ahead of the
+//! low-water mark, so GC steals die/channel bandwidth from future IO
+//! (the fig13 write + GC interference scenario). With `FlashConfig::zns`
+//! the FTL switches to ZCSD-style zoned placement: append-only zones,
+//! host-visible zone resets, no device relocation, WAF ≡ 1.
 
 pub mod dram;
 pub mod fcu;

@@ -10,8 +10,9 @@
 //! solana serve --admission on --policy least-work --skew 1.0   # control plane
 //! solana serve --faults server-crash@0.3,crash-server=0 \
 //!              --retries 3 --hedge --replicas 1          # chaos + resilience
+//! solana serve --ingest-rate 2000                        # writes + GC under serving
 //! solana fig5  --app speech [--scale 0.25] [--threads 8]
-//! solana fig6 | fig7 | fig8 | fig9 | fig10 | fig11 | table1 | power
+//! solana fig6 | fig7 | fig8 | fig9 | fig10 | fig11 | fig13 | table1 | power
 //! solana ablate --which ratio|datapath|wakeup|dispatch --app sentiment
 //! solana version | help
 //! ```
@@ -81,6 +82,7 @@ fn commands() -> Vec<Command> {
             .opt("replicas", None, "shard replicas per server for crash failover (default 0; must be < servers)")
             .opt("faults", None, "fault plan: comma-separated name@rate / key=value clauses, e.g. 'ack-loss@0.05,stall@0.1,stall-s=0.2' or 'server-crash@0.3,crash-server=0'")
             .opt("fault-seed", None, "fault-plan RNG seed (independent of the traffic stream; requires --faults)")
+            .opt("ingest-rate", None, "background ingest/update writes per second per server — runs the full FTL/GC write path during serving (default 0 = read-only)")
             .flag("hedge", "hedge slow requests: duplicate at 75% of the timeout, first response wins")
             .opt("scale", None, "dataset scale vs paper (0..1], default 0.25")
             .flag("baseline", "disable all ISP engines (storage-only)")
@@ -105,6 +107,9 @@ fn commands() -> Vec<Command> {
             .opt("scale", None, "dataset scale")
             .opt("threads", None, "sweep worker threads"),
         Command::new("fig11", "regenerate Fig 11 (availability under faults × resilience policy)")
+            .opt("scale", None, "dataset scale")
+            .opt("threads", None, "sweep worker threads"),
+        Command::new("fig13", "regenerate Fig 13 (write + GC interference: tail latency and WAF under ingest)")
             .opt("scale", None, "dataset scale")
             .opt("threads", None, "sweep worker threads"),
         Command::new("table1", "regenerate Table I (summary)")
@@ -306,6 +311,13 @@ pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
             if args.flag("hedge") {
                 tcfg.hedge = true;
             }
+            if let Some(r) = args.f64("ingest-rate")? {
+                anyhow::ensure!(
+                    r >= 0.0 && r.is_finite(),
+                    "--ingest-rate must be non-negative and finite"
+                );
+                tcfg.ingest_rate = r;
+            }
             if let Some(n) = args.u64("replicas")? {
                 // Range (replicas < servers) is validated by serve_fleet,
                 // which sees the final server count.
@@ -361,6 +373,7 @@ pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
         "fig9" => exp::emit(&exp::fig9_latency(scale)?, "fig9")?,
         "fig10" => exp::emit(&exp::fig10_autoscale(scale)?, "fig10")?,
         "fig11" => exp::emit(&exp::fig11_availability(scale)?, "fig11")?,
+        "fig13" => exp::emit(&exp::fig13_gc(scale)?, "fig13")?,
         "table1" => exp::emit(&exp::table1(scale)?, "table1")?,
         "power" => exp::emit(&exp::power_breakdown(), "power")?,
         "ablate" => {
@@ -404,6 +417,8 @@ fn print_report(r: &sched::RunReport) {
     println!("energy              {:>11.1} J ({:.1} W avg)", r.energy_j, r.avg_power_w);
     println!("energy/item         {:>11.4} J", r.energy_per_item_j);
     println!("mean batch latency  {:>11.2} s", r.mean_batch_latency);
+    println!("flash waf           {:>14.3}", r.waf);
+    println!("gc runs / wear      {:>7} / {}", r.gc_runs, r.wear_spread);
     println!("des events          {:>14} ({} wakes)", r.events_executed, r.wake_events);
 }
 
@@ -470,6 +485,11 @@ fn print_serve_report(r: &ServeReport) {
     println!("host/csd batches    {:>7} / {}", r.host_batches, r.csd_batches);
     println!("rack bytes          {:>14}", crate::util::human_bytes(r.rack_bytes));
     println!("rack messages       {:>14}", r.rack_messages);
+    if r.ingest_writes > 0 {
+        println!("ingest writes       {:>14}", r.ingest_writes);
+        println!("flash waf           {:>14.3}", r.waf);
+        println!("gc runs / wear      {:>7} / {}", r.gc_runs, r.wear_spread);
+    }
     println!("energy              {:>11.1} J ({:.4} J/req)", r.energy_j, r.energy_per_req_j);
     println!(
         "p99 SLO             {:>14}  [{}]",
@@ -527,7 +547,11 @@ fn serve_json(r: &ServeReport) -> crate::codec::json::Json {
         .set("rack_bytes", r.rack_bytes.into())
         .set("rack_messages", r.rack_messages.into())
         .set("energy_j", r.energy_j.into())
-        .set("energy_per_req_j", r.energy_per_req_j.into());
+        .set("energy_per_req_j", r.energy_per_req_j.into())
+        .set("ingest_writes", r.ingest_writes.into())
+        .set("waf", r.waf.into())
+        .set("gc_runs", r.gc_runs.into())
+        .set("wear_spread", (r.wear_spread as u64).into());
     let servers: Vec<Json> = r
         .per_server
         .iter()
@@ -602,6 +626,9 @@ fn report_json(r: &sched::RunReport) -> crate::codec::json::Json {
         .set("avg_power_w", r.avg_power_w.into())
         .set("energy_per_item_j", r.energy_per_item_j.into())
         .set("mean_batch_latency_s", r.mean_batch_latency.into())
+        .set("waf", r.waf.into())
+        .set("gc_runs", r.gc_runs.into())
+        .set("wear_spread", (r.wear_spread as u64).into())
         .set("events_executed", r.events_executed.into())
         .set("wake_events", r.wake_events.into());
     j
@@ -772,6 +799,33 @@ mod tests {
     #[test]
     fn fig11_smoke() {
         assert_eq!(dispatch(&sv(&["fig11", "--scale", "0.005"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn fig13_smoke() {
+        // the CI smoke invocation: `solana fig13 --scale 0.01` (the test
+        // runs one notch smaller to stay quick)
+        assert_eq!(dispatch(&sv(&["fig13", "--scale", "0.005"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn serve_ingest_smoke() {
+        // The ISSUE-8 serve path: a background ingest/update stream
+        // through the real CLI, both report formats.
+        let code = dispatch(&sv(&[
+            "serve", "--app", "sentiment", "--servers", "2", "--ingest-rate", "2000",
+            "--load", "0.5", "--requests", "800", "--scale", "0.01", "--json",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        let code = dispatch(&sv(&[
+            "serve", "--ingest-rate", "500", "--requests", "500", "--scale", "0.01",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        // rejected: negative or non-finite rates
+        assert!(dispatch(&sv(&["serve", "--ingest-rate", "-5", "--scale", "0.01"])).is_err());
+        assert!(dispatch(&sv(&["serve", "--ingest-rate", "nan", "--scale", "0.01"])).is_err());
     }
 
     #[test]

@@ -153,6 +153,10 @@ pub struct SchedConfig {
     pub dispatch: DispatchMode,
     /// Deterministic seed (shard layout etc.).
     pub seed: u64,
+    /// Per-drive device model (flash geometry, ZNS / background-GC
+    /// modes, ISP engine). Defaults to the paper's 12-TB prototype;
+    /// fig13 shrinks the geometry so GC fires within a serving run.
+    pub csd: CsdConfig,
 }
 
 impl Default for SchedConfig {
@@ -168,6 +172,7 @@ impl Default for SchedConfig {
             coalesce_wakes: true,
             dispatch: DispatchMode::Polling,
             seed: 42,
+            csd: CsdConfig::default(),
         }
     }
 }
@@ -222,6 +227,13 @@ pub struct RunReport {
     /// Scheduler polling wakes among `events_executed` (always 1 in
     /// event-driven mode: the bootstrap dispatch at `t0`).
     pub wake_events: u64,
+    /// Write amplification across all drives (flash pages programmed ÷
+    /// host pages written; 1.0 when nothing was written).
+    pub waf: f64,
+    /// GC victim passes across all drives (foreground + background).
+    pub gc_runs: u64,
+    /// Worst per-drive max−min block erase-count spread (wear quality).
+    pub wear_spread: u32,
 }
 
 impl RunReport {
@@ -275,6 +287,9 @@ impl RunReport {
         f64_eq("mean_batch_latency", self.mean_batch_latency, other.mean_batch_latency)?;
         eq("host_batches", self.host_batches, other.host_batches)?;
         eq("csd_batches", self.csd_batches, other.csd_batches)?;
+        f64_eq("waf", self.waf, other.waf)?;
+        eq("gc_runs", self.gc_runs, other.gc_runs)?;
+        eq("wear_spread", self.wear_spread, other.wear_spread)?;
         Ok(())
     }
 }
@@ -595,7 +610,7 @@ pub fn run(
         "wakeup_secs must be positive and finite, got {}",
         cfg.wakeup_secs
     );
-    let mut server = StorageServer::new(cfg.drives, CsdConfig::default());
+    let mut server = StorageServer::new(cfg.drives, cfg.csd.clone());
 
     // ---- ingest: stripe the dataset across drives --------------------
     let items_per_drive = crate::util::div_ceil(model.items, cfg.drives as u64);
@@ -707,6 +722,7 @@ pub fn run(
     let pcie_total = st.server.total_pcie_bytes();
     let pcie_bytes = pcie_total.saturating_sub(ingest_pcie);
     let isp_bytes: u64 = st.server.bays.iter().map(|b| b.csd.fcu.io.isp_read_bytes).sum();
+    let (ftl, wear_spread) = st.server.ftl_rollup();
 
     metrics.inc("sched.items", model.items as f64);
     metrics.inc("sched.host_items", st.host_items as f64);
@@ -741,6 +757,9 @@ pub fn run(
         csd_batches: st.csd_batches,
         events_executed: q.events_executed(),
         wake_events,
+        waf: ftl.waf(),
+        gc_runs: ftl.gc_runs,
+        wear_spread,
     })
 }
 
@@ -785,6 +804,7 @@ mod tests {
                 coalesce_wakes: coalesce,
                 dispatch: DispatchMode::Polling,
                 seed: 42,
+                csd: CsdConfig::default(),
             };
             let run_one = |coalesce: bool| -> Result<RunReport, String> {
                 let mut m = Metrics::new();

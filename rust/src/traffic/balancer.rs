@@ -354,6 +354,11 @@ pub fn serve_fleet(
             "traffic.retry_timeout_s must be positive and finite, got {to}"
         );
     }
+    anyhow::ensure!(
+        tcfg.ingest_rate >= 0.0 && tcfg.ingest_rate.is_finite(),
+        "traffic.ingest_rate must be non-negative and finite, got {}",
+        tcfg.ingest_rate
+    );
     if let Some(fc) = &tcfg.faults {
         fc.validate(fcfg.servers)?;
     }
@@ -430,6 +435,16 @@ pub fn serve_fleet(
     if let Some(p) = plan.as_mut() {
         for (e, d) in engines.iter_mut().zip(p.drive.drain(..)) {
             e.set_faults(d);
+        }
+    }
+    // Background ingest/update stream (ISSUE-8): per-server seeded
+    // Poisson update writes through the drives' FTLs, firing over the
+    // expected arrival window. Rate 0 (the default) arms nothing and
+    // draws no RNG — bit-identical to the pre-ISSUE-8 run.
+    if tcfg.ingest_rate > 0.0 {
+        let mut root = crate::util::Rng::new(tcfg.seed).fork("ingest");
+        for (i, e) in engines.iter_mut().enumerate() {
+            e.set_ingest(tcfg.ingest_rate, t0 + window, root.fork(&format!("server-{i}")));
         }
     }
     // Per-server latency floor a healthy request can legitimately spend
@@ -844,6 +859,18 @@ pub fn serve_fleet(
         })
         .collect();
 
+    // Flash-management rollup (ISSUE-8): summed FTL counters and the
+    // worst per-drive wear spread across every server's drives.
+    let mut ftl = crate::csd::ftl::FtlStats::default();
+    let mut wear_spread = 0u32;
+    let mut ingest_writes = 0u64;
+    for e in &engines {
+        let (s, w) = e.ftl_rollup();
+        ftl.absorb(&s);
+        wear_spread = wear_spread.max(w);
+        ingest_writes += e.ingest_writes();
+    }
+
     let latency = LatencyStats::of(&latencies);
     metrics.inc("serve.requests", served as f64);
     metrics.inc("serve.shed", shed as f64);
@@ -882,6 +909,10 @@ pub fn serve_fleet(
         rack_messages: rack.messages(),
         energy_j: energy,
         energy_per_req_j: if served > 0 { energy / served as f64 } else { 0.0 },
+        ingest_writes,
+        waf: ftl.waf(),
+        gc_runs: ftl.gc_runs,
+        wear_spread,
         per_server,
     })
 }
@@ -1130,6 +1161,34 @@ mod tests {
             gated.latency.p99,
             gated.slo_p99_s
         );
+    }
+
+    /// ISSUE-8: fleet serving with the ingest stream on — updates fire
+    /// on every server, request conservation is untouched, the FTL
+    /// counters reach the report, and the whole run is bit-identical
+    /// across repeats (the comparator now covers waf/gc_runs/
+    /// wear_spread/ingest_writes too).
+    #[test]
+    fn ingest_stream_conserves_and_is_bit_identical() {
+        let mk = || TrafficConfig {
+            load: 0.6,
+            requests: 2_000,
+            ingest_rate: 500.0,
+            ..TrafficConfig::default()
+        };
+        let fleet = fleet_cfg(2, FleetShape::AllCsd);
+        let mut m = Metrics::new();
+        let a = serve_fleet(App::Sentiment, &fleet, &mk(), &PowerModel::default(), &mut m).unwrap();
+        let b = serve_fleet(App::Sentiment, &fleet, &mk(), &PowerModel::default(), &mut m).unwrap();
+        a.check_bit_identical(&b).unwrap();
+        assert_eq!(a.served, 2_000, "updates never eat requests");
+        assert!(a.ingest_writes > 0, "the stream must fire during the window");
+        assert!(a.waf >= 1.0, "flash writes can only amplify");
+        let quiet =
+            serve_fleet(App::Sentiment, &fleet, &TrafficConfig { ingest_rate: 0.0, ..mk() },
+                &PowerModel::default(), &mut m)
+            .unwrap();
+        assert_eq!(quiet.ingest_writes, 0, "rate 0 arms nothing");
     }
 
     #[test]

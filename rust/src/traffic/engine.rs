@@ -32,6 +32,20 @@
 //! largest possible single-dispatch read, and read offsets wrap so a
 //! serving run of any length reads only resident bytes.
 //!
+//! # Ingest/update stream (the ISSUE-8 tentpole)
+//!
+//! [`ServeEngine::set_ingest`] arms a deterministic seeded Poisson
+//! stream of item-sized *update writes* that interleaves with query
+//! dispatch on the engine's own virtual-time loop. Each write rotates
+//! round-robin across the server's drives and walks a circular offset
+//! through the resident corpus, flowing through the full device write
+//! path ([`crate::csd::Fcu::write`]) — so FTL garbage-collection stalls
+//! land in die/channel occupancy that subsequent query reads (and their
+//! per-request latencies) actually feel. The stream stops at its horizon
+//! (the arrival window), updates are not requests (they never touch the
+//! admission, completion, or conservation accounting), and an unarmed
+//! engine draws no RNG and runs the exact pre-ISSUE-8 path.
+//!
 //! # Admission control (the ISSUE-5 tentpole)
 //!
 //! With [`EnginePolicy::admission_budget_s`] set, the engine becomes
@@ -59,11 +73,12 @@
 use std::collections::VecDeque;
 
 use crate::cluster::StorageServer;
-use crate::csd::CsdConfig;
+use crate::csd::ftl::FtlStats;
 use crate::faults::{AckOutcome, DriveFaults};
 use crate::metrics::Metrics;
 use crate::sched::{DispatchMode, Ev, SchedConfig, SchedState, SHARD};
 use crate::sim::EventQueue;
+use crate::util::Rng;
 use crate::workloads::{AppModel, HOST_THREADS, ISP_CORES};
 
 /// One served request: issue id, frontend arrival instant, and the
@@ -81,6 +96,23 @@ pub(crate) struct Completion {
 struct Queued {
     id: u64,
     arrival: f64,
+}
+
+/// An armed background ingest/update stream (ISSUE-8): seeded Poisson
+/// item-sized writes, round-robin across drives, circular offsets
+/// through the resident corpus, self-disarming past `horizon`.
+struct IngestStream {
+    rng: Rng,
+    /// Mean update arrivals per second (per server).
+    rate: f64,
+    /// Next update's absolute instant (≤ `horizon` by construction).
+    next: f64,
+    /// Last instant an update may fire — the arrival window's end.
+    horizon: f64,
+    /// Round-robin target drive for the next update.
+    drive: usize,
+    /// Circular byte offset into the resident corpus.
+    off: u64,
 }
 
 /// Batch-formation policy: release queued work to the scheduler when
@@ -194,6 +226,14 @@ pub(crate) struct ServeEngine<'a> {
     /// Largest single-dispatch read; offsets wrap once they pass
     /// `corpus_bytes - max_read_bytes`.
     max_read_bytes: u64,
+    /// Background ingest/update stream (ISSUE-8). `None` — the default
+    /// and the only state pre-ISSUE-8 callers see — draws no RNG and
+    /// adds no events.
+    ingest: Option<IngestStream>,
+    /// One update write is one item (page-rounded by the FTL).
+    ingest_item_bytes: u64,
+    /// Update writes applied so far (survives stream disarm).
+    ingest_writes: u64,
     completions: Vec<Completion>,
 }
 
@@ -244,7 +284,7 @@ impl<'a> ServeEngine<'a> {
                 "admission deadline budget must be positive and finite, got {b}"
             );
         }
-        let mut server = StorageServer::new(cfg.drives, CsdConfig::default());
+        let mut server = StorageServer::new(cfg.drives, cfg.csd.clone());
 
         // Resident corpus: a circular per-drive window twice the largest
         // single-dispatch read, so offsets always have room before the
@@ -297,6 +337,9 @@ impl<'a> ServeEngine<'a> {
             lost: 0,
             corpus_bytes,
             max_read_bytes,
+            ingest: None,
+            ingest_item_bytes: model.bytes_per_item.max(1),
+            ingest_writes: 0,
             completions: Vec::new(),
             st,
         })
@@ -336,6 +379,9 @@ impl<'a> ServeEngine<'a> {
         if let Some(tf) = self.flush_at {
             t = t.min(tf);
         }
+        if let Some(ing) = &self.ingest {
+            t = t.min(ing.next);
+        }
         t.is_finite().then_some(t)
     }
 
@@ -359,6 +405,32 @@ impl<'a> ServeEngine<'a> {
     /// Requests destroyed by drive faults so far (never completions).
     pub(crate) fn lost(&self) -> u64 {
         self.lost
+    }
+
+    /// Arm the background ingest/update stream (ISSUE-8): `rate`
+    /// updates/s drawn from the caller's forked `rng`, firing until
+    /// `horizon`. Called once by the fleet driver before serving starts;
+    /// a non-positive rate arms nothing and draws no RNG (the quiet-plan
+    /// contract), so unarmed engines run the exact ingest-free path.
+    pub(crate) fn set_ingest(&mut self, rate: f64, horizon: f64, mut rng: Rng) {
+        if rate > 0.0 {
+            let next = self.t0 + rng.exponential(rate);
+            if next > horizon {
+                return; // window too short for even one update
+            }
+            self.ingest = Some(IngestStream { rng, rate, next, horizon, drive: 0, off: 0 });
+        }
+    }
+
+    /// Background update writes applied so far.
+    pub(crate) fn ingest_writes(&self) -> u64 {
+        self.ingest_writes
+    }
+
+    /// This server's FTL counters rolled up across its drives, plus the
+    /// worst per-drive wear spread.
+    pub(crate) fn ftl_rollup(&self) -> (FtlStats, u32) {
+        self.st.server.ftl_rollup()
     }
 
     /// The admission gate's completion estimate for a request offered
@@ -419,9 +491,11 @@ impl<'a> ServeEngine<'a> {
     }
 
     /// Process exactly one internal event (the one at
-    /// [`ServeEngine::next_time`]). Sched-queue events win ties — acks
-    /// mutate node state before any same-instant dispatch runs, matching
-    /// the batch runner's calendar order.
+    /// [`ServeEngine::next_time`]). Tie order is fixed and part of the
+    /// bit-identity contract: sched-queue events first (acks mutate node
+    /// state before any same-instant dispatch runs, matching the batch
+    /// runner's calendar order), then ingest writes (device occupancy
+    /// lands before a same-instant dispatch reads), then wakes/flushes.
     pub(crate) fn step(&mut self) -> anyhow::Result<()> {
         let tq = self.q.peek_time().unwrap_or(f64::INFINITY);
         let tw = if !self.event_driven && self.queued > 0 {
@@ -430,7 +504,8 @@ impl<'a> ServeEngine<'a> {
             f64::INFINITY
         };
         let tf = self.flush_at.unwrap_or(f64::INFINITY);
-        if tq <= tw && tq <= tf {
+        let ti = self.ingest.as_ref().map(|i| i.next).unwrap_or(f64::INFINITY);
+        if tq <= tw && tq <= tf && tq <= ti {
             let Some((now, ev)) = self.q.pop() else {
                 anyhow::bail!("event queue drained between peek and pop");
             };
@@ -511,6 +586,8 @@ impl<'a> ServeEngine<'a> {
                     unreachable!("batch-mode-only event in serving engine")
                 }
             }
+        } else if ti <= tw && ti <= tf {
+            self.ingest_step()?;
         } else if tw <= tf {
             // Wake-grid point (polling): the grid is both the dispatch
             // clock and the formation timeout check.
@@ -526,6 +603,38 @@ impl<'a> ServeEngine<'a> {
                 .ok_or_else(|| anyhow::anyhow!("flush fired with no armed deadline"))?;
             self.try_dispatch(now, true)?;
         }
+        Ok(())
+    }
+
+    /// Apply one background update write: overwrite one item of the
+    /// resident corpus in place on the next round-robin drive. The write
+    /// runs the full device path (FE overhead, FTL mapping, program,
+    /// any foreground/background GC), so its die/channel occupancy is
+    /// exactly what later query reads contend with. Updates are not
+    /// requests: no queue, no completion, no admission interaction.
+    fn ingest_step(&mut self) -> anyhow::Result<()> {
+        let drives = self.st.cfg.drives;
+        let bytes = self.ingest_item_bytes;
+        let corpus = self.corpus_bytes;
+        let Some(ing) = self.ingest.as_mut() else {
+            anyhow::bail!("ingest event fired with no armed stream");
+        };
+        let now = ing.next;
+        let d = ing.drive;
+        ing.drive = (ing.drive + 1) % drives;
+        if ing.off + bytes > corpus {
+            ing.off = 0;
+        }
+        let off = ing.off;
+        ing.off += bytes;
+        // solana-lint: allow(rng-gate, reason = "an armed stream is never quiet: set_ingest only constructs IngestStream under a rate > 0.0 guard")
+        ing.next = now + ing.rng.exponential(ing.rate);
+        if ing.next > ing.horizon {
+            // Past the arrival window: disarm so the run can drain.
+            self.ingest = None;
+        }
+        self.ingest_writes += 1;
+        self.st.server.update(now, d, SHARD, off, bytes)?;
         Ok(())
     }
 
@@ -671,6 +780,59 @@ mod tests {
             assert_eq!(done.len() as u64, n, "{dispatch:?}: every request served once");
             assert_eq!(e.state().host_items + e.state().csd_items, n);
         }
+    }
+
+    /// ISSUE-8: an armed ingest stream interleaves update writes with
+    /// query serving, flows through the drives' FTLs (host pages written
+    /// grow beyond the resident corpus), disarms at its horizon so the
+    /// run drains, never perturbs request conservation, and is a pure
+    /// function of its seed.
+    #[test]
+    fn ingest_stream_interleaves_and_disarms_at_horizon() {
+        let run = |seed: u64| {
+            let model = AppModel::for_app(App::Sentiment, 500);
+            let cfg = engine_cfg(DispatchMode::EventDriven);
+            let mut e = ServeEngine::new(&model, &cfg, EnginePolicy::default()).unwrap();
+            let t0 = e.t0();
+            let (corpus_only, _) = e.ftl_rollup();
+            e.set_ingest(1_000.0, t0 + 2.0, Rng::new(seed));
+            let n: u64 = 500;
+            let mut next_arrival = 0u64;
+            let mut done = std::collections::BTreeSet::new();
+            loop {
+                let ta = (next_arrival < n).then(|| t0 + next_arrival as f64 * 4e-3);
+                match (ta, e.next_time()) {
+                    (Some(a), Some(t)) if a <= t => {
+                        e.offer(a, next_arrival).unwrap();
+                        next_arrival += 1;
+                    }
+                    (Some(a), None) => {
+                        e.offer(a, next_arrival).unwrap();
+                        next_arrival += 1;
+                    }
+                    (_, Some(_)) => e.step().unwrap(),
+                    (None, None) => break,
+                }
+                for c in e.take_completions() {
+                    assert!(done.insert(c.id), "duplicate completion {}", c.id);
+                }
+            }
+            assert_eq!(done.len() as u64, n, "updates must not eat requests");
+            assert!(e.ingest_writes() > 0, "a 1 kHz stream over 2 s must fire");
+            assert!(e.next_time().is_none(), "the stream disarmed; the run drained");
+            let (ftl, _) = e.ftl_rollup();
+            assert!(
+                ftl.host_pages_written > corpus_only.host_pages_written,
+                "updates flow through the FTL write path"
+            );
+            (e.ingest_writes(), ftl)
+        };
+        let (w1, f1) = run(7);
+        let (w2, f2) = run(7);
+        assert_eq!(w1, w2, "same seed, same update count");
+        assert_eq!(f1, f2, "same seed, same FTL counters");
+        let (w3, _) = run(8);
+        assert!(w3 > 0);
     }
 
     #[test]

@@ -147,6 +147,12 @@ pub struct TrafficConfig {
     /// fault-free path; `Some` with all-zero rates is bit-identical to
     /// it (property-tested in `tests/chaos.rs`).
     pub faults: Option<FaultsConfig>,
+    /// Background ingest/update rate per server, item-sized writes/s
+    /// (ISSUE-8): a seeded Poisson stream of in-place corpus updates
+    /// that runs the full device write path during the arrival window,
+    /// so FTL garbage collection interferes with query latency. 0
+    /// (default) arms nothing — the exact read-only serving path.
+    pub ingest_rate: f64,
 }
 
 impl Default for TrafficConfig {
@@ -171,6 +177,7 @@ impl Default for TrafficConfig {
             retry_timeout_s: None,
             hedge: false,
             faults: None,
+            ingest_rate: 0.0,
         }
     }
 }
@@ -356,6 +363,17 @@ pub struct ServeReport {
     pub rack_messages: u64,
     pub energy_j: f64,
     pub energy_per_req_j: f64,
+    /// Background ingest/update writes applied fleet-wide (ISSUE-8).
+    pub ingest_writes: u64,
+    /// Fleet-wide flash write amplification: flash pages programmed per
+    /// host page written (1.0 with no GC relocation; ≡ 1.0 under ZNS).
+    pub waf: f64,
+    /// GC victim collections across every drive in the fleet
+    /// (foreground + background).
+    pub gc_runs: u64,
+    /// Worst per-drive spread between the most- and least-erased block
+    /// (wear-leveling proxy).
+    pub wear_spread: u32,
     pub per_server: Vec<ServerServeStats>,
 }
 
@@ -436,6 +454,10 @@ impl ServeReport {
         eq("rack_messages", self.rack_messages, other.rack_messages)?;
         f64_eq("energy_j", self.energy_j, other.energy_j)?;
         f64_eq("energy_per_req_j", self.energy_per_req_j, other.energy_per_req_j)?;
+        eq("ingest_writes", self.ingest_writes, other.ingest_writes)?;
+        f64_eq("waf", self.waf, other.waf)?;
+        eq("gc_runs", self.gc_runs, other.gc_runs)?;
+        eq("wear_spread", self.wear_spread, other.wear_spread)?;
         // Per-server slices too: a nondeterminism that only permutes
         // which server handled which requests conserves every fleet-wide
         // sum above but diverges here.
@@ -796,6 +818,10 @@ mod tests {
         tcfg = TrafficConfig { skew: f64::INFINITY, ..TrafficConfig::default() };
         assert!(serve(App::Sentiment, &sched, &tcfg, &PowerModel::default(), &mut m).is_err());
         tcfg = TrafficConfig { slo_p99_s: Some(-2.0), ..TrafficConfig::default() };
+        assert!(serve(App::Sentiment, &sched, &tcfg, &PowerModel::default(), &mut m).is_err());
+        tcfg = TrafficConfig { ingest_rate: -1.0, ..TrafficConfig::default() };
+        assert!(serve(App::Sentiment, &sched, &tcfg, &PowerModel::default(), &mut m).is_err());
+        tcfg = TrafficConfig { ingest_rate: f64::NAN, ..TrafficConfig::default() };
         assert!(serve(App::Sentiment, &sched, &tcfg, &PowerModel::default(), &mut m).is_err());
     }
 }
