@@ -5,13 +5,16 @@
 //! latency.
 
 use solana_isp::bench_support::Bencher;
+use solana_isp::cluster::fleet::FleetConfig;
 use solana_isp::csd::{CsdConfig, Fcu, IoRequester};
 use solana_isp::exp::{self, pool, Scale};
-use solana_isp::metrics::Metrics;
+use solana_isp::metrics::{Histogram, Metrics};
 use solana_isp::power::PowerModel;
 use solana_isp::runtime::{Engine, Tensor};
 use solana_isp::sched::{run, DispatchMode, SchedConfig};
 use solana_isp::sim::{EventQueue, Pipe, Servers};
+use solana_isp::trace::Tracer;
+use solana_isp::traffic::{serve_fleet, serve_fleet_traced, TrafficConfig};
 use solana_isp::workloads::{App, AppModel};
 
 fn main() -> anyhow::Result<()> {
@@ -204,6 +207,71 @@ fn main() -> anyhow::Result<()> {
         });
         pool::set_threads(0);
         println!("exp.fig5 pooled sweep used {threads} worker threads");
+    }
+
+    // Histogram tail reporting (ISSUE-9 satellite): the old report path
+    // called `percentile()` per quantile — one clone + sort each — where
+    // `summary()` sorts once for all of them. Values are pinned
+    // bit-identical before timing either path.
+    {
+        let mut h = Histogram::with_capacity(100_000);
+        for i in 0..100_000u64 {
+            h.record((i.wrapping_mul(2_654_435_761) % 1_000_003) as f64 * 1e-6);
+        }
+        let s = h.summary().expect("non-empty histogram");
+        for (pct, via_summary) in
+            [(50.0, s.p50), (90.0, s.p90), (95.0, s.p95), (99.0, s.p99), (99.9, s.p999)]
+        {
+            assert_eq!(h.percentile(pct).to_bits(), via_summary.to_bits());
+        }
+        b.bench("metrics.histogram 100k tail via percentile() x5", || {
+            let acc = h.percentile(50.0)
+                + h.percentile(90.0)
+                + h.percentile(95.0)
+                + h.percentile(99.0)
+                + h.percentile(99.9);
+            std::hint::black_box(acc);
+            5
+        });
+        b.bench("metrics.histogram 100k tail via summary()", || {
+            let s = h.summary().expect("non-empty histogram");
+            std::hint::black_box(s.p50 + s.p90 + s.p95 + s.p99 + s.p999);
+            5
+        });
+    }
+
+    // Tracing overhead (ISSUE-9 tentpole): a traced-off serve must cost
+    // nothing — `Tracer::Off` makes every record call a no-op — and even
+    // a fully-traced run may only spend host time, never simulated time.
+    // The bit-identity assertions are the contract; the timings bound the
+    // host-side cost of each mode.
+    {
+        let fcfg = FleetConfig { servers: 2, ..FleetConfig::default() };
+        let tcfg = TrafficConfig { requests: 1500, ..TrafficConfig::default() };
+        let serve_with = |tracer: &mut Tracer| {
+            let mut m = Metrics::new();
+            serve_fleet_traced(App::Sentiment, &fcfg, &tcfg, &PowerModel::default(), &mut m, tracer)
+                .expect("serve_fleet_traced")
+        };
+        let mut m = Metrics::new();
+        let plain = serve_fleet(App::Sentiment, &fcfg, &tcfg, &PowerModel::default(), &mut m)
+            .expect("serve_fleet");
+        let off = serve_with(&mut Tracer::Off);
+        let mut on = Tracer::in_memory(1);
+        let traced = serve_with(&mut on);
+        plain.check_bit_identical(&off).expect("Tracer::Off must be bit-identical to untraced");
+        plain.check_bit_identical(&traced).expect("tracing on must not perturb simulated time");
+        b.bench("traffic.serve_fleet 1.5k requests untraced", || {
+            let r = serve_with(&mut Tracer::Off);
+            std::hint::black_box(r.served);
+            1_500
+        });
+        b.bench("traffic.serve_fleet 1.5k requests traced (sample=1)", || {
+            let mut t = Tracer::in_memory(1);
+            let r = serve_with(&mut t);
+            std::hint::black_box((r.served, t.take_requests().0.len()));
+            1_500
+        });
     }
 
     // PJRT hot path (skipped when artifacts are absent).

@@ -256,6 +256,20 @@ impl StorageServer {
         }
         (total, wear)
     }
+
+    /// Latest simulated time a GC pass on drive `d` runs until.
+    /// Read-only tracer hook for `gc_stall` attribution — never used
+    /// for scheduling.
+    pub fn gc_busy_until(&self, d: usize) -> SimTime {
+        self.bays[d].csd.fcu.ftl.gc_busy_until()
+    }
+
+    /// Cumulative ECC-engine busy seconds on drive `d`. The tracer
+    /// snapshots this around a dispatch to carve the batch's `ecc`
+    /// phase out of its flash/io span.
+    pub fn ecc_busy_secs(&self, d: usize) -> f64 {
+        self.bays[d].csd.fcu.busy_secs().2
+    }
 }
 
 #[cfg(test)]

@@ -65,6 +65,13 @@
 //! rejoin_s = 5.0           # omit for a permanent crash
 //! link_drop = 0.02         # P(rack response message dropped)
 //! link_dup = 0.02          # P(rack response message duplicated)
+//!
+//! [trace]                  # deterministic request tracing — see crate::trace
+//! enabled = true           # arm the span tracer (off = the exact untraced path)
+//! cap = 10000              # keep only the last N request timelines (0 = unbounded)
+//! sample = 8               # trace every Nth request by id (1 = all)
+//! format = "jsonl"         # jsonl | chrome — export format for `out`
+//! out = "trace.jsonl"      # export path (omit to report in memory only)
 //! ```
 //!
 //! `[fleet] replicas = 1` enables shard failover routing (ISSUE-6).
@@ -75,6 +82,7 @@ use crate::cluster::fleet::{FleetConfig, FleetShape};
 use crate::codec::toml::TomlTable;
 use crate::power::PowerModel;
 use crate::sched::{DispatchMode, SchedConfig};
+use crate::trace::{TraceConfig, TraceFormat};
 use crate::traffic::{parse_policy, parse_process, TrafficConfig};
 use crate::workloads::App;
 
@@ -94,6 +102,10 @@ pub struct ExperimentConfig {
     /// Serving-traffic settings (`[traffic]`), consumed by
     /// `solana serve` and the Fig 9 experiment.
     pub traffic: TrafficConfig,
+    /// Request-tracing settings (`[trace]`, ISSUE-9), consumed by
+    /// `solana serve --trace`. Disabled by default — the exact
+    /// untraced serving path.
+    pub trace: TraceConfig,
     /// Whether the file explicitly set sched.csd_batch / batch_ratio /
     /// traffic.requests (CLI precedence: flag > file > per-app default).
     pub batch_explicit: bool,
@@ -111,6 +123,7 @@ impl Default for ExperimentConfig {
             power: PowerModel::default(),
             fleet: FleetConfig::default(),
             traffic: TrafficConfig::default(),
+            trace: TraceConfig::default(),
             batch_explicit: false,
             ratio_explicit: false,
             requests_explicit: false,
@@ -416,6 +429,31 @@ impl ExperimentConfig {
                 cfg.traffic.faults = Some(fc);
             }
         }
+        // ---- [trace]: deterministic request tracing (ISSUE-9) -------
+        {
+            if let Some(v) = t.get("trace.enabled") {
+                // Strict like `admission`: a non-boolean must not
+                // silently run untraced when the config asked for spans.
+                cfg.trace.enabled = v.as_bool().ok_or_else(|| {
+                    anyhow::anyhow!("trace.enabled must be a boolean (true|false)")
+                })?;
+            }
+            if let Some(v) = t.u64("trace.cap") {
+                cfg.trace.ring_cap = v as usize;
+            }
+            if let Some(v) = t.u64("trace.sample") {
+                cfg.trace.sample_every = v;
+            }
+            if let Some(v) = t.str("trace.format") {
+                cfg.trace.format = TraceFormat::parse(v).ok_or_else(|| {
+                    anyhow::anyhow!("unknown trace format '{v}' (expected jsonl|chrome)")
+                })?;
+            }
+            if let Some(v) = t.str("trace.out") {
+                cfg.trace.out = Some(v.to_string());
+            }
+            cfg.trace.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+        }
         anyhow::ensure!(
             cfg.sched.isp_drives <= cfg.sched.drives,
             "isp_drives ({}) exceeds drives ({})",
@@ -708,6 +746,29 @@ mod tests {
             ExperimentConfig::from_toml("[flash]\nzns = true\nbackground_gc = true").is_err(),
             "zoned drives have no device GC to background"
         );
+    }
+
+    #[test]
+    fn trace_section_parses_and_validates() {
+        // ISSUE-9: the [trace] section.
+        let c = ExperimentConfig::from_toml(
+            "[trace]\nenabled = true\ncap = 500\nsample = 8\nformat = \"chrome\"\nout = \"t.json\"\n",
+        )
+        .unwrap();
+        assert!(c.trace.enabled);
+        assert_eq!(c.trace.ring_cap, 500);
+        assert_eq!(c.trace.sample_every, 8);
+        assert_eq!(c.trace.format, TraceFormat::Chrome);
+        assert_eq!(c.trace.out.as_deref(), Some("t.json"));
+        assert!(c.trace.tracer().is_on());
+        // defaults: tracing off, the exact untraced path
+        let d = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(d.trace, TraceConfig::default());
+        assert!(!d.trace.tracer().is_on());
+        // rejects
+        assert!(ExperimentConfig::from_toml("[trace]\nenabled = \"maybe\"").is_err());
+        assert!(ExperimentConfig::from_toml("[trace]\nformat = \"svg\"").is_err());
+        assert!(ExperimentConfig::from_toml("[trace]\nsample = 0").is_err());
     }
 
     #[test]

@@ -107,6 +107,11 @@ pub struct Ftl {
     /// Over-provisioned blocks per die reserved for GC relocation; host
     /// allocation refuses to consume them.
     headroom: usize,
+    /// Latest simulated time any GC pass (foreground or background) on
+    /// this drive runs until — observability only (request tracing
+    /// attributes `gc_stall` phases from it); never feeds back into
+    /// scheduling decisions.
+    gc_busy_until: SimTime,
     stats: FtlStats,
 }
 
@@ -139,8 +144,16 @@ impl Ftl {
             p2l: FastMap::default(),
             dies,
             next_die: 0,
+            gc_busy_until: 0.0,
             stats: FtlStats::default(),
         }
+    }
+
+    /// Latest simulated time a GC pass on this drive runs until (0.0 if
+    /// GC has never run). Read-only observability hook for the tracer's
+    /// `gc_stall` attribution.
+    pub fn gc_busy_until(&self) -> SimTime {
+        self.gc_busy_until
     }
 
     pub fn stats(&self) -> FtlStats {
@@ -379,6 +392,7 @@ impl Ftl {
         self.stats.blocks_erased += 1;
         self.dies[die_idx].free_blocks.push_back(victim);
         self.dies[die_idx].free[victim as usize] = true;
+        self.gc_busy_until = self.gc_busy_until.max(t);
         t
     }
 

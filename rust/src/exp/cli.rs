@@ -11,6 +11,8 @@
 //! solana serve --faults server-crash@0.3,crash-server=0 \
 //!              --retries 3 --hedge --replicas 1          # chaos + resilience
 //! solana serve --ingest-rate 2000                        # writes + GC under serving
+//! solana serve --trace out.jsonl --trace-sample 8        # span tracing (ISSUE-9)
+//! solana trace-report --input out.jsonl                  # tail-latency attribution
 //! solana fig5  --app speech [--scale 0.25] [--threads 8]
 //! solana fig6 | fig7 | fig8 | fig9 | fig10 | fig11 | fig13 | table1 | power
 //! solana ablate --which ratio|datapath|wakeup|dispatch --app sentiment
@@ -27,7 +29,8 @@ use crate::config::{parse_app, parse_dispatch, parse_shape, ExperimentConfig};
 use crate::exp::{self, Scale};
 use crate::metrics::Metrics;
 use crate::sched;
-use crate::traffic::{parse_policy, parse_process, serve_fleet, ServeReport};
+use crate::trace::{self, TraceFormat};
+use crate::traffic::{parse_policy, parse_process, serve_fleet_traced, ServeReport};
 use crate::workloads::{App, AppModel};
 
 fn commands() -> Vec<Command> {
@@ -84,6 +87,9 @@ fn commands() -> Vec<Command> {
             .opt("fault-seed", None, "fault-plan RNG seed (independent of the traffic stream; requires --faults)")
             .opt("ingest-rate", None, "background ingest/update writes per second per server — runs the full FTL/GC write path during serving (default 0 = read-only)")
             .flag("hedge", "hedge slow requests: duplicate at 75% of the timeout, first response wins")
+            .opt("trace", None, "arm the span tracer and write the request trace to this path (see also the [trace] config section)")
+            .opt("trace-format", None, "jsonl|chrome — trace export format (default jsonl; chrome loads in Perfetto)")
+            .opt("trace-sample", None, "trace every Nth request by id (default 1 = every request)")
             .opt("scale", None, "dataset scale vs paper (0..1], default 0.25")
             .flag("baseline", "disable all ISP engines (storage-only)")
             .flag("json", "emit the serving report as JSON"),
@@ -121,6 +127,10 @@ fn commands() -> Vec<Command> {
             .opt("app", Some("sentiment"), "benchmark app")
             .opt("scale", None, "dataset scale")
             .opt("threads", None, "sweep worker threads"),
+        Command::new("trace-report", "read a request trace and print the tail-latency attribution")
+            .opt("input", None, "trace file produced by `solana serve --trace` (required)")
+            .opt("format", Some("jsonl"), "jsonl|chrome — chrome validates the event stream instead of reporting")
+            .flag("csv", "emit the attribution table as CSV"),
         Command::new("version", "print the version"),
         Command::new("help", "show this help"),
     ]
@@ -348,14 +358,79 @@ pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
                 "--load does not apply to the closed-loop process: its offered rate is \
                  clients/think_s; drop --load or use an open-loop process"
             );
+            // Span tracing (ISSUE-9): flags layer over the [trace]
+            // config section; --trace both arms the tracer and names
+            // the export file.
+            let mut trcfg = cfg.trace.clone();
+            if let Some(p) = args.str("trace") {
+                trcfg.enabled = true;
+                trcfg.out = Some(p.to_string());
+            }
+            if let Some(f) = args.str("trace-format") {
+                trcfg.format = TraceFormat::parse(f).ok_or_else(|| {
+                    anyhow::anyhow!("--trace-format: expected jsonl|chrome, got '{f}'")
+                })?;
+            }
+            if let Some(n) = args.u64("trace-sample")? {
+                trcfg.sample_every = n;
+            }
+            trcfg.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
             let mut metrics = Metrics::new();
+            let mut tracer = trcfg.tracer();
             // The report carries the resolved p99 SLO (the `--slo` /
             // `[traffic] slo_p99_s` override or the per-app default).
-            let r = serve_fleet(app, &fcfg, &tcfg, &cfg.power, &mut metrics)?;
+            let r = serve_fleet_traced(app, &fcfg, &tcfg, &cfg.power, &mut metrics, &mut tracer)?;
+            let traced = if tracer.is_on() {
+                let (reqs, dropped) = tracer.take_requests();
+                trace::verify_conservation(&reqs)
+                    .map_err(|e| anyhow::anyhow!("trace conservation: {e}"))?;
+                if let Some(path) = &trcfg.out {
+                    let text = match trcfg.format {
+                        TraceFormat::Chrome => trace::chrome_trace(&reqs).to_pretty(),
+                        TraceFormat::Jsonl => trace::to_jsonl(&reqs),
+                    };
+                    std::fs::write(path, text)?;
+                }
+                Some((reqs, dropped))
+            } else {
+                None
+            };
             if args.flag("json") {
                 println!("{}", serve_json(&r).to_pretty());
             } else {
                 print_serve_report(&r);
+                if let Some((reqs, dropped)) = &traced {
+                    print!("{}", trace::attribution_table(&trace::attribution(reqs)).render());
+                    println!("traced requests     {:>14} ({dropped} evicted)", reqs.len());
+                }
+            }
+        }
+        "trace-report" => {
+            let path = args
+                .str("input")
+                .ok_or_else(|| anyhow::anyhow!("--input <trace file> is required"))?;
+            let text = std::fs::read_to_string(path)?;
+            match args.str("format").unwrap_or("jsonl") {
+                "chrome" => {
+                    let j = crate::codec::json::Json::parse(&text)
+                        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                    trace::check_chrome(&j).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                    println!("{path}: chrome trace ok");
+                }
+                "jsonl" => {
+                    let reqs = trace::parse_jsonl(&text)
+                        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                    trace::verify_conservation(&reqs)
+                        .map_err(|e| anyhow::anyhow!("{path}: conservation: {e}"))?;
+                    let table = trace::attribution_table(&trace::attribution(&reqs));
+                    if args.flag("csv") {
+                        print!("{}", table.to_csv());
+                    } else {
+                        print!("{}", table.render());
+                        println!("traced requests: {}", reqs.len());
+                    }
+                }
+                other => anyhow::bail!("--format: expected jsonl|chrome, got '{other}'"),
             }
         }
         "fig5" => {
@@ -491,6 +566,11 @@ fn print_serve_report(r: &ServeReport) {
         println!("gc runs / wear      {:>7} / {}", r.gc_runs, r.wear_spread);
     }
     println!("energy              {:>11.1} J ({:.4} J/req)", r.energy_j, r.energy_per_req_j);
+    println!("des events          {:>14} ({} wakes)", r.engine_events, r.wake_events);
+    println!(
+        "queue depth         {:>10.2} avg / {} max  ({} inflight max)",
+        r.mean_queue_depth, r.max_queue_depth, r.max_inflight
+    );
     println!(
         "p99 SLO             {:>14}  [{}]",
         crate::util::human_secs(r.slo_p99_s),
@@ -551,7 +631,16 @@ fn serve_json(r: &ServeReport) -> crate::codec::json::Json {
         .set("ingest_writes", r.ingest_writes.into())
         .set("waf", r.waf.into())
         .set("gc_runs", r.gc_runs.into())
-        .set("wear_spread", (r.wear_spread as u64).into());
+        .set("wear_spread", (r.wear_spread as u64).into())
+        .set("engine_events", r.engine_events.into())
+        .set("host_done_events", r.host_done_events.into())
+        .set("csd_ack_events", r.csd_ack_events.into())
+        .set("wake_events", r.wake_events.into())
+        .set("flush_events", r.flush_events.into())
+        .set("ingest_events", r.ingest_events.into())
+        .set("max_queue_depth", r.max_queue_depth.into())
+        .set("mean_queue_depth", r.mean_queue_depth.into())
+        .set("max_inflight", r.max_inflight.into());
     let servers: Vec<Json> = r
         .per_server
         .iter()
@@ -630,7 +719,9 @@ fn report_json(r: &sched::RunReport) -> crate::codec::json::Json {
         .set("gc_runs", r.gc_runs.into())
         .set("wear_spread", (r.wear_spread as u64).into())
         .set("events_executed", r.events_executed.into())
-        .set("wake_events", r.wake_events.into());
+        .set("wake_events", r.wake_events.into())
+        .set("host_ack_events", r.host_ack_events.into())
+        .set("csd_ack_events", r.csd_ack_events.into());
     j
 }
 
@@ -867,6 +958,63 @@ mod tests {
         assert!(dispatch(&sv(&["serve", "--replicas", "1", "--scale", "0.01"])).is_err());
         // --fault-seed without a fault plan is meaningless
         assert!(dispatch(&sv(&["serve", "--fault-seed", "3", "--scale", "0.01"])).is_err());
+    }
+
+    #[test]
+    fn serve_trace_then_report_round_trip() {
+        // The ISSUE-9 CI smoke path: traced serve → JSONL export →
+        // trace-report reads it back and prints the attribution table.
+        let dir = std::env::temp_dir();
+        let jsonl = dir.join(format!("solana_cli_trace_{}.jsonl", std::process::id()));
+        let code = dispatch(&sv(&[
+            "serve", "--app", "sentiment", "--scale", "0.01", "--requests", "600",
+            "--trace", jsonl.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        assert!(jsonl.exists(), "serve --trace must write the export");
+        assert_eq!(
+            dispatch(&sv(&["trace-report", "--input", jsonl.to_str().unwrap()])).unwrap(),
+            0
+        );
+        assert_eq!(
+            dispatch(&sv(&["trace-report", "--input", jsonl.to_str().unwrap(), "--csv"])).unwrap(),
+            0
+        );
+        let _ = std::fs::remove_file(&jsonl);
+        // Chrome export validates through the same round trip.
+        let chrome = dir.join(format!("solana_cli_trace_{}.json", std::process::id()));
+        let code = dispatch(&sv(&[
+            "serve", "--app", "sentiment", "--scale", "0.01", "--requests", "600",
+            "--trace", chrome.to_str().unwrap(), "--trace-format", "chrome",
+            "--trace-sample", "4", "--json",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        assert_eq!(
+            dispatch(&sv(&[
+                "trace-report", "--input", chrome.to_str().unwrap(), "--format", "chrome",
+            ]))
+            .unwrap(),
+            0
+        );
+        let _ = std::fs::remove_file(&chrome);
+    }
+
+    #[test]
+    fn trace_flags_rejected_when_nonsense() {
+        assert!(dispatch(&sv(&[
+            "serve", "--scale", "0.01", "--trace", "/tmp/x", "--trace-format", "svg",
+        ]))
+        .is_err());
+        assert!(dispatch(&sv(&[
+            "serve", "--scale", "0.01", "--trace", "/tmp/x", "--trace-sample", "0",
+        ]))
+        .is_err());
+        assert!(dispatch(&sv(&["trace-report"])).is_err(), "--input is required");
+        assert!(
+            dispatch(&sv(&["trace-report", "--input", "/nonexistent/trace.jsonl"])).is_err()
+        );
     }
 
     #[test]

@@ -42,6 +42,7 @@ pub mod prop;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod trace;
 pub mod traffic;
 pub mod util;
 pub mod workloads;

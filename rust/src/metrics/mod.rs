@@ -16,7 +16,7 @@
 use std::collections::BTreeMap;
 
 use crate::codec::json::Json;
-use crate::util::stats::{percentile_sorted, Welford};
+use crate::util::stats::{percentile_sorted, Summary, Welford};
 
 /// A histogram with power-of-two-ish fixed buckets plus exact reservoir
 /// of up to `CAP` samples for accurate percentiles in reports.
@@ -72,6 +72,23 @@ impl Histogram {
         // contract (callers skip zero-count histograms before reporting).
         percentile_sorted(&sorted, pct).unwrap_or(f64::NAN)
     }
+
+    /// Every standard percentile from one sort of the reservoir. Report
+    /// emitters want several percentiles per histogram; calling
+    /// [`Histogram::percentile`] for each re-clones and re-sorts the
+    /// full reservoir every time (§Perf: `to_json` + `report` paid four
+    /// sorts of up to 65 536 samples per histogram). `None` when
+    /// nothing has been recorded.
+    pub fn summary(&self) -> Option<Summary> {
+        Summary::of(&self.samples)
+    }
+
+    /// Reservoir samples dropped beyond the cap (their moments are
+    /// still exact via Welford; only percentiles degrade to the
+    /// reservoir prefix).
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
 }
 
 /// A named point-in-time series (e.g. power draw over simulated time).
@@ -86,7 +103,18 @@ impl Series {
     }
 
     /// Trapezoidal integral — turns a power series (W) into energy (J).
+    ///
+    /// Requires the points to be in non-decreasing time order: an
+    /// out-of-order point contributes a *negative*-width trapezoid and
+    /// silently corrupts the total. Single-writer series are ordered by
+    /// construction (simulated time only moves forward);
+    /// [`Metrics::merge`] re-sorts concatenated series to restore the
+    /// invariant.
     pub fn integral(&self) -> f64 {
+        debug_assert!(
+            self.points.windows(2).all(|w| w[0].0 <= w[1].0),
+            "Series::integral requires time-ordered points"
+        );
         self.points
             .windows(2)
             .map(|w| 0.5 * (w[0].1 + w[1].1) * (w[1].0 - w[0].0))
@@ -213,6 +241,15 @@ impl Metrics {
 
     /// Merge another registry into this one (counters add, gauges take the
     /// other's values, histograms/series concatenate).
+    ///
+    /// Histogram overflow carries over: samples the source already
+    /// dropped from its reservoir stay counted as dropped here instead
+    /// of vanishing (their Welford moments are gone with the source —
+    /// only the reservoir samples can be re-recorded — so the merged
+    /// `count()` covers re-recorded samples while `overflow()` keeps
+    /// the full drop tally). Merged series are re-sorted by time so
+    /// [`Series::integral`]'s ordering invariant survives interleaved
+    /// writers.
     pub fn merge(&mut self, other: &Metrics) {
         for (k, &i) in &other.counter_index {
             self.inc(k, other.counter_vals[i]);
@@ -225,10 +262,15 @@ impl Metrics {
             for &s in &other.hist_store[i].samples {
                 self.hist_store[id.0].record(s);
             }
+            self.hist_store[id.0].overflow += other.hist_store[i].overflow;
         }
         for (k, s) in &other.series {
             let dst = self.series.entry(k.clone()).or_default();
             dst.points.extend_from_slice(&s.points);
+            // Blind concatenation interleaves two ordered timelines out
+            // of order; a stable sort on time restores the integral
+            // invariant without reordering same-timestamp points.
+            dst.points.sort_by(|a, b| a.0.total_cmp(&b.0));
         }
     }
 
@@ -247,15 +289,18 @@ impl Metrics {
         for (k, &i) in &self.hist_index {
             let h = &self.hist_store[i];
             // Pre-registered but never-recorded histograms (id handles
-            // are created eagerly) would emit NaN percentiles; skip them.
-            if h.count() == 0 {
-                continue;
-            }
+            // are created eagerly) would emit NaN percentiles; skip
+            // them. A non-zero count means the reservoir is non-empty
+            // (it fills before overflow starts), so the summary exists.
+            let s = match h.summary() {
+                Some(s) => s,
+                None => continue,
+            };
             let mut o = Json::obj();
             o.set("count", (h.count() as f64).into())
                 .set("mean", h.mean().into())
-                .set("p50", h.percentile(50.0).into())
-                .set("p99", h.percentile(99.0).into())
+                .set("p50", s.p50.into())
+                .set("p99", s.p99.into())
                 .set("max", h.max().into());
             hists.set(k, o);
         }
@@ -277,15 +322,16 @@ impl Metrics {
         }
         for (k, &i) in &self.hist_index {
             let h = &self.hist_store[i];
-            if h.count() == 0 {
-                continue;
-            }
+            let s = match h.summary() {
+                Some(s) => s,
+                None => continue,
+            };
             out.push_str(&format!(
                 "{k:<48} n={} mean={:.4} p50={:.4} p99={:.4}\n",
                 h.count(),
                 h.mean(),
-                h.percentile(50.0),
-                h.percentile(99.0)
+                s.p50,
+                s.p99
             ));
         }
         out
@@ -417,6 +463,54 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.counter("x"), 3.0);
         assert_eq!(a.histogram("lat").unwrap().count(), 2);
+    }
+
+    #[test]
+    fn merge_carries_histogram_overflow() {
+        // A source reservoir that already dropped samples must not have
+        // those drops vanish in the merge: overflow tallies add.
+        let mut b = Metrics::new();
+        let id = b.histogram_id("lat");
+        b.hist_store[id.0] = Histogram::with_capacity(4);
+        for i in 0..10 {
+            b.observe("lat", i as f64);
+        }
+        assert_eq!(b.histogram("lat").unwrap().overflow(), 6);
+        let mut a = Metrics::new();
+        a.observe("lat", 99.0);
+        a.merge(&b);
+        let h = a.histogram("lat").unwrap();
+        assert_eq!(h.overflow(), 6, "source overflow must carry over");
+        assert_eq!(h.count(), 5, "1 local + 4 reservoir samples re-recorded");
+    }
+
+    #[test]
+    fn merge_restores_series_time_order() {
+        // Two ordered timelines interleave out of order under blind
+        // concatenation; merge must re-sort so integral() stays valid.
+        let mut a = Metrics::new();
+        a.sample("p", 0.0, 100.0);
+        a.sample("p", 10.0, 100.0);
+        let mut b = Metrics::new();
+        b.sample("p", 5.0, 100.0);
+        b.sample("p", 15.0, 100.0);
+        a.merge(&b);
+        let s = a.series("p").unwrap();
+        assert!(s.points.windows(2).all(|w| w[0].0 <= w[1].0));
+        assert!((s.integral() - 1500.0).abs() < 1e-9); // 100 W × 15 s
+    }
+
+    #[test]
+    fn summary_matches_per_call_percentiles() {
+        let mut h = Histogram::default();
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        let s = h.summary().unwrap();
+        assert_eq!(s.p50.to_bits(), h.percentile(50.0).to_bits());
+        assert_eq!(s.p99.to_bits(), h.percentile(99.0).to_bits());
+        assert_eq!(s.p999.to_bits(), h.percentile(99.9).to_bits());
+        assert!(Histogram::default().summary().is_none());
     }
 
     #[test]

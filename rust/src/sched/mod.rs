@@ -234,6 +234,12 @@ pub struct RunReport {
     pub gc_runs: u64,
     /// Worst per-drive max−min block erase-count spread (wear quality).
     pub wear_spread: u32,
+    /// Host acks among `events_executed` (self-profiling diagnostic;
+    /// like the event counts, excluded from `check_bit_identical`).
+    pub host_ack_events: u64,
+    /// CSD acks among `events_executed` (batched acks count each
+    /// member). Excluded from `check_bit_identical`.
+    pub csd_ack_events: u64,
 }
 
 impl RunReport {
@@ -356,6 +362,49 @@ impl AckGroups {
 /// read).
 pub(crate) const SHARD: &str = "shard.dat";
 
+/// Per-dispatch-pass timing observations captured for the request
+/// tracer. `None` (the default, and always in batch mode / traced-off
+/// serving) keeps the dispatch bodies on exactly the pre-trace code
+/// path; when armed, the bodies additionally record read-only device
+/// queries — they never feed a value back into the simulation.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct DispatchTrace {
+    pub(crate) host: Option<HostBatchTiming>,
+    /// `(drive, timing)` in dispatch order.
+    pub(crate) csd: Vec<(usize, CsdBatchTiming)>,
+}
+
+/// Timing decomposition of one host batch dispatch.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct HostBatchTiming {
+    /// Seconds of GC overhang (worst drive) the batch's reads queue
+    /// behind at dispatch time.
+    pub(crate) gc_overhang: f64,
+    /// ECC-engine busy seconds consumed by this batch's flash reads.
+    pub(crate) ecc_secs: f64,
+    /// All shard reads landed in host memory.
+    pub(crate) io_done: f64,
+    /// Host compute finished (the ack time).
+    pub(crate) done: f64,
+}
+
+/// Timing decomposition of one CSD batch dispatch.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct CsdBatchTiming {
+    /// Dispatch message delivered to the ISP over the tunnel.
+    pub(crate) delivered: f64,
+    /// Seconds of GC overhang on this drive at delivery.
+    pub(crate) gc_overhang: f64,
+    /// ECC-engine busy seconds consumed by this batch's flash reads.
+    pub(crate) ecc_secs: f64,
+    /// Flash reads into drive DRAM finished.
+    pub(crate) read_done: f64,
+    /// ISP compute finished.
+    pub(crate) done: f64,
+    /// Result/ack delivered back to the host.
+    pub(crate) ack: f64,
+}
+
 /// Mutable protocol state plus the dispatch routines shared by both
 /// dispatch modes. The host- and CSD-dispatch bodies live here so the
 /// `Wake` arm (polling) and the `HostDone`/`CsdAck`/`CsdAckBatch` arms
@@ -401,6 +450,10 @@ pub(crate) struct SchedState<'a> {
     host_batch_target: u64,
     host_lat: HistogramId,
     csd_lat: HistogramId,
+    /// Armed by the serving engine (only while its tracer is on) before
+    /// each dispatch pass; the dispatch bodies fill it with read-only
+    /// timing observations. `None` everywhere else.
+    pub(crate) trace: Option<Box<DispatchTrace>>,
 }
 
 impl<'a> SchedState<'a> {
@@ -440,6 +493,7 @@ impl<'a> SchedState<'a> {
             host_batch_target: cfg.host_batch(),
             host_lat: metrics.histogram_id("sched.host_batch_latency"),
             csd_lat: metrics.histogram_id("sched.csd_batch_latency"),
+            trace: None,
         }
     }
 
@@ -483,6 +537,17 @@ impl<'a> SchedState<'a> {
             remaining_at_wake
         };
         let take = self.host_batch_target.min(remaining_at_wake).min(fair);
+        // Read-only tracer snapshots (no-ops unless the serving engine
+        // armed `self.trace`; never fed back into the simulation).
+        let tracing = self.trace.is_some();
+        let mut ecc_before = 0.0;
+        let mut gc_overhang = 0.0;
+        if tracing {
+            for d in 0..self.cfg.drives {
+                ecc_before += self.server.ecc_busy_secs(d);
+                gc_overhang = gc_overhang.max(self.server.gc_busy_until(d) - now);
+            }
+        }
         // Proportional take across shards: every drive's shard drains at
         // the same fractional rate, keeping each CSD's local work alive
         // (an ISP can only process items on its own flash). On ISP
@@ -536,6 +601,20 @@ impl<'a> SchedState<'a> {
             self.host_busy_secs += done - now;
             self.host_idle = false;
             self.host_batches += 1;
+            if tracing {
+                let mut ecc_after = 0.0;
+                for d in 0..self.cfg.drives {
+                    ecc_after += self.server.ecc_busy_secs(d);
+                }
+                if let Some(tr) = self.trace.as_mut() {
+                    tr.host = Some(HostBatchTiming {
+                        gc_overhang: gc_overhang.max(0.0),
+                        ecc_secs: (ecc_after - ecc_before).max(0.0),
+                        io_done,
+                        done,
+                    });
+                }
+            }
             q.schedule_at(done, Ev::HostDone { items: taken, dispatched: now });
         }
         Ok(())
@@ -552,6 +631,7 @@ impl<'a> SchedState<'a> {
         }
         self.cand_buf.clear();
         self.cand_buf.extend(self.idle_isp.iter().copied());
+        let tracing = self.trace.is_some();
         let mut groups = AckGroups::new();
         for i in 0..self.cand_buf.len() {
             let d = self.cand_buf[i];
@@ -566,6 +646,7 @@ impl<'a> SchedState<'a> {
             self.total_remaining -= n;
             // dispatch message: header + the item indexes only
             let delivered = self.server.send_to_isp(now, d, 64 + 8 * n);
+            let ecc_before = if tracing { self.server.ecc_busy_secs(d) } else { 0.0 };
             let bytes = n * self.model.bytes_per_item;
             let r = self.server.isp_read(delivered, d, SHARD, self.shard_offset[d], bytes)?;
             self.shard_offset[d] += bytes;
@@ -576,6 +657,23 @@ impl<'a> SchedState<'a> {
             let ack = self
                 .server
                 .send_to_host(done, d, 64 + n * self.model.output_bytes_per_item);
+            if tracing {
+                let gc_overhang = (self.server.gc_busy_until(d) - delivered).max(0.0);
+                let ecc_secs = (self.server.ecc_busy_secs(d) - ecc_before).max(0.0);
+                if let Some(tr) = self.trace.as_mut() {
+                    tr.csd.push((
+                        d,
+                        CsdBatchTiming {
+                            delivered,
+                            gc_overhang,
+                            ecc_secs,
+                            read_done: r.done,
+                            done,
+                            ack,
+                        },
+                    ));
+                }
+            }
             self.isp_busy_secs += done - delivered;
             self.idle_isp.remove(&d);
             self.csd_busy += 1;
@@ -636,10 +734,13 @@ pub fn run(
     let event_driven = cfg.dispatch == DispatchMode::EventDriven;
     let mut st = SchedState::new(model, cfg, server, shard_remaining, t0, metrics);
     let mut wake_events = 0u64;
+    let mut host_ack_events = 0u64;
+    let mut csd_ack_events = 0u64;
 
     while let Some((now, ev)) = q.pop() {
         match ev {
             Ev::HostDone { items, dispatched } => {
+                host_ack_events += 1;
                 st.host_done(now, items, dispatched, metrics);
                 if event_driven {
                     // Re-arm the host the moment its ack pops (off-grid).
@@ -647,6 +748,7 @@ pub fn run(
                 }
             }
             Ev::CsdAck { drive, items, dispatched } => {
+                csd_ack_events += 1;
                 st.csd_ack(now, drive, items, dispatched, metrics);
                 if event_driven {
                     st.dispatch_csds(now, &mut q, false)?;
@@ -657,6 +759,7 @@ pub fn run(
                 // every event-driven dispatch_csds call passes
                 // coalesce = false, so no re-dispatch is needed here.
                 debug_assert!(!event_driven, "CsdAckBatch cannot occur in event-driven mode");
+                csd_ack_events += acks.len() as u64;
                 for (drive, items) in acks {
                     st.csd_ack(now, drive, items, dispatched, metrics);
                 }
@@ -760,6 +863,8 @@ pub fn run(
         waf: ftl.waf(),
         gc_runs: ftl.gc_runs,
         wear_spread,
+        host_ack_events,
+        csd_ack_events,
     })
 }
 

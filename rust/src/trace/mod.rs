@@ -1,0 +1,1382 @@
+//! Deterministic request tracing + tail-latency attribution.
+//!
+//! Every serving figure in this repo asserts *tail* behaviour (fig9
+//! load, fig11 faults, fig13 GC) — this module explains it. A
+//! [`Tracer`] threads through the whole serving path
+//! (`traffic::balancer` front door → `traffic::engine` →
+//! `sched` dispatch → `csd`/`cluster` device models) and records, per
+//! sampled request, a **span timeline** in *simulated* time: where the
+//! request waited (`admission`, `formation_wait`, `dispatch_wait`),
+//! where it executed (`host_io`/`flash_read`/`isp_compute`/…), and
+//! what interfered (`gc_stall`, `ecc`, `stall`, `rack_link`,
+//! `retry[n]`, `hedge`, `failover_redirect`).
+//!
+//! Design contract (property-pinned in `tests/trace_conservation.rs`):
+//!
+//! - **Zero overhead when off.** [`Tracer::Off`] (the default) makes
+//!   every record call a no-op and draws no RNG; traced-off runs are
+//!   bit-identical to pre-trace behaviour, and traced-ON runs produce
+//!   bit-identical *reports* too (tracing is read-only).
+//! - **No wall clocks.** All timestamps are simulated seconds
+//!   (solana-lint's `wall-clock` rule covers this module).
+//! - **Deterministic sampling.** A request is traced iff
+//!   `id % sample_every == 0` — seeded by the request id, not the RNG
+//!   stream, so sampling never perturbs the simulation and the traced
+//!   subset is reproducible.
+//! - **Conservation.** For every finalized request,
+//!   `sum(phase durations) == end_to_end latency` **to the bit**
+//!   (left-fold order). The terminal phase absorbs IEEE-754 residue:
+//!   its `dur` may differ from `t1 - t0` by an ulp.
+//!
+//! Timelines are recorded as *marks*: each mark ends a phase of the
+//! given kind that began at the previous mark (the first phase begins
+//! at arrival). Finalization stable-sorts marks by time, clamps them
+//! monotonically into `[arrival, done]`, and converts consecutive
+//! diffs into [`Phase`]s. A request with no marks (e.g. shed at the
+//! door) collapses to a single `admission` phase.
+//!
+//! Exporters: Chrome trace-event JSON ([`chrome_trace`], loadable in
+//! Perfetto / `chrome://tracing`, one process per server, one thread
+//! track per drive) and JSONL ([`to_jsonl`], one span per line,
+//! re-importable via [`parse_jsonl`] for `solana trace-report`).
+
+use std::collections::BTreeMap;
+
+use crate::codec::json::Json;
+use crate::metrics::Table;
+use crate::util::stats::percentile_sorted;
+
+// ---------------------------------------------------------------------------
+// Span taxonomy
+// ---------------------------------------------------------------------------
+
+/// Phase kinds a request timeline decomposes into. Ordered roughly by
+/// pipeline position; the `Ord` impl only matters for stable grouping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Front-door admission + per-shard queueing before batch formation.
+    Admission,
+    /// Waiting for the batch to fill to `min_batch` (formation gate).
+    FormationWait,
+    /// Formation satisfied → actual dispatch (the polling-grid tax; ~0
+    /// under `DispatchMode::EventDriven`).
+    DispatchWait,
+    /// PCIe/DMA tunnel transfer to or from a CSD.
+    Tunnel,
+    /// Blocked behind garbage collection on the target drive.
+    GcStall,
+    /// NAND flash array read on the drive.
+    FlashRead,
+    /// ECC decode on the drive's FCU.
+    Ecc,
+    /// Host-path SSD read (baseline data movement over PCIe).
+    HostIo,
+    /// Host CPU compute on host-path batches.
+    HostCompute,
+    /// In-storage (ISP) compute on the drive.
+    IspCompute,
+    /// Top-of-rack link hop between servers.
+    RackLink,
+    /// A timed-out attempt; the phase covers the wasted attempt time.
+    Retry,
+    /// A hedged (duplicate) request was launched at this point.
+    Hedge,
+    /// The attempt was redirected to a replica on another server.
+    FailoverRedirect,
+    /// Injected drive stall (fault plan).
+    Stall,
+}
+
+/// All kinds, for exhaustive reporting/tests.
+pub const SPAN_KINDS: [SpanKind; 15] = [
+    SpanKind::Admission,
+    SpanKind::FormationWait,
+    SpanKind::DispatchWait,
+    SpanKind::Tunnel,
+    SpanKind::GcStall,
+    SpanKind::FlashRead,
+    SpanKind::Ecc,
+    SpanKind::HostIo,
+    SpanKind::HostCompute,
+    SpanKind::IspCompute,
+    SpanKind::RackLink,
+    SpanKind::Retry,
+    SpanKind::Hedge,
+    SpanKind::FailoverRedirect,
+    SpanKind::Stall,
+];
+
+impl SpanKind {
+    pub fn base_name(self) -> &'static str {
+        match self {
+            SpanKind::Admission => "admission",
+            SpanKind::FormationWait => "formation_wait",
+            SpanKind::DispatchWait => "dispatch_wait",
+            SpanKind::Tunnel => "tunnel",
+            SpanKind::GcStall => "gc_stall",
+            SpanKind::FlashRead => "flash_read",
+            SpanKind::Ecc => "ecc",
+            SpanKind::HostIo => "host_io",
+            SpanKind::HostCompute => "host_compute",
+            SpanKind::IspCompute => "isp_compute",
+            SpanKind::RackLink => "rack_link",
+            SpanKind::Retry => "retry",
+            SpanKind::Hedge => "hedge",
+            SpanKind::FailoverRedirect => "failover_redirect",
+            SpanKind::Stall => "stall",
+        }
+    }
+
+    /// Report label; `retry` carries the attempt number (`retry[2]`).
+    pub fn label(self, attempt: u32) -> String {
+        match self {
+            SpanKind::Retry => format!("retry[{attempt}]"),
+            _ => self.base_name().to_string(),
+        }
+    }
+
+    /// Inverse of [`SpanKind::label`] modulo the attempt number (which
+    /// the JSONL span record carries separately).
+    pub fn parse(name: &str) -> Option<SpanKind> {
+        if name.starts_with("retry[") && name.ends_with(']') {
+            return Some(SpanKind::Retry);
+        }
+        SPAN_KINDS.iter().copied().find(|k| k.base_name() == name)
+    }
+}
+
+/// Terminal state of a traced request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// First response delivered back to the front door.
+    Served,
+    /// Rejected by admission control (zero-width timeline).
+    Shed,
+    /// All retry attempts exhausted (or still in flight at end of run).
+    Failed,
+}
+
+impl Outcome {
+    pub fn name(self) -> &'static str {
+        match self {
+            Outcome::Served => "served",
+            Outcome::Shed => "shed",
+            Outcome::Failed => "failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Outcome> {
+        match s {
+            "served" => Some(Outcome::Served),
+            "shed" => Some(Outcome::Shed),
+            "failed" => Some(Outcome::Failed),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tracer
+// ---------------------------------------------------------------------------
+
+/// A recorded mark: ends a phase of `kind` that started at the
+/// previous mark (or at arrival).
+#[derive(Clone, Copy, Debug)]
+struct Mark {
+    kind: SpanKind,
+    t: f64,
+    /// Drive index, or -1 for host/front-door phases.
+    drive: i64,
+    attempt: u32,
+}
+
+#[derive(Clone, Debug)]
+struct ReqBuf {
+    arrival: f64,
+    server: u32,
+    marks: Vec<Mark>,
+    done: Option<(f64, Outcome)>,
+}
+
+/// Backing store for an armed tracer. Keyed by request id in a
+/// `BTreeMap` so finalization order is deterministic.
+#[derive(Clone, Debug)]
+pub struct TraceBuf {
+    sample_every: u64,
+    /// 0 = unbounded; > 0 = bounded ring evicting the smallest id.
+    cap: usize,
+    server: u32,
+    by_req: BTreeMap<u64, ReqBuf>,
+    dropped: u64,
+}
+
+/// Span tracer sink. `Off` (the default) is a guaranteed no-op: every
+/// record method returns immediately, so traced-off runs take the
+/// exact pre-trace code path.
+#[derive(Clone, Debug, Default)]
+pub enum Tracer {
+    #[default]
+    Off,
+    On(Box<TraceBuf>),
+}
+
+impl Tracer {
+    /// Unbounded in-memory sink keeping every `id % sample_every == 0`
+    /// request.
+    pub fn in_memory(sample_every: u64) -> Tracer {
+        Tracer::ring(0, sample_every)
+    }
+
+    /// Bounded ring sink: at most `cap` request timelines are retained
+    /// (`cap == 0` means unbounded); on overflow the smallest id is
+    /// evicted and counted in [`Tracer::dropped`].
+    pub fn ring(cap: usize, sample_every: u64) -> Tracer {
+        Tracer::On(Box::new(TraceBuf {
+            sample_every: sample_every.max(1),
+            cap,
+            server: 0,
+            by_req: BTreeMap::new(),
+            dropped: 0,
+        }))
+    }
+
+    pub fn is_on(&self) -> bool {
+        matches!(self, Tracer::On(_))
+    }
+
+    /// A per-engine child tracer with the same sampling/capacity
+    /// configuration, tagged with `server`, and an empty buffer. A
+    /// child of `Off` is `Off`.
+    pub fn child(&self, server: u32) -> Tracer {
+        match self {
+            Tracer::Off => Tracer::Off,
+            Tracer::On(b) => Tracer::On(Box::new(TraceBuf {
+                sample_every: b.sample_every,
+                cap: b.cap,
+                server,
+                by_req: BTreeMap::new(),
+                dropped: 0,
+            })),
+        }
+    }
+
+    /// Deterministic sampling predicate: trace iff the tracer is armed
+    /// and `id % sample_every == 0`. Keyed by request id — never by an
+    /// RNG draw — so sampling cannot perturb the simulation.
+    #[inline]
+    pub fn wants(&self, id: u64) -> bool {
+        match self {
+            Tracer::Off => false,
+            Tracer::On(b) => id % b.sample_every == 0,
+        }
+    }
+
+    /// Open a timeline for `id` at simulated time `t`, tagged with this
+    /// tracer's own server index. Idempotent (keeps the earliest
+    /// arrival).
+    pub fn begin(&mut self, id: u64, t: f64) {
+        let server = match self {
+            Tracer::Off => return,
+            Tracer::On(b) => b.server,
+        };
+        self.begin_on(id, t, server);
+    }
+
+    /// Open a timeline for `id` with an explicit owning server (used by
+    /// the front-door master tracer).
+    pub fn begin_on(&mut self, id: u64, t: f64, server: u32) {
+        let Tracer::On(b) = self else { return };
+        if id % b.sample_every != 0 {
+            return;
+        }
+        if let Some(r) = b.by_req.get_mut(&id) {
+            if t < r.arrival {
+                r.arrival = t;
+            }
+            return;
+        }
+        if b.cap > 0 && b.by_req.len() >= b.cap {
+            b.by_req.pop_first();
+            b.dropped += 1;
+        }
+        b.by_req
+            .insert(id, ReqBuf { arrival: t, server, marks: Vec::new(), done: None });
+    }
+
+    /// End a host/front-door phase of `kind` at time `t`.
+    #[inline]
+    pub fn mark(&mut self, id: u64, kind: SpanKind, t: f64) {
+        self.push_mark(id, kind, t, -1, 0);
+    }
+
+    /// End a device phase of `kind` at time `t` on `drive`.
+    #[inline]
+    pub fn mark_drive(&mut self, id: u64, kind: SpanKind, t: f64, drive: usize) {
+        self.push_mark(id, kind, t, drive as i64, 0);
+    }
+
+    /// End a phase carrying an attempt number (`retry[n]`, `hedge`).
+    #[inline]
+    pub fn mark_attempt(&mut self, id: u64, kind: SpanKind, t: f64, attempt: u32) {
+        self.push_mark(id, kind, t, -1, attempt);
+    }
+
+    fn push_mark(&mut self, id: u64, kind: SpanKind, t: f64, drive: i64, attempt: u32) {
+        let Tracer::On(b) = self else { return };
+        if let Some(r) = b.by_req.get_mut(&id) {
+            r.marks.push(Mark { kind, t, drive, attempt });
+        }
+    }
+
+    /// Close the timeline at `t` with `outcome`. First close wins
+    /// (duplicate deliveries are suppressed upstream, but be safe).
+    pub fn finish(&mut self, id: u64, t: f64, outcome: Outcome) {
+        let Tracer::On(b) = self else { return };
+        if let Some(r) = b.by_req.get_mut(&id) {
+            if r.done.is_none() {
+                r.done = Some((t, outcome));
+            }
+        }
+    }
+
+    /// Fold a per-engine child tracer into this (master) one: marks
+    /// append, arrivals keep the minimum, the first close wins.
+    pub fn merge(&mut self, child: Tracer) {
+        let Tracer::On(b) = self else { return };
+        let Tracer::On(c) = child else { return };
+        b.dropped += c.dropped;
+        for (id, cr) in c.by_req {
+            match b.by_req.get_mut(&id) {
+                Some(r) => {
+                    if cr.arrival < r.arrival {
+                        r.arrival = cr.arrival;
+                    }
+                    r.marks.extend(cr.marks);
+                    if r.done.is_none() {
+                        r.done = cr.done;
+                    }
+                }
+                None => {
+                    if b.cap > 0 && b.by_req.len() >= b.cap {
+                        b.by_req.pop_first();
+                        b.dropped += 1;
+                    }
+                    b.by_req.insert(id, cr);
+                }
+            }
+        }
+    }
+
+    /// Timelines evicted by the ring bound so far.
+    pub fn dropped(&self) -> u64 {
+        match self {
+            Tracer::Off => 0,
+            Tracer::On(b) => b.dropped,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tracer::Off => 0,
+            Tracer::On(b) => b.by_req.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drain and finalize every closed timeline (ascending request id).
+    /// Returns the traces plus the count of unfinished (never-closed)
+    /// timelines that were discarded.
+    pub fn take_requests(&mut self) -> (Vec<RequestTrace>, u64) {
+        let Tracer::On(b) = self else { return (Vec::new(), 0) };
+        let by_req = std::mem::take(&mut b.by_req);
+        let mut out = Vec::new();
+        let mut unfinished = 0u64;
+        for (id, r) in by_req {
+            match finalize(id, r) {
+                Some(tr) => out.push(tr),
+                None => unfinished += 1,
+            }
+        }
+        (out, unfinished)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Finalized timelines
+// ---------------------------------------------------------------------------
+
+/// One contiguous phase of a finalized request timeline.
+#[derive(Clone, Debug)]
+pub struct Phase {
+    pub kind: SpanKind,
+    pub attempt: u32,
+    /// Drive index, or -1 for host/front-door phases.
+    pub drive: i64,
+    pub t0: f64,
+    pub t1: f64,
+    /// Duration in seconds. The terminal phase of each request absorbs
+    /// IEEE-754 residue so that the left-fold of `dur` equals
+    /// `end_to_end()` bit-for-bit; it may therefore differ from
+    /// `t1 - t0` by an ulp (and can even be ≤ 0 by an ulp).
+    pub dur: f64,
+}
+
+/// A finalized per-request span timeline: contiguous phases covering
+/// `[arrival, done]` exactly.
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    pub id: u64,
+    pub server: u32,
+    pub arrival: f64,
+    pub done: f64,
+    pub outcome: Outcome,
+    pub phases: Vec<Phase>,
+}
+
+impl RequestTrace {
+    pub fn end_to_end(&self) -> f64 {
+        self.done - self.arrival
+    }
+
+    /// Left-fold sum of phase durations, in phase order — the order the
+    /// conservation invariant is defined over.
+    pub fn phase_sum(&self) -> f64 {
+        let mut s = 0.0;
+        for p in &self.phases {
+            s += p.dur;
+        }
+        s
+    }
+}
+
+fn finalize(id: u64, r: ReqBuf) -> Option<RequestTrace> {
+    let (done, outcome) = r.done?;
+    let arrival = r.arrival;
+    let done = done.max(arrival);
+    let e2e = done - arrival;
+    let mut marks = r.marks;
+    // Stable by simulated time: ties keep insertion order, which is the
+    // order the pipeline emitted them.
+    marks.sort_by(|a, b| a.t.total_cmp(&b.t));
+    let mut prev = arrival;
+    for m in &mut marks {
+        m.t = m.t.max(prev).min(done);
+        prev = m.t;
+    }
+    let mut phases: Vec<Phase> = Vec::new();
+    if marks.is_empty() {
+        // No pipeline marks (e.g. shed at the door): one admission
+        // phase covers the whole (possibly zero-width) timeline.
+        phases.push(Phase {
+            kind: SpanKind::Admission,
+            attempt: 0,
+            drive: -1,
+            t0: arrival,
+            t1: done,
+            dur: e2e,
+        });
+    } else {
+        let mut t0 = arrival;
+        for m in &marks {
+            phases.push(Phase {
+                kind: m.kind,
+                attempt: m.attempt,
+                drive: m.drive,
+                t0,
+                t1: m.t,
+                dur: m.t - t0,
+            });
+            t0 = m.t;
+        }
+        // The terminal phase stretches to `done` and takes the exact
+        // remainder; `fl(S + fl(E-S)) == E` is NOT an IEEE identity, so
+        // a (bounded, normally 0-iteration) fixup nudges the last dur
+        // until the left-fold reproduces e2e bit-for-bit.
+        let n = phases.len();
+        let mut sum_prev = 0.0;
+        for p in &phases[..n - 1] {
+            sum_prev += p.dur;
+        }
+        phases[n - 1].t1 = done;
+        phases[n - 1].dur = e2e - sum_prev;
+        for _ in 0..8 {
+            let mut tot = 0.0;
+            for p in &phases {
+                tot += p.dur;
+            }
+            if tot.to_bits() == e2e.to_bits() {
+                break;
+            }
+            phases[n - 1].dur += e2e - tot;
+        }
+    }
+    Some(RequestTrace { id, server: r.server, arrival, done, outcome, phases })
+}
+
+/// Check the conservation invariant over finalized traces: every
+/// request's phase durations left-fold to its end-to-end latency
+/// bit-for-bit, and every request has at least one phase.
+pub fn verify_conservation(reqs: &[RequestTrace]) -> Result<(), String> {
+    for r in reqs {
+        if r.phases.is_empty() {
+            return Err(format!("request {}: no phases", r.id));
+        }
+        let sum = r.phase_sum();
+        let e2e = r.end_to_end();
+        if sum.to_bits() != e2e.to_bits() {
+            return Err(format!(
+                "request {}: phase sum {sum:?} != end-to-end {e2e:?} (bitwise)",
+                r.id
+            ));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Tail-latency attribution
+// ---------------------------------------------------------------------------
+
+/// Phase decomposition of the requests at or above a latency
+/// percentile ("where does the p99 live").
+#[derive(Clone, Debug)]
+pub struct BandAttribution {
+    pub band: String,
+    /// Latency threshold defining band membership (seconds).
+    pub threshold_s: f64,
+    /// Number of member requests.
+    pub requests: usize,
+    /// `(phase label, total seconds across members, share of band
+    /// end-to-end)`, sorted by descending total (label breaks ties).
+    pub phases: Vec<(String, f64, f64)>,
+}
+
+impl BandAttribution {
+    /// The phase this band spends the most time in.
+    pub fn dominant(&self) -> Option<&(String, f64, f64)> {
+        self.phases.first()
+    }
+
+    /// Share of band end-to-end attributed to `label` (0.0 if absent).
+    pub fn share_of(&self, label: &str) -> f64 {
+        self.phases
+            .iter()
+            .find(|(l, _, _)| l == label)
+            .map(|(_, _, s)| *s)
+            .unwrap_or(0.0)
+    }
+}
+
+/// Decompose request latency into phase components for the standard
+/// percentile bands (`all`, `p50`, `p99`, `p99.9`). A band holds every
+/// request whose end-to-end latency is ≥ that percentile of the whole
+/// population.
+pub fn attribution(reqs: &[RequestTrace]) -> Vec<BandAttribution> {
+    let mut sorted: Vec<f64> = reqs.iter().map(|r| r.end_to_end()).collect();
+    sorted.sort_by(f64::total_cmp);
+    let mut out = Vec::new();
+    for (band, pct) in [("all", 0.0), ("p50", 50.0), ("p99", 99.0), ("p99.9", 99.9)] {
+        let Some(p) = percentile_sorted(&sorted, pct) else { continue };
+        let threshold = if pct == 0.0 { f64::NEG_INFINITY } else { p };
+        let mut totals: BTreeMap<String, f64> = BTreeMap::new();
+        let mut members = 0usize;
+        let mut e2e_total = 0.0;
+        for r in reqs {
+            if r.end_to_end() < threshold {
+                continue;
+            }
+            members += 1;
+            e2e_total += r.end_to_end();
+            for ph in &r.phases {
+                *totals.entry(ph.kind.label(ph.attempt)).or_insert(0.0) += ph.dur;
+            }
+        }
+        if members == 0 {
+            continue;
+        }
+        let mut phases: Vec<(String, f64, f64)> = totals
+            .into_iter()
+            .map(|(k, v)| {
+                let share = if e2e_total > 0.0 { v / e2e_total } else { 0.0 };
+                (k, v, share)
+            })
+            .collect();
+        phases.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        out.push(BandAttribution {
+            band: band.to_string(),
+            threshold_s: if pct == 0.0 { sorted.first().copied().unwrap_or(0.0) } else { p },
+            requests: members,
+            phases,
+        });
+    }
+    out
+}
+
+/// Render attribution bands as a fixed-width report table.
+pub fn attribution_table(bands: &[BandAttribution]) -> Table {
+    let mut t = Table::new(
+        "Tail-latency attribution (phase share of band end-to-end)",
+        &["band", "threshold_s", "requests", "phase", "mean_s", "share_%"],
+    );
+    for b in bands {
+        let nreq = b.requests;
+        for (i, (label, tot, share)) in b.phases.iter().enumerate() {
+            let (band, thr, reqs) = if i == 0 {
+                (b.band.clone(), format!("{:.6}", b.threshold_s), nreq.to_string())
+            } else {
+                (String::new(), String::new(), String::new())
+            };
+            let mean = if nreq > 0 { tot / nreq as f64 } else { 0.0 };
+            t.row(vec![
+                band,
+                thr,
+                reqs,
+                label.clone(),
+                format!("{mean:.6}"),
+                format!("{:.2}", share * 100.0),
+            ]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event exporter
+// ---------------------------------------------------------------------------
+
+/// Thread-track assignment inside a server's process: 0 = front door,
+/// 1 = host path, 2+d = drive d.
+fn track_of(p: &Phase) -> u32 {
+    let device = matches!(
+        p.kind,
+        SpanKind::HostIo
+            | SpanKind::HostCompute
+            | SpanKind::GcStall
+            | SpanKind::Ecc
+            | SpanKind::FlashRead
+            | SpanKind::IspCompute
+            | SpanKind::Tunnel
+    );
+    if !device {
+        0
+    } else if p.drive >= 0 {
+        2 + p.drive as u32
+    } else {
+        1
+    }
+}
+
+fn chrome_event(name: &str, ph: &str, ts: f64, pid: u32, tid: u32, id: u64) -> Json {
+    let mut e = Json::obj();
+    e.set("name", name.into())
+        .set("cat", "span".into())
+        .set("ph", ph.into())
+        .set("ts", ts.into())
+        .set("pid", (pid as u64).into())
+        .set("tid", (tid as u64).into());
+    let mut args = Json::obj();
+    args.set("req", id.into());
+    e.set("args", args);
+    e
+}
+
+fn chrome_meta(name: &str, value: &str, pid: u32, tid: u32) -> Json {
+    let mut e = Json::obj();
+    e.set("name", name.into())
+        .set("ph", "M".into())
+        .set("ts", 0.0.into())
+        .set("pid", (pid as u64).into())
+        .set("tid", (tid as u64).into());
+    let mut args = Json::obj();
+    args.set("name", value.into());
+    e.set("args", args);
+    e
+}
+
+/// Export finalized traces as Chrome trace-event JSON
+/// (`{"traceEvents": [...]}`), loadable in Perfetto or
+/// `chrome://tracing`. One process per server; thread 0 is the front
+/// door (`ph:"X"` complete events, one per phase, overlapping requests
+/// allowed), thread 1 the host path, thread 2+d drive d (`ph:"B"/"E"`
+/// pairs with proper nesting). Timestamps are simulated microseconds,
+/// globally non-decreasing across the event array.
+pub fn chrome_trace(reqs: &[RequestTrace]) -> Json {
+    // Group phases per (server pid, thread track).
+    type Span = (f64, f64, usize, String, u64);
+    let mut tracks: BTreeMap<(u32, u32), Vec<Span>> = BTreeMap::new();
+    let mut seq = 0usize;
+    for r in reqs {
+        for p in &r.phases {
+            let tid = track_of(p);
+            tracks
+                .entry((r.server, tid))
+                .or_default()
+                .push((p.t0, p.t1, seq, p.kind.label(p.attempt), r.id));
+            seq += 1;
+        }
+    }
+    let mut meta: Vec<Json> = Vec::new();
+    let mut last_pid: Option<u32> = None;
+    for &(pid, tid) in tracks.keys() {
+        if last_pid != Some(pid) {
+            meta.push(chrome_meta("process_name", &format!("server {pid}"), pid, 0));
+            last_pid = Some(pid);
+        }
+        let tname = match tid {
+            0 => "frontdoor".to_string(),
+            1 => "host".to_string(),
+            d => format!("drive {}", d - 2),
+        };
+        meta.push(chrome_meta("thread_name", &tname, pid, tid));
+    }
+    let mut events: Vec<(f64, Json)> = Vec::new();
+    for ((pid, tid), mut spans) in tracks {
+        if tid == 0 {
+            // Front door: complete events; requests overlap freely.
+            for (t0, t1, _seq, name, id) in spans {
+                let mut e = chrome_event(&name, "X", t0 * 1e6, pid, tid, id);
+                e.set("dur", ((t1 - t0).max(0.0) * 1e6).into());
+                events.push((t0 * 1e6, e));
+            }
+            continue;
+        }
+        // Device tracks: laminar B/E nesting via a lazy-close stack.
+        // Sort containers first (t0 asc, t1 desc), then emit B events,
+        // closing every open span that ends at or before the new start.
+        spans.sort_by(|a, b| {
+            a.0.total_cmp(&b.0).then(b.1.total_cmp(&a.1)).then(a.2.cmp(&b.2))
+        });
+        let mut stack: Vec<(String, f64, u64)> = Vec::new();
+        for (t0, mut t1, _seq, name, id) in spans {
+            while let Some(top) = stack.last() {
+                if top.1 <= t0 {
+                    let (n, te, tid_req) = (top.0.clone(), top.1, top.2);
+                    stack.pop();
+                    events.push((te * 1e6, chrome_event(&n, "E", te * 1e6, pid, tid, tid_req)));
+                } else {
+                    break;
+                }
+            }
+            if let Some(top) = stack.last() {
+                // Defensive: keep nesting laminar even if a child
+                // outlives its container by an ulp.
+                t1 = t1.min(top.1);
+            }
+            let t1 = t1.max(t0);
+            events.push((t0 * 1e6, chrome_event(&name, "B", t0 * 1e6, pid, tid, id)));
+            stack.push((name, t1, id));
+        }
+        while let Some((n, te, id)) = stack.pop() {
+            events.push((te * 1e6, chrome_event(&n, "E", te * 1e6, pid, tid, id)));
+        }
+    }
+    // Stable sort keeps per-track emission order among equal
+    // timestamps, so B/E discipline survives the global ordering.
+    events.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut arr: Vec<Json> = meta;
+    arr.extend(events.into_iter().map(|(_, e)| e));
+    let mut root = Json::obj();
+    root.set("traceEvents", arr.into());
+    root.set("displayTimeUnit", "ms".into());
+    root
+}
+
+/// Schema sanity for an exported Chrome trace: non-decreasing `ts`
+/// over non-metadata events in array order, and per-(pid, tid) `B`/`E`
+/// stack discipline with matching names, all stacks empty at the end.
+pub fn check_chrome(j: &Json) -> Result<(), String> {
+    let evs = j
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| "missing traceEvents array".to_string())?;
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut stacks: BTreeMap<(u64, u64), Vec<String>> = BTreeMap::new();
+    for (i, e) in evs.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .ok_or_else(|| format!("event {i}: missing ph"))?;
+        if ph == "M" {
+            continue;
+        }
+        let ts = e
+            .get("ts")
+            .and_then(|t| t.as_f64())
+            .ok_or_else(|| format!("event {i}: missing ts"))?;
+        if ts < last_ts {
+            return Err(format!("event {i}: ts {ts} < previous {last_ts} (non-monotone)"));
+        }
+        last_ts = ts;
+        let pid = e
+            .get("pid")
+            .and_then(|p| p.as_u64())
+            .ok_or_else(|| format!("event {i}: missing pid"))?;
+        let tid = e
+            .get("tid")
+            .and_then(|t| t.as_u64())
+            .ok_or_else(|| format!("event {i}: missing tid"))?;
+        let name = e.get("name").and_then(|n| n.as_str()).unwrap_or("").to_string();
+        match ph {
+            "B" => stacks.entry((pid, tid)).or_default().push(name),
+            "E" => {
+                let st = stacks.entry((pid, tid)).or_default();
+                match st.pop() {
+                    Some(top) if top == name => {}
+                    Some(top) => {
+                        return Err(format!(
+                            "event {i}: E `{name}` does not match open B `{top}` on ({pid},{tid})"
+                        ))
+                    }
+                    None => {
+                        return Err(format!("event {i}: E `{name}` with empty stack on ({pid},{tid})"))
+                    }
+                }
+            }
+            "X" => {}
+            other => return Err(format!("event {i}: unexpected ph `{other}`")),
+        }
+    }
+    for ((pid, tid), st) in &stacks {
+        if !st.is_empty() {
+            return Err(format!("track ({pid},{tid}): {} unclosed B events", st.len()));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// JSONL exporter / importer
+// ---------------------------------------------------------------------------
+
+/// Export finalized traces as JSONL: one `request` record plus one
+/// `span` record per phase, per line. Numbers round-trip bit-exactly
+/// (shortest-round-trip float formatting on both ends), so the
+/// conservation invariant survives export → import.
+pub fn to_jsonl(reqs: &[RequestTrace]) -> String {
+    let mut out = String::new();
+    for r in reqs {
+        let mut o = Json::obj();
+        o.set("type", "request".into())
+            .set("id", r.id.into())
+            .set("server", (r.server as u64).into())
+            .set("arrival", r.arrival.into())
+            .set("done", r.done.into())
+            .set("e2e", r.end_to_end().into())
+            .set("outcome", r.outcome.name().into());
+        out.push_str(&o.to_string());
+        out.push('\n');
+        for p in &r.phases {
+            let mut s = Json::obj();
+            s.set("type", "span".into())
+                .set("id", r.id.into())
+                .set("name", p.kind.label(p.attempt).into())
+                .set("t0", p.t0.into())
+                .set("t1", p.t1.into())
+                .set("dur", p.dur.into())
+                .set("server", (r.server as u64).into())
+                .set("drive", (p.drive as f64).into())
+                .set("attempt", (p.attempt as u64).into());
+            out.push_str(&s.to_string());
+            out.push('\n');
+        }
+    }
+    out
+}
+
+fn req_f64(j: &Json, key: &str, lineno: usize) -> Result<f64, String> {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| format!("line {lineno}: missing number `{key}`"))
+}
+
+fn req_u64(j: &Json, key: &str, lineno: usize) -> Result<u64, String> {
+    j.get(key)
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| format!("line {lineno}: missing integer `{key}`"))
+}
+
+/// Import a JSONL trace produced by [`to_jsonl`]. Spans re-attach to
+/// their request in file order; returns traces in ascending id order.
+pub fn parse_jsonl(text: &str) -> Result<Vec<RequestTrace>, String> {
+    let mut reqs: BTreeMap<u64, RequestTrace> = BTreeMap::new();
+    let mut spans: BTreeMap<u64, Vec<Phase>> = BTreeMap::new();
+    for (i, raw) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("line {lineno}: {e}"))?;
+        let ty = j
+            .get("type")
+            .and_then(|t| t.as_str())
+            .ok_or_else(|| format!("line {lineno}: missing `type`"))?;
+        match ty {
+            "request" => {
+                let id = req_u64(&j, "id", lineno)?;
+                let outcome_s = j
+                    .get("outcome")
+                    .and_then(|o| o.as_str())
+                    .ok_or_else(|| format!("line {lineno}: missing `outcome`"))?;
+                let outcome = Outcome::parse(outcome_s)
+                    .ok_or_else(|| format!("line {lineno}: unknown outcome `{outcome_s}`"))?;
+                let server_u = req_u64(&j, "server", lineno)?;
+                reqs.insert(
+                    id,
+                    RequestTrace {
+                        id,
+                        server: u32::try_from(server_u)
+                            .map_err(|_| format!("line {lineno}: server out of range"))?,
+                        arrival: req_f64(&j, "arrival", lineno)?,
+                        done: req_f64(&j, "done", lineno)?,
+                        outcome,
+                        phases: Vec::new(),
+                    },
+                );
+            }
+            "span" => {
+                let id = req_u64(&j, "id", lineno)?;
+                let name = j
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| format!("line {lineno}: missing `name`"))?;
+                let kind = SpanKind::parse(name)
+                    .ok_or_else(|| format!("line {lineno}: unknown span kind `{name}`"))?;
+                let attempt_u = req_u64(&j, "attempt", lineno)?;
+                let drive = req_f64(&j, "drive", lineno)? as i64;
+                spans.entry(id).or_default().push(Phase {
+                    kind,
+                    attempt: u32::try_from(attempt_u)
+                        .map_err(|_| format!("line {lineno}: attempt out of range"))?,
+                    drive,
+                    t0: req_f64(&j, "t0", lineno)?,
+                    t1: req_f64(&j, "t1", lineno)?,
+                    dur: req_f64(&j, "dur", lineno)?,
+                });
+            }
+            other => return Err(format!("line {lineno}: unknown record type `{other}`")),
+        }
+    }
+    let mut out = Vec::new();
+    for (id, mut r) in reqs {
+        if let Some(ph) = spans.remove(&id) {
+            r.phases = ph;
+        }
+        out.push(r);
+    }
+    if let Some((id, _)) = spans.iter().next() {
+        return Err(format!("span records for id {id} have no request record"));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Trace export format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TraceFormat {
+    /// Chrome trace-event JSON (Perfetto / chrome://tracing).
+    Chrome,
+    /// One span per line; `solana trace-report` input.
+    #[default]
+    Jsonl,
+}
+
+impl TraceFormat {
+    pub fn parse(s: &str) -> Option<TraceFormat> {
+        match s {
+            "chrome" => Some(TraceFormat::Chrome),
+            "jsonl" => Some(TraceFormat::Jsonl),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceFormat::Chrome => "chrome",
+            TraceFormat::Jsonl => "jsonl",
+        }
+    }
+}
+
+/// `[trace]` configuration: sink shape, deterministic sampling rate,
+/// and export format/path. Disabled (i.e. [`Tracer::Off`]) by default.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceConfig {
+    pub enabled: bool,
+    /// 0 = unbounded in-memory sink; > 0 = bounded ring of this many
+    /// request timelines (smallest ids evicted first).
+    pub ring_cap: usize,
+    /// Trace every Nth request (`id % N == 0`); 1 = every request.
+    pub sample_every: u64,
+    pub format: TraceFormat,
+    /// Export path; `None` keeps the trace in memory (report only).
+    pub out: Option<String>,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            enabled: false,
+            ring_cap: 0,
+            sample_every: 1,
+            format: TraceFormat::Jsonl,
+            out: None,
+        }
+    }
+}
+
+impl TraceConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.sample_every == 0 {
+            return Err("[trace] sample must be >= 1 (1 = trace every request)".to_string());
+        }
+        Ok(())
+    }
+
+    /// Build the tracer this config describes ([`Tracer::Off`] when
+    /// disabled).
+    pub fn tracer(&self) -> Tracer {
+        if !self.enabled {
+            Tracer::Off
+        } else if self.ring_cap > 0 {
+            Tracer::ring(self.ring_cap, self.sample_every)
+        } else {
+            Tracer::in_memory(self.sample_every)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine self-profiling
+// ---------------------------------------------------------------------------
+
+/// Always-on per-engine execution counters (cheap integer increments;
+/// identical traced-on and traced-off since they never feed back into
+/// the simulation). Surfaced in `ServeReport` / `--json`; excluded
+/// from `check_bit_identical` like the scheduler's event counters.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct EngineProfile {
+    /// Total engine events executed.
+    pub events: u64,
+    pub host_done_events: u64,
+    pub csd_ack_events: u64,
+    pub wake_events: u64,
+    pub flush_events: u64,
+    pub ingest_events: u64,
+    /// Sum of queue depth observed at each event (mean = sum/events).
+    pub queue_depth_sum: u64,
+    pub max_queue_depth: u64,
+    pub max_inflight: u64,
+}
+
+impl EngineProfile {
+    /// Fold another engine's profile into this aggregate (sums add,
+    /// maxima take the max).
+    pub fn absorb(&mut self, other: &EngineProfile) {
+        self.events += other.events;
+        self.host_done_events += other.host_done_events;
+        self.csd_ack_events += other.csd_ack_events;
+        self.wake_events += other.wake_events;
+        self.flush_events += other.flush_events;
+        self.ingest_events += other.ingest_events;
+        self.queue_depth_sum += other.queue_depth_sum;
+        self.max_queue_depth = self.max_queue_depth.max(other.max_queue_depth);
+        self.max_inflight = self.max_inflight.max(other.max_inflight);
+    }
+
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.events == 0 {
+            0.0
+        } else {
+            self.queue_depth_sum as f64 / self.events as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn traced_one(marks: &[(SpanKind, f64)], arrival: f64, done: f64) -> RequestTrace {
+        let mut t = Tracer::in_memory(1);
+        t.begin_on(7, arrival, 0);
+        for &(k, at) in marks {
+            t.mark(7, k, at);
+        }
+        t.finish(7, done, Outcome::Served);
+        let (reqs, dropped) = t.take_requests();
+        assert_eq!(dropped, 0);
+        assert_eq!(reqs.len(), 1);
+        reqs.into_iter().next().unwrap()
+    }
+
+    #[test]
+    fn off_records_nothing_and_children_stay_off() {
+        let mut t = Tracer::Off;
+        assert!(!t.wants(0));
+        t.begin(1, 0.0);
+        t.mark(1, SpanKind::HostIo, 1.0);
+        t.finish(1, 2.0, Outcome::Served);
+        assert!(t.is_empty());
+        assert!(!t.child(3).is_on());
+        let (reqs, dropped) = t.take_requests();
+        assert!(reqs.is_empty());
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn sampling_is_by_request_id() {
+        let t = Tracer::in_memory(4);
+        assert!(t.wants(0));
+        assert!(!t.wants(1));
+        assert!(!t.wants(3));
+        assert!(t.wants(8));
+        let every = Tracer::in_memory(1);
+        assert!(every.wants(17));
+    }
+
+    #[test]
+    fn phases_partition_the_timeline_bitwise() {
+        let r = traced_one(
+            &[
+                (SpanKind::Admission, 0.013),
+                (SpanKind::FormationWait, 0.1 + 0.2), // awkward float
+                (SpanKind::HostIo, 0.7),
+                (SpanKind::HostCompute, 0.9000000001),
+            ],
+            0.001,
+            1.1,
+        );
+        assert_eq!(r.phases.len(), 4);
+        assert_eq!(r.phases[0].t0, 0.001);
+        assert_eq!(r.phases[3].t1, 1.1);
+        verify_conservation(&[r]).unwrap();
+    }
+
+    #[test]
+    fn no_marks_collapses_to_admission() {
+        let r = traced_one(&[], 2.0, 2.0);
+        assert_eq!(r.phases.len(), 1);
+        assert_eq!(r.phases[0].kind, SpanKind::Admission);
+        assert_eq!(r.end_to_end(), 0.0);
+        verify_conservation(&[r]).unwrap();
+    }
+
+    #[test]
+    fn out_of_range_marks_clamp_monotone() {
+        let r = traced_one(
+            &[
+                (SpanKind::HostIo, 5.0),  // past done
+                (SpanKind::Admission, -1.0), // before arrival (sorts first)
+            ],
+            1.0,
+            2.0,
+        );
+        // stable sort orders by t: -1.0 then 5.0; both clamp into [1, 2]
+        assert_eq!(r.phases[0].kind, SpanKind::Admission);
+        assert_eq!(r.phases[0].t1, 1.0);
+        assert_eq!(r.phases[1].t1, 2.0);
+        verify_conservation(&[r]).unwrap();
+    }
+
+    #[test]
+    fn ring_evicts_smallest_id() {
+        let mut t = Tracer::ring(2, 1);
+        for id in [3u64, 1, 2] {
+            t.begin_on(id, id as f64, 0);
+            t.finish(id, id as f64 + 1.0, Outcome::Served);
+        }
+        assert_eq!(t.dropped(), 1);
+        let (reqs, _) = t.take_requests();
+        let ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 3]);
+    }
+
+    #[test]
+    fn merge_folds_child_marks_and_master_wins_done() {
+        let mut master = Tracer::in_memory(1);
+        master.begin_on(5, 1.0, 0);
+        master.finish(5, 4.0, Outcome::Served);
+        let mut child = master.child(2);
+        child.begin(5, 1.5); // later arrival: master's earlier one wins
+        child.mark_drive(5, SpanKind::FlashRead, 2.0, 1);
+        child.mark(5, SpanKind::IspCompute, 3.0);
+        master.merge(child);
+        let (reqs, _) = master.take_requests();
+        assert_eq!(reqs.len(), 1);
+        let r = &reqs[0];
+        assert_eq!(r.arrival, 1.0);
+        assert_eq!(r.server, 0);
+        assert_eq!(r.outcome, Outcome::Served);
+        assert_eq!(r.phases.len(), 2);
+        assert_eq!(r.phases[0].kind, SpanKind::FlashRead);
+        assert_eq!(r.phases[0].drive, 1);
+        verify_conservation(&reqs).unwrap();
+    }
+
+    #[test]
+    fn unfinished_timelines_are_dropped_and_counted() {
+        let mut t = Tracer::in_memory(1);
+        t.begin_on(1, 0.0, 0);
+        t.begin_on(2, 0.0, 0);
+        t.finish(2, 1.0, Outcome::Served);
+        let (reqs, unfinished) = t.take_requests();
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(unfinished, 1);
+    }
+
+    #[test]
+    fn labels_round_trip_including_retry() {
+        for k in SPAN_KINDS {
+            let label = k.label(3);
+            assert_eq!(SpanKind::parse(&label), Some(k), "label {label}");
+        }
+        assert_eq!(SpanKind::Retry.label(2), "retry[2]");
+        assert_eq!(SpanKind::parse("retry[11]"), Some(SpanKind::Retry));
+        assert_eq!(SpanKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn attribution_finds_the_dominant_phase() {
+        // 99 fast requests dominated by host_io, 1 slow one by gc_stall.
+        let mut t = Tracer::in_memory(1);
+        for id in 0..99u64 {
+            let a = id as f64;
+            t.begin_on(id, a, 0);
+            t.mark(id, SpanKind::HostIo, a + 0.01);
+            t.finish(id, a + 0.012, Outcome::Served);
+        }
+        t.begin_on(99, 100.0, 0);
+        t.mark_drive(99, SpanKind::GcStall, 101.0, 0);
+        t.mark_drive(99, SpanKind::FlashRead, 101.01, 0);
+        t.finish(99, 101.02, Outcome::Served);
+        let (reqs, _) = t.take_requests();
+        verify_conservation(&reqs).unwrap();
+        let bands = attribution(&reqs);
+        let p99 = bands.iter().find(|b| b.band == "p99").unwrap();
+        assert_eq!(p99.dominant().unwrap().0, "gc_stall");
+        assert!(p99.share_of("gc_stall") > 0.9);
+        let all = bands.iter().find(|b| b.band == "all").unwrap();
+        assert_eq!(all.requests, 100);
+        let table = attribution_table(&bands);
+        assert!(table.render().contains("gc_stall"));
+    }
+
+    #[test]
+    fn chrome_export_passes_schema_check() {
+        let mut t = Tracer::in_memory(1);
+        // Two overlapping requests on the same drive + a rack hop.
+        for id in [0u64, 1] {
+            let a = 0.1 * id as f64;
+            t.begin_on(id, a, 0);
+            t.mark(id, SpanKind::Admission, a + 0.05);
+            t.mark_drive(id, SpanKind::FlashRead, a + 0.3, 0);
+            t.mark_drive(id, SpanKind::IspCompute, a + 0.4, 0);
+            t.mark(id, SpanKind::RackLink, a + 0.45);
+            t.finish(id, a + 0.45, Outcome::Served);
+        }
+        let (reqs, _) = t.take_requests();
+        let j = chrome_trace(&reqs);
+        check_chrome(&j).unwrap();
+        // Round-trip through the codec: serialize, reparse, recheck.
+        let text = j.to_pretty();
+        let back = Json::parse(&text).unwrap();
+        check_chrome(&back).unwrap();
+        let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(evs.iter().any(|e| e.get("ph").unwrap().as_str() == Some("M")));
+        assert!(evs.iter().any(|e| e.get("ph").unwrap().as_str() == Some("B")));
+    }
+
+    #[test]
+    fn chrome_check_rejects_broken_traces() {
+        let bad = Json::parse(
+            r#"{"traceEvents":[
+                {"name":"a","ph":"B","ts":2,"pid":0,"tid":1},
+                {"name":"a","ph":"E","ts":1,"pid":0,"tid":1}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(check_chrome(&bad).is_err()); // non-monotone ts
+        let unclosed = Json::parse(
+            r#"{"traceEvents":[{"name":"a","ph":"B","ts":1,"pid":0,"tid":1}]}"#,
+        )
+        .unwrap();
+        assert!(check_chrome(&unclosed).is_err());
+    }
+
+    #[test]
+    fn jsonl_round_trips_bitwise() {
+        let mut t = Tracer::in_memory(1);
+        t.begin_on(0, 0.1, 1);
+        t.mark(0, SpanKind::Admission, 0.1 + 1e-9);
+        t.mark_drive(0, SpanKind::FlashRead, 0.30000000001, 2);
+        t.finish(0, 0.5, Outcome::Served);
+        t.begin_on(1, 0.2, 1);
+        t.finish(1, 0.2, Outcome::Shed);
+        let (reqs, _) = t.take_requests();
+        let text = to_jsonl(&reqs);
+        let back = parse_jsonl(&text).unwrap();
+        assert_eq!(back.len(), reqs.len());
+        for (a, b) in reqs.iter().zip(back.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.server, b.server);
+            assert_eq!(a.outcome, b.outcome);
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+            assert_eq!(a.done.to_bits(), b.done.to_bits());
+            assert_eq!(a.phases.len(), b.phases.len());
+            for (p, q) in a.phases.iter().zip(b.phases.iter()) {
+                assert_eq!(p.kind, q.kind);
+                assert_eq!(p.drive, q.drive);
+                assert_eq!(p.attempt, q.attempt);
+                assert_eq!(p.dur.to_bits(), q.dur.to_bits());
+            }
+        }
+        verify_conservation(&back).unwrap();
+    }
+
+    #[test]
+    fn trace_config_validates_and_builds() {
+        let mut c = TraceConfig::default();
+        assert!(c.validate().is_ok());
+        assert!(!c.tracer().is_on());
+        c.enabled = true;
+        c.sample_every = 3;
+        assert!(c.tracer().is_on());
+        assert!(c.tracer().wants(6));
+        assert!(!c.tracer().wants(7));
+        c.ring_cap = 10;
+        assert!(matches!(c.tracer(), Tracer::On(_)));
+        c.sample_every = 0;
+        assert!(c.validate().is_err());
+        assert_eq!(TraceFormat::parse("chrome"), Some(TraceFormat::Chrome));
+        assert_eq!(TraceFormat::parse("bogus"), None);
+    }
+
+    #[test]
+    fn profile_absorb_sums_and_maxes() {
+        let mut a = EngineProfile {
+            events: 10,
+            wake_events: 2,
+            queue_depth_sum: 30,
+            max_queue_depth: 5,
+            ..EngineProfile::default()
+        };
+        let b = EngineProfile {
+            events: 5,
+            wake_events: 1,
+            queue_depth_sum: 5,
+            max_queue_depth: 9,
+            ..EngineProfile::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.events, 15);
+        assert_eq!(a.max_queue_depth, 9);
+        assert!((a.mean_queue_depth() - 35.0 / 15.0).abs() < 1e-12);
+    }
+}

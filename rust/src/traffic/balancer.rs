@@ -49,6 +49,7 @@ use crate::faults::{FaultPlan, LinkOutcome};
 use crate::interconnect::RackLink;
 use crate::metrics::Metrics;
 use crate::power::PowerModel;
+use crate::trace::{EngineProfile, Outcome as TraceOutcome, SpanKind, Tracer};
 use crate::workloads::{App, AppModel};
 
 use super::engine::{EnginePolicy, Offer, ServeEngine};
@@ -306,6 +307,24 @@ pub fn serve_fleet(
     power: &PowerModel,
     metrics: &mut Metrics,
 ) -> anyhow::Result<ServeReport> {
+    serve_fleet_traced(app, fcfg, tcfg, power, metrics, &mut Tracer::Off)
+}
+
+/// [`serve_fleet`] with a span tracer (ISSUE-9). The master `tracer`
+/// records front-door events (admission, shed, rack delivery, retries,
+/// hedges, failover) and each engine gets a child tracer for the
+/// dispatch-path phases; children fold back into the master before the
+/// function returns. Passing [`Tracer::Off`] (what [`serve_fleet`]
+/// does) runs the exact untraced path — the traced-off bit-identity
+/// property pinned by `tests/trace_conservation.rs`.
+pub fn serve_fleet_traced(
+    app: App,
+    fcfg: &FleetConfig,
+    tcfg: &TrafficConfig,
+    power: &PowerModel,
+    metrics: &mut Metrics,
+    tracer: &mut Tracer,
+) -> anyhow::Result<ServeReport> {
     anyhow::ensure!(fcfg.servers >= 1, "need at least one server in the fleet");
     fcfg.validate_weights()?;
     anyhow::ensure!(tcfg.requests >= 1, "need at least one request to serve");
@@ -447,6 +466,20 @@ pub fn serve_fleet(
             e.set_ingest(tcfg.ingest_rate, t0 + window, root.fork(&format!("server-{i}")));
         }
     }
+    // Span tracing (ISSUE-9): each engine gets a child tracer tagged
+    // with its server index; children fold back into the master when
+    // the run ends. Off children keep engines on the exact untraced
+    // path.
+    if tracer.is_on() {
+        for (i, e) in engines.iter_mut().enumerate() {
+            e.set_tracer(tracer.child(i as u32));
+        }
+    }
+    // Queue-depth / inflight time-series keys (sampled per completion
+    // batch while tracing).
+    let qd_keys: Vec<String> =
+        (0..fcfg.servers).map(|i| format!("serve.s{i}.queue_depth")).collect();
+    let if_keys: Vec<String> = (0..fcfg.servers).map(|i| format!("serve.s{i}.inflight")).collect();
     // Per-server latency floor a healthy request can legitimately spend
     // before service starts (wake grid + batch formation): part of the
     // deadline-aware automatic timeout base.
@@ -515,6 +548,7 @@ pub fn serve_fleet(
                 // The dead server swallows the request whole: no ack,
                 // no rejection. Only the timer wheel (or the end-of-run
                 // sweep, without resilience) can resolve it now.
+                tracer.begin_on(req.id, a, s as u32);
                 tracker.insert(
                     req.id,
                     Track { arrival: a, home: s, attempts: 1, base, hedged: false, done: false },
@@ -542,9 +576,14 @@ pub fn serve_fleet(
                 // serving window like any other response.
                 shed_per[s] += 1;
                 balancer.outstanding[s] -= 1;
+                // A shed request is a zero-width traced timeline: begun
+                // and closed at the door in the same instant.
+                tracer.begin_on(req.id, a, s as u32);
+                tracer.finish(req.id, a, TraceOutcome::Shed);
                 gen.on_complete(a - t0);
                 last_done = last_done.max(a);
             } else if tracking {
+                tracer.begin_on(req.id, a, s as u32);
                 tracker.insert(
                     req.id,
                     Track { arrival: a, home: s, attempts: 1, base, hedged: false, done: false },
@@ -565,6 +604,11 @@ pub fn serve_fleet(
                         }));
                     }
                 }
+            } else {
+                // Accepted on a fault-free, non-resilient run: no
+                // tracker entry needed, but the traced timeline still
+                // opens at the front door.
+                tracer.begin_on(req.id, a, s as u32);
             }
         } else if e <= w {
             let Some((_, i)) = te else {
@@ -576,6 +620,12 @@ pub fn serve_fleet(
                 continue;
             }
             engine_emitted += comps.len() as u64;
+            if tracer.is_on() {
+                // Queue-depth / inflight time series, sampled once per
+                // completion batch on the server that produced it.
+                metrics.sample(&qd_keys[i], comps[0].done, engines[i].queued() as f64);
+                metrics.sample(&if_keys[i], comps[0].done, engines[i].inflight() as f64);
+            }
             // One ack event → one batch → one response block over
             // the rack for non-head servers (64 B header + per-item
             // outputs), serialized FIFO on the head's downlink.
@@ -630,6 +680,11 @@ pub fn serve_fleet(
                     if lat <= slo {
                         completed_in_slo += 1;
                     }
+                    if i != 0 {
+                        // Non-head response: the rack hop it just paid.
+                        tracer.mark(c.id, SpanKind::RackLink, delivered);
+                    }
+                    tracer.finish(c.id, delivered, TraceOutcome::Served);
                     gen.on_complete(delivered - t0);
                     served_per[i] += 1;
                 } else {
@@ -638,6 +693,10 @@ pub fn serve_fleet(
                     if lat <= slo {
                         completed_in_slo += 1;
                     }
+                    if i != 0 {
+                        tracer.mark(c.id, SpanKind::RackLink, delivered);
+                    }
+                    tracer.finish(c.id, delivered, TraceOutcome::Served);
                     gen.on_complete(delivered - t0);
                     served_per[i] += 1;
                 }
@@ -674,6 +733,7 @@ pub fn serve_fleet(
                     }
                     tr.hedged = true;
                     hedged += 1;
+                    tracer.mark_attempt(dl.id, SpanKind::Hedge, now, tr.attempts);
                     let h = if fcfg.replicas > 0 {
                         failover_target(tr.home, &balancer.dead)
                     } else {
@@ -693,6 +753,7 @@ pub fn serve_fleet(
                         // Cross-server hedge: the redirect rides (and
                         // pays) the rack, landing as a delayed submit.
                         let at = rack.send(now, 64 + model.bytes_per_item);
+                        tracer.mark(dl.id, SpanKind::FailoverRedirect, at);
                         wheel.push(Reverse(Deadline {
                             t: at,
                             id: dl.id,
@@ -718,11 +779,15 @@ pub fn serve_fleet(
                         // and extends the serving window.
                         tr.done = true;
                         failed += 1;
+                        tracer.finish(dl.id, now, TraceOutcome::Failed);
                         gen.on_complete(now - t0);
                         last_done = last_done.max(now);
                     } else {
                         tr.attempts += 1;
                         retried += 1;
+                        // The timed-out attempt's wasted time, tagged
+                        // with the attempt number it opened.
+                        tracer.mark_attempt(dl.id, SpanKind::Retry, now, tr.attempts);
                         let nt = if balancer.dead[tr.home] && fcfg.replicas > 0 {
                             failover_target(tr.home, &balancer.dead)
                         } else {
@@ -743,6 +808,7 @@ pub fn serve_fleet(
                             }
                         } else {
                             let at = rack.send(now, 64 + model.bytes_per_item);
+                            tracer.mark(dl.id, SpanKind::FailoverRedirect, at);
                             wheel.push(Reverse(Deadline {
                                 t: at,
                                 id: dl.id,
@@ -783,6 +849,11 @@ pub fn serve_fleet(
         // dead server or destroyed with no retry budget) are failures.
         // Counting is order-free, so the map's iteration order cannot
         // leak into the report.
+        for (id, t) in tracker.iter().filter(|(_, t)| !t.done) {
+            // Traced: a swallowed request closes as a zero-width failed
+            // timeline (no response ever reached the front door).
+            tracer.finish(*id, t.arrival, TraceOutcome::Failed);
+        }
         failed += tracker.values().filter(|t| !t.done).count() as u64;
     }
     anyhow::ensure!(
@@ -823,6 +894,17 @@ pub fn serve_fleet(
         items == engine_accepted,
         "scheduler item split ({items}) disagrees with accepted attempts ({engine_accepted})"
     );
+
+    // Engine self-profiling rollup (always on) and child-trace merge
+    // (engine index order — deterministic and part of the trace
+    // contract).
+    let mut profile = EngineProfile::default();
+    for e in engines.iter_mut() {
+        profile.absorb(e.profile());
+        if tracer.is_on() {
+            tracer.merge(e.take_tracer());
+        }
+    }
 
     // ---- rollups -----------------------------------------------------
     // Serving window per the report contract: first arrival → last
@@ -913,6 +995,15 @@ pub fn serve_fleet(
         waf: ftl.waf(),
         gc_runs: ftl.gc_runs,
         wear_spread,
+        engine_events: profile.events,
+        host_done_events: profile.host_done_events,
+        csd_ack_events: profile.csd_ack_events,
+        wake_events: profile.wake_events,
+        flush_events: profile.flush_events,
+        ingest_events: profile.ingest_events,
+        max_queue_depth: profile.max_queue_depth,
+        mean_queue_depth: profile.mean_queue_depth(),
+        max_inflight: profile.max_inflight,
         per_server,
     })
 }

@@ -76,8 +76,9 @@ use crate::cluster::StorageServer;
 use crate::csd::ftl::FtlStats;
 use crate::faults::{AckOutcome, DriveFaults};
 use crate::metrics::Metrics;
-use crate::sched::{DispatchMode, Ev, SchedConfig, SchedState, SHARD};
+use crate::sched::{CsdBatchTiming, DispatchMode, Ev, HostBatchTiming, SchedConfig, SchedState, SHARD};
 use crate::sim::EventQueue;
+use crate::trace::{EngineProfile, SpanKind, Tracer};
 use crate::util::Rng;
 use crate::workloads::{AppModel, HOST_THREADS, ISP_CORES};
 
@@ -234,6 +235,17 @@ pub(crate) struct ServeEngine<'a> {
     ingest_item_bytes: u64,
     /// Update writes applied so far (survives stream disarm).
     ingest_writes: u64,
+    /// Span tracer (ISSUE-9). `Tracer::Off` — the default and the only
+    /// state every untraced caller sees — makes every record call a
+    /// no-op, so untraced engines run the exact pre-trace path.
+    tracer: Tracer,
+    /// Instant the formation gate opened for the currently queued
+    /// batch. Tracer bookkeeping only (maintained while the tracer is
+    /// on); feeds the `formation_wait`/`dispatch_wait` split.
+    gate_since: Option<f64>,
+    /// Always-on execution counters (identical traced on and off —
+    /// they never feed back into the simulation).
+    profile: EngineProfile,
     completions: Vec<Completion>,
 }
 
@@ -340,6 +352,9 @@ impl<'a> ServeEngine<'a> {
             ingest: None,
             ingest_item_bytes: model.bytes_per_item.max(1),
             ingest_writes: 0,
+            tracer: Tracer::Off,
+            gate_since: None,
+            profile: EngineProfile::default(),
             completions: Vec::new(),
             st,
         })
@@ -405,6 +420,33 @@ impl<'a> ServeEngine<'a> {
     /// Requests destroyed by drive faults so far (never completions).
     pub(crate) fn lost(&self) -> u64 {
         self.lost
+    }
+
+    /// Arm this engine's span tracer (ISSUE-9). Called once by the
+    /// fleet driver before serving starts; engines left at
+    /// [`Tracer::Off`] (the default) run the exact untraced path.
+    pub(crate) fn set_tracer(&mut self, t: Tracer) {
+        self.tracer = t;
+    }
+
+    /// Take the tracer back at end of run, leaving `Off` behind.
+    pub(crate) fn take_tracer(&mut self) -> Tracer {
+        std::mem::take(&mut self.tracer)
+    }
+
+    /// Always-on execution counters for this engine.
+    pub(crate) fn profile(&self) -> &EngineProfile {
+        &self.profile
+    }
+
+    /// Requests currently queued awaiting dispatch.
+    pub(crate) fn queued(&self) -> u64 {
+        self.queued
+    }
+
+    /// Requests currently inside an in-flight batch.
+    pub(crate) fn inflight(&self) -> u64 {
+        self.inflight
     }
 
     /// Arm the background ingest/update stream (ISSUE-8): `rate`
@@ -477,6 +519,20 @@ impl<'a> ServeEngine<'a> {
         if d < self.st.cfg.isp_drives && self.csd_inflight[d].is_empty() {
             self.st.idle_isp.insert(d);
         }
+        self.profile.max_queue_depth = self.profile.max_queue_depth.max(self.queued);
+        if self.tracer.wants(id) {
+            self.tracer.begin(id, now);
+            self.tracer.mark_drive(id, SpanKind::Admission, now, d);
+        }
+        if self.tracer.is_on()
+            && self.gate_since.is_none()
+            && self.queued >= self.formation.min_batch
+        {
+            // The formation gate just opened for this batch: everything
+            // between here and the actual dispatch is dispatch_wait
+            // (the polling-grid tax), not formation_wait.
+            self.gate_since = Some(now);
+        }
         if self.event_driven {
             self.try_dispatch(now, false)?;
         } else {
@@ -497,6 +553,10 @@ impl<'a> ServeEngine<'a> {
     /// runner's calendar order), then ingest writes (device occupancy
     /// lands before a same-instant dispatch reads), then wakes/flushes.
     pub(crate) fn step(&mut self) -> anyhow::Result<()> {
+        self.profile.events += 1;
+        self.profile.queue_depth_sum += self.queued;
+        self.profile.max_queue_depth = self.profile.max_queue_depth.max(self.queued);
+        self.profile.max_inflight = self.profile.max_inflight.max(self.inflight);
         let tq = self.q.peek_time().unwrap_or(f64::INFINITY);
         let tw = if !self.event_driven && self.queued > 0 {
             self.next_wake
@@ -511,6 +571,7 @@ impl<'a> ServeEngine<'a> {
             };
             match ev {
                 Ev::HostDone { items, dispatched } => {
+                    self.profile.host_done_events += 1;
                     self.st.host_done(now, items, dispatched, &mut self.metrics);
                     debug_assert_eq!(self.host_inflight.len() as u64, items);
                     self.inflight -= items;
@@ -522,6 +583,7 @@ impl<'a> ServeEngine<'a> {
                     }
                 }
                 Ev::CsdAck { drive, items, dispatched } => {
+                    self.profile.csd_ack_events += 1;
                     // Drive-fault hook (ISSUE-6): the fate of this batch
                     // ack is drawn from the engine's own seeded stream at
                     // this virtual-time event — see the faults module's
@@ -541,6 +603,11 @@ impl<'a> ServeEngine<'a> {
                                     // delivery of the same batch.
                                     self.stall_armed[drive] = true;
                                     let at = now + f.stall_s;
+                                    if self.tracer.is_on() {
+                                        for r in &self.csd_inflight[drive] {
+                                            self.tracer.mark_drive(r.id, SpanKind::Stall, at, drive);
+                                        }
+                                    }
                                     self.q.schedule_at(at, Ev::CsdAck { drive, items, dispatched });
                                     return Ok(());
                                 }
@@ -587,20 +654,27 @@ impl<'a> ServeEngine<'a> {
                 }
             }
         } else if ti <= tw && ti <= tf {
+            self.profile.ingest_events += 1;
             self.ingest_step()?;
         } else if tw <= tf {
             // Wake-grid point (polling): the grid is both the dispatch
             // clock and the formation timeout check.
+            self.profile.wake_events += 1;
             let now = self.next_wake;
             self.next_wake += self.st.cfg.wakeup_secs;
             self.try_dispatch(now, false)?;
         } else {
             // Formation timeout (event-driven): the oldest queued
             // request has waited long enough — force the batch out.
+            self.profile.flush_events += 1;
             let now = self
                 .flush_at
                 .take()
                 .ok_or_else(|| anyhow::anyhow!("flush fired with no armed deadline"))?;
+            if self.tracer.is_on() {
+                // The flush *is* the gate opening for the queued batch.
+                self.gate_since.get_or_insert(now);
+            }
             self.try_dispatch(now, true)?;
         }
         Ok(())
@@ -677,14 +751,24 @@ impl<'a> ServeEngine<'a> {
         let host_ready = self.st.cfg.use_host && self.st.host_idle;
         let csd_ready = self.st.cfg.use_isp() && !self.st.idle_isp.is_empty();
         if (host_ready || csd_ready) && (force || self.gate_open(now)) {
+            // Arm the scheduler's read-only timing capture for each
+            // dispatch pass (only while tracing); `collect_taken`
+            // drains it into per-request span marks.
+            let tracing = self.tracer.is_on();
+            if tracing {
+                self.st.trace = Some(Box::default());
+            }
             self.prev_remaining.copy_from_slice(&self.st.shard_remaining);
             self.st.dispatch_host(now, &mut self.q)?;
-            self.collect_taken(true)?;
+            self.collect_taken(now, true)?;
             self.wrap_offsets();
 
+            if tracing {
+                self.st.trace = Some(Box::default());
+            }
             self.prev_remaining.copy_from_slice(&self.st.shard_remaining);
             self.st.dispatch_csds(now, &mut self.q, false)?;
-            self.collect_taken(false)?;
+            self.collect_taken(now, false)?;
             self.wrap_offsets();
         }
         // Re-arm the formation timeout: in event-driven mode a closed
@@ -694,12 +778,21 @@ impl<'a> ServeEngine<'a> {
         } else {
             None
         };
+        // Tracer bookkeeping: once the queue drops back below the
+        // formation gate, the next batch's gate has not opened yet.
+        if self.gate_since.is_some() && self.queued < self.formation.min_batch {
+            self.gate_since = None;
+        }
         Ok(())
     }
 
     /// Diff shard occupancy around a dispatch call and move the consumed
-    /// requests (FIFO per drive) into the matching in-flight set.
-    fn collect_taken(&mut self, host: bool) -> anyhow::Result<()> {
+    /// requests (FIFO per drive) into the matching in-flight set. When
+    /// the tracer is armed, the scheduler's per-batch timing capture
+    /// ([`SchedState`]'s `trace`) is drained here into per-request span
+    /// marks.
+    fn collect_taken(&mut self, now: f64, host: bool) -> anyhow::Result<()> {
+        let timing = self.st.trace.take();
         for d in 0..self.st.cfg.drives {
             let taken = self.prev_remaining[d] - self.st.shard_remaining[d];
             for _ in 0..taken {
@@ -707,8 +800,17 @@ impl<'a> ServeEngine<'a> {
                     anyhow::anyhow!("dispatch consumed {taken} from shard {d} but its FIFO ran dry")
                 })?;
                 if host {
+                    if let Some(ht) = timing.as_ref().and_then(|t| t.host) {
+                        self.mark_host_batch(r, now, ht);
+                    }
                     self.host_inflight.push(r);
                 } else {
+                    if let Some(ct) = timing
+                        .as_ref()
+                        .and_then(|t| t.csd.iter().find(|(dd, _)| *dd == d).map(|&(_, c)| c))
+                    {
+                        self.mark_csd_batch(r, now, d, ct);
+                    }
                     self.csd_inflight[d].push(r);
                 }
             }
@@ -716,6 +818,60 @@ impl<'a> ServeEngine<'a> {
             self.inflight += taken;
         }
         Ok(())
+    }
+
+    /// Emit the span marks for one request consumed by a host batch:
+    /// formation/dispatch waits, any GC overhang its reads queued
+    /// behind, the SSD read over PCIe (ECC decode split out), and host
+    /// compute. Marks *end* phases — see the trace module contract.
+    fn mark_host_batch(&mut self, r: Queued, now: f64, ht: HostBatchTiming) {
+        if !self.tracer.wants(r.id) {
+            return;
+        }
+        let gate = self.gate_since.unwrap_or(now).max(r.arrival).min(now);
+        self.tracer.mark(r.id, SpanKind::FormationWait, gate);
+        self.tracer.mark(r.id, SpanKind::DispatchWait, now);
+        let gc_end = if ht.gc_overhang > 0.0 {
+            let t = (now + ht.gc_overhang).min(ht.io_done);
+            self.tracer.mark(r.id, SpanKind::GcStall, t);
+            t
+        } else {
+            now
+        };
+        let ecc_start = (ht.io_done - ht.ecc_secs).max(gc_end);
+        self.tracer.mark(r.id, SpanKind::HostIo, ecc_start);
+        if ht.ecc_secs > 0.0 {
+            self.tracer.mark(r.id, SpanKind::Ecc, ht.io_done);
+        }
+        self.tracer.mark(r.id, SpanKind::HostCompute, ht.done);
+    }
+
+    /// Emit the span marks for one request consumed by a CSD batch on
+    /// `drive`: waits, the dispatch tunnel hop, GC overhang, the flash
+    /// array read (ECC decode split out), ISP compute, and the result
+    /// tunnel hop back to the host.
+    fn mark_csd_batch(&mut self, r: Queued, now: f64, drive: usize, ct: CsdBatchTiming) {
+        if !self.tracer.wants(r.id) {
+            return;
+        }
+        let gate = self.gate_since.unwrap_or(now).max(r.arrival).min(now);
+        self.tracer.mark_drive(r.id, SpanKind::FormationWait, gate, drive);
+        self.tracer.mark_drive(r.id, SpanKind::DispatchWait, now, drive);
+        self.tracer.mark_drive(r.id, SpanKind::Tunnel, ct.delivered, drive);
+        let gc_end = if ct.gc_overhang > 0.0 {
+            let t = (ct.delivered + ct.gc_overhang).min(ct.read_done);
+            self.tracer.mark_drive(r.id, SpanKind::GcStall, t, drive);
+            t
+        } else {
+            ct.delivered
+        };
+        let ecc_start = (ct.read_done - ct.ecc_secs).max(gc_end);
+        self.tracer.mark_drive(r.id, SpanKind::FlashRead, ecc_start, drive);
+        if ct.ecc_secs > 0.0 {
+            self.tracer.mark_drive(r.id, SpanKind::Ecc, ct.read_done, drive);
+        }
+        self.tracer.mark_drive(r.id, SpanKind::IspCompute, ct.done, drive);
+        self.tracer.mark_drive(r.id, SpanKind::Tunnel, ct.ack, drive);
     }
 
     /// Wrap read cursors so the next dispatch's largest possible read

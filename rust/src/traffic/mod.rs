@@ -76,7 +76,7 @@ pub mod balancer;
 pub(crate) mod engine;
 
 pub use arrivals::{ArrivalProcess, Arrivals, Request};
-pub use balancer::{serve_fleet, LbPolicy};
+pub use balancer::{serve_fleet, serve_fleet_traced, LbPolicy};
 pub use engine::FormationPolicy;
 
 use crate::cluster::fleet::{FleetConfig, FleetShape, ServerSpec};
@@ -374,6 +374,28 @@ pub struct ServeReport {
     /// Worst per-drive spread between the most- and least-erased block
     /// (wear-leveling proxy).
     pub wear_spread: u32,
+    /// Engine self-profiling (ISSUE-9): total simulation events the
+    /// serving engines executed, fleet-wide. Like the batch report's
+    /// `events_executed`, the profiling counters below are descriptive
+    /// run telemetry, not simulation outputs — they are excluded from
+    /// [`ServeReport::check_bit_identical`].
+    pub engine_events: u64,
+    /// Host batch-completion events executed fleet-wide.
+    pub host_done_events: u64,
+    /// CSD batch-ack events executed fleet-wide.
+    pub csd_ack_events: u64,
+    /// Polling-grid wake events executed fleet-wide.
+    pub wake_events: u64,
+    /// Formation-timeout flush events executed fleet-wide.
+    pub flush_events: u64,
+    /// Background-ingest write events executed fleet-wide.
+    pub ingest_events: u64,
+    /// Deepest per-engine request queue observed at any event.
+    pub max_queue_depth: u64,
+    /// Mean queue depth over events (fleet-wide event-weighted mean).
+    pub mean_queue_depth: f64,
+    /// Most requests simultaneously in flight on any one engine.
+    pub max_inflight: u64,
     pub per_server: Vec<ServerServeStats>,
 }
 

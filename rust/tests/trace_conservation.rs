@@ -1,0 +1,313 @@
+//! Observability-plane integration tests (ISSUE-9): the determinism and
+//! conservation contracts of the span tracer, checked end-to-end
+//! through `serve_fleet_traced`.
+//!
+//! Four properties:
+//! 1. **Tracing off is free** — `Tracer::Off` (and the plain
+//!    `serve_fleet` wrapper) must produce reports bit-identical to each
+//!    other AND to a fully-traced run: the tracer observes simulated
+//!    time, it never spends any.
+//! 2. **Phases partition the timeline** — for every traced request,
+//!    `sum(phase durations) == end_to_end` to the bit, including
+//!    requests that were retried, hedged, failed over, shed, GC-stalled
+//!    or killed by a server crash.
+//! 3. **Exports round-trip** — the Chrome trace re-parses through
+//!    `codec::json` and passes the schema check (monotone timestamps,
+//!    matched B/E pairs); the JSONL export re-imports bit-exactly.
+//! 4. **GC lives in the tail** — a fig13-style ingest-heavy cell
+//!    attributes a larger `gc_stall` share to the p99.9 band than to
+//!    the population, and a read-only run attributes none at all.
+
+use solana_isp::cluster::fleet::{FleetConfig, FleetShape};
+use solana_isp::csd::CsdConfig;
+use solana_isp::exp::{self, Scale};
+use solana_isp::faults::FaultsConfig;
+use solana_isp::metrics::Metrics;
+use solana_isp::power::PowerModel;
+use solana_isp::prop::forall;
+use solana_isp::sched::{DispatchMode, SchedConfig};
+use solana_isp::trace::{self, Outcome, Tracer};
+use solana_isp::traffic::{
+    fleet_nominal_rate, serve_fleet, serve_fleet_traced, LbPolicy, ServeReport, TrafficConfig,
+};
+use solana_isp::workloads::{App, AppModel};
+
+const APPS: [App; 3] = [App::SpeechToText, App::Recommender, App::Sentiment];
+const SHAPES: [FleetShape; 3] = [FleetShape::AllCsd, FleetShape::AllSsd, FleetShape::Mixed];
+
+fn serve_plain(app: App, fcfg: &FleetConfig, tcfg: &TrafficConfig) -> ServeReport {
+    let mut m = Metrics::new();
+    serve_fleet(app, fcfg, tcfg, &PowerModel::default(), &mut m).expect("serve_fleet")
+}
+
+fn serve_traced(
+    app: App,
+    fcfg: &FleetConfig,
+    tcfg: &TrafficConfig,
+    tracer: &mut Tracer,
+) -> ServeReport {
+    let mut m = Metrics::new();
+    serve_fleet_traced(app, fcfg, tcfg, &PowerModel::default(), &mut m, tracer)
+        .expect("serve_fleet_traced")
+}
+
+/// The heavy mixed fault plan from the chaos suite: drive, server, and
+/// link faults all live at once.
+fn chaos_faults() -> FaultsConfig {
+    FaultsConfig {
+        ack_loss: 0.05,
+        stall: 0.05,
+        stall_s: 0.02,
+        link_drop: 0.02,
+        link_dup: 0.02,
+        server_crash_at: Some(0.5),
+        rejoin_s: Some(2.0),
+        ..FaultsConfig::default()
+    }
+}
+
+#[test]
+fn tracer_off_is_bit_identical_to_untraced_and_tracing_costs_nothing() {
+    // Randomized configs: app × shape × dispatch mode × fault plan ×
+    // resilience knobs. Three runs per case — untraced, Tracer::Off,
+    // full tracing — must agree on every report field bit-for-bit:
+    // tracing may never perturb the simulation it observes.
+    forall("tracing is free", 8, |g| {
+        let app = APPS[g.usize(0..=2)];
+        let servers = g.usize(1..=3);
+        let shape = SHAPES[g.usize(0..=2)];
+        let dispatch =
+            if g.bool() { DispatchMode::EventDriven } else { DispatchMode::Polling };
+        let faulted = g.bool();
+        let replicas = if servers > 1 && faulted { 1 } else { 0 };
+        let fcfg = FleetConfig {
+            servers,
+            shape,
+            replicas,
+            sched: SchedConfig { dispatch, ..SchedConfig::default() },
+            ..FleetConfig::default()
+        };
+        let tcfg = TrafficConfig {
+            load: g.f64(0.3, 0.9),
+            requests: 400,
+            retries: if faulted { 2 } else { 0 },
+            hedge: faulted,
+            faults: if faulted { Some(chaos_faults()) } else { None },
+            ..TrafficConfig::default()
+        };
+        let plain = serve_plain(app, &fcfg, &tcfg);
+        let mut off = Tracer::Off;
+        let off_report = serve_traced(app, &fcfg, &tcfg, &mut off);
+        plain.check_bit_identical(&off_report)?;
+        let (reqs, _) = off.take_requests();
+        if !reqs.is_empty() {
+            return Err("Tracer::Off recorded request timelines".to_string());
+        }
+        let mut on = Tracer::in_memory(1);
+        let on_report = serve_traced(app, &fcfg, &tcfg, &mut on);
+        plain.check_bit_identical(&on_report)
+    });
+}
+
+#[test]
+fn phase_sums_equal_end_to_end_under_heavy_chaos() {
+    // Retries, hedges, failovers, crash-swallowed attempts, shed
+    // requests: whatever happens to a request, its phase decomposition
+    // must sum to its end-to-end latency exactly, and every terminal
+    // outcome must agree with the report's accounting.
+    let fcfg = FleetConfig {
+        servers: 3,
+        shape: FleetShape::AllCsd,
+        replicas: 1,
+        ..FleetConfig::default()
+    };
+    let tcfg = TrafficConfig {
+        load: 0.7,
+        requests: 2_000,
+        retries: 2,
+        hedge: true,
+        faults: Some(chaos_faults()),
+        ..TrafficConfig::default()
+    };
+    let mut tracer = Tracer::in_memory(1);
+    let r = serve_traced(App::Sentiment, &fcfg, &tcfg, &mut tracer);
+    let (reqs, dropped) = tracer.take_requests();
+    assert_eq!(dropped, 0, "the unbounded sink never evicts");
+    assert!(!reqs.is_empty());
+    trace::verify_conservation(&reqs).expect("phase conservation");
+    for req in &reqs {
+        let sum = req.phase_sum();
+        assert_eq!(
+            sum.to_bits(),
+            req.end_to_end().to_bits(),
+            "request {}: phases sum to {sum}, end-to-end {}",
+            req.id,
+            req.end_to_end()
+        );
+    }
+    let served = reqs.iter().filter(|q| q.outcome == Outcome::Served).count() as u64;
+    let shed = reqs.iter().filter(|q| q.outcome == Outcome::Shed).count() as u64;
+    assert_eq!(served, r.served, "served traces must match the report");
+    assert_eq!(shed, r.shed, "shed traces must match the report");
+    assert!(r.failed > 0 || r.retried > 0, "the chaos plan was supposed to bite");
+    // The tail-attribution decomposition is exact over these traces.
+    let bands = trace::attribution(&reqs);
+    assert!(bands.iter().any(|b| b.band == "p99.9"));
+    for b in &bands {
+        let share: f64 = b.phases.iter().map(|(_, _, s)| s).sum();
+        assert!((share - 1.0).abs() < 1e-9, "band {} shares sum to {share}", b.band);
+    }
+}
+
+#[test]
+fn sampling_and_ring_eviction_stay_deterministic() {
+    let fcfg = FleetConfig { servers: 2, shape: FleetShape::Mixed, ..FleetConfig::default() };
+    let tcfg = TrafficConfig { load: 0.6, requests: 1_000, ..TrafficConfig::default() };
+    // Sampling is by request id, not by RNG stream: only ids ≡ 0 mod 4.
+    let mut sampled = Tracer::in_memory(4);
+    serve_traced(App::Sentiment, &fcfg, &tcfg, &mut sampled);
+    let (reqs, _) = sampled.take_requests();
+    assert!(!reqs.is_empty());
+    assert!(reqs.iter().all(|q| q.id % 4 == 0), "sampling must be by id");
+    trace::verify_conservation(&reqs).expect("sampled traces conserve too");
+    // A bounded ring keeps at most `cap` timelines and reports what it
+    // evicted; twice the run, bit-identical traces.
+    let run_ring = || {
+        let mut t = Tracer::ring(64, 1);
+        serve_traced(App::Sentiment, &fcfg, &tcfg, &mut t);
+        t.take_requests()
+    };
+    let (a, dropped_a) = run_ring();
+    let (b, dropped_b) = run_ring();
+    assert!(a.len() <= 64);
+    assert_eq!(dropped_a, dropped_b);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+        assert_eq!(x.done.to_bits(), y.done.to_bits());
+        assert_eq!(x.phases.len(), y.phases.len());
+    }
+}
+
+#[test]
+fn exports_round_trip_through_codec_json() {
+    let fcfg = FleetConfig {
+        servers: 3,
+        shape: FleetShape::Mixed,
+        replicas: 1,
+        ..FleetConfig::default()
+    };
+    let tcfg = TrafficConfig {
+        load: 0.7,
+        requests: 1_200,
+        retries: 2,
+        hedge: true,
+        faults: Some(chaos_faults()),
+        ..TrafficConfig::default()
+    };
+    let mut tracer = Tracer::in_memory(1);
+    serve_traced(App::Sentiment, &fcfg, &tcfg, &mut tracer);
+    let (reqs, _) = tracer.take_requests();
+    assert!(!reqs.is_empty());
+    // Chrome: emit → pretty-print → re-parse → schema check (monotone
+    // timestamps, matched B/E pairs, metadata first).
+    let chrome = trace::chrome_trace(&reqs);
+    let reparsed = solana_isp::codec::json::Json::parse(&chrome.to_pretty())
+        .expect("chrome trace must be valid JSON");
+    trace::check_chrome(&reparsed).expect("chrome schema check");
+    // JSONL: emit → re-import → bit-exact equality, field by field.
+    let jsonl = trace::to_jsonl(&reqs);
+    let back = trace::parse_jsonl(&jsonl).expect("jsonl re-import");
+    assert_eq!(back.len(), reqs.len());
+    for (orig, got) in reqs.iter().zip(&back) {
+        assert_eq!(orig.id, got.id);
+        assert_eq!(orig.server, got.server);
+        assert_eq!(orig.outcome, got.outcome);
+        assert_eq!(orig.arrival.to_bits(), got.arrival.to_bits());
+        assert_eq!(orig.done.to_bits(), got.done.to_bits());
+        assert_eq!(orig.phases.len(), got.phases.len(), "request {}", orig.id);
+        for (p, q) in orig.phases.iter().zip(&got.phases) {
+            assert_eq!(p.kind, q.kind);
+            assert_eq!(p.attempt, q.attempt);
+            assert_eq!(p.drive, q.drive);
+            assert_eq!(p.t0.to_bits(), q.t0.to_bits());
+            assert_eq!(p.t1.to_bits(), q.t1.to_bits());
+            assert_eq!(p.dur.to_bits(), q.dur.to_bits());
+        }
+    }
+    trace::verify_conservation(&back).expect("conservation survives the round trip");
+}
+
+/// The fig13 serving cell (all-CSD, foreground GC, small flash
+/// geometry) rebuilt from the experiment's published constants.
+fn fig13_cell_cfgs(ingest_util: f64) -> (FleetConfig, TrafficConfig) {
+    let shape = FleetShape::AllCsd;
+    let sched = SchedConfig {
+        csd_batch: exp::FIG13_BATCH,
+        batch_ratio: exp::batch_ratio(exp::FIG13_APP),
+        drives: exp::FIG13_DRIVES,
+        isp_drives: exp::FIG13_DRIVES,
+        use_host: false,
+        dispatch: DispatchMode::EventDriven,
+        csd: CsdConfig { flash: exp::fig13_flash(), ..CsdConfig::default() },
+        ..SchedConfig::default()
+    };
+    let fcfg =
+        FleetConfig { servers: exp::FIG13_SERVERS, shape, sched, ..FleetConfig::default() };
+    let model = AppModel::for_app(exp::FIG13_APP, 1);
+    let offered = exp::FIG13_LOAD * fleet_nominal_rate(&model, &fcfg.server_specs());
+    let tcfg = TrafficConfig {
+        rate_rps: Some(offered),
+        requests: exp::fig13_requests(Scale(0.005)),
+        admission: true,
+        policy: LbPolicy::LeastWork,
+        ingest_rate: exp::fig13_ingest_rate(ingest_util),
+        ..TrafficConfig::default()
+    };
+    (fcfg, tcfg)
+}
+
+#[test]
+fn gc_stall_concentrates_in_the_p999_band_fig13_style() {
+    // The tentpole's "where does the p99 live" answer for fig13: under
+    // an ingest stream that cycles foreground GC, the p99.9 band's
+    // gc_stall share must exceed the whole population's — GC lives in
+    // the tail — while a read-only run of the same cell attributes no
+    // gc_stall anywhere.
+    let (fcfg, tcfg) = fig13_cell_cfgs(0.5);
+    let mut tracer = Tracer::in_memory(1);
+    let r = serve_traced(exp::FIG13_APP, &fcfg, &tcfg, &mut tracer);
+    assert!(r.gc_runs > 0, "the fig13 geometry must cycle GC under ingest");
+    let (reqs, _) = tracer.take_requests();
+    trace::verify_conservation(&reqs).expect("conservation under GC stalls");
+    let bands = trace::attribution(&reqs);
+    let all = bands.iter().find(|b| b.band == "all").expect("all band");
+    let p999 = bands.iter().find(|b| b.band == "p99.9").expect("p99.9 band");
+    assert!(
+        p999.share_of("gc_stall") > 0.0,
+        "the p99.9 band must carry a gc_stall component: {:?}",
+        p999.phases
+    );
+    assert!(
+        p999.share_of("gc_stall") > all.share_of("gc_stall"),
+        "gc_stall must concentrate in the tail: p99.9 {} <= all {}",
+        p999.share_of("gc_stall"),
+        all.share_of("gc_stall")
+    );
+    // Read-only control: same cell, no ingest → no GC, no gc_stall.
+    let (fcfg0, tcfg0) = fig13_cell_cfgs(0.0);
+    let mut t0 = Tracer::in_memory(1);
+    let r0 = serve_traced(exp::FIG13_APP, &fcfg0, &tcfg0, &mut t0);
+    assert_eq!(r0.gc_runs, 0, "read-only serving must not GC");
+    let (reqs0, _) = t0.take_requests();
+    trace::verify_conservation(&reqs0).expect("read-only conservation");
+    for b in trace::attribution(&reqs0) {
+        assert_eq!(
+            b.share_of("gc_stall"),
+            0.0,
+            "band {}: gc_stall attributed on a read-only run",
+            b.band
+        );
+    }
+}

@@ -1,0 +1,17 @@
+// Negative fixture (ISSUE-9): the sanctioned tracer shape — simulated
+// time carried as plain f64 seconds from the DES clock, and spans keyed
+// in a BTreeMap so every drain is id-ordered.
+use std::collections::BTreeMap;
+
+pub struct Span {
+    pub t0: f64,
+    pub t1: f64,
+}
+
+pub fn record(now: f64, open: &mut BTreeMap<u64, Span>, id: u64) {
+    open.insert(id, Span { t0: now, t1: now });
+}
+
+pub fn export_spans(open: &BTreeMap<u64, Span>) -> Vec<f64> {
+    open.values().map(|s| s.t1 - s.t0).collect()
+}

@@ -1,0 +1,26 @@
+// Positive fixture (ISSUE-9): the two determinism hazards a span
+// tracer is most tempted by — stamping spans off wall clocks instead of
+// simulated time, and draining a hash-ordered span map into an export.
+use std::collections::HashMap;
+use std::time::{Instant, SystemTime};
+
+pub struct Span {
+    pub t0: f64,
+    pub t1: f64,
+}
+
+pub fn stamp_span() -> (Instant, SystemTime) {
+    let t0 = Instant::now();
+    let wall = SystemTime::now();
+    (t0, wall)
+}
+
+pub fn export_spans() -> Vec<f64> {
+    let mut spans: HashMap<u64, Span> = HashMap::new();
+    spans.insert(7, Span { t0: 0.0, t1: 1.5 });
+    let mut out = Vec::new();
+    for s in spans.values() {
+        out.push(s.t1 - s.t0);
+    }
+    out
+}

@@ -149,6 +149,28 @@ fn bad_markers_are_findings() {
     );
 }
 
+#[test]
+fn trace_shaped_code_is_covered_by_wall_clock_and_hash_iter() {
+    // ISSUE-9: a span tracer's two likeliest determinism sins — wall
+    // clocks for timestamps and a hash-ordered span-map drain — both
+    // fire on the tracer-shaped positive fixture...
+    let r = scan_fixture("trace/fire.rs");
+    assert_eq!(
+        rules_of(&r),
+        ["wall-clock", "wall-clock", "hash-iter"],
+        "{:?}",
+        r.findings
+    );
+}
+
+#[test]
+fn trace_sanctioned_shape_is_clean() {
+    // ...and the sanctioned shape (sim-time f64 stamps, BTreeMap span
+    // store) produces no findings at all.
+    let r = scan_fixture("trace/clean.rs");
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+}
+
 /// Meta-test: every rule (and the bad-marker meta-rule) has at least
 /// one firing fixture in the corpus — a rule whose positive case stops
 /// firing has silently died.
