@@ -1,0 +1,32 @@
+//! `cargo bench --bench serve_elastic` — regenerates Fig 12: the
+//! elastic-fleet study (reactive and predictive autoscaling plus the
+//! mid-run shard rebalancer serving a load ramp and a flash crowd,
+//! against the best static fleet chosen fig10-style for the same
+//! traffic; the ISSUE-10 tentpole). Serving runs use the control plane
+//! as deployed — admission on, least-work balancing — and every shard
+//! migration ships real bytes over the rack link. See
+//! `traffic::elastic` for the autoscaler/rebalancer and
+//! `exp::fig12_elastic` for the sweep definition.
+//!
+//! Scale with `SOLANA_BENCH_FAST=1` (5%) or default 25% of the paper's
+//! dataset sizes; the *shape* (the elastic fleet meeting the p99 SLO
+//! with strictly fewer server-seconds than the best static fleet) is
+//! scale-invariant.
+
+use solana_isp::bench_support::Bencher;
+use solana_isp::exp::{self, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::from_env();
+    let table = exp::fig12_elastic(scale)?;
+    exp::emit(&table, "fig12")?;
+    // Wall-time of regenerating the artifact (simulator throughput):
+    let mut b = Bencher::new(0, if std::env::var("SOLANA_BENCH_FAST").is_ok() { 1 } else { 2 });
+    b.bench("fig12_serve_elastic", || {
+        let t = exp::fig12_elastic(scale).expect("rerun");
+        t.rows.len() as u64
+    });
+    print!("{}", b.report());
+    b.write_json("serve_elastic")?;
+    Ok(())
+}

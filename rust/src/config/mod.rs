@@ -72,6 +72,18 @@
 //! sample = 8               # trace every Nth request by id (1 = all)
 //! format = "jsonl"         # jsonl | chrome — export format for `out`
 //! out = "trace.jsonl"      # export path (omit to report in memory only)
+//!
+//! [autoscale]              # elastic fleet (ISSUE-10) — see traffic::elastic
+//! policy = "predictive"    # reactive | predictive — resize-decision policy
+//! min_servers = 1          # fleet floor (never drains below)
+//! max_servers = 8          # fleet ceiling ([fleet] servers is the initial size)
+//! check_interval_s = 1.0   # seconds between autoscaler evaluations
+//! hysteresis = 0.25        # scale-down dead band in (0,1)
+//! estimator_window_s = 10.0  # predictive arrival-rate estimator memory
+//! target_util = 0.8        # per-server utilization the fleet is sized for, (0,1]
+//! rebalance = true         # migrate hot shards between servers mid-run
+//! rebalance_threshold = 0.55 # routed-share trigger for a migration, (0,1]
+//! shards = 32              # routable shards (>= max_servers)
 //! ```
 //!
 //! `[fleet] replicas = 1` enables shard failover routing (ISSUE-6).
@@ -454,6 +466,63 @@ impl ExperimentConfig {
             }
             cfg.trace.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
         }
+        // ---- [autoscale]: elastic fleet (ISSUE-10) ------------------
+        {
+            use crate::traffic::{parse_autoscale_policy, AutoscaleConfig};
+            let mut ac = AutoscaleConfig::default();
+            let mut present = false;
+            if let Some(v) = t.str("autoscale.policy") {
+                ac.policy = parse_autoscale_policy(v)?;
+                present = true;
+            }
+            if let Some(v) = t.u64("autoscale.min_servers") {
+                ac.min_servers = v as usize;
+                present = true;
+            }
+            if let Some(v) = t.u64("autoscale.max_servers") {
+                ac.max_servers = v as usize;
+                present = true;
+            }
+            if let Some(v) = t.f64("autoscale.check_interval_s") {
+                ac.check_interval_s = v;
+                present = true;
+            }
+            if let Some(v) = t.f64("autoscale.hysteresis") {
+                ac.hysteresis = v;
+                present = true;
+            }
+            if let Some(v) = t.f64("autoscale.estimator_window_s") {
+                ac.estimator_window_s = v;
+                present = true;
+            }
+            if let Some(v) = t.f64("autoscale.target_util") {
+                ac.target_util = v;
+                present = true;
+            }
+            if let Some(v) = t.get("autoscale.rebalance") {
+                // Strict like `trace.enabled`: a non-boolean must not
+                // silently leave the rebalancer armed (its default).
+                ac.rebalance = v.as_bool().ok_or_else(|| {
+                    anyhow::anyhow!("autoscale.rebalance must be a boolean (true|false)")
+                })?;
+                present = true;
+            }
+            if let Some(v) = t.f64("autoscale.rebalance_threshold") {
+                ac.rebalance_threshold = v;
+                present = true;
+            }
+            if let Some(v) = t.u64("autoscale.shards") {
+                ac.shards = v as usize;
+                present = true;
+            }
+            if present {
+                // Every knob range is checkable now, against the
+                // `[fleet]` section; serve_fleet re-validates against
+                // the final (CLI-layered) fleet.
+                ac.validate(&cfg.fleet)?;
+                cfg.traffic.autoscale = Some(ac);
+            }
+        }
         anyhow::ensure!(
             cfg.sched.isp_drives <= cfg.sched.drives,
             "isp_drives ({}) exceeds drives ({})",
@@ -769,6 +838,72 @@ mod tests {
         assert!(ExperimentConfig::from_toml("[trace]\nenabled = \"maybe\"").is_err());
         assert!(ExperimentConfig::from_toml("[trace]\nformat = \"svg\"").is_err());
         assert!(ExperimentConfig::from_toml("[trace]\nsample = 0").is_err());
+    }
+
+    #[test]
+    fn autoscale_section_parses_and_validates() {
+        use crate::traffic::AutoscalePolicy;
+        // ISSUE-10: the [autoscale] section.
+        let c = ExperimentConfig::from_toml(
+            "[fleet]\nservers = 2\n\
+             [autoscale]\npolicy = \"reactive\"\nmin_servers = 2\nmax_servers = 6\n\
+             check_interval_s = 0.5\nhysteresis = 0.3\nestimator_window_s = 5.0\n\
+             target_util = 0.7\nrebalance = false\nrebalance_threshold = 0.6\nshards = 12\n",
+        )
+        .unwrap();
+        let ac = c.traffic.autoscale.expect("[autoscale] section present");
+        assert_eq!(ac.policy, AutoscalePolicy::Reactive);
+        assert_eq!(ac.min_servers, 2);
+        assert_eq!(ac.max_servers, 6);
+        assert_eq!(ac.check_interval_s, 0.5);
+        assert_eq!(ac.hysteresis, 0.3);
+        assert_eq!(ac.estimator_window_s, 5.0);
+        assert_eq!(ac.target_util, 0.7);
+        assert!(!ac.rebalance);
+        assert_eq!(ac.rebalance_threshold, 0.6);
+        assert_eq!(ac.shards, 12);
+        // any single key arms the section with defaults around it
+        let one = ExperimentConfig::from_toml("[autoscale]\nmax_servers = 4\n").unwrap();
+        let ac = one.traffic.autoscale.expect("single key arms the section");
+        assert_eq!(ac.max_servers, 4);
+        assert_eq!(ac.policy, AutoscalePolicy::Predictive, "default policy");
+        // no [autoscale] section → the exact static serving path
+        let d = ExperimentConfig::from_toml("").unwrap();
+        assert!(d.traffic.autoscale.is_none());
+        // validation at parse time: one rejection per knob
+        assert!(ExperimentConfig::from_toml("[autoscale]\npolicy = \"psychic\"").is_err());
+        assert!(ExperimentConfig::from_toml("[autoscale]\nmin_servers = 0").is_err());
+        assert!(
+            ExperimentConfig::from_toml("[autoscale]\nmin_servers = 5\nmax_servers = 2").is_err()
+        );
+        assert!(ExperimentConfig::from_toml("[autoscale]\ncheck_interval_s = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml("[autoscale]\ncheck_interval_s = inf").is_err());
+        assert!(ExperimentConfig::from_toml("[autoscale]\nhysteresis = 1.5").is_err());
+        assert!(ExperimentConfig::from_toml("[autoscale]\nhysteresis = nan").is_err());
+        assert!(ExperimentConfig::from_toml("[autoscale]\nestimator_window_s = -1.0").is_err());
+        assert!(ExperimentConfig::from_toml("[autoscale]\ntarget_util = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml("[autoscale]\ntarget_util = 1.5").is_err());
+        assert!(ExperimentConfig::from_toml("[autoscale]\nrebalance = \"maybe\"").is_err());
+        assert!(ExperimentConfig::from_toml("[autoscale]\nrebalance_threshold = 0.0").is_err());
+        assert!(
+            ExperimentConfig::from_toml("[autoscale]\nmax_servers = 8\nshards = 4").is_err(),
+            "every active server needs at least one shard"
+        );
+        // cross-section checks against [fleet]
+        assert!(
+            ExperimentConfig::from_toml(
+                "[fleet]\nservers = 4\nreplicas = 1\n[autoscale]\nmin_servers = 1\n"
+            )
+            .is_err(),
+            "replicas must fit the smallest fleet"
+        );
+        assert!(
+            ExperimentConfig::from_toml(
+                "[fleet]\nservers = 2\nweights = [36, 12]\n[autoscale]\nmax_servers = 4\n"
+            )
+            .is_err(),
+            "explicit weights assume fixed membership"
+        );
     }
 
     #[test]

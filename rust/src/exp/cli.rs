@@ -14,7 +14,7 @@
 //! solana serve --trace out.jsonl --trace-sample 8        # span tracing (ISSUE-9)
 //! solana trace-report --input out.jsonl                  # tail-latency attribution
 //! solana fig5  --app speech [--scale 0.25] [--threads 8]
-//! solana fig6 | fig7 | fig8 | fig9 | fig10 | fig11 | fig13 | table1 | power
+//! solana fig6 | fig7 | fig8 | fig9 | fig10 | fig11 | fig12 | fig13 | table1 | power
 //! solana ablate --which ratio|datapath|wakeup|dispatch --app sentiment
 //! solana version | help
 //! ```
@@ -86,6 +86,16 @@ fn commands() -> Vec<Command> {
             .opt("faults", None, "fault plan: comma-separated name@rate / key=value clauses, e.g. 'ack-loss@0.05,stall@0.1,stall-s=0.2' or 'server-crash@0.3,crash-server=0'")
             .opt("fault-seed", None, "fault-plan RNG seed (independent of the traffic stream; requires --faults)")
             .opt("ingest-rate", None, "background ingest/update writes per second per server — runs the full FTL/GC write path during serving (default 0 = read-only)")
+            .opt("autoscale", None, "reactive|predictive — arm the mid-run autoscaler (elastic fleet; --servers is the initial size)")
+            .opt("autoscale-min", None, "autoscaler fleet floor (default 1; requires --autoscale)")
+            .opt("autoscale-max", None, "autoscaler fleet ceiling (default 8; requires --autoscale)")
+            .opt("autoscale-interval", None, "seconds between autoscaler evaluations (default 1)")
+            .opt("autoscale-hysteresis", None, "scale-down dead band in (0,1): drain only when the window p99 stays under (1-h) x SLO (default 0.25)")
+            .opt("autoscale-window", None, "predictive arrival-rate estimator window, seconds (default 10)")
+            .opt("autoscale-util", None, "target per-server utilization in (0,1] (default 0.8)")
+            .opt("autoscale-rebalance", None, "on|off — migrate hot shards between servers mid-run (default on)")
+            .opt("autoscale-rebalance-threshold", None, "hottest server's share of window-routed requests that triggers a migration, in (0,1] (default 0.55)")
+            .opt("autoscale-shards", None, "routable shards the corpus splits into (default 32; must be >= the ceiling)")
             .flag("hedge", "hedge slow requests: duplicate at 75% of the timeout, first response wins")
             .opt("trace", None, "arm the span tracer and write the request trace to this path (see also the [trace] config section)")
             .opt("trace-format", None, "jsonl|chrome — trace export format (default jsonl; chrome loads in Perfetto)")
@@ -113,6 +123,9 @@ fn commands() -> Vec<Command> {
             .opt("scale", None, "dataset scale")
             .opt("threads", None, "sweep worker threads"),
         Command::new("fig11", "regenerate Fig 11 (availability under faults × resilience policy)")
+            .opt("scale", None, "dataset scale")
+            .opt("threads", None, "sweep worker threads"),
+        Command::new("fig12", "regenerate Fig 12 (elastic fleet: autoscaler + shard rebalancer vs best static fleet)")
             .opt("scale", None, "dataset scale")
             .opt("threads", None, "sweep worker threads"),
         Command::new("fig13", "regenerate Fig 13 (write + GC interference: tail latency and WAF under ingest)")
@@ -333,6 +346,67 @@ pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
                 // which sees the final server count.
                 fcfg.replicas = n as usize;
             }
+            // Elastic fleet (ISSUE-10): --autoscale arms the autoscaler
+            // (layering over an [autoscale] config section if present);
+            // the sub-flags tune it. A sub-flag without the autoscaler
+            // armed is rejected, not silently ignored. Knob ranges are
+            // validated by serve_fleet against the final fleet.
+            if let Some(p) = args.str("autoscale") {
+                let mut ac = tcfg.autoscale.take().unwrap_or_default();
+                ac.policy = crate::traffic::parse_autoscale_policy(p)
+                    .map_err(|e| anyhow::anyhow!("--autoscale: {e}"))?;
+                tcfg.autoscale = Some(ac);
+            }
+            match tcfg.autoscale.as_mut() {
+                Some(ac) => {
+                    if let Some(n) = args.u64("autoscale-min")? {
+                        ac.min_servers = n as usize;
+                    }
+                    if let Some(n) = args.u64("autoscale-max")? {
+                        ac.max_servers = n as usize;
+                    }
+                    if let Some(s) = args.f64("autoscale-interval")? {
+                        ac.check_interval_s = s;
+                    }
+                    if let Some(h) = args.f64("autoscale-hysteresis")? {
+                        ac.hysteresis = h;
+                    }
+                    if let Some(w) = args.f64("autoscale-window")? {
+                        ac.estimator_window_s = w;
+                    }
+                    if let Some(u) = args.f64("autoscale-util")? {
+                        ac.target_util = u;
+                    }
+                    if let Some(v) = args.str("autoscale-rebalance") {
+                        ac.rebalance = crate::traffic::parse_on_off(v)
+                            .map_err(|e| anyhow::anyhow!("--autoscale-rebalance: {e}"))?;
+                    }
+                    if let Some(t) = args.f64("autoscale-rebalance-threshold")? {
+                        ac.rebalance_threshold = t;
+                    }
+                    if let Some(n) = args.u64("autoscale-shards")? {
+                        ac.shards = n as usize;
+                    }
+                }
+                None => {
+                    for key in [
+                        "autoscale-min",
+                        "autoscale-max",
+                        "autoscale-interval",
+                        "autoscale-hysteresis",
+                        "autoscale-window",
+                        "autoscale-util",
+                        "autoscale-rebalance",
+                        "autoscale-rebalance-threshold",
+                        "autoscale-shards",
+                    ] {
+                        anyhow::ensure!(
+                            args.str(key).is_none(),
+                            "--{key} requires --autoscale or an [autoscale] config section"
+                        );
+                    }
+                }
+            }
             if let Some(spec) = args.str("faults") {
                 let seed = match args.u64("fault-seed")? {
                     Some(s) => s,
@@ -448,6 +522,7 @@ pub fn dispatch(argv: &[String]) -> anyhow::Result<i32> {
         "fig9" => exp::emit(&exp::fig9_latency(scale)?, "fig9")?,
         "fig10" => exp::emit(&exp::fig10_autoscale(scale)?, "fig10")?,
         "fig11" => exp::emit(&exp::fig11_availability(scale)?, "fig11")?,
+        "fig12" => exp::emit(&exp::fig12_elastic(scale)?, "fig12")?,
         "fig13" => exp::emit(&exp::fig13_gc(scale)?, "fig13")?,
         "table1" => exp::emit(&exp::table1(scale)?, "table1")?,
         "power" => exp::emit(&exp::power_breakdown(), "power")?,
@@ -576,6 +651,16 @@ fn print_serve_report(r: &ServeReport) {
         crate::util::human_secs(r.slo_p99_s),
         if r.meets_slo() { "met" } else { "violated" }
     );
+    if !r.timeline.is_empty() {
+        println!("fleet peak          {:>14}", r.peak_servers);
+        println!("joins / drains      {:>7} / {}", r.joins, r.drains);
+        println!(
+            "migrations          {:>14} ({})",
+            r.migrations,
+            crate::util::human_bytes(r.migrated_bytes)
+        );
+        println!("server-seconds      {:>13.1}s", r.server_seconds);
+    }
     for s in &r.per_server {
         println!(
             "  server {:<2} {:>5} {:>9} served  {:>7} shed  host {:>9}  csd {:>9}",
@@ -640,7 +725,30 @@ fn serve_json(r: &ServeReport) -> crate::codec::json::Json {
         .set("ingest_events", r.ingest_events.into())
         .set("max_queue_depth", r.max_queue_depth.into())
         .set("mean_queue_depth", r.mean_queue_depth.into())
-        .set("max_inflight", r.max_inflight.into());
+        .set("max_inflight", r.max_inflight.into())
+        .set("server_seconds", r.server_seconds.into())
+        .set("peak_servers", (r.peak_servers as u64).into())
+        .set("migrations", r.migrations.into())
+        .set("migrated_bytes", r.migrated_bytes.into())
+        .set("joins", r.joins.into())
+        .set("drains", r.drains.into());
+    let timeline: Vec<Json> = r
+        .timeline
+        .iter()
+        .map(|s| {
+            let mut o = Json::obj();
+            o.set("t_s", s.t.into())
+                .set("active", (s.active as u64).into())
+                .set("draining", (s.draining as u64).into())
+                .set("p99_s", s.p99_s.into())
+                .set("arrived", s.arrived.into())
+                .set("served", s.served.into())
+                .set("shed", s.shed.into())
+                .set("energy_j", s.energy_j.into());
+            o
+        })
+        .collect();
+    j.set("timeline", timeline.into());
     let servers: Vec<Json> = r
         .per_server
         .iter()
@@ -893,6 +1001,13 @@ mod tests {
     }
 
     #[test]
+    fn fig12_smoke() {
+        // the CI smoke invocation: `solana fig12 --scale 0.01` (the test
+        // runs one notch smaller to stay quick)
+        assert_eq!(dispatch(&sv(&["fig12", "--scale", "0.005"])).unwrap(), 0);
+    }
+
+    #[test]
     fn fig13_smoke() {
         // the CI smoke invocation: `solana fig13 --scale 0.01` (the test
         // runs one notch smaller to stay quick)
@@ -958,6 +1073,67 @@ mod tests {
         assert!(dispatch(&sv(&["serve", "--replicas", "1", "--scale", "0.01"])).is_err());
         // --fault-seed without a fault plan is meaningless
         assert!(dispatch(&sv(&["serve", "--fault-seed", "3", "--scale", "0.01"])).is_err());
+    }
+
+    #[test]
+    fn serve_elastic_smoke() {
+        // The CI elastic smoke invocation: an autoscaled serve through
+        // the real CLI, both policies and both report formats.
+        let code = dispatch(&sv(&[
+            "serve", "--app", "speech", "--servers", "1", "--autoscale", "predictive",
+            "--autoscale-max", "4", "--load", "0.9", "--requests", "2000",
+            "--scale", "0.01", "--json",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        let code = dispatch(&sv(&[
+            "serve", "--app", "speech", "--autoscale", "reactive",
+            "--autoscale-max", "2", "--autoscale-rebalance", "off",
+            "--load", "0.5", "--requests", "800", "--scale", "0.01",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn serve_rejects_bad_autoscale_specs() {
+        // unknown policy name: rejected at parse time
+        assert!(dispatch(&sv(&["serve", "--autoscale", "psychic", "--scale", "0.01"])).is_err());
+        // a sub-flag without the autoscaler armed is an error, not a no-op
+        assert!(dispatch(&sv(&["serve", "--autoscale-max", "4", "--scale", "0.01"])).is_err());
+        // knob ranges, one rejection each (validated by serve_fleet)
+        let bad = [
+            vec!["--autoscale-min", "0"],
+            vec!["--autoscale-min", "5", "--autoscale-max", "2"],
+            vec!["--autoscale-interval", "0"],
+            vec!["--autoscale-hysteresis", "1.5"],
+            vec!["--autoscale-hysteresis", "nan"],
+            vec!["--autoscale-window", "0"],
+            vec!["--autoscale-util", "0"],
+            vec!["--autoscale-util", "1.5"],
+            vec!["--autoscale-rebalance", "maybe"],
+            vec!["--autoscale-rebalance-threshold", "0"],
+            vec!["--autoscale-shards", "2"],
+        ];
+        for extra in bad {
+            let mut argv =
+                sv(&["serve", "--autoscale", "predictive", "--scale", "0.01"]);
+            argv.extend(sv(&extra));
+            assert!(dispatch(&argv).is_err(), "accepted {extra:?}");
+        }
+        // failover replicas must fit the smallest fleet the autoscaler
+        // may shrink to
+        assert!(dispatch(&sv(&[
+            "serve", "--servers", "2", "--replicas", "1", "--autoscale", "predictive",
+            "--scale", "0.01"
+        ]))
+        .is_err());
+        // explicit per-server weights assume fixed membership
+        assert!(dispatch(&sv(&[
+            "serve", "--servers", "2", "--weights", "36,12", "--autoscale", "predictive",
+            "--scale", "0.01"
+        ]))
+        .is_err());
     }
 
     #[test]

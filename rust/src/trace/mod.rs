@@ -85,10 +85,17 @@ pub enum SpanKind {
     FailoverRedirect,
     /// Injected drive stall (fault plan).
     Stall,
+    /// The request's home shard was mid-migration at arrival; the phase
+    /// covers the wait for the transfer to drain at the destination
+    /// (ISSUE-10 elastic fleet).
+    Migration,
+    /// The request was in flight on a server that started draining out
+    /// of the fleet; the mark pins the drain start (ISSUE-10).
+    Drain,
 }
 
 /// All kinds, for exhaustive reporting/tests.
-pub const SPAN_KINDS: [SpanKind; 15] = [
+pub const SPAN_KINDS: [SpanKind; 17] = [
     SpanKind::Admission,
     SpanKind::FormationWait,
     SpanKind::DispatchWait,
@@ -104,6 +111,8 @@ pub const SPAN_KINDS: [SpanKind; 15] = [
     SpanKind::Hedge,
     SpanKind::FailoverRedirect,
     SpanKind::Stall,
+    SpanKind::Migration,
+    SpanKind::Drain,
 ];
 
 impl SpanKind {
@@ -124,6 +133,8 @@ impl SpanKind {
             SpanKind::Hedge => "hedge",
             SpanKind::FailoverRedirect => "failover_redirect",
             SpanKind::Stall => "stall",
+            SpanKind::Migration => "migration",
+            SpanKind::Drain => "drain",
         }
     }
 

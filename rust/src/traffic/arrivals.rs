@@ -108,6 +108,14 @@ impl Ord for Pending {
     }
 }
 
+/// One piecewise-constant rate segment of a ramped stream: arrivals
+/// accrue at `rate` req/s until absolute time `end`.
+#[derive(Clone, Copy, Debug)]
+struct Segment {
+    end: f64,
+    rate: f64,
+}
+
 /// A bounded stream of timestamped requests over one of the
 /// [`ArrivalProcess`] shapes. Open-loop processes are self-driving;
 /// the closed loop needs [`Arrivals::on_complete`] fed back to re-arm
@@ -131,6 +139,11 @@ pub struct Arrivals {
     /// Closed-loop state.
     think_secs: f64,
     pending: BinaryHeap<Pending>,
+    /// Ramped-Poisson state (ISSUE-10): piecewise-constant rate
+    /// schedule. Empty for every other stream — the exact fixed-rate
+    /// Poisson draw sequence is untouched.
+    segments: Vec<Segment>,
+    seg_idx: usize,
 }
 
 impl Arrivals {
@@ -152,7 +165,53 @@ impl Arrivals {
             rate,
             think_secs: 0.0,
             pending: BinaryHeap::new(),
+            segments: Vec::new(),
+            seg_idx: 0,
         }
+    }
+
+    /// Open-loop Poisson with a piecewise-constant offered rate
+    /// (ISSUE-10 elastic fleet): `segments` is a list of
+    /// `(duration_s, rate_rps)` pairs walked in order; the last
+    /// segment's rate extends forever, so the stream can always emit
+    /// all `limit` requests. Each arrival consumes exactly one
+    /// unit-mean exponential draw, spread across segment boundaries by
+    /// inversion — within any one segment the stream is exactly Poisson
+    /// at that segment's rate, and the draw count per request is
+    /// independent of how many boundaries the gap crosses.
+    pub fn ramped(segments: &[(f64, f64)], limit: u64, seed: u64) -> Arrivals {
+        assert!(!segments.is_empty(), "ramped stream needs at least one segment");
+        for &(dur, rate) in segments {
+            assert!(dur > 0.0 && dur.is_finite(), "segment duration must be positive");
+            assert!(rate > 0.0 && rate.is_finite(), "segment rate must be positive");
+        }
+        let mut end = 0.0;
+        let segs: Vec<Segment> = segments
+            .iter()
+            .map(|&(dur, rate)| {
+                end += dur;
+                Segment { end, rate }
+            })
+            .collect();
+        let mut a = Arrivals {
+            process: ArrivalProcess::Poisson,
+            rng: Rng::new(seed).fork("traffic.ramped"),
+            limit,
+            issued: 0,
+            next_open: 0.0,
+            on_until: f64::INFINITY,
+            peak_rate: 0.0,
+            mean_on_secs: 0.0,
+            mean_off_secs: 0.0,
+            rate: segments[0].1,
+            think_secs: 0.0,
+            pending: BinaryHeap::new(),
+            segments: segs,
+            seg_idx: 0,
+        };
+        let first = a.rng.exponential(1.0);
+        a.advance_ramped(first);
+        a
     }
 
     /// Open-loop bursty process with long-run mean `rate`: ON windows
@@ -179,6 +238,8 @@ impl Arrivals {
             rate,
             think_secs: 0.0,
             pending: BinaryHeap::new(),
+            segments: Vec::new(),
+            seg_idx: 0,
         };
         let first = a.rng.exponential(peak_rate);
         a.advance_bursty(first);
@@ -211,6 +272,8 @@ impl Arrivals {
             rate: 0.0,
             think_secs,
             pending,
+            segments: Vec::new(),
+            seg_idx: 0,
         }
     }
 
@@ -246,7 +309,12 @@ impl Arrivals {
         self.issued += 1;
         match self.process {
             ArrivalProcess::Poisson => {
-                self.next_open += self.rng.exponential(self.rate);
+                if self.segments.is_empty() {
+                    self.next_open += self.rng.exponential(self.rate);
+                } else {
+                    let gap = self.rng.exponential(1.0);
+                    self.advance_ramped(gap);
+                }
             }
             ArrivalProcess::Bursty => {
                 let gap = self.rng.exponential(self.peak_rate);
@@ -272,6 +340,25 @@ impl Arrivals {
             self.on_until = next_on_start + self.rng.exponential(1.0 / self.mean_on_secs);
         }
         self.next_open += gap;
+    }
+
+    /// Spend `units` of unit-rate exponential mass from the cursor,
+    /// walking the rate schedule: a segment at rate `r` converts mass
+    /// to time as `dt = units / r`, and a segment spanning `s` seconds
+    /// absorbs `r × s` units. Leaves `next_open` at the resulting
+    /// arrival instant; the final segment extends forever.
+    fn advance_ramped(&mut self, mut units: f64) {
+        loop {
+            let Segment { end, rate } = self.segments[self.seg_idx];
+            let dt = units / rate;
+            if self.seg_idx + 1 >= self.segments.len() || self.next_open + dt <= end {
+                self.next_open += dt;
+                return;
+            }
+            units -= (end - self.next_open) * rate;
+            self.next_open = end;
+            self.seg_idx += 1;
+        }
     }
 
     /// Feed a completion back (closed loop re-arms that client after a
@@ -393,6 +480,54 @@ mod tests {
         assert_eq!(n, 10);
         a.on_complete(99.0);
         assert_eq!(a.peek(), None, "limit reached: completions stop re-arming");
+    }
+
+    #[test]
+    fn ramped_tracks_segment_rates() {
+        // A 3-segment schedule: quiet → surge → quiet. Arrivals inside
+        // each window must track that window's rate, not the mean.
+        let ts = drain_open(Arrivals::ramped(
+            &[(10.0, 50.0), (10.0, 500.0), (10.0, 50.0)],
+            6_000,
+            17,
+        ));
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "arrivals sorted");
+        let in_window = |lo: f64, hi: f64| ts.iter().filter(|&&t| t >= lo && t < hi).count() as f64;
+        let quiet = in_window(0.0, 10.0) / 10.0;
+        let surge = in_window(10.0, 20.0) / 10.0;
+        assert!((quiet / 50.0 - 1.0).abs() < 0.25, "quiet-window rate {quiet}");
+        assert!((surge / 500.0 - 1.0).abs() < 0.1, "surge-window rate {surge}");
+    }
+
+    #[test]
+    fn ramped_last_segment_extends_forever() {
+        // More requests than the schedule's windows hold: the tail must
+        // keep arriving at the final segment's rate, never stall.
+        let ts = drain_open(Arrivals::ramped(&[(1.0, 10.0), (1.0, 100.0)], 2_000, 3));
+        assert_eq!(ts.len(), 2_000);
+        let span_past = ts.last().unwrap() - 2.0;
+        let rate_past = ts.iter().filter(|&&t| t >= 2.0).count() as f64 / span_past;
+        assert!((rate_past / 100.0 - 1.0).abs() < 0.1, "tail rate {rate_past}");
+    }
+
+    #[test]
+    fn ramped_same_seed_is_bit_identical() {
+        let segs = [(5.0, 40.0), (5.0, 160.0)];
+        let a = drain_open(Arrivals::ramped(&segs, 800, 7));
+        let b = drain_open(Arrivals::ramped(&segs, 800, 7));
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        let c = drain_open(Arrivals::ramped(&segs, 800, 8));
+        assert_ne!(a, c, "different seed, different timeline");
+    }
+
+    #[test]
+    fn ramped_single_segment_is_poisson_shaped() {
+        // One segment == a fixed-rate Poisson process (its own RNG fork,
+        // so not bit-identical to Arrivals::poisson — but the measured
+        // rate must match).
+        let ts = drain_open(Arrivals::ramped(&[(1.0, 100.0)], 10_000, 42));
+        let measured = ts.len() as f64 / ts.last().unwrap();
+        assert!((measured / 100.0 - 1.0).abs() < 0.05, "rate {measured}");
     }
 
     #[test]

@@ -44,7 +44,7 @@
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap};
 
-use crate::cluster::fleet::FleetConfig;
+use crate::cluster::fleet::{FleetConfig, ServerSpec};
 use crate::faults::{FaultPlan, LinkOutcome};
 use crate::interconnect::RackLink;
 use crate::metrics::Metrics;
@@ -52,10 +52,11 @@ use crate::power::PowerModel;
 use crate::trace::{EngineProfile, Outcome as TraceOutcome, SpanKind, Tracer};
 use crate::workloads::{App, AppModel};
 
+use super::elastic::{AutoscaleConfig, AutoscalePolicy};
 use super::engine::{EnginePolicy, Offer, ServeEngine};
 use super::{
-    default_slo_p99, fleet_nominal_rate, LatencyStats, ServeReport, ServerServeStats,
-    TrafficConfig,
+    default_slo_p99, fleet_nominal_rate, FleetSample, LatencyStats, ServeReport,
+    ServerServeStats, TrafficConfig,
 };
 
 /// Front-door load-balancer policy.
@@ -293,6 +294,446 @@ impl Ord for Deadline {
     }
 }
 
+// ---- the elastic plane (ISSUE-10) -----------------------------------
+
+/// One server's membership in a time-varying fleet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Membership {
+    /// Provisioned but not part of the fleet (takes nothing).
+    Off,
+    /// Taking new work.
+    Active,
+    /// Finishing in-flight work, taking nothing new; leaves the fleet
+    /// (→ Off) once its engine and front-door books are empty.
+    Draining,
+}
+
+/// Runtime state of the autoscaler + shard rebalancer. Exists only when
+/// `[autoscale]` is configured; `None` contributes a single +INF to the
+/// event race and mutates nothing — the bit-identical static path. The
+/// whole layer draws **no RNG**: every decision is a pure function of
+/// observed simulation state.
+struct Elastic {
+    cfg: AutoscaleConfig,
+    /// Copy of `cfg.check_interval_s` (the observation-window length).
+    interval: f64,
+    state: Vec<Membership>,
+    /// Shard → serving server. Always an Active server: joins, drains
+    /// and rebalances rehome shards before membership changes bite.
+    shard_home: Vec<usize>,
+    /// Per shard: the instant its last migration drains at the
+    /// destination. A request for a shard arriving before this waits at
+    /// the front door (the migrating shard is unavailable on the source
+    /// once handoff starts) and submits at the destination then.
+    shard_ready_at: Vec<f64>,
+    /// Request → shard routing state: smooth weighted rotation over the
+    /// Zipf-like shard popularity implied by `[traffic] skew`
+    /// (`w_s ∝ 1/(s+1)^skew`; skew 0 = uniform).
+    shard_counts: Vec<u64>,
+    shard_weights: Vec<f64>,
+    /// Migration cost: one shard's resident bytes, shipped over the
+    /// rack link per move (corpus bytes / shards, floored at a header).
+    shard_bytes: u64,
+    /// Next autoscaler evaluation instant (+INF once arrivals end).
+    next_eval: f64,
+    /// Evaluations run so far (the first seeds the EWMA directly).
+    evals: u64,
+    /// Windowed arrival-rate estimator (predictive policy).
+    ewma_rps: f64,
+    /// Mean nominal per-server service rate — the fleet-sizing unit.
+    per_server_rate: f64,
+    /// Per server: activation instant of the current residency.
+    active_since: Vec<f64>,
+    /// Per server: accumulated active+draining seconds over closed
+    /// residencies — the `server_seconds` report source.
+    closed_secs: Vec<f64>,
+    joins: u64,
+    drains: u64,
+    migrations: u64,
+    migrated_bytes: u64,
+    peak_servers: usize,
+    timeline: Vec<FleetSample>,
+    // Current-window accumulators, reset at every evaluation.
+    win_arrived: u64,
+    win_served: u64,
+    win_shed: u64,
+    win_lat: Vec<f64>,
+    win_routed: Vec<u64>,
+    win_shard: Vec<u64>,
+}
+
+impl Elastic {
+    fn new(
+        cfg: AutoscaleConfig,
+        t0: f64,
+        active0: usize,
+        rates: &[f64],
+        skew: f64,
+        corpus_bytes: u64,
+    ) -> Elastic {
+        let n = rates.len();
+        let shards = cfg.shards;
+        let mut state = vec![Membership::Off; n];
+        let mut active_since = vec![0.0; n];
+        for (s, a) in state.iter_mut().zip(active_since.iter_mut()).take(active0) {
+            *s = Membership::Active;
+            *a = t0;
+        }
+        let shard_weights: Vec<f64> =
+            (0..shards).map(|s| 1.0 / ((s + 1) as f64).powf(skew)).collect();
+        let per_server_rate = rates.iter().sum::<f64>() / n as f64;
+        Elastic {
+            interval: cfg.check_interval_s,
+            state,
+            shard_home: (0..shards).map(|s| s % active0).collect(),
+            shard_ready_at: vec![0.0; shards],
+            shard_counts: vec![0; shards],
+            shard_weights,
+            shard_bytes: (corpus_bytes / shards as u64).max(64),
+            next_eval: t0 + cfg.check_interval_s,
+            evals: 0,
+            ewma_rps: 0.0,
+            per_server_rate,
+            active_since,
+            closed_secs: vec![0.0; n],
+            joins: 0,
+            drains: 0,
+            migrations: 0,
+            migrated_bytes: 0,
+            peak_servers: active0,
+            timeline: Vec::new(),
+            win_arrived: 0,
+            win_served: 0,
+            win_shed: 0,
+            win_lat: Vec::new(),
+            win_routed: vec![0; n],
+            win_shard: vec![0; shards],
+            cfg,
+        }
+    }
+
+    fn is_active(&self, i: usize) -> bool {
+        self.state[i] == Membership::Active
+    }
+
+    fn active_count(&self) -> usize {
+        self.state.iter().filter(|s| **s == Membership::Active).count()
+    }
+
+    /// Failover mask for the resilience plane under elastic membership:
+    /// a server is unroutable when believed dead OR not Active. The
+    /// replica ring scans over this instead of the raw dead belief.
+    fn masked(&self, dead: &[bool]) -> Vec<bool> {
+        dead.iter()
+            .zip(&self.state)
+            .map(|(&d, s)| d || *s != Membership::Active)
+            .collect()
+    }
+
+    /// Route one arrival: shard by popularity rotation, server by the
+    /// shard's home (failing over the replica ring when the home is
+    /// believed dead). Returns the target server and, when the shard is
+    /// mid-migration, the instant the transfer drains (the request then
+    /// waits at the front door and submits at the destination).
+    fn route(&mut self, now: f64, balancer: &mut Balancer, replicas: usize) -> (usize, Option<f64>) {
+        let shard = super::smooth_pick(&self.shard_counts, &self.shard_weights);
+        self.shard_counts[shard] += 1;
+        let mut s = self.shard_home[shard];
+        if balancer.dead[s] && replicas > 0 {
+            s = failover_target(s, &self.masked(&balancer.dead));
+        }
+        balancer.assigned[s] += 1;
+        balancer.outstanding[s] += 1;
+        self.win_arrived += 1;
+        self.win_routed[s] += 1;
+        self.win_shard[shard] += 1;
+        let ready = self.shard_ready_at[shard];
+        (s, (now < ready).then_some(ready))
+    }
+
+    /// Move one shard to `dest`, paying the rack link for its bytes.
+    /// The shard serves from the destination once the transfer drains;
+    /// requests arriving before that wait at the front door.
+    fn migrate(&mut self, shard: usize, dest: usize, now: f64, rack: &mut RackLink) {
+        let done = rack.send(now, self.shard_bytes);
+        self.shard_home[shard] = dest;
+        self.shard_ready_at[shard] = done;
+        self.migrations += 1;
+        self.migrated_bytes += self.shard_bytes;
+    }
+
+    /// Activate the lowest-index Off server and rehome an even share of
+    /// shards onto it (each move pays the rack). Returns false when no
+    /// server is available to join.
+    fn join(&mut self, now: f64, rack: &mut RackLink) -> bool {
+        if self.active_count() >= self.cfg.max_servers {
+            return false;
+        }
+        let Some(nw) = self.state.iter().position(|s| *s == Membership::Off) else {
+            return false;
+        };
+        self.state[nw] = Membership::Active;
+        self.active_since[nw] = now;
+        self.joins += 1;
+        let n_active = self.active_count();
+        let take = self.shard_home.len() / n_active;
+        for _ in 0..take {
+            // Donor: the Active server (≠ newcomer) homing the most
+            // shards, ties to the lowest index; move its lowest shard.
+            let mut homed = vec![0u64; self.state.len()];
+            for &h in &self.shard_home {
+                homed[h] += 1;
+            }
+            let mut donor = usize::MAX;
+            for i in 0..self.state.len() {
+                if i == nw || !self.is_active(i) {
+                    continue;
+                }
+                if donor == usize::MAX || homed[i] > homed[donor] {
+                    donor = i;
+                }
+            }
+            if donor == usize::MAX || homed[donor] == 0 {
+                break;
+            }
+            let Some(shard) = self.shard_home.iter().position(|&h| h == donor) else {
+                break;
+            };
+            self.migrate(shard, nw, now, rack);
+        }
+        true
+    }
+
+    /// Start draining the highest-index Active server: it takes nothing
+    /// new, every shard it homes migrates to the least-loaded remaining
+    /// Active server, and in-flight requests finish where they are
+    /// (their drain start is pinned as a trace mark). Never shrinks the
+    /// Active set below the configured floor.
+    fn drain(
+        &mut self,
+        now: f64,
+        balancer: &Balancer,
+        rack: &mut RackLink,
+        tracer: &mut Tracer,
+        tracker: &BTreeMap<u64, Track>,
+    ) {
+        let actives: Vec<usize> =
+            (0..self.state.len()).filter(|&i| self.is_active(i)).collect();
+        if actives.len() <= self.cfg.min_servers || actives.len() <= 1 {
+            return;
+        }
+        let Some(&victim) = actives.last() else {
+            return;
+        };
+        self.state[victim] = Membership::Draining;
+        self.drains += 1;
+        for shard in 0..self.shard_home.len() {
+            if self.shard_home[shard] != victim {
+                continue;
+            }
+            // Least-work destination: argmin outstanding service time
+            // over the remaining Active servers, ties to lowest index.
+            let mut dest = usize::MAX;
+            let mut best = f64::INFINITY;
+            for i in 0..self.state.len() {
+                if !self.is_active(i) {
+                    continue;
+                }
+                let wl = balancer.outstanding[i] as f64 / balancer.rates[i].max(1e-12);
+                if wl < best {
+                    best = wl;
+                    dest = i;
+                }
+            }
+            if dest == usize::MAX {
+                break;
+            }
+            self.migrate(shard, dest, now, rack);
+        }
+        // Pin the drain start on every request still in flight there
+        // (BTreeMap iteration: request-id order, deterministic).
+        for (id, t) in tracker.iter() {
+            if !t.done && t.home == victim {
+                tracer.mark(*id, SpanKind::Drain, now);
+            }
+        }
+    }
+
+    /// One autoscaler evaluation at `now`: close the observation
+    /// window, decide joins/drains per policy, complete finished
+    /// drains, maybe rebalance one hot shard, and sample the timeline.
+    #[allow(clippy::too_many_arguments)]
+    fn eval(
+        &mut self,
+        now: f64,
+        t0: f64,
+        balancer: &mut Balancer,
+        engines: &[ServeEngine],
+        rack: &mut RackLink,
+        tracer: &mut Tracer,
+        tracker: &BTreeMap<u64, Track>,
+        specs: &[ServerSpec],
+        power: &PowerModel,
+        slo: f64,
+        arrivals_done: bool,
+    ) {
+        let p99 = LatencyStats::of(&self.win_lat).p99;
+        let obs = self.win_arrived as f64 / self.interval;
+        // Windowed arrival-rate estimator: EWMA whose memory spans
+        // roughly `estimator_window_s`; the first window seeds it.
+        let alpha = (self.interval / self.cfg.estimator_window_s).min(1.0);
+        self.ewma_rps =
+            if self.evals == 0 { obs } else { alpha * obs + (1.0 - alpha) * self.ewma_rps };
+        self.evals += 1;
+        let est = obs.max(self.ewma_rps);
+        let active = self.active_count();
+        // What one active server is sized to carry.
+        let cap = self.per_server_rate * self.cfg.target_util;
+
+        let mut want_join = 0usize;
+        let mut want_drain = false;
+        match self.cfg.policy {
+            AutoscalePolicy::Reactive => {
+                // Threshold + hysteresis on the last window only.
+                let blown = self.win_shed > 0 || (!self.win_lat.is_empty() && p99 > slo);
+                if blown {
+                    want_join = 1;
+                } else if self.win_shed == 0
+                    && !self.win_lat.is_empty()
+                    && p99 < (1.0 - self.cfg.hysteresis) * slo
+                    && active > 1
+                    && obs < cap * (active - 1) as f64
+                {
+                    // The utilization guard: only drain when the
+                    // shrunken fleet would still run under target —
+                    // p99 hysteresis alone oscillates on ramps.
+                    want_drain = true;
+                }
+            }
+            AutoscalePolicy::Predictive => {
+                // Size the fleet for the estimated rate directly; a
+                // flash crowd can join several servers in one step.
+                let target = ((est / cap).ceil() as usize)
+                    .clamp(self.cfg.min_servers, self.cfg.max_servers);
+                if target > active {
+                    want_join = target - active;
+                } else if target < active {
+                    want_drain = true;
+                }
+            }
+        }
+        for _ in 0..want_join {
+            if !self.join(now, rack) {
+                break;
+            }
+        }
+        if want_drain {
+            self.drain(now, balancer, rack, tracer, tracker);
+        }
+        // Drain completion: a draining server leaves once its engine
+        // and the front-door books are both empty — zero lost in-flight
+        // work, by construction.
+        for i in 0..self.state.len() {
+            if self.state[i] == Membership::Draining
+                && engines[i].idle()
+                && balancer.outstanding[i] == 0
+            {
+                self.state[i] = Membership::Off;
+                self.closed_secs[i] += (now - self.active_since[i]).max(0.0);
+            }
+        }
+        // Rebalance: when one Active server took more than the
+        // threshold share of this window's routed requests, move its
+        // hottest shard to the coldest Active server (one per window —
+        // the rack prices every move, so the cure stays incremental).
+        if self.cfg.rebalance {
+            let actives: Vec<usize> =
+                (0..self.state.len()).filter(|&i| self.is_active(i)).collect();
+            let total: u64 = self.win_routed.iter().sum();
+            if total > 0 && actives.len() >= 2 {
+                let mut hot = actives[0];
+                for &i in &actives {
+                    if self.win_routed[i] > self.win_routed[hot] {
+                        hot = i;
+                    }
+                }
+                if self.win_routed[hot] as f64 > self.cfg.rebalance_threshold * total as f64 {
+                    let mut shard = usize::MAX;
+                    for s in 0..self.shard_home.len() {
+                        if self.shard_home[s] == hot
+                            && (shard == usize::MAX || self.win_shard[s] > self.win_shard[shard])
+                        {
+                            shard = s;
+                        }
+                    }
+                    if shard != usize::MAX {
+                        let mut cold = usize::MAX;
+                        for &i in &actives {
+                            if i != hot
+                                && (cold == usize::MAX
+                                    || self.win_routed[i] < self.win_routed[cold])
+                            {
+                                cold = i;
+                            }
+                        }
+                        if cold != usize::MAX {
+                            self.migrate(shard, cold, now, rack);
+                        }
+                    }
+                }
+            }
+        }
+        // Timeline sample + window reset.
+        let active = self.active_count();
+        let draining =
+            self.state.iter().filter(|s| **s == Membership::Draining).count();
+        self.peak_servers = self.peak_servers.max(active + draining);
+        let mut energy = 0.0;
+        for (i, spec) in specs.iter().enumerate() {
+            if self.state[i] != Membership::Off {
+                // Window energy estimate: a resident server pays its
+                // host busy envelope for the window (ISP draw is folded
+                // into the end-of-run exact accounting).
+                energy += power.energy(self.interval, spec.sched.drives, self.interval, 0.0).energy_j;
+            }
+        }
+        self.timeline.push(FleetSample {
+            t: now - t0,
+            active,
+            draining,
+            p99_s: p99,
+            arrived: self.win_arrived,
+            served: self.win_served,
+            shed: self.win_shed,
+            energy_j: energy,
+        });
+        self.win_arrived = 0;
+        self.win_served = 0;
+        self.win_shed = 0;
+        self.win_lat.clear();
+        for x in self.win_routed.iter_mut() {
+            *x = 0;
+        }
+        for x in self.win_shard.iter_mut() {
+            *x = 0;
+        }
+        // Once every request has arrived the fleet only drains; no more
+        // resize decisions are needed and the run must be able to end.
+        self.next_eval = if arrivals_done { f64::INFINITY } else { now + self.interval };
+    }
+
+    /// Close every open residency at the end of the run: draining (and
+    /// still-active) servers are paid for until the last response.
+    fn finish(&mut self, last_done: f64) {
+        for i in 0..self.state.len() {
+            if self.state[i] != Membership::Off {
+                self.closed_secs[i] += (last_done - self.active_since[i]).max(0.0);
+                self.state[i] = Membership::Off;
+            }
+        }
+    }
+}
+
 /// Serve one app across the fleet; returns the rollup report.
 ///
 /// The run is a single joint DES over all servers: global events
@@ -361,8 +802,32 @@ pub fn serve_fleet_traced(
         tcfg.burst_on_s > 0.0 && tcfg.burst_on_s.is_finite(),
         "traffic.burst_on_s must be positive"
     );
+    // Elastic membership (ISSUE-10): the autoscale knobs are validated
+    // against the fleet here too, so CLI-layered overrides cannot sneak
+    // past the TOML-parse check. With autoscale on, the replica bound is
+    // the (stricter) elastic one: replicas < min_servers.
+    if let Some(ac) = &tcfg.autoscale {
+        ac.validate(fcfg)?;
+    }
+    if let Some(segs) = &tcfg.rate_segments {
+        anyhow::ensure!(
+            tcfg.process == super::ArrivalProcess::Poisson,
+            "traffic.rate_segments applies only to the poisson arrival process"
+        );
+        anyhow::ensure!(!segs.is_empty(), "traffic.rate_segments must not be empty");
+        for &(d, m) in segs {
+            anyhow::ensure!(
+                d > 0.0 && d.is_finite(),
+                "rate_segments durations must be positive and finite, got {d}"
+            );
+            anyhow::ensure!(
+                m > 0.0 && m.is_finite(),
+                "rate_segments multipliers must be positive and finite, got {m}"
+            );
+        }
+    }
     anyhow::ensure!(
-        fcfg.replicas == 0 || fcfg.replicas < fcfg.servers,
+        tcfg.autoscale.is_some() || fcfg.replicas == 0 || fcfg.replicas < fcfg.servers,
         "fleet.replicas ({}) needs a distinct neighbor per shard: must be < servers ({})",
         fcfg.replicas,
         fcfg.servers
@@ -378,13 +843,30 @@ pub fn serve_fleet_traced(
         "traffic.ingest_rate must be non-negative and finite, got {}",
         tcfg.ingest_rate
     );
+    // The provisioned server count: everything the run may ever use.
+    // Elastic runs provision (and build engines for) `max_servers` up
+    // front; joins activate them. Static runs use the fleet as given.
+    let n_total = tcfg.autoscale.as_ref().map(|a| a.max_servers).unwrap_or(fcfg.servers);
     if let Some(fc) = &tcfg.faults {
-        fc.validate(fcfg.servers)?;
+        fc.validate(n_total)?;
     }
 
-    let specs = fcfg.server_specs();
+    let specs = match &tcfg.autoscale {
+        None => fcfg.server_specs(),
+        Some(a) => FleetConfig { servers: a.max_servers, ..fcfg.clone() }.server_specs(),
+    };
+    // Initially active servers: the configured fleet size, clamped into
+    // the autoscaler's band (static runs: exactly the configured size).
+    let active0 = tcfg
+        .autoscale
+        .as_ref()
+        .map(|a| fcfg.servers.clamp(a.min_servers, a.max_servers))
+        .unwrap_or(fcfg.servers);
     let model = AppModel::for_app(app, tcfg.requests);
-    let nominal = fleet_nominal_rate(&model, &specs);
+    // Offered load is expressed against the *initial* fleet's capacity
+    // (the full fleet when static): fig12's ramps then mean "multiples
+    // of what the starting fleet can nominally carry".
+    let nominal = fleet_nominal_rate(&model, &specs[..active0]);
     let offered = tcfg.offered_rps(nominal);
     anyhow::ensure!(
         offered > 0.0 && offered.is_finite(),
@@ -431,8 +913,8 @@ pub fn serve_fleet_traced(
     let mut rack = RackLink::new(fcfg.rack_bandwidth, fcfg.rack_msg_overhead);
 
     let mut latencies: Vec<f64> = Vec::with_capacity(tcfg.requests as usize);
-    let mut served_per: Vec<u64> = vec![0; fcfg.servers];
-    let mut shed_per: Vec<u64> = vec![0; fcfg.servers];
+    let mut served_per: Vec<u64> = vec![0; specs.len()];
+    let mut shed_per: Vec<u64> = vec![0; specs.len()];
     let mut first_arrival = f64::INFINITY;
     let mut last_done = t0;
 
@@ -443,7 +925,7 @@ pub fn serve_fleet_traced(
     // from its RNG streams, so quiet-plan runs are bit-identical to
     // fault-free runs (the `tests/chaos.rs` property).
     let resilient = tcfg.resilient();
-    let tracking = resilient || tcfg.faults.is_some();
+    let tracking = resilient || tcfg.faults.is_some() || tcfg.autoscale.is_some();
     // Expected arrival window: the crash schedule's time base.
     let window = tcfg.requests as f64 / offered;
     let drives_per_server: Vec<usize> = specs.iter().map(|s| s.sched.drives).collect();
@@ -478,8 +960,8 @@ pub fn serve_fleet_traced(
     // Queue-depth / inflight time-series keys (sampled per completion
     // batch while tracing).
     let qd_keys: Vec<String> =
-        (0..fcfg.servers).map(|i| format!("serve.s{i}.queue_depth")).collect();
-    let if_keys: Vec<String> = (0..fcfg.servers).map(|i| format!("serve.s{i}.inflight")).collect();
+        (0..specs.len()).map(|i| format!("serve.s{i}.queue_depth")).collect();
+    let if_keys: Vec<String> = (0..specs.len()).map(|i| format!("serve.s{i}.inflight")).collect();
     // Per-server latency floor a healthy request can legitimately spend
     // before service starts (wake grid + batch formation): part of the
     // deadline-aware automatic timeout base.
@@ -490,7 +972,20 @@ pub fn serve_fleet_traced(
     // no hasher state can ever reach the report (lint rule D1).
     let mut tracker: BTreeMap<u64, Track> = BTreeMap::new();
     let mut wheel: BinaryHeap<Reverse<Deadline>> = BinaryHeap::new();
-    let mut missed_acks: Vec<u32> = vec![0; fcfg.servers];
+    let mut missed_acks: Vec<u32> = vec![0; specs.len()];
+    // Elastic runtime (ISSUE-10): None is the exact static path — it
+    // contributes one +INF to the event race and mutates nothing. The
+    // shard corpus is requests × per-item bytes, split across shards.
+    let mut el: Option<Elastic> = tcfg.autoscale.as_ref().map(|a| {
+        Elastic::new(
+            a.clone(),
+            t0,
+            active0,
+            &balancer.rates,
+            tcfg.skew,
+            tcfg.requests.saturating_mul(model.bytes_per_item),
+        )
+    });
     let mut failed = 0u64;
     let mut retried = 0u64;
     let mut hedged = 0u64;
@@ -505,13 +1000,17 @@ pub fn serve_fleet_traced(
     let mut arrived = 0u64;
 
     // ---- the joint event loop ---------------------------------------
-    // Three event sources in nondecreasing virtual time: arrivals, the
-    // per-server engines, and the front-door timer wheel. Arrivals win
-    // global ties so same-instant dispatch sees the queued request;
-    // engine events beat same-instant deadlines so a response that
-    // lands exactly at its timeout counts as delivered. With the wheel
-    // empty (any non-resilient run) the selection reduces exactly to
-    // the pre-chaos two-way race.
+    // Four event sources in nondecreasing virtual time: arrivals, the
+    // per-server engines, the front-door timer wheel, and the elastic
+    // autoscaler's evaluation clock. Arrivals win global ties so
+    // same-instant dispatch sees the queued request; engine events beat
+    // same-instant deadlines so a response that lands exactly at its
+    // timeout counts as delivered; the autoscaler evaluates last at any
+    // tie (it only *observes* the instant). With the wheel empty and no
+    // autoscaler (any static non-resilient run) the selection reduces
+    // exactly to the pre-chaos two-way race. The break condition
+    // deliberately ignores the eval clock: evaluations alone cannot
+    // extend a run that has no work left.
     loop {
         let ta = gen.peek().map(|t| t0 + t);
         let te = engines
@@ -522,15 +1021,19 @@ pub fn serve_fleet_traced(
         let a = ta.unwrap_or(f64::INFINITY);
         let e = te.map(|(t, _)| t).unwrap_or(f64::INFINITY);
         let w = wheel.peek().map(|d| d.0.t).unwrap_or(f64::INFINITY);
+        let c = el.as_ref().map(|el| el.next_eval).unwrap_or(f64::INFINITY);
         if a.is_infinite() && e.is_infinite() && w.is_infinite() {
             break;
         }
-        if a <= e && a <= w {
+        if a <= e && a <= w && a <= c {
             let Some(req) = gen.pop() else {
                 anyhow::bail!("arrival stream drained between peek and pop");
             };
             arrived += 1;
-            let s = balancer.pick();
+            let (s, defer_until) = match el.as_mut() {
+                Some(el) => el.route(a, &mut balancer, fcfg.replicas),
+                None => (balancer.pick(), None),
+            };
             first_arrival = first_arrival.min(a);
             // Timeout base frozen at first submission: explicit when
             // configured, else deadline-aware — a margin over the
@@ -569,6 +1072,42 @@ pub fn serve_fleet_traced(
                         }));
                     }
                 }
+            } else if let Some(ready) = defer_until {
+                // The request's home shard is mid-migration (ISSUE-10):
+                // it is unavailable on the source once handoff starts,
+                // so the request waits at the front door and submits at
+                // the destination when the transfer drains — the
+                // migration span covers the wait.
+                tracer.begin_on(req.id, a, s as u32);
+                tracer.mark(req.id, SpanKind::Migration, ready);
+                tracker.insert(
+                    req.id,
+                    Track { arrival: a, home: s, attempts: 1, base, hedged: false, done: false },
+                );
+                // The front-door books carry it again once it lands.
+                balancer.outstanding[s] -= 1;
+                wheel.push(Reverse(Deadline {
+                    t: ready,
+                    id: req.id,
+                    kind: KIND_SUBMIT,
+                    tgt: s,
+                }));
+                if resilient {
+                    wheel.push(Reverse(Deadline {
+                        t: a + base,
+                        id: req.id,
+                        kind: KIND_TIMEOUT,
+                        tgt: s,
+                    }));
+                    if tcfg.hedge {
+                        wheel.push(Reverse(Deadline {
+                            t: a + HEDGE_FRACTION * base,
+                            id: req.id,
+                            kind: KIND_HEDGE,
+                            tgt: s,
+                        }));
+                    }
+                }
             } else if engines[s].offer(a, req.id)? == Offer::Shed {
                 // Rejected at the door: an immediate response that
                 // never enters the percentiles. The rejection still
@@ -576,6 +1115,9 @@ pub fn serve_fleet_traced(
                 // serving window like any other response.
                 shed_per[s] += 1;
                 balancer.outstanding[s] -= 1;
+                if let Some(el) = el.as_mut() {
+                    el.win_shed += 1;
+                }
                 // A shed request is a zero-width traced timeline: begun
                 // and closed at the door in the same instant.
                 tracer.begin_on(req.id, a, s as u32);
@@ -610,7 +1152,7 @@ pub fn serve_fleet_traced(
                 // opens at the front door.
                 tracer.begin_on(req.id, a, s as u32);
             }
-        } else if e <= w {
+        } else if e <= w && e <= c {
             let Some((_, i)) = te else {
                 anyhow::bail!("engine event vanished between peek and step");
             };
@@ -677,6 +1219,10 @@ pub fn serve_fleet_traced(
                     tr.done = true;
                     let lat = delivered - tr.arrival;
                     latencies.push(lat);
+                    if let Some(el) = el.as_mut() {
+                        el.win_lat.push(lat);
+                        el.win_served += 1;
+                    }
                     if lat <= slo {
                         completed_in_slo += 1;
                     }
@@ -712,7 +1258,7 @@ pub fn serve_fleet_traced(
                 balancer.dead[i] = false;
             }
             last_done = last_done.max(delivered);
-        } else {
+        } else if w <= c {
             let Some(Reverse(dl)) = wheel.pop() else {
                 anyhow::bail!("timer wheel drained between peek and pop");
             };
@@ -735,7 +1281,12 @@ pub fn serve_fleet_traced(
                     hedged += 1;
                     tracer.mark_attempt(dl.id, SpanKind::Hedge, now, tr.attempts);
                     let h = if fcfg.replicas > 0 {
-                        failover_target(tr.home, &balancer.dead)
+                        // Under elastic membership the replica ring
+                        // skips draining/off servers too.
+                        match el.as_ref() {
+                            Some(el) => failover_target(tr.home, &el.masked(&balancer.dead)),
+                            None => failover_target(tr.home, &balancer.dead),
+                        }
                     } else {
                         tr.home
                     };
@@ -788,8 +1339,15 @@ pub fn serve_fleet_traced(
                         // The timed-out attempt's wasted time, tagged
                         // with the attempt number it opened.
                         tracer.mark_attempt(dl.id, SpanKind::Retry, now, tr.attempts);
-                        let nt = if balancer.dead[tr.home] && fcfg.replicas > 0 {
-                            failover_target(tr.home, &balancer.dead)
+                        let home_gone = balancer.dead[tr.home]
+                            || el.as_ref().map_or(false, |el| !el.is_active(tr.home));
+                        let nt = if home_gone && fcfg.replicas > 0 {
+                            match el.as_ref() {
+                                Some(el) => {
+                                    failover_target(tr.home, &el.masked(&balancer.dead))
+                                }
+                                None => failover_target(tr.home, &balancer.dead),
+                            }
                         } else {
                             tr.home
                         };
@@ -820,9 +1378,12 @@ pub fn serve_fleet_traced(
                 }
                 _ => {
                     // KIND_SUBMIT: a redirected copy lands at its
-                    // failover target. A dead target swallows it (the
-                    // armed timeout recovers); a shed just dies — the
-                    // timeout covers that path too.
+                    // failover target (a migration-deferred request
+                    // lands at the shard's new home the same way). A
+                    // dead target swallows it (the armed timeout
+                    // recovers); a shed just dies — the timeout covers
+                    // that path too, and without resilience the
+                    // end-of-run sweep declares it failed.
                     if !plan.as_ref().map_or(false, |p| p.down(dl.tgt, now)) {
                         match engines[dl.tgt].offer(now, dl.id)? {
                             Offer::Accepted => balancer.outstanding[dl.tgt] += 1,
@@ -831,6 +1392,26 @@ pub fn serve_fleet_traced(
                     }
                 }
             }
+        } else {
+            // Elastic evaluation (ISSUE-10): close the observation
+            // window and let the autoscaler/rebalancer act. Loses every
+            // tie above — it only observes the instant.
+            let Some(el) = el.as_mut() else {
+                anyhow::bail!("elastic evaluation fired without an autoscale config");
+            };
+            el.eval(
+                c,
+                t0,
+                &mut balancer,
+                &engines,
+                &mut rack,
+                tracer,
+                &tracker,
+                &specs,
+                power,
+                slo,
+                arrived >= tcfg.requests,
+            );
         }
     }
 
@@ -864,8 +1445,11 @@ pub fn serve_fleet_traced(
     // falls short only when a fault swallowed a request with no
     // resilience armed — the stuck client's request never re-entered
     // circulation. That shortfall is itself a failure to serve.
+    // (A migration-deferred request that is then shed with no retry
+    // budget also resolves only at the sweep, so an elastic closed loop
+    // can legitimately fall short too.)
     anyhow::ensure!(
-        arrived == tcfg.requests || tcfg.faults.is_some(),
+        arrived == tcfg.requests || tcfg.faults.is_some() || tcfg.autoscale.is_some(),
         "arrival stream ended early without faults: {arrived} of {} requests",
         tcfg.requests
     );
@@ -910,15 +1494,24 @@ pub fn serve_fleet_traced(
     // Serving window per the report contract: first arrival → last
     // response (requests ≥ 1 is ensured above, so an arrival exists).
     let duration = (last_done - first_arrival.min(last_done)).max(1e-9);
+    // Close every open elastic residency: draining/active servers are
+    // paid for until the last response.
+    if let Some(el) = el.as_mut() {
+        el.finish(last_done);
+    }
     let mut energy = 0.0;
-    for (spec, e) in specs.iter().zip(&engines) {
+    for (i, (spec, e)) in specs.iter().zip(&engines).enumerate() {
         let st = e.state();
+        // Elastic fleets pay idle power only for a server's resident
+        // (active + draining) seconds; static fleets pay the whole
+        // serving window on every server — the fig12 cost asymmetry.
+        let dur_i = el.as_ref().map(|el| el.closed_secs[i]).unwrap_or(duration);
         // host_busy_secs is single-resource time (≤ duration up to the
         // window clamp); isp_busy_secs is deliberately unclamped — it
         // aggregates across all of the server's drives, so it
         // legitimately exceeds the window on ISP-heavy runs.
         energy += power
-            .energy(duration, spec.sched.drives, st.host_busy_secs.min(duration), st.isp_busy_secs)
+            .energy(dur_i, spec.sched.drives, st.host_busy_secs.min(dur_i), st.isp_busy_secs)
             .energy_j;
         metrics.merge(e.metrics());
     }
@@ -952,6 +1545,20 @@ pub fn serve_fleet_traced(
         wear_spread = wear_spread.max(w);
         ingest_writes += e.ingest_writes();
     }
+
+    // Elastic rollup (ISSUE-10). Static runs get the exact static
+    // values: every server resident for the whole window, no joins,
+    // drains, migrations, or timeline.
+    let server_seconds = match &el {
+        Some(el) => el.closed_secs.iter().sum(),
+        None => fcfg.servers as f64 * duration,
+    };
+    let (peak_servers, migrations, migrated_bytes, joins, drains, timeline) = match el {
+        Some(el) => {
+            (el.peak_servers, el.migrations, el.migrated_bytes, el.joins, el.drains, el.timeline)
+        }
+        None => (fcfg.servers, 0, 0, 0, 0, Vec::new()),
+    };
 
     let latency = LatencyStats::of(&latencies);
     metrics.inc("serve.requests", served as f64);
@@ -1005,6 +1612,13 @@ pub fn serve_fleet_traced(
         mean_queue_depth: profile.mean_queue_depth(),
         max_inflight: profile.max_inflight,
         per_server,
+        server_seconds,
+        peak_servers,
+        migrations,
+        migrated_bytes,
+        joins,
+        drains,
+        timeline,
     })
 }
 
@@ -1570,6 +2184,183 @@ mod tests {
         };
         assert!(
             serve_fleet(App::Sentiment, &ok, &bad_faults, &PowerModel::default(), &mut m).is_err()
+        );
+    }
+
+    // ---- ISSUE-10: elastic fleet ------------------------------------
+
+    use crate::traffic::elastic::{AutoscaleConfig, AutoscalePolicy};
+
+    /// One CSD server's nominal rate under the test fleet template —
+    /// the unit the elastic tests express durations and rates in, so
+    /// they stay valid if the app model's constants move.
+    fn base_rate() -> f64 {
+        let model = AppModel::for_app(App::Sentiment, 1);
+        crate::traffic::nominal_rate(&model, &fleet_cfg(1, FleetShape::AllCsd).sched)
+    }
+
+    /// Ramp + decay traffic over an elastic 1→4 fleet: low load, a
+    /// 2.5× flash, then low again — the autoscaler must join on the
+    /// flash and drain back down on the decay.
+    fn elastic_tcfg(policy: AutoscalePolicy) -> TrafficConfig {
+        let base = base_rate();
+        TrafficConfig {
+            rate_rps: Some(base),
+            rate_segments: Some(vec![
+                (500.0 / base, 0.4),
+                (600.0 / base, 2.5),
+                (2_000.0 / base, 0.4),
+            ]),
+            requests: 2_500,
+            policy: LbPolicy::LeastWork,
+            autoscale: Some(AutoscaleConfig {
+                policy,
+                min_servers: 1,
+                max_servers: 4,
+                check_interval_s: 200.0 / base,
+                estimator_window_s: 600.0 / base,
+                target_util: 0.75,
+                ..AutoscaleConfig::default()
+            }),
+            ..TrafficConfig::default()
+        }
+    }
+
+    #[test]
+    fn autoscaler_joins_on_a_flash_and_drains_on_the_decay() {
+        let tcfg = elastic_tcfg(AutoscalePolicy::Predictive);
+        let mut m = Metrics::new();
+        let r = serve_fleet(
+            App::Sentiment,
+            &fleet_cfg(1, FleetShape::AllCsd),
+            &tcfg,
+            &PowerModel::default(),
+            &mut m,
+        )
+        .unwrap();
+        assert_eq!(r.served + r.failed + r.shed, 2_500, "conservation through joins/drains");
+        assert!(r.joins >= 1, "the flash must grow the fleet (joins {})", r.joins);
+        assert!(r.drains >= 1, "the decay must shrink it (drains {})", r.drains);
+        assert!(r.peak_servers > 1 && r.peak_servers <= 4, "peak {}", r.peak_servers);
+        assert!(r.migrations > 0, "joins/drains rehome shards");
+        assert!(r.migrated_bytes > 0);
+        assert!(!r.timeline.is_empty(), "elastic runs emit the fleet time series");
+        // The elastic fleet pays for strictly less than keeping the
+        // peak fleet resident the whole run.
+        assert!(
+            r.server_seconds < r.peak_servers as f64 * r.duration_secs,
+            "server-seconds {} vs peak-static {}",
+            r.server_seconds,
+            r.peak_servers as f64 * r.duration_secs
+        );
+        assert!(r.server_seconds > 0.0);
+    }
+
+    #[test]
+    fn reactive_policy_also_scales_and_both_are_deterministic() {
+        for policy in AutoscalePolicy::all() {
+            let tcfg = elastic_tcfg(policy);
+            let fleet = fleet_cfg(1, FleetShape::AllCsd);
+            let mut m = Metrics::new();
+            let a =
+                serve_fleet(App::Sentiment, &fleet, &tcfg, &PowerModel::default(), &mut m).unwrap();
+            let b =
+                serve_fleet(App::Sentiment, &fleet, &tcfg, &PowerModel::default(), &mut m).unwrap();
+            a.check_bit_identical(&b)
+                .unwrap_or_else(|e| panic!("{}: elastic rerun diverged: {e}", policy.name()));
+            assert_eq!(a.served + a.failed + a.shed, 2_500, "{}", policy.name());
+            assert!(a.joins >= 1, "{}: joins {}", policy.name(), a.joins);
+        }
+    }
+
+    #[test]
+    fn rebalancer_migrates_hot_shards_off_a_skewed_server() {
+        // Fixed-size fleet (min == max: the autoscaler cannot resize),
+        // heavy shard skew: the rebalancer alone must fire, and every
+        // migration pays the rack link.
+        let base = base_rate();
+        let tcfg = TrafficConfig {
+            rate_rps: Some(base),
+            requests: 3_000,
+            skew: 1.5,
+            autoscale: Some(AutoscaleConfig {
+                min_servers: 2,
+                max_servers: 2,
+                check_interval_s: 200.0 / base,
+                estimator_window_s: 600.0 / base,
+                shards: 8,
+                rebalance_threshold: 0.6,
+                ..AutoscaleConfig::default()
+            }),
+            ..TrafficConfig::default()
+        };
+        let fleet = fleet_cfg(2, FleetShape::AllCsd);
+        let mut m = Metrics::new();
+        let r = serve_fleet(App::Sentiment, &fleet, &tcfg, &PowerModel::default(), &mut m).unwrap();
+        assert_eq!(r.served + r.failed + r.shed, 3_000);
+        assert_eq!(r.joins, 0, "min == max: membership never changes");
+        assert_eq!(r.drains, 0);
+        assert!(r.migrations > 0, "a 0.69 routed share must trip the 0.6 threshold");
+        assert!(r.migrated_bytes > 0, "migrations ship shard bytes");
+        let off = TrafficConfig {
+            autoscale: tcfg.autoscale.clone().map(|a| AutoscaleConfig { rebalance: false, ..a }),
+            ..tcfg.clone()
+        };
+        let quiet =
+            serve_fleet(App::Sentiment, &fleet, &off, &PowerModel::default(), &mut m).unwrap();
+        assert_eq!(quiet.migrations, 0, "rebalance off never migrates");
+        assert!(
+            r.rack_bytes > quiet.rack_bytes,
+            "migration traffic must show up on the rack: {} vs {}",
+            r.rack_bytes,
+            quiet.rack_bytes
+        );
+    }
+
+    #[test]
+    fn elastic_rejects_nonsense() {
+        let mut m = Metrics::new();
+        let fleet = fleet_cfg(2, FleetShape::AllCsd);
+        // autoscale knobs are validated at the serve entry point too
+        let bad = TrafficConfig {
+            autoscale: Some(AutoscaleConfig {
+                min_servers: 5,
+                max_servers: 2,
+                ..AutoscaleConfig::default()
+            }),
+            ..TrafficConfig::default()
+        };
+        assert!(serve_fleet(App::Sentiment, &fleet, &bad, &PowerModel::default(), &mut m).is_err());
+        // explicit weights are incompatible with elastic membership
+        let weighted = FleetConfig { weights: Some(vec![2, 1]), ..fleet_cfg(2, FleetShape::AllCsd) };
+        let auto = TrafficConfig {
+            autoscale: Some(AutoscaleConfig::default()),
+            ..TrafficConfig::default()
+        };
+        assert!(
+            serve_fleet(App::Sentiment, &weighted, &auto, &PowerModel::default(), &mut m).is_err()
+        );
+        // rate segments must be positive, finite, and Poisson-only
+        for segs in [
+            vec![],
+            vec![(0.0, 1.0)],
+            vec![(1.0, -2.0)],
+            vec![(f64::INFINITY, 1.0)],
+            vec![(1.0, f64::NAN)],
+        ] {
+            let t = TrafficConfig { rate_segments: Some(segs), ..TrafficConfig::default() };
+            assert!(
+                serve_fleet(App::Sentiment, &fleet, &t, &PowerModel::default(), &mut m).is_err()
+            );
+        }
+        let bursty_segs = TrafficConfig {
+            process: ArrivalProcess::Bursty,
+            rate_segments: Some(vec![(1.0, 1.0)]),
+            ..TrafficConfig::default()
+        };
+        assert!(
+            serve_fleet(App::Sentiment, &fleet, &bursty_segs, &PowerModel::default(), &mut m)
+                .is_err()
         );
     }
 }

@@ -1,0 +1,296 @@
+//! Elastic-fleet configuration (the ISSUE-10 tentpole): the `[autoscale]`
+//! TOML section and the `solana serve --autoscale` flags both resolve
+//! into [`AutoscaleConfig`], carried as
+//! [`super::TrafficConfig::autoscale`].
+//!
+//! The paper's scale-out story is statically provisioned — fig10
+//! searches for the minimum *fixed* fleet per offered load. Production
+//! load moves (diurnal ramps, flash crowds), so this layer makes
+//! membership time-varying inside one serving run:
+//!
+//! * an **autoscaler** adds servers when the observed p99 (or shedding)
+//!   blows the SLO and drains them when the fleet runs cold, under one
+//!   of two [`AutoscalePolicy`] flavors — reactive
+//!   (threshold + hysteresis on the last observation window) or
+//!   predictive (a windowed arrival-rate estimator sizes the fleet for
+//!   the load it *expects*);
+//! * a **shard rebalancer** migrates hot shards between servers, where
+//!   the migration ships the shard's bytes over the rack link and the
+//!   shard is unavailable on the source from handoff until the transfer
+//!   drains at the destination — the simulator prices the cure as well
+//!   as the disease;
+//! * **draining** servers take no new work but finish every in-flight
+//!   request before leaving, so elasticity never loses a request
+//!   (conservation through joins/drains is property-tested in
+//!   `tests/chaos.rs`).
+//!
+//! `autoscale: None` (the default) contributes nothing to the serving
+//! event race and mutates no state — the bit-identical static path.
+//! The whole elastic layer draws **no RNG**: every decision is a pure
+//! function of observed simulation state, so elastic runs reproduce
+//! bit-for-bit from the seed like everything else.
+
+use crate::cluster::fleet::FleetConfig;
+
+/// When the autoscaler decides to resize (the ablation axis of fig12).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AutoscalePolicy {
+    /// Threshold + hysteresis on the last observation window: scale up
+    /// one server when the window's p99 blew the SLO (or anything was
+    /// shed), scale down one when the window ran comfortably cold.
+    Reactive,
+    /// Windowed arrival-rate estimator: blend the observed window rate
+    /// into an EWMA over `estimator_window_s` and size the fleet for
+    /// `rate / (per_server_rate × target_util)` directly — multiple
+    /// joins in one step when a flash crowd hits.
+    #[default]
+    Predictive,
+}
+
+impl AutoscalePolicy {
+    /// Stable lowercase name used by the CLI, TOML configs and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AutoscalePolicy::Reactive => "reactive",
+            AutoscalePolicy::Predictive => "predictive",
+        }
+    }
+
+    pub fn all() -> [AutoscalePolicy; 2] {
+        [AutoscalePolicy::Reactive, AutoscalePolicy::Predictive]
+    }
+}
+
+/// Parse an autoscale policy name from config/CLI.
+pub fn parse_autoscale_policy(name: &str) -> anyhow::Result<AutoscalePolicy> {
+    match name {
+        "reactive" | "threshold" => Ok(AutoscalePolicy::Reactive),
+        "predictive" | "estimator" => Ok(AutoscalePolicy::Predictive),
+        other => anyhow::bail!(
+            "unknown autoscale policy '{other}' (expected reactive|predictive)"
+        ),
+    }
+}
+
+/// Elastic-fleet knobs for one serving run. Defaults are the fig12
+/// operating point; every field is validated by
+/// [`AutoscaleConfig::validate`] before serving starts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Resize-decision policy (the fig12 ablation axis).
+    pub policy: AutoscalePolicy,
+    /// Fleet-size floor: the autoscaler never drains below this.
+    pub min_servers: usize,
+    /// Fleet-size ceiling: shards and engines are provisioned for this
+    /// many servers up front; joins activate them.
+    pub max_servers: usize,
+    /// Seconds between autoscaler evaluations (the observation window).
+    pub check_interval_s: f64,
+    /// Scale-down hysteresis in (0,1): a server drains only when the
+    /// window's p99 stayed under `(1 − hysteresis) × SLO` — the dead
+    /// band that keeps reactive scaling from oscillating.
+    pub hysteresis: f64,
+    /// Predictive estimator memory (s): the EWMA over observed arrival
+    /// rates spans roughly this window.
+    pub estimator_window_s: f64,
+    /// Target per-server utilization in (0,1]: the predictive policy
+    /// sizes the fleet so each active server runs at this fraction of
+    /// its nominal rate, and the reactive policy refuses to drain while
+    /// the shrunken fleet would exceed it.
+    pub target_util: f64,
+    /// Arm the mid-run shard rebalancer (migrates hot shards off the
+    /// most-routed server when its window share exceeds the threshold).
+    pub rebalance: bool,
+    /// Rebalance trigger in (0,1]: the hottest server's share of
+    /// window-routed requests that starts a migration. 1.0 never fires.
+    pub rebalance_threshold: f64,
+    /// Routable shards the corpus is split into. More shards = finer
+    /// migration granularity but smaller (cheaper) transfers.
+    pub shards: usize,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            policy: AutoscalePolicy::Predictive,
+            min_servers: 1,
+            max_servers: 8,
+            check_interval_s: 1.0,
+            hysteresis: 0.25,
+            estimator_window_s: 10.0,
+            target_util: 0.8,
+            rebalance: true,
+            rebalance_threshold: 0.55,
+            shards: 32,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    /// Validate every knob against the fleet it will drive — the
+    /// ISSUE-10 satellite. Called at TOML parse (against the `[fleet]`
+    /// section) and again by `serve_fleet` (against the final fleet),
+    /// so CLI-layered overrides cannot sneak past it.
+    pub fn validate(&self, fcfg: &FleetConfig) -> anyhow::Result<()> {
+        anyhow::ensure!(self.min_servers >= 1, "autoscale.min_servers must be >= 1");
+        anyhow::ensure!(
+            self.min_servers <= self.max_servers,
+            "autoscale.min_servers ({}) exceeds autoscale.max_servers ({})",
+            self.min_servers,
+            self.max_servers
+        );
+        anyhow::ensure!(
+            self.check_interval_s > 0.0 && self.check_interval_s.is_finite(),
+            "autoscale.check_interval_s must be positive and finite"
+        );
+        anyhow::ensure!(
+            self.hysteresis > 0.0 && self.hysteresis < 1.0,
+            "autoscale.hysteresis must be in (0,1): got {}",
+            self.hysteresis
+        );
+        anyhow::ensure!(
+            self.estimator_window_s > 0.0 && self.estimator_window_s.is_finite(),
+            "autoscale.estimator_window_s must be positive and finite"
+        );
+        anyhow::ensure!(
+            self.target_util > 0.0 && self.target_util <= 1.0,
+            "autoscale.target_util must be in (0,1]: got {}",
+            self.target_util
+        );
+        anyhow::ensure!(
+            self.rebalance_threshold > 0.0 && self.rebalance_threshold <= 1.0,
+            "autoscale.rebalance_threshold must be in (0,1]: got {}",
+            self.rebalance_threshold
+        );
+        anyhow::ensure!(
+            self.shards >= self.max_servers,
+            "autoscale.shards ({}) must be >= autoscale.max_servers ({}): every active \
+             server needs at least one shard to serve",
+            self.shards,
+            self.max_servers
+        );
+        // Failover replicas must survive the smallest fleet the
+        // autoscaler may shrink to (and so trivially fit the largest).
+        anyhow::ensure!(
+            fcfg.replicas == 0 || fcfg.replicas < self.min_servers,
+            "fleet.replicas ({}) must be < autoscale.min_servers ({}): a drained fleet \
+             must still hold every replica (max_servers is {})",
+            fcfg.replicas,
+            self.min_servers,
+            self.max_servers
+        );
+        // Explicit per-server weights describe a fixed membership; a
+        // time-varying fleet has no stable server list to weight.
+        anyhow::ensure!(
+            fcfg.weights.is_none(),
+            "fleet.weights is incompatible with autoscaling: explicit per-server weights \
+             assume fixed membership"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet() -> FleetConfig {
+        FleetConfig::default()
+    }
+
+    #[test]
+    fn default_config_validates() {
+        AutoscaleConfig::default().validate(&fleet()).unwrap();
+    }
+
+    #[test]
+    fn rejects_min_over_max() {
+        let a = AutoscaleConfig { min_servers: 5, max_servers: 4, ..AutoscaleConfig::default() };
+        let e = a.validate(&fleet()).unwrap_err().to_string();
+        assert!(e.contains("min_servers"), "unhelpful error: {e}");
+    }
+
+    #[test]
+    fn rejects_zero_min() {
+        let a = AutoscaleConfig { min_servers: 0, ..AutoscaleConfig::default() };
+        assert!(a.validate(&fleet()).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_check_interval() {
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let a = AutoscaleConfig { check_interval_s: bad, ..AutoscaleConfig::default() };
+            assert!(a.validate(&fleet()).is_err(), "accepted interval {bad}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_hysteresis() {
+        for bad in [0.0, -0.5, 1.0, 1.5, f64::NAN] {
+            let a = AutoscaleConfig { hysteresis: bad, ..AutoscaleConfig::default() };
+            assert!(a.validate(&fleet()).is_err(), "accepted hysteresis {bad}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_estimator_window() {
+        for bad in [0.0, -2.0, f64::NAN, f64::INFINITY] {
+            let a = AutoscaleConfig { estimator_window_s: bad, ..AutoscaleConfig::default() };
+            assert!(a.validate(&fleet()).is_err(), "accepted window {bad}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_target_util() {
+        for bad in [0.0, -0.1, 1.01, f64::NAN] {
+            let a = AutoscaleConfig { target_util: bad, ..AutoscaleConfig::default() };
+            assert!(a.validate(&fleet()).is_err(), "accepted target_util {bad}");
+        }
+        let ok = AutoscaleConfig { target_util: 1.0, ..AutoscaleConfig::default() };
+        ok.validate(&fleet()).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_rebalance_threshold() {
+        for bad in [0.0, -0.3, 1.5, f64::NAN] {
+            let a = AutoscaleConfig { rebalance_threshold: bad, ..AutoscaleConfig::default() };
+            assert!(a.validate(&fleet()).is_err(), "accepted threshold {bad}");
+        }
+        let ok = AutoscaleConfig { rebalance_threshold: 1.0, ..AutoscaleConfig::default() };
+        ok.validate(&fleet()).unwrap();
+    }
+
+    #[test]
+    fn rejects_fewer_shards_than_max_servers() {
+        let a = AutoscaleConfig { shards: 4, max_servers: 8, ..AutoscaleConfig::default() };
+        let e = a.validate(&fleet()).unwrap_err().to_string();
+        assert!(e.contains("shards"), "unhelpful error: {e}");
+    }
+
+    #[test]
+    fn rejects_replicas_that_outgrow_the_floor() {
+        // replicas must fit the smallest fleet (and so the largest too —
+        // the ISSUE-10 "replicas > max servers" rejection falls out).
+        let f = FleetConfig { replicas: 2, ..FleetConfig::default() };
+        let a = AutoscaleConfig { min_servers: 2, max_servers: 8, ..AutoscaleConfig::default() };
+        let e = a.validate(&f).unwrap_err().to_string();
+        assert!(e.contains("replicas"), "unhelpful error: {e}");
+        let ok = AutoscaleConfig { min_servers: 3, ..a };
+        ok.validate(&f).unwrap();
+    }
+
+    #[test]
+    fn rejects_explicit_weights() {
+        let f = FleetConfig { weights: Some(vec![36, 12]), ..FleetConfig::default() };
+        let e = AutoscaleConfig::default().validate(&f).unwrap_err().to_string();
+        assert!(e.contains("weights"), "unhelpful error: {e}");
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in AutoscalePolicy::all() {
+            assert_eq!(parse_autoscale_policy(p.name()).unwrap(), p);
+        }
+        assert!(parse_autoscale_policy("psychic").is_err());
+    }
+}

@@ -449,6 +449,13 @@ impl<'a> ServeEngine<'a> {
         self.inflight
     }
 
+    /// Whether this engine holds no queued or in-flight work — the
+    /// drain-completion predicate (ISSUE-10): a draining server leaves
+    /// the fleet only once this turns true.
+    pub(crate) fn idle(&self) -> bool {
+        self.queued == 0 && self.inflight == 0
+    }
+
     /// Arm the background ingest/update stream (ISSUE-8): `rate`
     /// updates/s drawn from the caller's forked `rng`, firing until
     /// `horizon`. Called once by the fleet driver before serving starts;

@@ -70,13 +70,26 @@
 //! `cargo bench --bench serve_faults`) measures availability (fraction
 //! of offered requests completed within the SLO) across fault scenario
 //! × resilience policy × fleet shape.
+//!
+//! Finally the **elastic plane** (the ISSUE-10 tentpole) makes fleet
+//! membership time-varying inside one run: an autoscaler
+//! ([`elastic::AutoscaleConfig`], `[autoscale]` / `solana serve
+//! --autoscale`) joins and drains servers against the observed p99 vs
+//! the SLO, and a shard rebalancer migrates hot shards between servers
+//! with the migration priced as shard bytes over the rack link. Fig 12
+//! ([`crate::exp::fig12_elastic`], `solana fig12`,
+//! `cargo bench --bench serve_elastic`) ramps offered load (plus a
+//! flash crowd) and compares elastic server-seconds against the best
+//! static fleet from fig10.
 
 pub mod arrivals;
 pub mod balancer;
+pub mod elastic;
 pub(crate) mod engine;
 
 pub use arrivals::{ArrivalProcess, Arrivals, Request};
 pub use balancer::{serve_fleet, serve_fleet_traced, LbPolicy};
+pub use elastic::{parse_autoscale_policy, AutoscaleConfig, AutoscalePolicy};
 pub use engine::FormationPolicy;
 
 use crate::cluster::fleet::{FleetConfig, FleetShape, ServerSpec};
@@ -153,6 +166,18 @@ pub struct TrafficConfig {
     /// so FTL garbage collection interferes with query latency. 0
     /// (default) arms nothing — the exact read-only serving path.
     pub ingest_rate: f64,
+    /// Elastic-fleet autoscaler + shard rebalancer (ISSUE-10). `None`
+    /// (default) is the exact static-membership path — the elastic
+    /// layer contributes nothing to the event race and mutates no
+    /// state (property-tested in `tests/chaos.rs`).
+    pub autoscale: Option<AutoscaleConfig>,
+    /// Time-varying offered load for the Poisson process (ISSUE-10):
+    /// `(duration_s, rate_multiplier)` segments applied in order to the
+    /// resolved offered rate; the last segment extends forever. `None`
+    /// (default) keeps the exact fixed-rate Poisson draw sequence.
+    /// Programmatic only (fig12 builds the ramp + flash-crowd shapes);
+    /// not exposed as a TOML/CLI knob.
+    pub rate_segments: Option<Vec<(f64, f64)>>,
 }
 
 impl Default for TrafficConfig {
@@ -178,6 +203,8 @@ impl Default for TrafficConfig {
             hedge: false,
             faults: None,
             ingest_rate: 0.0,
+            autoscale: None,
+            rate_segments: None,
         }
     }
 }
@@ -206,7 +233,14 @@ impl TrafficConfig {
     /// Build the arrival stream for this config at `offered` req/s.
     pub fn arrivals(&self, offered: f64) -> Arrivals {
         match self.process {
-            ArrivalProcess::Poisson => Arrivals::poisson(offered, self.requests, self.seed),
+            ArrivalProcess::Poisson => match &self.rate_segments {
+                Some(segs) => {
+                    let abs: Vec<(f64, f64)> =
+                        segs.iter().map(|&(d, m)| (d, m * offered)).collect();
+                    Arrivals::ramped(&abs, self.requests, self.seed)
+                }
+                None => Arrivals::poisson(offered, self.requests, self.seed),
+            },
             ArrivalProcess::Bursty => {
                 Arrivals::bursty(offered, self.burstiness, self.burst_on_s, self.requests, self.seed)
             }
@@ -304,6 +338,30 @@ pub struct ServerServeStats {
     pub isp_busy_secs: f64,
 }
 
+/// One autoscaler observation window of an elastic run (ISSUE-10) —
+/// the fig12 time-series row source. Static runs have an empty
+/// timeline.
+#[derive(Clone, Debug)]
+pub struct FleetSample {
+    /// Window end, seconds since the first arrival.
+    pub t: f64,
+    /// Servers actively taking new work at the window end.
+    pub active: usize,
+    /// Servers draining (finishing in-flight work, taking nothing new).
+    pub draining: usize,
+    /// p99 over the requests completed inside this window (0 if none).
+    pub p99_s: f64,
+    /// Requests that arrived inside this window.
+    pub arrived: u64,
+    /// Requests completed inside this window.
+    pub served: u64,
+    /// Requests shed inside this window.
+    pub shed: u64,
+    /// Estimated fleet energy spent inside this window (active servers
+    /// × window host-busy energy).
+    pub energy_j: f64,
+}
+
 /// Everything a serving run produces — the Fig 9 row source.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
@@ -397,6 +455,25 @@ pub struct ServeReport {
     /// Most requests simultaneously in flight on any one engine.
     pub max_inflight: u64,
     pub per_server: Vec<ServerServeStats>,
+    /// Integrated server-seconds actually paid for (ISSUE-10): elastic
+    /// runs sum each server's active+draining residency; static runs
+    /// are exactly `servers × duration_secs`. The fig12 cost metric.
+    pub server_seconds: f64,
+    /// Most servers simultaneously active or draining at any point.
+    /// Equals `servers` on a static run.
+    pub peak_servers: usize,
+    /// Shard migrations executed (joins, drains, and rebalances all
+    /// move shards through this counter).
+    pub migrations: u64,
+    /// Bytes shipped over the rack link by shard migrations.
+    pub migrated_bytes: u64,
+    /// Servers activated mid-run by the autoscaler.
+    pub joins: u64,
+    /// Servers drained out mid-run by the autoscaler.
+    pub drains: u64,
+    /// Per-observation-window fleet time series (ISSUE-10); empty on a
+    /// static run.
+    pub timeline: Vec<FleetSample>,
 }
 
 impl ServeReport {
@@ -494,6 +571,24 @@ impl ServeReport {
             eq(&format!("per_server[{i}].csd_items"), a.csd_items, b.csd_items)?;
             f64_eq(&format!("per_server[{i}].host_busy_secs"), a.host_busy_secs, b.host_busy_secs)?;
             f64_eq(&format!("per_server[{i}].isp_busy_secs"), a.isp_busy_secs, b.isp_busy_secs)?;
+        }
+        // Elastic-fleet outputs (ISSUE-10) are simulation results too.
+        f64_eq("server_seconds", self.server_seconds, other.server_seconds)?;
+        eq("peak_servers", self.peak_servers, other.peak_servers)?;
+        eq("migrations", self.migrations, other.migrations)?;
+        eq("migrated_bytes", self.migrated_bytes, other.migrated_bytes)?;
+        eq("joins", self.joins, other.joins)?;
+        eq("drains", self.drains, other.drains)?;
+        eq("timeline.len", self.timeline.len(), other.timeline.len())?;
+        for (k, (a, b)) in self.timeline.iter().zip(&other.timeline).enumerate() {
+            f64_eq(&format!("timeline[{k}].t"), a.t, b.t)?;
+            eq(&format!("timeline[{k}].active"), a.active, b.active)?;
+            eq(&format!("timeline[{k}].draining"), a.draining, b.draining)?;
+            f64_eq(&format!("timeline[{k}].p99_s"), a.p99_s, b.p99_s)?;
+            eq(&format!("timeline[{k}].arrived"), a.arrived, b.arrived)?;
+            eq(&format!("timeline[{k}].served"), a.served, b.served)?;
+            eq(&format!("timeline[{k}].shed"), a.shed, b.shed)?;
+            f64_eq(&format!("timeline[{k}].energy_j"), a.energy_j, b.energy_j)?;
         }
         Ok(())
     }

@@ -12,13 +12,20 @@
 //! 3. **Conservation survives chaos** — under any random fault plan,
 //!    every offered request is accounted for exactly once:
 //!    `served + failed + shed == requests`.
+//!
+//! The elastic plane (ISSUE-10) extends the same contract: an autoscaler
+//! left disabled must be bit-free (property 4), and conservation must
+//! survive joins, drains, and mid-migration faults all at once
+//! (property 5).
 
 use solana_isp::cluster::fleet::{FleetConfig, FleetShape};
 use solana_isp::faults::FaultsConfig;
 use solana_isp::metrics::Metrics;
 use solana_isp::power::PowerModel;
 use solana_isp::prop::{check, forall};
-use solana_isp::traffic::{serve_fleet, LbPolicy, ServeReport, TrafficConfig};
+use solana_isp::traffic::{
+    serve_fleet, AutoscaleConfig, AutoscalePolicy, LbPolicy, ServeReport, TrafficConfig,
+};
 use solana_isp::workloads::App;
 
 fn serve(app: App, fcfg: &FleetConfig, tcfg: &TrafficConfig) -> ServeReport {
@@ -143,5 +150,125 @@ fn conservation_holds_under_random_fault_plans() {
             (0.0..=1.0).contains(&r.availability),
             format!("availability out of range: {}", r.availability),
         )
+    });
+}
+
+#[test]
+fn disabled_autoscaler_is_bit_free() {
+    // ISSUE-10 property 4: `autoscale: None` (the default) must take the
+    // exact static serving path across apps × shapes × dispatch modes —
+    // same bits on a rerun, inert elastic accounting, and
+    // server-seconds exactly servers × duration (the bits the static
+    // path computes, not a near-equal float).
+    use solana_isp::sched::DispatchMode;
+    forall("autoscale off == static path", 10, |g| {
+        let app = APPS[g.usize(0..=2)];
+        let servers = g.usize(1..=3);
+        let shape = SHAPES[g.usize(0..=2)];
+        let mut fcfg = FleetConfig { servers, shape, ..FleetConfig::default() };
+        fcfg.sched.dispatch =
+            if g.bool() { DispatchMode::EventDriven } else { DispatchMode::Polling };
+        let tcfg = TrafficConfig {
+            load: g.f64(0.2, 0.9),
+            requests: 400,
+            policy: POLICIES[g.usize(0..=3)],
+            ..TrafficConfig::default()
+        };
+        let a = serve(app, &fcfg, &tcfg);
+        let b = serve(app, &fcfg, &tcfg);
+        a.check_bit_identical(&b)?;
+        check(a.timeline.is_empty(), "static runs emit no fleet time series".to_string())?;
+        check(
+            a.joins == 0 && a.drains == 0 && a.migrations == 0 && a.migrated_bytes == 0,
+            format!(
+                "elastic counters must stay zero: joins {} drains {} migrations {}",
+                a.joins, a.drains, a.migrations
+            ),
+        )?;
+        check(
+            a.peak_servers == servers,
+            format!("peak {} != servers {servers}", a.peak_servers),
+        )?;
+        check(
+            a.server_seconds.to_bits() == (servers as f64 * a.duration_secs).to_bits(),
+            format!(
+                "server-seconds must be exactly servers x duration: {} vs {}",
+                a.server_seconds,
+                servers as f64 * a.duration_secs
+            ),
+        )
+    });
+}
+
+#[test]
+fn conservation_survives_elastic_chaos() {
+    // ISSUE-10 property 5: joins, drains, shard migrations, and a
+    // mid-run server crash all at once — every request still accounted
+    // for exactly once, no in-flight work lost at a drain, and the same
+    // seed reproduces every bit.
+    use solana_isp::traffic::fleet_nominal_rate;
+    use solana_isp::workloads::AppModel;
+    forall("conservation through joins/drains/migrations", 6, |g| {
+        let app = APPS[g.usize(0..=2)];
+        let servers = g.usize(2..=3);
+        let shape = SHAPES[g.usize(0..=2)];
+        let replicas = if g.bool() { 1 } else { 0 };
+        let fcfg = FleetConfig { servers, shape, replicas, ..FleetConfig::default() };
+        // Anchor the rate profile and the autoscaler clock to the
+        // fleet's nominal rate so evaluations actually fire for every
+        // app (absolute service rates span orders of magnitude).
+        let model = AppModel::for_app(app, 1);
+        let base = fleet_nominal_rate(&model, &fcfg.server_specs());
+        let requests = 500u64;
+        let dur = requests as f64 / base;
+        let faults = FaultsConfig {
+            seed: g.u64(0..=u64::MAX / 2),
+            ack_loss: g.f64(0.0, 0.1),
+            server_crash_at: Some(g.f64(0.2, 0.7)),
+            crash_server: g.usize(0..=3),
+            ..FaultsConfig::default()
+        };
+        let tcfg = TrafficConfig {
+            rate_rps: Some(base),
+            rate_segments: Some(vec![(0.3 * dur, 0.5), (0.2 * dur, 2.2), (0.5 * dur, 0.5)]),
+            requests,
+            policy: POLICIES[g.usize(0..=3)],
+            skew: g.f64(0.0, 1.0),
+            retries: g.u64(0..=2) as u32,
+            hedge: g.bool(),
+            faults: Some(faults),
+            autoscale: Some(AutoscaleConfig {
+                policy: if g.bool() {
+                    AutoscalePolicy::Reactive
+                } else {
+                    AutoscalePolicy::Predictive
+                },
+                min_servers: 2,
+                max_servers: 4,
+                check_interval_s: dur / 24.0,
+                estimator_window_s: dur / 6.0,
+                shards: g.usize(4..=16),
+                ..AutoscaleConfig::default()
+            }),
+            ..TrafficConfig::default()
+        };
+        let r = serve(app, &fcfg, &tcfg);
+        check(
+            r.served + r.failed + r.shed == r.requests,
+            format!(
+                "served {} + failed {} + shed {} != requests {}",
+                r.served, r.failed, r.shed, r.requests
+            ),
+        )?;
+        check(
+            (0.0..=1.0).contains(&r.availability),
+            format!("availability out of range: {}", r.availability),
+        )?;
+        check(
+            !r.timeline.is_empty(),
+            "the scaled eval clock must fire during the run".to_string(),
+        )?;
+        let again = serve(app, &fcfg, &tcfg);
+        r.check_bit_identical(&again)
     });
 }

@@ -2,8 +2,8 @@
 //! table the repo emits — Fig 5 × 3 apps, Fig 6, Fig 7, Table I, the
 //! power breakdown, ablations A1–A4, the Fig 8 fleet sweep, the Fig 9
 //! serving-latency sweep, the Fig 10 autoscaling study, the Fig 11
-//! availability-under-faults study, and the Fig 13 write + GC
-//! interference study — is
+//! availability-under-faults study, the Fig 12 elastic-fleet study, and
+//! the Fig 13 write + GC interference study — is
 //! serialized at `--scale 0.01` and diffed **cell-by-cell** against a
 //! committed snapshot under `tests/golden/`. The comparison is an exact
 //! string match on the tables' fixed-precision formatting, so any
@@ -210,6 +210,11 @@ fn golden_fig10_autoscale() {
 #[test]
 fn golden_fig11_availability() {
     check_table("fig11", &exp::fig11_availability(SCALE).unwrap());
+}
+
+#[test]
+fn golden_fig12_elastic() {
+    check_table("fig12", &exp::fig12_elastic(SCALE).unwrap());
 }
 
 #[test]

@@ -1,0 +1,134 @@
+//! Workflow-lint guard (ISSUE-10 satellite): the CI pipeline is part of
+//! the contract, so drift between the CLI's experiment registry and the
+//! workflow file is a test failure, not a code-review hope.
+//!
+//! For every `figN` command registered in `src/exp/cli.rs`, this guard
+//! asserts:
+//!
+//! 1. **a smoke cell** — `.github/workflows/ci.yml` invokes
+//!    `solana -- figN --scale` somewhere (the fan-out smoke matrix),
+//!    unless the command is on the documented exemption list below;
+//! 2. **a golden registration** — `tests/golden_tables.rs` calls
+//!    `exp::figN…`, so the table is pinned by the cell-by-cell net.
+//!
+//! fig12 (the elastic-fleet study) is the first experiment added with
+//! this guard in place; every later figN lands with both hooks or fails
+//! `cargo test` on the spot. The guard also checks its own exemption
+//! list for staleness (an exempted name must still be a registered
+//! command) and that the workflow's structural pieces it depends on —
+//! the smoke matrix with `fail-fast: false` and the concurrency group —
+//! are still present.
+
+use std::fs;
+use std::path::PathBuf;
+
+fn repo_file(rel: &str) -> String {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(rel);
+    fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+/// Every `Command::new("figN", …)` registration in the CLI, in order.
+fn registered_fig_commands(cli_src: &str) -> Vec<String> {
+    let mut figs = Vec::new();
+    for line in cli_src.lines() {
+        let Some(rest) = line.trim_start().strip_prefix("Command::new(\"fig") else {
+            continue;
+        };
+        let Some(end) = rest.find('"') else { continue };
+        figs.push(format!("fig{}", &rest[..end]));
+    }
+    figs
+}
+
+/// figN commands with no direct `figN --scale` smoke cell, each with the
+/// reason the exemption is sound. Additions here need a reason of the
+/// same strength.
+const SMOKE_EXEMPT: &[(&str, &str)] = &[
+    ("fig5", "batch-mode table; pinned per-app by the fig5a/b/c goldens and cargo test"),
+    ("fig6", "batch-mode table; pinned by its golden and cargo test"),
+    ("fig7", "batch-mode table; pinned by its golden and cargo test"),
+    ("fig8", "smoked through the `fleet --servers 4` CLI cell (same sweep, one point)"),
+    ("fig9", "smoked through the `serve --scale 0.01` CLI cell (same serving path)"),
+];
+
+#[test]
+fn every_fig_experiment_has_a_smoke_cell_and_a_golden() {
+    let cli = repo_file("src/exp/cli.rs");
+    let workflow = repo_file("../.github/workflows/ci.yml");
+    let goldens = repo_file("tests/golden_tables.rs");
+
+    let figs = registered_fig_commands(&cli);
+    assert!(
+        figs.len() >= 9,
+        "fig-command extraction broke: found only {figs:?} in src/exp/cli.rs"
+    );
+
+    for (name, _reason) in SMOKE_EXEMPT {
+        assert!(
+            figs.iter().any(|f| f == name),
+            "stale smoke exemption: {name} is no longer a registered CLI command"
+        );
+    }
+
+    let mut missing = Vec::new();
+    for fig in &figs {
+        let exempt = SMOKE_EXEMPT.iter().any(|(n, _)| n == fig);
+        // The smoke matrix invokes every experiment through the real
+        // binary; a bare substring match would let fig1 piggyback on
+        // fig10, so the scale flag is part of the needle.
+        let smoke_needle = format!("-- {fig} --scale");
+        if !exempt && !workflow.contains(&smoke_needle) {
+            missing.push(format!(
+                "{fig}: no smoke cell — add `solana -- {fig} --scale 0.01` to the \
+                 smoke matrix in .github/workflows/ci.yml (or add a justified \
+                 exemption to tests/workflow_lint.rs)"
+            ));
+        }
+        // Golden registration: `exp::figN(` or `exp::figN_suffix(` — the
+        // char after the name disambiguates fig1 vs fig10.
+        let hit = goldens.match_indices(&format!("exp::{fig}")).any(|(i, m)| {
+            matches!(goldens.as_bytes().get(i + m.len()), Some(b'(' | b'_'))
+        });
+        if !hit {
+            missing.push(format!(
+                "{fig}: not registered in tests/golden_tables.rs — every experiment \
+                 table must be pinned by the golden net"
+            ));
+        }
+    }
+    assert!(missing.is_empty(), "workflow drift:\n  {}", missing.join("\n  "));
+}
+
+#[test]
+fn workflow_structure_the_guard_depends_on_is_intact() {
+    let workflow = repo_file("../.github/workflows/ci.yml");
+    for (needle, why) in [
+        ("concurrency:", "per-ref concurrency group with cancel-in-progress"),
+        ("cancel-in-progress: true", "superseded runs must cancel, not queue"),
+        ("fail-fast: false", "one smoke failure must not hide the cells behind it"),
+        ("needs: build-lint-test", "smoke fans out only after the build+test gate"),
+        ("actions/cache@", "smoke cells rely on the warm cargo/target cache"),
+        ("if: always()", "artifacts upload even when a cell fails"),
+        ("timeout-minutes:", "every job needs a wall-clock bound"),
+    ] {
+        assert!(
+            workflow.contains(needle),
+            "ci.yml lost `{needle}` ({why}) — the smoke-matrix contract this \
+             guard checks no longer holds"
+        );
+    }
+    // The two ISSUE-10 consumers this guard was introduced for:
+    assert!(
+        workflow.contains("-- fig12 --scale"),
+        "ci.yml must smoke the fig12 elastic-fleet experiment"
+    );
+    assert!(
+        workflow.contains("--autoscale predictive"),
+        "ci.yml must smoke the serve --autoscale CLI surface"
+    );
+    assert!(
+        workflow.contains("--bench serve_elastic"),
+        "ci.yml must smoke the serve_elastic bench"
+    );
+}
